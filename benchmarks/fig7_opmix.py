@@ -1,0 +1,62 @@
+"""Paper Fig. 7: pipeline utilization -> HLO op-mix counts.
+
+No Nsight on CPU: the structural stand-in is the lowered-HLO operation mix.
+The paper's XU-pipeline overload shows up as convert/divide/rsqrt ops in
+the naive chain; the optimized chain hoists reciprocals (one precomputed
+constant) and works in log space — the counts drop accordingly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.likelihood import IntensityModel
+from repro.core.precision import get_policy
+from repro.launch.hlo import op_mix
+
+
+def _naive_step(patches, log_w_prev):
+    """Paper's naive fp16 port: Eq. 3 with in-loop divides and int->float
+    converts, direct exp weighting."""
+    model = IntensityModel()
+    idx = jnp.arange(patches.shape[-1], dtype=jnp.int32)
+    scale = (50.0 * patches.shape[-1]).__float__()
+    # int->float converts + per-element divides (the XU traffic)
+    weights_pos = idx.astype(patches.dtype) * 0 + 1
+    db = patches - jnp.asarray(model.background, patches.dtype)
+    df = patches - jnp.asarray(model.foreground, patches.dtype)
+    ll = jnp.sum((db * db - df * df) * weights_pos / scale, axis=-1)
+    w = jnp.exp(log_w_prev + ll)  # direct exp
+    return w / jnp.sum(w)
+
+
+def _optimized_step(patches, log_w_prev):
+    """Stable scaled-square + LSE with hoisted constants."""
+    from repro.core.likelihood import intensity_loglik
+
+    model = IntensityModel()
+    pol = get_policy("fp16")
+    ll = intensity_loglik(patches, model, pol)
+    from repro.core.stability import normalize_log_weights
+
+    w, _ = normalize_log_weights(log_w_prev + ll)
+    return w
+
+
+def run(p: int = 4096, j: int = 69) -> list[str]:
+    patches = jax.random.uniform(
+        jax.random.key(0), (p, j), jnp.float32, 60, 250
+    ).astype(jnp.float16)
+    log_w = jnp.zeros((p,), jnp.float16)
+    rows = []
+    for name, fn in [("naive", _naive_step), ("optimized", _optimized_step)]:
+        hlo = jax.jit(fn).lower(patches, log_w).compile().as_text()
+        mix = op_mix(hlo)
+        derived = ";".join(
+            f"{k}={mix[k]}"
+            for k in ("convert", "divide", "exponential", "rsqrt", "reduce")
+        )
+        rows.append(csv_row(f"fig7_opmix/{name}", 0.0, derived))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Fig. 8: threads-per-block sweep -> Pallas BlockSpec sweep.
+
+The TPU analogue of CUDA launch geometry is the BlockSpec block shape: it
+fixes the VMEM working set and the grid sequentialization.  CPU interpret
+timing is not hardware-meaningful, so the derived metrics are structural:
+VMEM bytes per grid step and grid length, plus a numerical-equivalence
+check across the sweep (results must be launch-geometry invariant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels.logsumexp import ops as lse_ops
+
+
+def run(n: int = 65_536) -> list[str]:
+    x = (jax.random.normal(jax.random.key(0), (n,), jnp.float32) * 30).astype(
+        jnp.float16
+    )
+    ref = None
+    rows = []
+    for block_rows in [8, 16, 32, 64, 128, 256]:
+        us = time_fn(
+            lambda x: lse_ops.normalize_weights(x, block_rows=block_rows),
+            x,
+            reps=3,
+            warmup=1,
+        )
+        w, m, lse = lse_ops.normalize_weights(x, block_rows=block_rows)
+        if ref is None:
+            ref = np.asarray(lse)
+        np.testing.assert_allclose(np.asarray(lse), ref, rtol=1e-6)
+        vmem_kib = block_rows * 128 * 2 * 2 / 1024  # in+out blocks, fp16
+        grid = (n + block_rows * 128 - 1) // (block_rows * 128)
+        rows.append(
+            csv_row(
+                f"fig8_blocksweep/rows{block_rows}",
+                us,
+                f"vmem_kib={vmem_kib:.0f};grid_steps={2 * grid}",
+            )
+        )
+    return rows

@@ -1,0 +1,92 @@
+"""Benchmark harness — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure mapping (see DESIGN.md §9):
+
+    fig4  accuracy per precision (tracking RMSE)
+    fig5  runtime 32k/64k particles x precision
+    fig6  normalizing+resampling kernel breakdown, naive vs fused
+    fig7  pipeline utilization -> HLO op-mix, naive vs optimized
+    fig8  threads-per-block -> Pallas BlockSpec sweep
+    roofline  (arch x shape) terms from the dry-run artifacts, if present
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default="", help="comma list: fig4,fig5,fig6,fig7,fig8,roofline"
+    )
+    ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def enabled(name: str) -> bool:
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    failures = 0
+
+    if enabled("fig4"):
+        from benchmarks import fig4_accuracy
+
+        kw = dict(frames=30, size=128, particles=512) if args.quick else {}
+        failures += _emit(lambda: fig4_accuracy.run(**kw))
+    if enabled("fig5"):
+        from benchmarks import fig5_throughput
+
+        kw = dict(sizes=(8192,)) if args.quick else {}
+        failures += _emit(lambda: fig5_throughput.run(**kw))
+    if enabled("fig6"):
+        from benchmarks import fig6_kernels
+
+        failures += _emit(fig6_kernels.run)
+    if enabled("fig7"):
+        from benchmarks import fig7_opmix
+
+        failures += _emit(fig7_opmix.run)
+    if enabled("fig8"):
+        from benchmarks import fig8_blocksweep
+
+        kw = dict(n=16_384) if args.quick else {}
+        failures += _emit(lambda: fig8_blocksweep.run(**kw))
+    if enabled("roofline"):
+        failures += _emit(_roofline_rows)
+
+    if failures:
+        sys.exit(1)
+
+
+def _emit(fn) -> int:
+    try:
+        for row in fn():
+            print(row)
+        return 0
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        return 1
+
+
+def _roofline_rows():
+    """Summarize roofline artifacts as CSV (no-op if dry-run not yet run)."""
+    from repro.launch.roofline import build_table
+
+    rows = []
+    for r in build_table():
+        if r["status"] != "ok":
+            continue
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']},{dom_s * 1e6:.1f},"
+            f"dominant={r['dominant']};frac={r['roofline_frac']:.3f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpoint/restore substrate."""
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

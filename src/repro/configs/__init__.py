@@ -1,0 +1,22 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    reduced_config,
+    register,
+)
+
+register("command-r-35b", "repro.configs.command_r_35b")
+register("minitron-8b", "repro.configs.minitron_8b")
+register("stablelm-12b", "repro.configs.stablelm_12b")
+register("gemma3-27b", "repro.configs.gemma3_27b")
+register("zamba2-2.7b", "repro.configs.zamba2_2p7b")
+register("grok-1-314b", "repro.configs.grok_1_314b")
+register("deepseek-moe-16b", "repro.configs.deepseek_moe_16b")
+register("internvl2-76b", "repro.configs.internvl2_76b")
+register("hubert-xlarge", "repro.configs.hubert_xlarge")
+register("rwkv6-7b", "repro.configs.rwkv6_7b")

@@ -1,0 +1,170 @@
+"""Model/run configuration and the --arch registry."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+__all__ = ["ModelConfig", "register", "get_config", "list_archs", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (one instance per assigned arch)."""
+
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encoder | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # attention pattern
+    causal: bool = True
+    window: int = 0          # sliding-window size for local layers (0 = full)
+    global_every: int = 0    # every Nth layer is global (gemma3: 6); 0 = all global
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0        # routed-expert hidden width (deepseek fine-grained)
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_every: int = 0      # zamba2: shared attention block every N ssm layers
+
+    # rwkv6
+    is_rwkv: bool = False
+
+    # structure
+    is_encoder: bool = False
+    frontend: str = "token"  # token | frames | vlm
+    vlm_image_seq: int = 256  # leading patch-embedding positions for vlm
+    frame_dim: int = 0        # audio frontend stub feature dim (0 -> d_model)
+    use_bias: bool = False
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    act: str = "silu"
+
+    # training-side knobs (overridable per run)
+    remat: str = "full"      # full | dots | none
+    scan_layers: bool = True
+    # Metering: unroll every scan so compiled cost_analysis counts true trip
+    # totals (XLA counts a scan body once — verified in this container).
+    unroll_scans: bool = False
+    # Perf knobs (§Perf iterations; current defaults = the winning settings,
+    # see EXPERIMENTS.md §Perf for the baseline-vs-optimized history)
+    decode_expand_kv: bool = False  # grouped decode KV (no head expansion)
+    rwkv_chunk: int = 16            # wkv6 chunk length
+    rwkv_intra_bf16: bool = False   # refuted: XLA already fuses the converts
+    pin_decode_cache: bool = True   # pin KV cache sharding in decode
+    moe_dispatch: str = "scatter"   # "scatter" | "einsum" (one-hot matmul)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def kv_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + stack), for 6ND."""
+        from repro.models.params import count_params
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top-k experts)."""
+        from repro.models.params import count_params
+
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape grid assigned to this paper (same 4 shapes for every arch).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: dict[str, str] = {}
+
+
+def register(arch_id: str, module: str) -> None:
+    _REGISTRY[arch_id] = module
+
+
+def list_archs() -> list[str]:
+    _ensure_registered()
+    return sorted(_REGISTRY)
+
+
+def _ensure_registered() -> None:
+    if not _REGISTRY:
+        importlib.import_module("repro.configs")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    """Resolve --arch <id> to its ModelConfig."""
+    _ensure_registered()
+    arch_id = arch_id.replace("_", "-")
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list_archs()}")
+    mod = importlib.import_module(_REGISTRY[arch_id])
+    return mod.CONFIG
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    small = dict(
+        num_layers=min(cfg.num_layers, 2 if not cfg.attn_every else cfg.attn_every + 1),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) or 2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        num_shared_experts=min(cfg.num_shared_experts, 1),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_head_dim=32 if cfg.ssm_state else 64,
+        window=min(cfg.window, 64) if cfg.window else 0,
+        global_every=cfg.global_every,
+        attn_every=min(cfg.attn_every, 2) if cfg.attn_every else 0,
+        vlm_image_seq=16 if cfg.frontend == "vlm" else cfg.vlm_image_seq,
+        frame_dim=64 if cfg.frontend == "frames" else 0,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

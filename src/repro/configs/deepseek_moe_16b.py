@@ -1,0 +1,27 @@
+"""DeepSeekMoE 16B [arXiv:2401.06066; hf].
+
+Fine-grained MoE: 64 routed experts (width 1408) with top-6 routing plus
+2 shared experts; MHA (16/16 heads).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=102_400,
+    num_experts=64,
+    experts_per_token=6,
+    num_shared_experts=2,
+    moe_d_ff=1408,
+    tie_embeddings=False,
+    # one-hot-matmul dispatch: +53% compute-term but removes the SPMD
+    # scatter replication — 2.45x step-bound win (EXPERIMENTS.md §Perf A4)
+    moe_dispatch="einsum",
+)

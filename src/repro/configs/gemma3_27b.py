@@ -1,0 +1,24 @@
+"""Gemma-3 27B [hf:google/gemma-3-27b-pt; unverified].
+
+5:1 local:global attention (1024-token sliding window on local layers),
+qk-norm, tied 262k vocab, 128k context target.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262_144,
+    window=1024,
+    global_every=6,  # layers 6, 12, ... are global; rest are local
+    qk_norm=True,
+    tie_embeddings=True,
+    rope_theta=1e6,
+)

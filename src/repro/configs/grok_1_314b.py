@@ -1,0 +1,25 @@
+"""xAI Grok-1 314B [hf:xai-org/grok-1; unverified].
+
+MoE: 8 experts, top-2 routing, 32768 expert hidden width; GQA 48/8.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131_072,
+    num_experts=8,
+    experts_per_token=2,
+    moe_d_ff=32768,
+    tie_embeddings=True,
+    # few wide experts: one-hot-matmul dispatch avoids the SPMD scatter
+    # replication (9.1x step-bound win, EXPERIMENTS.md §Perf)
+    moe_dispatch="einsum",
+)

@@ -1,0 +1,26 @@
+"""HuBERT X-Large [arXiv:2106.07447; unverified].
+
+Audio encoder-only transformer (w2v2 architecture); conv feature-extractor
+frontend is a stub — ``input_specs()`` supplies 512-dim frame embeddings.
+Masked-prediction head over 504 k-means targets.  No decode step.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    is_encoder=True,
+    causal=False,
+    frontend="frames",
+    frame_dim=512,
+    tie_embeddings=False,
+    act="gelu",
+)

@@ -1,0 +1,24 @@
+"""InternVL2-Llama3-76B [arXiv:2404.16821; unverified].
+
+VLM: the LM backbone only (dense GQA, Llama-3-70B-like); the InternViT
+frontend is a stub — ``input_specs()`` supplies precomputed patch
+embeddings, projected by a learned connector.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128_256,
+    frontend="vlm",
+    vlm_image_seq=256,
+    tie_embeddings=False,
+    rope_theta=5e5,
+)

@@ -1,0 +1,20 @@
+"""Nvidia Minitron-8B (pruned Nemotron-4) [arXiv:2407.14679; hf].
+
+Dense GQA decoder; 256k SentencePiece vocab.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=256_000,
+    tie_embeddings=False,
+    act="silu",
+)

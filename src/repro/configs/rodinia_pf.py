@@ -1,0 +1,23 @@
+"""The paper's own workload: Rodinia-style object tracking particle filter.
+
+Not an LM architecture — this config drives the tracking application and
+the distributed-filter dry-run row (33.5M particles across 512 devices).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PFConfig:
+    name: str = "rodinia-pf"
+    num_particles: int = 65_536  # the paper's cap; dry-run scales to 2^25
+    frame_height: int = 512
+    frame_width: int = 512
+    radius: int = 4
+    num_frames: int = 100
+    precision: str = "fp16"
+    resampler: str = "systematic"
+    backend: str = "pallas"
+
+
+CONFIG = PFConfig()

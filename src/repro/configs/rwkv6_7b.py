@@ -1,0 +1,21 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892; hf].
+
+Attention-free: data-dependent-decay linear attention (wkv6) + channel
+mix; O(1) decode state.  64 heads of dim 64.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    is_rwkv=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,20 @@
+"""StableLM-2 12B [hf:stabilityai/stablelm-2-12b; hf].
+
+Dense GQA decoder with per-head qk-norm, 100352 (GPT-NeoX-ish) vocab.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100_352,
+    qk_norm=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,24 @@
+"""Zamba2-2.7B [arXiv:2411.15242; hf].
+
+Hybrid: 54 Mamba2 (SSD, state 64) layers with a *shared* attention+MLP
+block applied every 6 layers (one parameter set, 9 applications).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""Core: the paper's half-precision particle filter as a composable library.
+
+Layers:
+- ``precision``   — multi-precision policies (fp64/fp32/bf16/fp16 ± stability)
+- ``stability``   — scaled-square, log-sum-exp, online/streaming LSE combine
+- ``likelihood``  — Rodinia intensity observation model (naive + stable)
+- ``resampling``  — systematic / stratified / multinomial
+- ``filter``      — generic SMC step/scan (propagate → weight → resample)
+- ``tracking``    — the paper's object-tracking application
+- ``distributed`` — shard_map multi-device filter with hierarchical resampling
+"""
+
+from repro.core.filter import (  # noqa: F401
+    FilterOutput,
+    FilterState,
+    SMCSpec,
+    pf_init,
+    pf_scan,
+    pf_step,
+)
+from repro.core.precision import (  # noqa: F401
+    POLICIES,
+    PrecisionPolicy,
+    get_policy,
+)
+from repro.core.tracking import TrackerConfig, track  # noqa: F401

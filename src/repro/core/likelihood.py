@@ -1,0 +1,122 @@
+"""Rodinia-style intensity likelihood (paper Eqs. 3 & 4), multi-precision.
+
+The observation model: a particle at integer position (r, c) is scored by the
+pixel intensities at a fixed disk of offsets around it —
+
+    naive (Eq. 3):   L = sum_j [ (I_j - BG)^2 - (I_j - FG)^2 ] / (50 * N)
+    stable (Eq. 4):  L = sum_j [ ((I_j - BG) * isq)^2 - ((I_j - FG) * isq)^2 ]
+                     with isq = 1/sqrt(50 * N)   (precomputed constant)
+
+where BG=100, FG=228 are the mean background/foreground intensities and N is
+the number of disk points.  In fp16 the naive running sum reaches ~1.6e6 for
+a 69-point disk (inf > 65504); the stable form keeps every intermediate O(1).
+
+The gather (image -> per-particle intensity patch) is done with XLA ``take``
+— on TPU, per-particle dynamic gathers inside a kernel would serialize on
+the scalar core, so we deliberately keep the gather in XLA and hand the
+Pallas kernel (``repro.kernels.likelihood``) a dense (P, J) intensity matrix.
+This is the hardware adaptation of the paper's pixel-parallel CUDA kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+
+__all__ = [
+    "IntensityModel",
+    "disk_offsets",
+    "gather_patches",
+    "intensity_loglik",
+]
+
+BACKGROUND = 100.0
+FOREGROUND = 228.0
+
+
+def disk_offsets(radius: int) -> jnp.ndarray:
+    """Integer (dr, dc) offsets inside a disk, matching Rodinia's template.
+
+    Computed in numpy (shape must be static — it sets kernel geometry).
+    """
+    import numpy as np
+
+    r = np.arange(-radius, radius + 1)
+    dr, dc = np.meshgrid(r, r, indexing="ij")
+    mask = (dr**2 + dc**2) <= radius**2
+    coords = np.stack([dr[mask], dc[mask]], axis=-1)
+    return jnp.asarray(coords, jnp.int32)  # (J, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntensityModel:
+    """Observation model: disk of ``radius`` around each particle."""
+
+    radius: int = 4
+    background: float = BACKGROUND
+    foreground: float = FOREGROUND
+    scale: float = 50.0
+
+    @property
+    def offsets(self) -> jnp.ndarray:
+        return disk_offsets(self.radius)
+
+    @property
+    def num_points(self) -> int:
+        return int(self.offsets.shape[0])
+
+
+def gather_patches(
+    frame: jax.Array, positions: jax.Array, offsets: jax.Array
+) -> jax.Array:
+    """Gather frame intensities at ``positions + offsets`` -> (P, J).
+
+    positions: (P, 2) float (row, col); offsets: (J, 2) int.  Coordinates
+    are rounded and clamped to the frame like the Rodinia implementation.
+    """
+    h, w = frame.shape
+    pos = jnp.round(positions).astype(jnp.int32)  # (P, 2)
+    rc = pos[:, None, :] + offsets[None, :, :]  # (P, J, 2)
+    r = jnp.clip(rc[..., 0], 0, h - 1)
+    c = jnp.clip(rc[..., 1], 0, w - 1)
+    flat = r * w + c
+    return jnp.take(frame.reshape(-1), flat, axis=0)  # (P, J)
+
+
+def intensity_loglik(
+    patches: jax.Array,
+    model: IntensityModel,
+    policy: PrecisionPolicy,
+) -> jax.Array:
+    """Per-particle log-likelihood from gathered intensities (P, J).
+
+    Dispatches between the paper's naive Eq. 3 and stable Eq. 4 according to
+    ``policy.stable_likelihood``; arithmetic in ``policy.compute_dtype`` with
+    reductions in ``policy.accum_dtype`` (equal for the paper-faithful pure
+    policies).
+    """
+    cdt, adt = policy.compute_dtype, policy.accum_dtype
+    x = patches.astype(cdt)
+    n = patches.shape[-1]
+    bg = jnp.asarray(model.background, cdt)
+    fg = jnp.asarray(model.foreground, cdt)
+    if policy.stable_likelihood:
+        # Eq. 4 — precomputed reciprocal sqrt constant (hoisted; the TPU
+        # analogue of removing the paper's XU-pipeline rsqrt traffic).
+        isq = jnp.asarray((model.scale * n) ** -0.5, cdt)
+        db = (x - bg) * isq
+        df = (x - fg) * isq
+        terms = db * db - df * df
+        return jnp.sum(terms.astype(adt), axis=-1).astype(cdt)
+    # Eq. 3 — divide only after summing the raw squared differences, exactly
+    # the fp16-overflowing form (sum reaches ~1.6e6 for a 69-point disk on
+    # foreground pixels; fp16 max is 65504).  Kept for the failure-mode tests.
+    db = x - bg
+    df = x - fg
+    terms = db * db - df * df
+    total = jnp.sum(terms.astype(adt), axis=-1)
+    return (total / jnp.asarray(model.scale * n, adt)).astype(cdt)

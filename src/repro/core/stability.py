@@ -1,0 +1,156 @@
+"""Numerical-stability primitives from the paper, in reusable form.
+
+Three tricks, each mapped from the paper's CUDA context to framework-wide
+JAX utilities:
+
+1. **Scaled square** (paper Eq. 3 → Eq. 4): ``sum((a-c)^2)/s`` overflows in
+   fp16 when the un-divided squares or their running sum exceed 65504; moving
+   the scale *inside* the square bounds every intermediate.
+2. **Log-sum-exp weighting** (paper Eq. 5): ``w = exp(L)`` overflows /
+   vanishes; subtracting the max keeps every exponent ≤ 0.  ``logsumexp``
+   here is the two-pass reference; the fused one-pass online version lives in
+   ``repro.kernels.logsumexp`` (our beyond-paper fusion of the paper's
+   max-finding + weighting + normalizing kernel chain).
+3. **Online (streaming) LSE combine**: the flash-attention-style running
+   ``(max, rescaled sum)`` pair.  Used by the Pallas kernel, by the
+   distributed particle filter (cross-device combine with ``pmax``/``psum``)
+   and by seq-sharded decode attention in the LM stack.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "scaled_square_diff",
+    "logsumexp",
+    "normalize_log_weights",
+    "stable_softmax",
+    "LseState",
+    "lse_init",
+    "lse_update",
+    "lse_combine",
+    "lse_finalize",
+    "effective_sample_size",
+]
+
+
+def scaled_square_diff(x: jax.Array, center, inv_sqrt_scale) -> jax.Array:
+    """((x - center) * inv_sqrt_scale)**2 — every intermediate is O(1).
+
+    Equivalent to (x - center)**2 / scale with inv_sqrt_scale = scale**-0.5,
+    but safe in fp16 (paper Eq. 4).  ``inv_sqrt_scale`` is expected to be a
+    precomputed constant — the TPU analogue of the paper's hoisting of
+    reciprocals out of the XU pipeline.
+    """
+    d = (x - center) * inv_sqrt_scale
+    return d * d
+
+
+def logsumexp(x: jax.Array, axis=-1, keepdims: bool = False):
+    """Two-pass max-subtracted logsumexp in the input dtype.
+
+    Matches the paper's scheme: one max reduction, then sum of exp(x - max).
+    NaN-safe for all -inf rows (returns -inf rather than NaN).
+    """
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    s = jnp.sum(jnp.exp(x - m_safe), axis=axis, keepdims=True)
+    out = m_safe + jnp.log(s)
+    out = jnp.where(jnp.isfinite(m), out, m)  # all -inf -> -inf
+    if not keepdims:
+        out = jnp.squeeze(out, axis=axis)
+    return out
+
+
+def normalize_log_weights(log_w: jax.Array, *, stable: bool = True):
+    """log weights -> (normalized weights, log normalizer).
+
+    ``stable=False`` reproduces the paper's naive path (direct ``exp``),
+    which overflows for fp16 at realistic likelihood magnitudes — kept so the
+    failure mode is testable.
+    """
+    if stable:
+        lse = logsumexp(log_w, axis=-1, keepdims=True)
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.zeros_like(lse))
+        w = jnp.exp(log_w - lse_safe)  # all -inf -> all-zero weights, no NaN
+        return w, jnp.squeeze(lse, axis=-1)
+    raw = jnp.exp(log_w)
+    total = jnp.sum(raw, axis=-1, keepdims=True)
+    return raw / total, jnp.squeeze(jnp.log(total), axis=-1)
+
+
+def stable_softmax(x: jax.Array, axis=-1, *, accum_dtype=None) -> jax.Array:
+    """Max-subtracted softmax with optional wider accumulation dtype.
+
+    This is the LM-side landing of the paper's Eq.-5 trick: attention and
+    router softmaxes run their reductions in ``accum_dtype`` (fp32 by
+    default) while inputs/outputs stay in the compute dtype.
+    """
+    dt = x.dtype
+    if accum_dtype is not None:
+        x = x.astype(accum_dtype)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    e = jnp.exp(x - m)
+    out = e / jnp.sum(e, axis=axis, keepdims=True)
+    return out.astype(dt)
+
+
+class LseState(NamedTuple):
+    """Running (max, rescaled sum of exp) pair."""
+
+    m: jax.Array
+    s: jax.Array
+
+
+def lse_init(shape=(), dtype=jnp.float32) -> LseState:
+    return LseState(
+        m=jnp.full(shape, -jnp.inf, dtype=dtype),
+        s=jnp.zeros(shape, dtype=dtype),
+    )
+
+
+def lse_update(state: LseState, x: jax.Array, axis=-1) -> LseState:
+    """Fold a new block of log-values into the running state (one pass)."""
+    bm = jnp.max(x, axis=axis)
+    m_new = jnp.maximum(state.m, bm)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.zeros_like(m_new))
+    s_new = state.s * jnp.exp(state.m - m_safe) + jnp.sum(
+        jnp.exp(x - jnp.expand_dims(m_safe, axis)), axis=axis
+    )
+    # exp(-inf - 0) = 0 handles the empty initial state.
+    return LseState(m=m_new, s=s_new)
+
+
+def lse_combine(a: LseState, b: LseState) -> LseState:
+    """Merge two partial LSE states (associative & commutative).
+
+    This is the cross-device combine used by the distributed filter and by
+    sequence-sharded decode attention: each shard reduces locally, then
+    states merge with one pmax + one psum worth of traffic.
+    """
+    m = jnp.maximum(a.m, b.m)
+    m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    s = a.s * jnp.exp(a.m - m_safe) + b.s * jnp.exp(b.m - m_safe)
+    return LseState(m=m, s=s)
+
+
+def lse_finalize(state: LseState) -> jax.Array:
+    """Running state -> logsumexp value."""
+    out = state.m + jnp.log(state.s)
+    return jnp.where(jnp.isfinite(state.m), out, state.m)
+
+
+def effective_sample_size(weights: jax.Array, axis=-1) -> jax.Array:
+    """ESS = (sum w)^2 / sum(w^2) — scale-invariant Kish form.
+
+    The scale-invariant form matters in 16-bit: weights produced by
+    ``exp(log_w - lse)`` carry an O(e^ulp(log_w)) common scale error.
+    """
+    return jnp.square(jnp.sum(weights, axis=axis)) / jnp.sum(
+        jnp.square(weights), axis=axis
+    )

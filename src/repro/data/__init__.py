@@ -1,0 +1,1 @@
+"""Data substrates: the Rodinia-style synthetic video and LM token pipeline."""

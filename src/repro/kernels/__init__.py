@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Three kernels, mirroring the paper's optimized CUDA kernels (section 4):
+
+- ``logsumexp``   — fused max-finding + weighting + normalizing (the paper's
+  kernels 3-5) as a single-pass online LSE with SMEM carry.
+- ``resample``    — CDF build (blockwise-carry inclusive cumsum) + systematic
+  resampling search (vectorized binary search), the paper's kernel 6.
+- ``likelihood``  — stable scaled-square intensity likelihood with fused
+  running max (the paper's kernels 2-3).
+
+Each kernel package ships ``ops.py`` (jit'd public entry points, interpret
+mode auto-selected off-TPU) and ``ref.py`` (pure-jnp oracle used by tests).
+
+TPU adaptation notes (vs. the paper's CUDA ``half2`` scheme): VPU lanes are
+32-bit, so 16-bit arrays pack two elements per lane — the *layout* provides
+the paper's 2-per-instruction packing; accumulator scratch is fp32, which is
+free on the VPU (unlike CUDA's FP16 pipe) and removes the paper's CDF
+round-off; block shapes keep the last dim a multiple of 128 lanes.
+"""

@@ -1,0 +1,26 @@
+"""Shared helpers for the Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["should_interpret", "pad_to_multiple", "NEG_INF"]
+
+NEG_INF = float("-inf")
+
+
+def should_interpret() -> bool:
+    """Pallas interpret mode everywhere except on real TPU devices."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int, value) -> jax.Array:
+    """Pad ``axis`` of ``x`` up to a multiple with a constant value."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,3 @@
+"""Stable intensity likelihood with fused running max (paper kernels 2-3)."""
+
+from repro.kernels.likelihood.ops import intensity_loglik  # noqa: F401

@@ -1,0 +1,72 @@
+"""Public entry point for the fused likelihood kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, should_interpret
+from repro.kernels.likelihood.likelihood import LANES, loglik_call
+
+__all__ = ["intensity_loglik", "intensity_loglik_with_max"]
+
+DEFAULT_BLOCK_P = 128
+
+
+@functools.partial(
+    jax.jit, static_argnames=("model", "policy", "block_p", "interpret")
+)
+def intensity_loglik_with_max(
+    patches: jax.Array,
+    model,
+    policy,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """((P,) log-likelihoods, running max fp32) from gathered patches.
+
+    ``model``: IntensityModel (hashable dataclass — static under jit);
+    ``policy``: PrecisionPolicy.  Padding along J uses the BG/FG midpoint
+    (term exactly 0); padding along P replicates the midpoint row, and the
+    padded rows are sliced off (they would contribute max=0 only when all
+    real logliks are negative — so the P axis is padded with a -inf-like
+    sentinel row instead: midpoint intensities give loglik 0, safe because
+    the fused max is only consumed relative to real rows via slicing... we
+    simply exclude pad rows from the fused max by masking in fp32).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    p, j = patches.shape
+    n = j  # true number of points for the scale constant
+    isq = (model.scale * n) ** -0.5
+    mid = 0.5 * (model.background + model.foreground)
+    x = patches.astype(policy.compute_dtype)
+    x = pad_to_multiple(x, LANES, axis=1, value=mid)
+    p_pad = (-p) % block_p
+    x = pad_to_multiple(x, block_p, axis=0, value=mid)
+    accum16 = jnp.dtype(policy.accum_dtype).itemsize == 2
+    ll2d, m = loglik_call(
+        x,
+        bg=model.background,
+        fg=model.foreground,
+        isq=isq,
+        block_p=block_p,
+        accum16=accum16,
+        interpret=interpret,
+    )
+    ll = ll2d[:p, 0]
+    m = m[0, 0]
+    if p_pad:
+        # Padded rows scored exactly 0; recover the true max over real rows.
+        m = jnp.max(ll.astype(jnp.float32))
+    return ll, m
+
+
+def intensity_loglik(
+    patches: jax.Array, model, policy, **kw
+) -> jax.Array:
+    ll, _ = intensity_loglik_with_max(patches, model, policy, **kw)
+    return ll

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the likelihood kernel (= core.likelihood stable path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["intensity_loglik_ref"]
+
+
+def intensity_loglik_ref(
+    patches: jax.Array,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stable Eq.-4 log-likelihood + max over particles.
+
+    patches: (P, J) in the compute dtype. Returns ((P,) loglik, max fp32).
+    """
+    cdt = patches.dtype
+    db = (patches - jnp.asarray(bg, cdt)) * jnp.asarray(isq, cdt)
+    df = (patches - jnp.asarray(fg, cdt)) * jnp.asarray(isq, cdt)
+    terms = db * db - df * df
+    adt = cdt if accum16 else jnp.float32
+    ll = jnp.sum(terms.astype(adt), axis=-1).astype(cdt)
+    return ll, jnp.max(ll.astype(jnp.float32))

@@ -1,0 +1,6 @@
+"""Fused online log-sum-exp weight normalization (paper kernels 3-5)."""
+
+from repro.kernels.logsumexp.ops import (  # noqa: F401
+    normalize_weights,
+    online_logsumexp,
+)

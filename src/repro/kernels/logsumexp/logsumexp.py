@@ -1,0 +1,105 @@
+"""Pallas kernel: one-pass online LSE + fused normalization.
+
+The paper runs three kernels per frame for weight handling: max-finding,
+weighting (``exp(L - max L)``), and normalizing (divide by the sum).  The
+log-sum-exp fix costs it "one more reduction" (paper section 4).  This
+kernel removes that cost: a single streaming pass carries the running
+``(max m, rescaled sum s)`` pair in SMEM — the same online rescaling used by
+flash attention — then a second phase over the same blocks writes the
+normalized weights.  Total traffic: read x twice, write w once; no separate
+max pass.
+
+Layout: the 1-D weight vector is viewed as (rows, 128) so the last dim fills
+the 128 VPU lanes; 16-bit inputs pack two elements per 32-bit lane, which is
+the TPU equivalent of the paper's ``half2`` packing.  Accumulation is fp32
+in SMEM (free on the VPU, unlike CUDA's FP16 pipe).
+
+Grid: (2, num_blocks) — phase 0 reduces, phase 1 normalizes.  TPU grids run
+sequentially on a core, so the SMEM carry is exact.
+
+VMEM per step: block_rows*128*itemsize (in) + block_rows*128*itemsize (out);
+with the default block_rows=64 and bf16 that is 16 KiB + 16 KiB.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_normalize_call", "LANES"]
+
+LANES = 128
+
+
+def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
+    phase = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(jnp.logical_and(phase == 0, i == 0))
+    def _init():
+        m_s[0, 0] = jnp.float32(-jnp.inf)
+        s_s[0, 0] = jnp.float32(0.0)
+
+    x = x_ref[...].astype(jnp.float32)
+
+    @pl.when(phase == 0)
+    def _reduce():
+        m_old = m_s[0, 0]
+        m_new = jnp.maximum(m_old, jnp.max(x))
+        # exp(-inf - -inf) is guarded: when m_new is -inf every term is 0.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
+        s_s[0, 0] = s_s[0, 0] * jnp.exp(m_old - m_safe) + jnp.sum(
+            jnp.exp(x - m_safe)
+        )
+        m_s[0, 0] = m_new
+
+    @pl.when(jnp.logical_and(phase == 0, i == nb - 1))
+    def _stats():
+        m = m_s[0, 0]
+        lse = jnp.where(
+            jnp.isfinite(m), m + jnp.log(s_s[0, 0]), m
+        )
+        m_out[0, 0] = m
+        lse_out[0, 0] = lse
+        s_s[0, 0] = lse  # reuse scratch: phase 1 reads the final lse here
+
+    @pl.when(phase == 1)
+    def _normalize():
+        lse = s_s[0, 0]
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
+        w_ref[...] = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+
+
+def fused_normalize_call(
+    x2d: jax.Array, *, block_rows: int, interpret: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x2d: (rows, 128) log-weights. Returns (w (rows,128), m (1,1), lse (1,1))."""
+    rows, lanes = x2d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x2d.shape, block_rows)
+    nb = rows // block_rows
+    w, m, lse = pl.pallas_call(
+        _kernel,
+        grid=(2, nb),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda p, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda p, i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), x2d.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+    return w, m, lse

@@ -1,0 +1,57 @@
+"""Public entry points for the fused LSE kernel (jit'd, interpret-aware)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, should_interpret
+from repro.kernels.logsumexp.logsumexp import LANES, fused_normalize_call
+
+__all__ = ["normalize_weights", "online_logsumexp"]
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _as_blocks(log_w: jax.Array, block_rows: int) -> jax.Array:
+    x = pad_to_multiple(log_w, LANES * block_rows, axis=0, value=-jnp.inf)
+    return x.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused (normalized weights, max, lse) over a 1-D log-weight vector.
+
+    Padding uses -inf (contributes exp(-inf)=0 to the sum and never wins the
+    max); the padded tail of the weight output is sliced off.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = log_w.shape[0]
+    x2d = _as_blocks(log_w, block_rows)
+    w2d, m, lse = fused_normalize_call(
+        x2d, block_rows=block_rows, interpret=interpret
+    )
+    w = w2d.reshape(-1)[:n]
+    return w, m[0, 0], lse[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def online_logsumexp(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(max, lse) only — same kernel, weights output discarded by DCE-safe slice."""
+    _, m, lse = normalize_weights(
+        log_w, block_rows=block_rows, interpret=interpret
+    )
+    return m, lse

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused LSE normalization kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["online_logsumexp_ref", "normalize_weights_ref"]
+
+
+def online_logsumexp_ref(log_w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(max, logsumexp) of a 1-D log-weight vector, fp32 accumulation."""
+    x = log_w.astype(jnp.float32)
+    m = jnp.max(x)
+    m_safe = jnp.where(jnp.isfinite(m), m, jnp.float32(0.0))
+    lse = m_safe + jnp.log(jnp.sum(jnp.exp(x - m_safe)))
+    lse = jnp.where(jnp.isfinite(m), lse, m)
+    return m, lse
+
+
+def normalize_weights_ref(
+    log_w: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(normalized weights, max, lse); weights in input dtype."""
+    m, lse = online_logsumexp_ref(log_w)
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
+    w = jnp.exp(log_w.astype(jnp.float32) - lse_safe).astype(log_w.dtype)
+    return w, m, lse

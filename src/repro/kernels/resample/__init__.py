@@ -1,0 +1,6 @@
+"""Systematic resampling: CDF build + search (paper kernel 6)."""
+
+from repro.kernels.resample.ops import (  # noqa: F401
+    inclusive_cumsum,
+    systematic_resample,
+)

@@ -1,0 +1,86 @@
+"""Public entry points for the resampling kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, should_interpret
+from repro.kernels.resample.resample import (
+    LANES,
+    cumsum_call,
+    search_call,
+)
+
+__all__ = ["inclusive_cumsum", "systematic_resample"]
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "out_dtype", "interpret")
+)
+def inclusive_cumsum(
+    x: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Exact single-pass inclusive cumsum of a 1-D vector (fp32 carry)."""
+    if interpret is None:
+        interpret = should_interpret()
+    n = x.shape[0]
+    x2d = pad_to_multiple(x, LANES * block_rows, axis=0, value=0).reshape(
+        -1, LANES
+    )
+    out = cumsum_call(
+        x2d, block_rows=block_rows, out_dtype=out_dtype, interpret=interpret
+    )
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "block_rows", "block_rows_out", "interpret"),
+)
+def systematic_resample(
+    key: jax.Array,
+    weights: jax.Array,
+    *,
+    num_out: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows_out: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Systematic resampling of (possibly unnormalized) weights.
+
+    CDF built by the carry-cumsum kernel (fp32), normalized by its final
+    entry, then inverted at u_g = (g + u0)/N by the binary-search kernel.
+    Padding weights are 0 ⇒ padded CDF entries repeat the total and are
+    never selected by ``side='right'`` search (u < 1 strictly).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = weights.shape[0]
+    n_out = num_out or n
+    w2d = pad_to_multiple(
+        weights, LANES * block_rows, axis=0, value=0
+    ).reshape(-1, LANES)
+    cdf2d = cumsum_call(
+        w2d, block_rows=block_rows, out_dtype=jnp.float32, interpret=interpret
+    )
+    total = cdf2d[-1, -1]
+    cdf2d = cdf2d / total
+    u0 = jax.random.uniform(key, (), jnp.float32)
+    anc = search_call(
+        u0,
+        cdf2d,
+        n_total=n_out,
+        num_out=n_out,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+    return jnp.minimum(anc, n - 1)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the resampling kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["inclusive_cumsum_ref", "systematic_resample_ref"]
+
+
+def inclusive_cumsum_ref(w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    return jnp.cumsum(w.astype(jnp.float32)).astype(out_dtype)
+
+
+def systematic_resample_ref(
+    u0: jax.Array, weights: jax.Array, num_out: int | None = None
+) -> jax.Array:
+    """searchsorted-based systematic resampling with fp32 CDF."""
+    n_out = num_out or weights.shape[0]
+    cdf = jnp.cumsum(weights.astype(jnp.float32))
+    cdf = cdf / cdf[-1]
+    # Multiply by the precomputed fp32 reciprocal — same arithmetic as the
+    # kernel (which hoists 1/N a la the paper's XU fix), so results are
+    # bitwise comparable even at CDF tie boundaries.
+    u = (jnp.arange(n_out, dtype=jnp.float32) + u0.astype(jnp.float32)) * (
+        jnp.float32(1.0 / n_out)
+    )
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count at first init.  For every cell this script:
+
+    jit(step).lower(*ShapeDtypeStructs).compile()
+
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, then records
+``memory_analysis()``, ``cost_analysis()``, and HLO collective stats to
+``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.  Resumable: existing
+artifacts are skipped unless --force.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both [--force] [--rules serve_v2] [--tag optim]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch.hlo import collective_stats, op_mix
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             force: bool = False, tag: str = "", **build_kw) -> dict:
+    from repro.launch.specs import build_cell, cell_skip_reason
+
+    name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag}
+    skip = cell_skip_reason(arch, shape)
+    if skip:
+        record["status"] = "skip"
+        record["reason"] = skip
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        jax.set_mesh(mesh)  # context mesh: enables in-model sharding hints
+        n_dev = mesh.devices.size
+        try:
+            t0 = time.time()
+            cell = build_cell(arch, shape, mesh, **build_kw)
+            jf = jax.jit(
+                cell["fn"],
+                in_shardings=cell["in_shardings"],
+                out_shardings=cell["out_shardings"],
+                donate_argnums=cell["donate"],
+            )
+            lowered = jf.lower(*cell["args"])
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+            ca = compiled.cost_analysis() or {}
+            ma = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            coll = collective_stats(hlo, n_dev)
+            record.update(
+                status="ok",
+                devices=n_dev,
+                lower_s=round(t_lower, 2),
+                compile_s=round(t_compile, 2),
+                flops_per_device=float(ca.get("flops", -1.0)),
+                bytes_per_device=float(ca.get("bytes accessed", -1.0)),
+                transcendentals=float(ca.get("transcendentals", 0.0)),
+                memory=dict(
+                    argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                    output_bytes=getattr(ma, "output_size_in_bytes", None),
+                    temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                    alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+                ),
+                collectives=coll,
+                op_mix=op_mix(hlo),
+                meta=dict(
+                    kind=cell["meta"]["kind"],
+                    tokens=cell["meta"]["tokens"],
+                ),
+            )
+            print(
+                f"[dryrun] {name}: ok  compile={t_compile:.1f}s "
+                f"flops/dev={record['flops_per_device']:.3e} "
+                f"wire={coll['total_wire_bytes']:.3e}B"
+            )
+        except Exception as e:  # noqa: BLE001 — record and continue
+            record["status"] = "error"
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc()[-4000:]
+            print(f"[dryrun] {name}: ERROR {record['error'][:200]}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--policy", default="bf16_mixed")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (
+        ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    )
+    out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(
+                    arch, shape, mesh_kind, out_dir,
+                    force=args.force, tag=args.tag,
+                    policy_name=args.policy,
+                )
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_skip += s == "skip"
+                n_err += s == "error"
+    print(f"[dryrun] done: {n_ok} ok / {n_skip} skip / {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

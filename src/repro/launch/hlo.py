@@ -1,0 +1,133 @@
+"""HLO-text analysis: collective bytes, op mix (the dry-run 'profiler').
+
+``collective_stats`` parses ``compiled.as_text()`` and attributes wire
+bytes per collective kind with ring-algorithm factors:
+
+    all-reduce      2·(n-1)/n · bytes     (reduce-scatter + all-gather)
+    all-gather        (n-1)/n · output bytes
+    reduce-scatter    (n-1)/n · input bytes
+    all-to-all        (n-1)/n · bytes
+    collective-permute        1 · bytes
+
+Group size n comes from ``replica_groups={{...}}`` or the iota form
+``replica_groups=[G,N]<=[...]``.  Byte counts use the op *result* shapes
+(per-device shards in SPMD-partitioned HLO).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["collective_stats", "op_mix", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, num_devices: int) -> dict:
+    """Per-kind wire-byte totals (per device) + op counts."""
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    count_by_kind: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # "%name = TYPE op-name(..." — TYPE may be a tuple and may carry
+        # layout suffixes like {1,0}
+        m = re.match(
+            r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w-]+)\(",
+            stripped,
+        )
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next(
+            (c for c in _COLLECTIVES if op == c or op.startswith(c + "-")),
+            None,
+        )
+        if kind is None:
+            continue
+        if op.endswith("-start") is False and ("-done" in op):
+            continue  # count the -start, skip the -done
+        size = _shape_bytes(m.group(1))
+        n = _group_size(stripped, num_devices)
+        if n <= 1:
+            continue
+        ring = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "reduce-scatter": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[kind]
+        bytes_by_kind[kind] += size * ring
+        count_by_kind[kind] += 1
+    return {
+        "wire_bytes": dict(bytes_by_kind),
+        "counts": dict(count_by_kind),
+        "total_wire_bytes": float(sum(bytes_by_kind.values())),
+    }
+
+
+_OPS_OF_INTEREST = (
+    "convert", "exponential", "rsqrt", "divide", "dot", "fusion",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "transpose",
+    "gather", "scatter",
+)
+
+
+def op_mix(hlo_text: str) -> dict:
+    """Counts of selected op kinds — the structural stand-in for the
+    paper's Nsight pipeline-utilization evidence (XU ≈ convert/rsqrt)."""
+    counts = {k: 0 for k in _OPS_OF_INTEREST}
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([\w-]+)\(",
+            line,
+        )
+        if not m:
+            continue
+        op = m.group(1)
+        for k in _OPS_OF_INTEREST:
+            if op == k or op.startswith(k + "."):
+                counts[k] += 1
+    return counts

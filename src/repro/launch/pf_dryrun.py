@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Dry-run of the paper's own workload at fleet scale.
+
+Compiles the distributed particle filter step (exact + local resampling
+schemes) for 2^25 particles on the single-pod and multi-pod production
+meshes — 512x the paper's 64k-particle cap — and records cost/collective
+stats.  The comparison of exact-vs-local wire bytes is the §Perf
+collective-term iteration for the paper's own technique.
+
+    PYTHONPATH=src python -m repro.launch.pf_dryrun
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo import collective_stats
+from repro.launch.mesh import make_production_mesh
+
+ART = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+)
+
+
+def run(num_particles: int = 1 << 25, frame: int = 512) -> list[dict]:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import get_policy
+    from repro.core.distributed import DistributedConfig, make_dist_pf_step
+    from repro.core.tracking import TrackerConfig, make_tracker_spec
+
+    out = []
+    for mesh_kind in ["single", "multi"]:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        jax.set_mesh(mesh)
+        axes = tuple(mesh.axis_names)  # shard particles over the full mesh
+        pol = get_policy("bf16_mixed")
+        tcfg = TrackerConfig(
+            num_particles=num_particles, height=frame, width=frame
+        )
+        spec = make_tracker_spec(tcfg, pol)
+        for scheme in ["exact", "local"]:
+            dcfg = DistributedConfig(mesh=mesh, axis=axes, scheme=scheme)
+            step = make_dist_pf_step(spec, pol, dcfg)
+            sh = jax.NamedSharding(mesh, P(axes))
+            rep = jax.NamedSharding(mesh, P())
+            args = (
+                {"pos": jax.ShapeDtypeStruct((num_particles, 2), pol.compute_dtype)},
+                jax.ShapeDtypeStruct((num_particles,), pol.compute_dtype),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((frame, frame), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.uint32),  # key placeholder
+            )
+            key_struct = jax.eval_shape(lambda: jax.random.key(0))
+            args = args[:4] + (key_struct,)
+            t0 = time.time()
+            jf = jax.jit(
+                step,
+                in_shardings=({"pos": sh}, sh, rep, rep, rep),
+            )
+            lowered = jf.lower(*args)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            coll = collective_stats(compiled.as_text(), mesh.devices.size)
+            rec = dict(
+                arch="rodinia-pf",
+                shape=f"pf_{num_particles >> 20}m_{scheme}",
+                mesh=mesh_kind,
+                status="ok",
+                devices=int(mesh.devices.size),
+                compile_s=round(time.time() - t0, 2),
+                flops_per_device=float(ca.get("flops", -1)),
+                bytes_per_device=float(ca.get("bytes accessed", -1)),
+                collectives=coll,
+                particles=num_particles,
+            )
+            out.append(rec)
+            os.makedirs(ART, exist_ok=True)
+            with open(
+                os.path.join(ART, f"rodinia-pf__{rec['shape']}__{mesh_kind}.json"),
+                "w",
+            ) as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[pf-dryrun] {mesh_kind}/{scheme}: ok compile={rec['compile_s']}s "
+                f"flops/dev={rec['flops_per_device']:.3e} "
+                f"wire/dev={coll['total_wire_bytes']:.3e}B "
+                f"({coll['counts']})"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

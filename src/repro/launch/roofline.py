@@ -1,0 +1,169 @@
+"""Roofline analysis from the dry-run + metering artifacts.
+
+Three terms per (arch x shape) cell, single-pod mesh (256 chips), TPU v5e
+constants:
+
+    compute    = flops_per_device / peak_flops        [197e12 bf16]
+    memory     = bytes_per_device / hbm_bw            [819e9 B/s]
+    collective = wire_bytes_per_device / link_bw      [50e9 B/s]
+
+flops/bytes/wire come from the *metering* artifacts (exact scan-trip
+totals — see launch.meter); the production compile supplies
+memory_analysis (fits-on-chip proof) and the collective schedule.
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE; decode
+counts D = batch tokens), the useful-compute ratio MODEL_FLOPS /
+(flops_per_device * chips), the dominant term, and a one-line lever.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any
+
+from repro.configs import SHAPES, get_config, list_archs
+
+__all__ = ["load_cell", "roofline_row", "build_table", "render_markdown"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link (conservative single-link model)
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../../artifacts"))
+
+
+def _read(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def load_cell(arch: str, shape: str, art_dir: str = ART, tag: str = "") -> dict | None:
+    sfx = f"__{tag}" if tag else ""
+    prod = _read(os.path.join(art_dir, "dryrun", f"{arch}__{shape}__single{sfx}.json"))
+    meter = _read(os.path.join(art_dir, "meter", f"{arch}__{shape}__meter{sfx}.json"))
+    if prod is None:
+        return None
+    return {"prod": prod, "meter": meter}
+
+
+def _model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_row(arch: str, shape: str, art_dir: str = ART, tag: str = "") -> dict | None:
+    cell = load_cell(arch, shape, art_dir, tag)
+    if cell is None:
+        return None
+    prod = cell["prod"]
+    if prod.get("status") == "skip":
+        return {"arch": arch, "shape": shape, "status": "skip",
+                "reason": prod["reason"]}
+    if prod.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "status": "error",
+                "reason": prod.get("error", "?")[:120]}
+    meter = cell["meter"]
+    if meter is None:
+        return {"arch": arch, "shape": shape, "status": "no-meter"}
+
+    chips = prod["devices"]
+    flops = meter["flops_per_device"]
+    bytes_ = meter["bytes_per_device"]
+    wire = meter["wire_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = wire / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = _model_flops(arch, shape)
+    ratio = mf / (flops * chips) if flops > 0 else 0.0
+    # roofline fraction: useful model compute per chip-second at the bound
+    frac = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+
+    lever = {
+        "compute": "reduce recompute (remat policy) / raise useful-FLOP ratio",
+        "memory": "fuse reads, shrink activation dtype, raise arithmetic intensity per HBM byte",
+        "collective": "reshard to cut gather/reduce volume or overlap with compute",
+    }[dom]
+    return {
+        "arch": arch,
+        "shape": shape,
+        "status": "ok",
+        "chips": chips,
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+        "lever": lever,
+        "memory_per_device": prod.get("memory", {}),
+        "compile_s": prod.get("compile_s"),
+    }
+
+
+def build_table(art_dir: str = ART, tag: str = "") -> list[dict]:
+    rows = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            row = roofline_row(arch, shape, art_dir, tag)
+            if row is not None:
+                rows.append(row)
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "6ND/HLO | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} "
+                f"| — | — | {r.get('reason','')} |"
+            )
+            continue
+        out.append(
+            "| {arch} | {shape} | {c:.2e} | {m:.2e} | {x:.2e} | {dom} | "
+            "{ratio:.2f} | {frac:.1%} | {lever} |".format(
+                arch=r["arch"], shape=r["shape"], c=r["compute_s"],
+                m=r["memory_s"], x=r["collective_s"], dom=r["dominant"],
+                ratio=r["useful_ratio"], frac=r["roofline_frac"],
+                lever=r["lever"],
+            )
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default=ART)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = build_table(args.art, args.tag)
+    print(render_markdown(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

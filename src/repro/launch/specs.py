@@ -1,0 +1,213 @@
+"""Per-cell step builders + ShapeDtypeStruct input specs + shardings.
+
+``build_cell(arch, shape, mesh)`` returns (fn, args_structs, in_shardings,
+out_shardings) ready for ``jax.jit(fn, ...).lower(*args).compile()`` — used
+by the dry-run, the roofline analysis, and the perf iterations.
+
+Skip policy (see DESIGN.md §Arch-applicability):
+- ``long_500k`` only for sub-quadratic stacks (gemma3 local:global, zamba2,
+  rwkv6);
+- decode shapes skipped for encoder-only (hubert).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.precision import get_policy
+from repro.data.tokens import BatchSpec, batch_structs
+from repro.models import model as M
+from repro.models.params import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    ParamSpec,
+    abstract_params,
+    logical_to_spec,
+    tree_shardings,
+)
+from repro.optim.adamw import OptConfig, opt_state_specs
+from repro.train.train_loop import TrainConfig, make_train_step
+
+__all__ = ["build_cell", "cell_skip_reason", "SUBQUADRATIC", "all_cells"]
+
+SUBQUADRATIC = {"gemma3-27b", "zamba2-2.7b", "rwkv6-7b"}
+
+# Train microbatch counts: global batch 256 -> 8 microbatches of 32 keeps
+# the largest (per-micro) logit buffer ~seq*vocab/model_shards*2B per device
+# and divides the 32-way batch sharding of the multi-pod mesh.
+TRAIN_MICRO = 8
+
+
+def cell_skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cfg.is_encoder and shape.kind == "decode":
+        return "encoder-only: no decode step"
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return "pure full attention: 500k decode needs sub-quadratic stack"
+    return None
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs import list_archs
+
+    return [
+        (a, s)
+        for a in list_archs()
+        for s in SHAPES
+    ]
+
+
+def _batch_sharding(mesh, structs: dict) -> dict:
+    def shard(s: jax.ShapeDtypeStruct):
+        axes = ["batch"] + [None] * (len(s.shape) - 1)
+        spec = logical_to_spec(mesh, s.shape, tuple(axes), TRAIN_RULES)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(shard, structs)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, policy_name: str = "bf16_mixed",
+               serve_rules=None, train_micro: int | None = None,
+               cfg_overrides: dict | None = None,
+               seq_override: int | None = None,
+               batch_override: int | None = None,
+               shard_logits: bool = True):
+    """Returns dict(fn=, args=, in_shardings=, out_shardings=, meta=).
+
+    ``cfg_overrides``/``seq_override``/``batch_override`` support the
+    metering compiles (launch.meter): reduced layer counts + unrolled scans
+    at several sequence points, from which true trip-total costs are solved.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if seq_override or batch_override:
+        shape = dataclasses.replace(
+            shape,
+            seq_len=seq_override or shape.seq_len,
+            global_batch=batch_override or shape.global_batch,
+        )
+    policy = get_policy(policy_name)
+    serve_rules = serve_rules or SERVE_RULES
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=train_micro or TRAIN_MICRO)
+        pspecs = M.param_specs(cfg)
+        params = abstract_params(pspecs, jnp.float32)
+        p_shard = tree_shardings(mesh, pspecs, TRAIN_RULES)
+        ospecs = opt_state_specs(pspecs, tcfg.opt)
+        opt = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape,
+                tcfg.opt.m_dtype if False else jnp.float32,
+            ),
+            ospecs,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        # proper dtypes for m/v
+        opt = {
+            "m": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, tcfg.opt.m_dtype),
+                ospecs["m"], is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "v": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, tcfg.opt.v_dtype),
+                ospecs["v"], is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        o_shard = {
+            "m": tree_shardings(mesh, ospecs["m"], TRAIN_RULES),
+            "v": tree_shardings(mesh, ospecs["v"], TRAIN_RULES),
+            "step": NamedSharding(mesh, P()),
+        }
+        bstructs = batch_structs(cfg, BatchSpec("train", shape.global_batch, shape.seq_len))
+        b_shard = _batch_sharding(mesh, bstructs)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_train_step(cfg, policy, tcfg)
+        return dict(
+            fn=fn,
+            args=(params, opt, bstructs, step),
+            in_shardings=(p_shard, o_shard, b_shard, NamedSharding(mesh, P())),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+            meta=dict(cfg=cfg, policy=policy, kind="train",
+                      tokens=shape.global_batch * shape.seq_len),
+            donate=(0, 1),
+        )
+
+    # ----- serving cells -----
+    pspecs = M.param_specs(cfg)
+    params = abstract_params(pspecs, policy.param_dtype)
+    p_shard = tree_shardings(mesh, pspecs, serve_rules)
+
+    if shape.kind == "prefill":
+        bstructs = batch_structs(
+            cfg, BatchSpec("prefill", shape.global_batch, shape.seq_len)
+        )
+        b_shard = _batch_sharding(mesh, bstructs)
+
+        def prefill_fn(params, batch):
+            return M.prefill(params, batch, cfg, policy, shape.seq_len)
+
+        return dict(
+            fn=prefill_fn,
+            args=(params, bstructs),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=NamedSharding(mesh, P()),
+            meta=dict(cfg=cfg, policy=policy, kind="prefill",
+                      tokens=shape.global_batch * shape.seq_len),
+            donate=(),
+        )
+
+    # decode: one new token against a cache of seq_len.  The cache stores
+    # *activations*, so it uses the compute dtype (fp8 weight-only policies
+    # keep a bf16 cache); recurrent states stay fp32.
+    cspecs = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    cache = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape,
+            jnp.float32 if s.init == "zeros_f32" else policy.compute_dtype,
+        ),
+        cspecs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    c_shard = tree_shardings(mesh, cspecs, serve_rules)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh,
+        logical_to_spec(mesh, (shape.global_batch,), ("batch",), serve_rules),
+    )
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, token, pos, cache):
+        return M.decode_step(params, token, pos, cache, cfg, policy)
+
+    # Optimized serving keeps the logits vocab-sharded (the sampler works
+    # on shards); the baseline replicates them, which costs a full-vocab
+    # all-gather per step.
+    logits_spec = (
+        logical_to_spec(
+            mesh, (shape.global_batch, cfg.vocab_size), ("batch", "vocab"),
+            serve_rules,
+        )
+        if shard_logits
+        else P()
+    )
+    return dict(
+        fn=decode_fn,
+        args=(params, tok, pos, cache),
+        in_shardings=(p_shard, tok_shard, NamedSharding(mesh, P()), c_shard),
+        out_shardings=(NamedSharding(mesh, logits_spec), c_shard),
+        meta=dict(cfg=cfg, policy=policy, kind="decode",
+                  tokens=shape.global_batch),
+        donate=(3,),
+    )

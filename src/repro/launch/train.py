@@ -1,0 +1,97 @@
+"""Production training driver: --arch config -> sharded train loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b \
+        --reduce --steps 50 [--precision bf16_mixed] [--ckpt-dir DIR]
+
+On real hardware this runs the full config over the production mesh; in
+this CPU container use ``--reduce`` for a family-faithful small model (the
+same code path end to end: sharded params, microbatched AdamW, async
+checkpoints, auto-resume).  The 512-device dry-run of the *full* configs
+lives in ``repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--precision", default="bf16_mixed")
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import get_config, reduced_config
+    from repro.core.precision import get_policy
+    from repro.data.tokens import BatchSpec, make_batch
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import model as M
+    from repro.models.params import TRAIN_RULES, tree_shardings
+    from repro.optim import init_opt_state
+    from repro.train import TrainConfig, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced_config(cfg)
+    policy = get_policy(args.precision)
+    mesh = make_local_mesh(("data", "model"))
+    jax.set_mesh(mesh)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={mesh.devices.size} policy={policy.name}")
+
+    tcfg = TrainConfig(
+        microbatches=args.microbatches, peak_lr=args.peak_lr,
+        warmup_steps=max(args.steps // 10, 1), total_steps=args.steps,
+    )
+    params = M.init_params(jax.random.key(1), cfg, jnp.float32)
+    p_shard = tree_shardings(mesh, M.param_specs(cfg), TRAIN_RULES)
+    params = jax.device_put(params, p_shard)
+    opt = init_opt_state(params, tcfg.opt)
+
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ck and ck.latest_step() is not None:
+        restored, extra = ck.restore(
+            ck.latest_step(), {"params": params, "opt": opt}
+        )
+        params, opt, start = restored["params"], restored["opt"], extra["next_step"]
+        print(f"resumed at step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, policy, tcfg), donate_argnums=(0, 1))
+    spec = BatchSpec("train", args.batch, args.seq)
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        batch = make_batch(cfg, spec, args.seed, i)
+        params, opt, metrics = step_fn(params, opt, batch, jnp.int32(i))
+        if i % 10 == 0 or i == args.steps - 1:
+            dt = (time.perf_counter() - t0) / max(i - start + 1, 1)
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} ({dt:.2f}s/step)")
+        if ck and (i + 1) % args.ckpt_every == 0:
+            ck.save(i + 1, {"params": params, "opt": opt},
+                    extra={"next_step": i + 1}, blocking=False)
+    if ck:
+        ck.wait()
+        ck.save(args.steps, {"params": params, "opt": opt},
+                extra={"next_step": args.steps})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared neural layers (pure functions over param dicts).
+
+All matmuls run in the policy compute dtype with fp32 accumulation
+(``preferred_element_type``) — the MXU-native landing of the paper's
+"accumulate wider than you store" discipline; softmax/normalization
+reductions likewise run in the accum dtype via ``stability.stable_softmax``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "rmsnorm",
+    "rmsnorm_spec",
+    "dense",
+    "dense_spec",
+    "mlp",
+    "mlp_spec",
+    "embed_spec",
+    "embed_lookup",
+    "rope",
+    "ACTS",
+]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def dense_spec(
+    d_in: int, d_out: int, logical=("embed", "mlp"), bias: bool = False,
+    init: str = "normal", scale: float = 1.0,
+) -> dict:
+    spec = {"w": ParamSpec((d_in, d_out), logical, init=init, scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (logical[-1],), init="zeros")
+    return spec
+
+
+def dense(params: dict, x: jax.Array) -> jax.Array:
+    y = jnp.einsum(
+        "...d,df->...f",
+        x,
+        params["w"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def mlp_spec(d: int, d_ff: int, bias: bool = False) -> dict:
+    """Gated (SwiGLU-style) feed-forward."""
+    return {
+        "wi_gate": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d), ("mlp", "embed_out")),
+        **({"b": ParamSpec((d,), ("embed_out",), init="zeros")} if bias else {}),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    f = ACTS[act]
+    gate = jnp.einsum(
+        "...d,df->...f", x, params["wi_gate"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    up = jnp.einsum(
+        "...d,df->...f", x, params["wi_up"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    h = (f(gate) * up).astype(x.dtype)
+    y = jnp.einsum(
+        "...f,fd->...d", h, params["wo"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embed_spec(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """Rotary embedding over the last axis. x: (..., S, H, hd), positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half)
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

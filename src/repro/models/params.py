@@ -1,0 +1,244 @@
+"""Parameter specs, initialization, counting, and logical-axis sharding.
+
+Every parameter is declared once as a :class:`ParamSpec` carrying its shape
+and *logical* axis names ("embed", "heads", "mlp", "vocab", ...).  A rule
+table maps logical names to mesh axes (MaxText-style), with automatic
+fallback to replication when a dimension does not divide the mesh axis —
+that keeps one rule table valid across all ten architectures (e.g. 8 KV
+heads on a 16-way model axis simply replicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "LogicalRules",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "spec_to_sharding",
+    "tree_shardings",
+    "init_params",
+    "abstract_params",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# Logical-axis -> mesh-axis rule tables.  "fsdp" style: the embed/d_model
+# axis shards over the data axis for parameters (ZeRO-3), batch shards over
+# (pod, data), tensor axes shard over model.
+LogicalRules = dict[str, Any]
+
+TRAIN_RULES: LogicalRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # FSDP: row-shard every d_model axis
+    "embed_out": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    # Experts shard over "model" when the count divides it (deepseek: 64);
+    # otherwise (grok: 8 experts on a 16-way axis) the expert axis
+    # replicates and the expert hidden dim takes the model axis instead —
+    # without this fallback the whole expert FFN compute replicates 16x
+    # (measured on grok-1 train_4k; §Perf iteration 2).
+    "experts": "model",
+    "expert_mlp": "model",
+    "shared_mlp": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "rwkv_inner": "model",
+    "layers": None,           # scan axis — never sharded
+    "cache_seq": None,
+    "frame": None,
+}
+
+# Serving: no optimizer state to shard away; keep weights tensor-parallel
+# and shard the KV cache sequence over the data axis (context parallelism)
+# when the batch cannot fill it.
+SERVE_RULES: LogicalRules = dict(
+    TRAIN_RULES,
+    embed=None,
+    embed_out=None,
+    # Context parallelism: the KV-cache sequence shards over every mesh
+    # axis the batch dim leaves free (GQA kv-head counts rarely divide the
+    # model axis).  Without this, command-r decode_32k holds 40 GiB/device
+    # of cache (vs 2.5 sharded) and the memory term is ~16x off roofline
+    # (§Perf iteration 7).  Decode attention over the seq-sharded cache is
+    # the distributed online-LSE combine — the paper's Eq.-5 trick as a
+    # collective.
+    cache_seq=("model", "data"),
+)
+
+# Compute-time layout for FSDP-stored params: the embed/d_model axis is
+# gathered (data-axis shard -> replicated) right before use, layer by layer,
+# so every dot keeps its batch dim sharded on "data".  Without the explicit
+# gather the SPMD partitioner resolves the batch-vs-contraction conflict by
+# replicating the token dim — measured 2.8x per-layer FLOPs (§Perf iter 1).
+GATHER_RULES: LogicalRules = dict(TRAIN_RULES, embed=None, embed_out=None)
+
+
+def gather_for_compute(params: Any, specs: Any, compute_dtype=None) -> Any:
+    """with_sharding_constraint params to their compute-time (gathered)
+    layout.  No-op unless tracing under a concrete mesh (jax.set_mesh).
+
+    ``compute_dtype``: cast *before* the gather so the FSDP all-gather
+    moves 16-bit (or 8-bit) bytes instead of fp32 master weights — halves
+    the dominant collective term of the train cells (§Perf iteration 3).
+    Only float params narrower than fp32 benefit; int/recurrent leaves pass
+    through.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return params
+
+    def g(p, s: ParamSpec):
+        if (
+            compute_dtype is not None
+            and jnp.issubdtype(p.dtype, jnp.floating)
+            and jnp.dtype(compute_dtype).itemsize < jnp.dtype(p.dtype).itemsize
+        ):
+            p = p.astype(compute_dtype)
+        spec = logical_to_spec(mesh, p.shape, s.logical, GATHER_RULES)
+        return jax.lax.with_sharding_constraint(p, spec)
+
+    return jax.tree.map(
+        g, params, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def _mesh_axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(_mesh_axis_size(mesh, a) for a in axis)
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def logical_to_spec(
+    mesh, shape: tuple[int, ...], logical: tuple[str | None, ...],
+    rules: LogicalRules,
+) -> P:
+    """Logical axes -> PartitionSpec.
+
+    Degrades gracefully: a rule naming a tuple of mesh axes uses the
+    *subset* of axes not already consumed by an earlier dim of the same
+    tensor (e.g. cache_seq -> ("model","data") keeps "model" when the batch
+    dim took "data"); any dim that cannot divide its remaining axes
+    replicates.
+    """
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        flat = axis if isinstance(axis, tuple) else (axis,)
+        flat = tuple(
+            a for a in flat
+            if a is not None and a in mesh.axis_names and a not in used
+        )
+        # largest prefix of the remaining axes whose product divides dim
+        chosen: tuple[str, ...] = ()
+        for i in range(len(flat), 0, -1):
+            size = math.prod(mesh.shape[a] for a in flat[:i])
+            if size > 1 and dim % size == 0:
+                chosen = flat[:i]
+                break
+        if not chosen:
+            out.append(None)
+        else:
+            out.append(chosen if len(chosen) > 1 else chosen[0])
+            used.update(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_to_sharding(mesh, spec: ParamSpec, rules: LogicalRules):
+    return NamedSharding(
+        mesh, logical_to_spec(mesh, spec.shape, spec.logical, rules)
+    )
+
+
+def tree_shardings(mesh, specs: Any, rules: LogicalRules):
+    """Pytree of ParamSpec -> pytree of NamedSharding."""
+    return jax.tree.map(
+        lambda s: spec_to_sharding(mesh, s, rules),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _init_one(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros_f32":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def init_params(key, specs: Any, dtype) -> Any:
+    """Initialize a pytree of parameters from a pytree of ParamSpec."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    )
+
+
+def abstract_params(specs: Any, dtype) -> Any:
+    """ShapeDtypeStruct stand-ins (for dry-run lowering, no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count from the spec tree (exact)."""
+    from repro.models.model import param_specs
+
+    specs = param_specs(cfg)
+    total = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )[0]:
+        n = math.prod(spec.shape)
+        if active_only and cfg.is_moe:
+            keys = "/".join(str(p) for p in path)
+            if "routed" in keys:
+                # only top-k of the routed experts touch each token
+                n = n * cfg.experts_per_token // cfg.num_experts
+        total += n
+    return total

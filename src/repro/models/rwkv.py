@@ -1,0 +1,281 @@
+"""RWKV6 ("Finch") — data-dependent-decay linear attention, chunked.
+
+Recurrence per head (state S: key_dim x value_dim):
+
+    y_t = r_t · S_{t-1}  +  (r_t · (u ⊙ k_t)) v_t          (bonus term)
+    S_t = diag(w_t) S_{t-1}  +  k_t ⊗ v_t
+
+with w_t = exp(-exp(w0 + tanh(x̃_t A) B)) a *data-dependent* per-channel
+decay (the low-rank "Finch" parameterization).  Training uses the chunked
+form: within a chunk, decays telescope through cumulative log-sums (fp32 —
+the stability discipline again: 16-bit cumprods of near-1 decays are
+exactly the paper's vanishing-weight failure), across chunks the state is
+carried by ``lax.scan``.
+
+Decode carries (token-shift x_prev, S) per layer — O(1) state, no KV cache:
+this is the arch that showcases the 500k cell.
+
+Simplifications vs. the reference implementation (documented in DESIGN.md):
+static token-shift mixing coefficients (RWKV5 style) instead of the
+per-token dynamic mix, and a single LayerNorm-free gated output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "rwkv_time_spec",
+    "rwkv_channel_spec",
+    "rwkv_time_forward",
+    "rwkv_channel_forward",
+    "rwkv_time_decode",
+    "rwkv_channel_decode",
+    "init_rwkv_cache",
+    "rwkv_cache_spec",
+    "HEAD_DIM",
+]
+
+HEAD_DIM = 64
+LORA_RANK = 64
+
+
+def _heads(cfg):
+    return cfg.d_model // HEAD_DIM
+
+
+def rwkv_time_spec(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "mix_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "mix_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mix_v": ParamSpec((d,), ("embed",), init="zeros"),
+        "mix_w": ParamSpec((d,), ("embed",), init="zeros"),
+        "mix_g": ParamSpec((d,), ("embed",), init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", "rwkv_inner")),
+        "wk": ParamSpec((d, d), ("embed", "rwkv_inner")),
+        "wv": ParamSpec((d, d), ("embed", "rwkv_inner")),
+        "wg": ParamSpec((d, d), ("embed", "rwkv_inner")),
+        "wo": ParamSpec((d, d), ("rwkv_inner", "embed_out")),
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "w_a": ParamSpec((d, LORA_RANK), ("embed", None), scale=0.1),
+        "w_b": ParamSpec((LORA_RANK, d), (None, "embed"), scale=0.1),
+        "u": ParamSpec((d,), ("embed",), init="zeros"),
+        "ln_x": ParamSpec((d,), ("embed",), init="ones"),
+    }
+
+
+def rwkv_channel_spec(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mix_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed_out")),
+        "wr": ParamSpec((d, d), ("embed", "rwkv_inner")),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: prepend x_prev, drop last. x: (B,T,D); x_prev: (B,1,D)."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _proj(w, x):
+    return jnp.einsum(
+        "btd,de->bte", x, w.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def _decay(params, xw):
+    """Data-dependent log-decay (negative), fp32. xw: (B,T,D)."""
+    lora = jnp.einsum(
+        "btd,dr->btr", xw.astype(jnp.float32), params["w_a"].astype(jnp.float32)
+    )
+    lw = params["w0"].astype(jnp.float32) + jnp.einsum(
+        "btr,rd->btd", jnp.tanh(lora), params["w_b"].astype(jnp.float32)
+    )
+    return -jnp.exp(lw)  # log w_t  (w_t = exp(-exp(...)) in (0,1))
+
+
+def _group_norm(x, scale, eps=1e-5):
+    """Per-head group norm on (B, T, H, P)."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    b, t, h, p = x.shape
+    return (y.reshape(b, t, h * p) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_time_forward(
+    params: dict, x: jax.Array, cfg, *, chunk: int | None = None
+) -> jax.Array:
+    """Full-sequence chunked WKV6. x: (B, T, D)."""
+    chunk = chunk or getattr(cfg, "rwkv_chunk", 16)
+    bsz, t, d = x.shape
+    h = _heads(cfg)
+    p = HEAD_DIM
+    cdt = x.dtype
+    xs = _shift(x, jnp.zeros((bsz, 1, d), cdt))
+
+    r = _proj(params["wr"], _mix(x, xs, params["mix_r"]))
+    k = _proj(params["wk"], _mix(x, xs, params["mix_k"]))
+    v = _proj(params["wv"], _mix(x, xs, params["mix_v"]))
+    g = _proj(params["wg"], _mix(x, xs, params["mix_g"]))
+    lw = _decay(params, _mix(x, xs, params["mix_w"]))  # (B,T,D) fp32, <0
+
+    def hs(z):  # (B,T,D) -> (B,T,H,P)
+        return z.reshape(bsz, t, h, p)
+
+    rh, kh, vh = hs(r).astype(jnp.float32), hs(k).astype(jnp.float32), hs(
+        v
+    ).astype(jnp.float32)
+    lwh = hs(lw)
+    uh = params["u"].astype(jnp.float32).reshape(h, p)
+
+    import math
+
+    chunk = math.gcd(t, chunk)
+    nchunks = t // chunk
+
+    def rc(z):  # (B, T, H, P) -> (C, B, Q, H, P)
+        return jnp.moveaxis(
+            z.reshape(bsz, nchunks, chunk, h, p), 1, 0
+        )
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # strictly lower
+
+    def chunk_step(S, inp):
+        rq, kq, vq, lq = inp  # (B, Q, H, P)
+        cum = jnp.cumsum(lq, axis=1)  # (B,Q,H,P) inclusive, <= 0
+        cum_prev = cum - lq
+        # Intra-chunk: the naive r̃=r·exp(cum), k̃=k·exp(-cum) factorization
+        # overflows fp32 for fast-forgetting channels (exp(+|cum|) -> inf);
+        # instead build the exact per-channel decay tensor, whose exponents
+        # cum_{i-1}-cum_j are <= 0 for every kept (j < i) entry — nothing
+        # can overflow.  Memory O(Q^2·P) per head, why the chunk is small.
+        dec = jnp.exp(
+            jnp.where(
+                mask[None, :, :, None, None],
+                cum_prev[:, :, None] - cum[:, None, :],
+                -jnp.inf,
+            )
+        )  # (B, Qi, Qj, H, P)
+        if getattr(cfg, "rwkv_intra_bf16", False):
+            # decays are in [0,1] — bf16 storage halves the dominant HBM
+            # traffic of the chunked form (§Perf, rwkv prefill cell)
+            dec = dec.astype(jnp.bfloat16)
+        att = jnp.einsum("bihp,bjhp,bijhp->bhij", rq, kq, dec)
+        y = jnp.einsum("bhij,bjhp->bihp", att, vq)
+        # bonus (current token)
+        bonus = jnp.einsum("bihp,bihp->bih", rq, uh[None, None] * kq)
+        y = y + bonus[..., None] * vq
+        # carried state: r_i · diag(exp(cum_{i-1})) S   (exponents <= 0)
+        r_t = rq * jnp.exp(cum_prev)
+        y = y + jnp.einsum("bihk,bhkp->bihp", r_t, S)
+        # state update: S' = diag(exp(cum_Q)) S + sum_j exp(cum_Q - cum_j) k_j v_j
+        total = cum[:, -1]  # (B,H,P), <= 0
+        k_rem = kq * jnp.exp(total[:, None] - cum)  # exponents <= 0
+        S_new = S * jnp.exp(total)[..., None] + jnp.einsum(
+            "bjhk,bjhp->bhkp", k_rem, vq
+        )
+        if getattr(cfg, "rwkv_intra_bf16", False):
+            y = y.astype(cdt)  # chunk outputs stored compute-width
+        return S_new, y
+
+    S0 = jnp.zeros((bsz, h, p, p), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, S0, (rc(rh), rc(kh), rc(vh), rc(lwh)),
+        unroll=True if cfg.unroll_scans else 1,
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, h, p)
+
+    y = _group_norm(y, params["ln_x"])
+    y = (y.astype(jnp.float32) * jax.nn.silu(g.astype(jnp.float32))).astype(cdt)
+    return _proj(params["wo"], y)
+
+
+def rwkv_channel_forward(params: dict, x: jax.Array, cfg) -> jax.Array:
+    bsz, t, d = x.shape
+    xs = _shift(x, jnp.zeros((bsz, 1, d), x.dtype))
+    xk = _mix(x, xs, params["mix_k"])
+    xr = _mix(x, xs, params["mix_r"])
+    k = jnp.square(jax.nn.relu(_proj(params["wk"], xk)))
+    kv = _proj(params["wv"], k)
+    return jax.nn.sigmoid(_proj(params["wr"], xr)) * kv
+
+
+def init_rwkv_cache(cfg, batch: int, dtype) -> dict:
+    h, p, d = _heads(cfg), HEAD_DIM, cfg.d_model
+    return {
+        "state": jnp.zeros((batch, h, p, p), jnp.float32),
+        "x_time": jnp.zeros((batch, 1, d), dtype),
+        "x_chan": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def rwkv_cache_spec(cfg, batch: int) -> dict:
+    h, p, d = _heads(cfg), HEAD_DIM, cfg.d_model
+    return {
+        "state": ParamSpec(
+            (batch, h, p, p), ("batch", "heads", None, None), init="zeros_f32"
+        ),
+        "x_time": ParamSpec((batch, 1, d), ("batch", None, "embed"), init="zeros"),
+        "x_chan": ParamSpec((batch, 1, d), ("batch", None, "embed"), init="zeros"),
+    }
+
+
+def rwkv_time_decode(
+    params: dict, x: jax.Array, cache: dict, cfg
+) -> tuple[jax.Array, dict]:
+    """One step. x: (B, 1, D)."""
+    bsz, _, d = x.shape
+    h, p = _heads(cfg), HEAD_DIM
+    cdt = x.dtype
+    xs = cache["x_time"].astype(cdt)
+
+    r = _proj(params["wr"], _mix(x, xs, params["mix_r"]))
+    k = _proj(params["wk"], _mix(x, xs, params["mix_k"]))
+    v = _proj(params["wv"], _mix(x, xs, params["mix_v"]))
+    g = _proj(params["wg"], _mix(x, xs, params["mix_g"]))
+    lw = _decay(params, _mix(x, xs, params["mix_w"]))  # (B,1,D)
+
+    rh = r.reshape(bsz, h, p).astype(jnp.float32)
+    kh = k.reshape(bsz, h, p).astype(jnp.float32)
+    vh = v.reshape(bsz, h, p).astype(jnp.float32)
+    wh = jnp.exp(lw.reshape(bsz, h, p))  # decay in (0,1)
+    uh = params["u"].astype(jnp.float32).reshape(h, p)
+
+    S = cache["state"]
+    kv = jnp.einsum("bhk,bhp->bhkp", kh, vh)
+    y = jnp.einsum("bhk,bhkp->bhp", rh, S + uh[None, ..., None] * kv)
+    S_new = S * wh[..., None] + kv
+
+    y = y.reshape(bsz, 1, h, p)
+    y = _group_norm(y, params["ln_x"])
+    y = (y.astype(jnp.float32) * jax.nn.silu(g.astype(jnp.float32))).astype(cdt)
+    out = _proj(params["wo"], y)
+    return out, dict(
+        cache, state=S_new, x_time=x.astype(cache["x_time"].dtype)
+    )
+
+
+def rwkv_channel_decode(
+    params: dict, x: jax.Array, cache: dict, cfg
+) -> tuple[jax.Array, dict]:
+    xs = cache["x_chan"].astype(x.dtype)
+    xk = _mix(x, xs, params["mix_k"])
+    xr = _mix(x, xs, params["mix_r"])
+    k = jnp.square(jax.nn.relu(_proj(params["wk"], xk)))
+    kv = _proj(params["wv"], k)
+    out = jax.nn.sigmoid(_proj(params["wr"], xr)) * kv
+    return out, dict(cache, x_chan=x.astype(cache["x_chan"].dtype))

@@ -1,0 +1,247 @@
+"""Mamba2 (SSD) layer — chunked-parallel training, O(1)-state decode.
+
+The SSD recurrence h_t = exp(A·dt_t)·h_t-1 + dt_t·B_t⊗x_t is evaluated in
+chunks: intra-chunk terms use masked decay matrices (a prefix-sum — the same
+cumulative structure as the particle filter's CDF kernel), inter-chunk terms
+carry the (heads, state, head_dim) tensor through ``lax.scan``.  All decay
+arithmetic (cumsums of log-decays, their exponentials) runs in fp32
+regardless of the compute dtype — the paper's stability discipline applied
+to the SSM: 16-bit cumulative products of near-1 decays lose the state.
+
+Decode carries (conv window, ssm state) per layer; no KV cache, which is
+why the hybrid/ssm archs are the ones that run the 500k-token cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+__all__ = ["ssm_spec", "ssm_forward", "ssm_decode", "init_ssm_cache"]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def ssm_spec(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, n_heads, n, p = _dims(cfg)
+    conv_dim = d_inner + 2 * n  # x, B, C share the causal conv
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_inner + 2 * n + n_heads), ("embed", "ssm_inner")
+        ),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((n_heads,), ("ssm_heads",), init="ones"),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ssm_inner", "embed_out")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, n_heads, n, p = _dims(cfg)
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1,
+    )
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv along time. xbc: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :].astype(xbc.dtype)
+        for i in range(k)
+    )
+    return jax.nn.silu(out + bias.astype(xbc.dtype))
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) with M[i,j]=sum_{j<p<=i} a_p, -inf above diag."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum_{p in (j, i]}
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_forward(
+    params: dict, x: jax.Array, cfg, *, chunk: int = 128
+) -> jax.Array:
+    """Full-sequence SSD. x: (B, T, d_model) -> same."""
+    bsz, t, _ = x.shape
+    d_inner, n_heads, n, p = _dims(cfg)
+    cdt = x.dtype
+
+    zxbcdt = jnp.einsum(
+        "btd,de->bte", x, params["in_proj"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    ).astype(cdt)
+    z, xs, b, c, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(
+        jnp.concatenate([xs, b, c], axis=-1), params["conv_w"], params["conv_b"]
+    )
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, T, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative
+    adt = a * dt  # (B, T, H) log-decay per step
+
+    import math
+
+    xh = xs.reshape(bsz, t, n_heads, p)
+    chunk = math.gcd(t, chunk)
+    nchunks = t // chunk
+
+    def reshape_c(v):
+        return v.reshape((bsz, nchunks, chunk) + v.shape[2:])
+
+    xc, bc_, cc, adtc, dtc = map(reshape_c, (xh, b, c, adt, dt))
+
+    def chunk_step(h, inputs):
+        xk, bk, ck, ak, dk = inputs  # (B, Q, ...) for one chunk
+        # decay algebra in fp32
+        seg = _segsum(jnp.moveaxis(ak, -1, 1))  # (B, H, Q, Q)
+        decay = jnp.exp(seg)
+        g = jnp.einsum(
+            "bqn,bkn->bqk", ck.astype(jnp.float32), bk.astype(jnp.float32)
+        )  # (B, Q, Q) shared across heads (n_groups=1)
+        m = g[:, None] * decay  # (B, H, Q, Q)
+        xdt = xk.astype(jnp.float32) * dk[..., None]  # (B, Q, H, P)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", m, xdt)
+
+        cum = jnp.cumsum(jnp.moveaxis(ak, -1, 1), axis=-1)  # (B, H, Q)
+        # inter-chunk: contribution of the carried state
+        out_decay = jnp.exp(cum)  # (B, H, Q)
+        y_inter = jnp.einsum(
+            "bqn,bhnp,bhq->bqhp", ck.astype(jnp.float32), h, out_decay
+        )
+        # state update
+        rem = jnp.exp(cum[..., -1:] - cum)  # decay from step q to chunk end
+        h_in = jnp.einsum("bqn,bqhp,bhq->bhnp", bk.astype(jnp.float32), xdt, rem)
+        h_new = h * jnp.exp(cum[..., -1])[..., None, None] + h_in
+        return h_new, (y_intra + y_inter).astype(cdt)
+
+    h0 = jnp.zeros((bsz, n_heads, n, p), jnp.float32)
+    xcs = jnp.moveaxis(xc, 1, 0)
+    _, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            xcs,
+            jnp.moveaxis(bc_, 1, 0),
+            jnp.moveaxis(cc, 1, 0),
+            jnp.moveaxis(adtc, 1, 0),
+            jnp.moveaxis(dtc, 1, 0),
+        ),
+        unroll=True if cfg.unroll_scans else 1,
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, n_heads, p)
+    y = y + xh * params["d_skip"].astype(cdt)[None, None, :, None]
+    y = y.reshape(bsz, t, d_inner)
+
+    # gated RMS norm (mamba2 style) then out-projection
+    y = _gated_norm(y, z, params["norm"])
+    return jnp.einsum(
+        "bti,id->btd", y, params["out_proj"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    ).astype(cdt)
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    cdt = y.dtype
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        cdt
+    )
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    d_inner, n_heads, n, p = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, n_heads, n, p), jnp.float32),
+    }
+
+
+def ssm_cache_spec(cfg, batch: int) -> dict:
+    from repro.models.params import ParamSpec
+
+    d_inner, n_heads, n, p = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": ParamSpec(
+            (batch, cfg.ssm_conv - 1, conv_dim),
+            ("batch", None, "ssm_inner"),
+            init="zeros",
+        ),
+        # recurrent state accumulates in fp32 (stability discipline)
+        "state": ParamSpec(
+            (batch, n_heads, n, p),
+            ("batch", "ssm_heads", "ssm_state", None),
+            init="zeros_f32",
+        ),
+    }
+
+
+def ssm_decode(
+    params: dict, x: jax.Array, cache: dict, cfg
+) -> tuple[jax.Array, dict]:
+    """One decode step. x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    d_inner, n_heads, n, p = _dims(cfg)
+    cdt = x.dtype
+
+    zxbcdt = jnp.einsum(
+        "btd,de->bte", x, params["in_proj"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    ).astype(cdt)
+    z, xs, b, c, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xs, b, c], axis=-1).astype(
+        cache["conv"].dtype
+    )  # (B, 1, conv_dim)
+    win = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, K, conv)
+    w = params["conv_w"]
+    conv = jnp.sum(
+        win.astype(cdt) * w[None].astype(cdt), axis=1, keepdims=True
+    )
+    xbc = jax.nn.silu(conv + params["conv_b"].astype(cdt)).astype(cdt)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(a * dt)  # (B, H)
+
+    xh = xs.reshape(bsz, 1, n_heads, p)[:, 0].astype(jnp.float32)  # (B,H,P)
+    bv = b[:, 0].astype(jnp.float32)  # (B, N)
+    cv = c[:, 0].astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    h = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bv, xdt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cv, h)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(cdt)
+    y = _gated_norm(y, z, params["norm"])
+    out = jnp.einsum(
+        "bti,id->btd", y, params["out_proj"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    ).astype(cdt)
+    return out, {"conv": win[:, 1:], "state": h}

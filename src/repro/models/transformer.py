@@ -1,0 +1,446 @@
+"""Block definitions and scanned layer stacks.
+
+One block "kind" per architecture family:
+
+- ``attn_mlp``  — pre-norm GQA attention + gated MLP (dense, vlm, encoder)
+- ``attn_moe``  — pre-norm GQA attention + MoE (grok-1, deepseek)
+- ``mamba``     — Mamba2/SSD block (zamba2), with a *shared* attention block
+                  interleaved every ``attn_every`` layers by the stack
+- ``rwkv``      — RWKV6 time-mix + channel-mix
+
+Stacks scan over layers with stacked parameters (the MaxText pattern): one
+traced block body regardless of depth, which keeps 512-device HLO compile
+times flat in ``num_layers``.  Non-uniform patterns (gemma3's 5 local : 1
+global) scan over *superblocks* — parameter leaves shaped (L/6, 6, ...) with
+the 6-layer pattern unrolled inside the body — preserving the exact
+interleaving without breaking the scan.
+
+Rematerialization wraps the block body (``jax.checkpoint``), policy set by
+``cfg.remat``: "full" (nothing saveable), "dots" (matmul outputs saveable),
+"none".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe, rwkv, ssm
+from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
+
+
+def _unroll(cfg):
+    return True if cfg.unroll_scans else 1
+
+__all__ = [
+    "block_spec",
+    "stack_specs",
+    "stack_apply",
+    "stack_decode",
+    "stack_cache_specs",
+    "init_stack_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Single-block spec/apply
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "attn_mlp":
+        return {
+            "ln1": rmsnorm_spec(d),
+            "attn": attention.attn_spec(cfg),
+            "ln2": rmsnorm_spec(d),
+            "mlp": mlp_spec(d, cfg.d_ff, bias=cfg.use_bias),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": rmsnorm_spec(d),
+            "attn": attention.attn_spec(cfg),
+            "ln2": rmsnorm_spec(d),
+            "moe": moe.moe_spec(cfg),
+        }
+    if kind == "mamba":
+        return {"ln": rmsnorm_spec(d), "ssm": ssm.ssm_spec(cfg)}
+    if kind == "rwkv":
+        return {
+            "ln1": rmsnorm_spec(d),
+            "time": rwkv.rwkv_time_spec(cfg),
+            "ln2": rmsnorm_spec(d),
+            "chan": rwkv.rwkv_channel_spec(cfg),
+        }
+    raise ValueError(kind)
+
+
+def _block_fwd(params, x, cfg, policy, *, kind: str, window: int):
+    """Full-sequence block. Returns (x, aux)."""
+    from repro.models.params import gather_for_compute
+
+    # FSDP: cast to the compute dtype, then gather the embed-axis shards of
+    # this layer's weights (explicit ZeRO-3 all-gather of 16-bit bytes; see
+    # params.GATHER_RULES and gather_for_compute).
+    params = gather_for_compute(
+        params, block_spec(cfg, kind), policy.compute_dtype
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe"):
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + attention.attention(
+            params["attn"], h, cfg, window=window,
+            accum_dtype=policy.accum_dtype,
+        )
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if kind == "attn_mlp":
+            x = x + mlp(params["mlp"], h, cfg.act)
+        else:
+            y, aux = moe.moe(params["moe"], h, cfg)
+            x = x + y
+    elif kind == "mamba":
+        h = rmsnorm(params["ln"], x, cfg.norm_eps)
+        x = x + ssm.ssm_forward(params["ssm"], h, cfg)
+    elif kind == "rwkv":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + rwkv.rwkv_time_forward(params["time"], h, cfg)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + rwkv.rwkv_channel_forward(params["chan"], h, cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _block_decode(params, x, cache, pos, cfg, policy, *, kind: str, window: int):
+    """One-token block step. Returns (x, new_cache)."""
+    if kind in ("attn_mlp", "attn_moe"):
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        y, kv = attention.decode_attn(
+            params["attn"], h, attention.KVCache(**cache["kv"]), pos, cfg,
+            window=window, accum_dtype=policy.accum_dtype,
+        )
+        x = x + y
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if kind == "attn_mlp":
+            x = x + mlp(params["mlp"], h, cfg.act)
+        else:
+            y, _ = moe.moe(params["moe"], h, cfg)
+            x = x + y
+        return x, {"kv": {"k": kv.k, "v": kv.v}}
+    if kind == "mamba":
+        h = rmsnorm(params["ln"], x, cfg.norm_eps)
+        y, new = ssm.ssm_decode(params["ssm"], h, cache, cfg)
+        return x + y, new
+    if kind == "rwkv":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        y, cache = rwkv.rwkv_time_decode(params["time"], h, cache, cfg)
+        x = x + y
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, cache = rwkv.rwkv_channel_decode(params["chan"], h, cache, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+# Uniform stacks: {"layers": leaf-stacked (L, ...)}.
+# gemma3:   {"supers": (L//G, G, ...), "tail": (L%G, ...)} pattern local^5,global
+# zamba2:   {"groups": (L/E, E, ...) mamba, "shared_attn": {...}} one shared block
+# ---------------------------------------------------------------------------
+
+
+def _stacked(spec: dict, n: int):
+    from repro.models.params import ParamSpec
+
+    def add_axis(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (n,) + s.shape, ("layers",) + s.logical, init=s.init, scale=s.scale
+        )
+
+    return jax.tree.map(
+        add_axis, spec, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def _kind(cfg) -> str:
+    if cfg.is_rwkv:
+        return "rwkv"
+    if cfg.ssm_state and cfg.attn_every:
+        return "mamba"
+    if cfg.is_moe:
+        return "attn_moe"
+    return "attn_mlp"
+
+
+def stack_specs(cfg) -> dict:
+    kind = _kind(cfg)
+    if cfg.global_every:  # gemma3-style local:global pattern
+        g = cfg.global_every
+        n_super, n_tail = divmod(cfg.num_layers, g)
+        spec = {
+            "supers": _stacked(_stacked(block_spec(cfg, kind), g), n_super)
+        }
+        if n_tail:
+            spec["tail"] = _stacked(block_spec(cfg, kind), n_tail)
+        return spec
+    if kind == "mamba":  # zamba2: groups + one shared attention block
+        e = cfg.attn_every
+        n_groups = cfg.num_layers // e
+        return {
+            "groups": _stacked(_stacked(block_spec(cfg, "mamba"), e), n_groups),
+            "shared_attn": block_spec(cfg, "attn_mlp"),
+        }
+    return {"layers": _stacked(block_spec(cfg, kind), cfg.num_layers)}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def stack_apply(params: dict, x: jax.Array, cfg, policy) -> tuple[jax.Array, jax.Array]:
+    """Run the full stack over (B, S, D). Returns (x, moe_aux_sum)."""
+    kind = _kind(cfg)
+
+    if cfg.global_every:
+        g = cfg.global_every
+
+        def super_body(carry, layer_params):
+            x, aux = carry
+            for i in range(g):
+                p_i = jax.tree.map(lambda p: p[i], layer_params)
+                win = cfg.window if (i + 1) % g else 0
+                x, a = _block_fwd(
+                    p_i, x, cfg, policy, kind=kind, window=win
+                )
+                aux = aux + a
+            return (x, aux), None
+
+        body = _remat(super_body, cfg.remat)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["supers"],
+            unroll=_unroll(cfg),
+        )
+        if "tail" in params:
+
+            def tail_body(carry, p):
+                x, aux = carry
+                x, a = _block_fwd(
+                    p, x, cfg, policy, kind=kind, window=cfg.window
+                )
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                _remat(tail_body, cfg.remat), (x, aux), params["tail"],
+                unroll=_unroll(cfg),
+            )
+        return x, aux
+
+    if kind == "mamba":
+        e = cfg.attn_every
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_params):
+            x, aux = carry
+
+            def inner(carry2, p):
+                x2, = carry2
+                x2, _ = _block_fwd(p, x2, cfg, policy, kind="mamba", window=0)
+                return (x2,), None
+
+            (x,), _ = jax.lax.scan(
+                inner, (x,), group_params, unroll=_unroll(cfg)
+            )
+            x, _ = _block_fwd(
+                shared, x, cfg, policy, kind="attn_mlp", window=0
+            )
+            return (x, aux), None
+
+        body = _remat(group_body, cfg.remat)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["groups"],
+            unroll=_unroll(cfg),
+        )
+        return x, aux
+
+    def layer_body(carry, p):
+        x, aux = carry
+        x, a = _block_fwd(p, x, cfg, policy, kind=kind, window=cfg.window)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        _remat(layer_body, cfg.remat),
+        (x, jnp.zeros((), jnp.float32)),
+        params["layers"],
+        unroll=_unroll(cfg),
+    )
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches + decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg, kind: str, batch: int, s_max: int, window: int):
+    if kind in ("attn_mlp", "attn_moe"):
+        alloc = min(window, s_max) if window else s_max
+        return {"kv": attention.kv_cache_spec(cfg, batch, alloc)}
+    if kind == "mamba":
+        return ssm.ssm_cache_spec(cfg, batch)
+    if kind == "rwkv":
+        return rwkv.rwkv_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def stack_cache_specs(cfg, batch: int, s_max: int) -> dict:
+    kind = _kind(cfg)
+    if cfg.global_every:
+        g = cfg.global_every
+        n_super, n_tail = divmod(cfg.num_layers, g)
+        # Per-superblock: g-1 ring-buffer local layers + 1 full-length global.
+        local = _layer_cache_spec(cfg, kind, batch, s_max, cfg.window)
+        glob = _layer_cache_spec(cfg, kind, batch, s_max, 0)
+        spec = {
+            "supers_local": _stacked(_stacked(local, g - 1), n_super),
+            "supers_global": _stacked(glob, n_super),
+        }
+        if n_tail:
+            spec["tail"] = _stacked(local, n_tail)
+        return spec
+    if kind == "mamba":
+        e = cfg.attn_every
+        n_groups = cfg.num_layers // e
+        return {
+            "groups": _stacked(
+                _stacked(_layer_cache_spec(cfg, "mamba", batch, s_max, 0), e),
+                n_groups,
+            ),
+            "shared_attn": _stacked(
+                _layer_cache_spec(cfg, "attn_mlp", batch, s_max, 0), n_groups
+            ),
+        }
+    return {
+        "layers": _stacked(
+            _layer_cache_spec(cfg, kind, batch, s_max, cfg.window),
+            cfg.num_layers,
+        )
+    }
+
+
+def init_stack_cache(cfg, batch: int, s_max: int, dtype) -> dict:
+    from repro.models.params import ParamSpec
+
+    def make(s: ParamSpec):
+        # recurrent states stay fp32 (marked zeros_f32); the rest cache dtype
+        dt = jnp.float32 if s.init == "zeros_f32" else dtype
+        return jnp.zeros(s.shape, dt)
+
+    specs = stack_cache_specs(cfg, batch, s_max)
+    return jax.tree.map(
+        make, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def stack_decode(
+    params: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg, policy
+) -> tuple[jax.Array, dict]:
+    """One-token step through the whole stack. x: (B, 1, D)."""
+    kind = _kind(cfg)
+
+    if cfg.global_every:
+        g = cfg.global_every
+
+        def super_body(x, layer):
+            p_all, c_loc, c_glob = layer
+            new_loc = []
+            for i in range(g - 1):
+                p_i = jax.tree.map(lambda p: p[i], p_all)
+                c_i = jax.tree.map(lambda c: c[i], c_loc)
+                x, c_i = _block_decode(
+                    p_i, x, c_i, pos, cfg, policy, kind=kind, window=cfg.window
+                )
+                new_loc.append(c_i)
+            p_g = jax.tree.map(lambda p: p[g - 1], p_all)
+            x, c_glob = _block_decode(
+                p_g, x, c_glob, pos, cfg, policy, kind=kind, window=0
+            )
+            new_loc = jax.tree.map(lambda *cs: jnp.stack(cs), *new_loc)
+            return x, (new_loc, c_glob)
+
+        x, (new_loc, new_glob) = jax.lax.scan(
+            super_body, x, (params["supers"], cache["supers_local"],
+                            cache["supers_global"]),
+            unroll=_unroll(cfg),
+        )
+        new_cache = {"supers_local": new_loc, "supers_global": new_glob}
+        if "tail" in params:
+
+            def tail_body(x, layer):
+                p, c = layer
+                x, c = _block_decode(
+                    p, x, c, pos, cfg, policy, kind=kind, window=cfg.window
+                )
+                return x, c
+
+            x, new_tail = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail"]),
+                unroll=_unroll(cfg),
+            )
+            new_cache["tail"] = new_tail
+        return x, new_cache
+
+    if kind == "mamba":
+        shared = params["shared_attn"]
+
+        def group_body(x, layer):
+            gp, gc, ac = layer
+
+            def inner(x2, pc):
+                p, c = pc
+                x2, c = _block_decode(
+                    p, x2, c, pos, cfg, policy, kind="mamba", window=0
+                )
+                return x2, c
+
+            x, new_gc = jax.lax.scan(
+                inner, x, (gp, gc), unroll=_unroll(cfg)
+            )
+            x, new_ac = _block_decode(
+                shared, x, ac, pos, cfg, policy, kind="attn_mlp", window=0
+            )
+            return x, (new_gc, new_ac)
+
+        x, (new_groups, new_attn) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["groups"], cache["shared_attn"]),
+            unroll=_unroll(cfg),
+        )
+        return x, {"groups": new_groups, "shared_attn": new_attn}
+
+    def layer_body(x, layer):
+        p, c = layer
+        x, c = _block_decode(
+            p, x, c, pos, cfg, policy, kind=kind, window=cfg.window
+        )
+        return x, c
+
+    x, new_cache = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["layers"]),
+        unroll=_unroll(cfg),
+    )
+    return x, {"layers": new_cache}

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW, schedules, clipping, compressed collectives."""
+
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig,
+    adamw_update,
+    init_opt_state,
+    opt_state_specs,
+)
+from repro.optim.schedule import make_schedule  # noqa: F401

@@ -1,0 +1,113 @@
+"""AdamW with precision-policy-aware state dtypes.
+
+The paper's theme (16-bit where it is safe, wider where it is not) applied
+to optimizer state: first moment stores bf16 (its use is a smoothed average
+— resilient), second moment and the parameters stay fp32 (``v`` feeds an
+rsqrt — 8 mantissa bits there visibly bias the preconditioner; measured in
+tests/test_optim.py).  This is what makes grok-1-scale training fit v5e HBM
+(see EXPERIMENTS.md §Dry-run).
+
+Update math runs in fp32 regardless of storage dtypes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: Any = jnp.bfloat16
+    v_dtype: Any = jnp.float32
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.m_dtype), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.v_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs: Any, cfg: OptConfig) -> dict:
+    """ParamSpec tree for the optimizer state (same shardings as params)."""
+    from repro.models.params import ParamSpec
+
+    def clone(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.logical, init="zeros")
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return {
+        "m": jax.tree.map(clone, param_specs, is_leaf=is_spec),
+        "v": jax.tree.map(clone, param_specs, is_leaf=is_spec),
+        "step": ParamSpec((), ()),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    lr: jax.Array,
+    cfg: OptConfig,
+) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (params, state, metrics).
+
+    Non-finite gradients (fp16 overflow upstream) skip the update entirely
+    — the fault-tolerant behaviour for mixed-precision training.
+    """
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.where(
+        gnorm > cfg.clip_norm, cfg.clip_norm / jnp.maximum(gnorm, 1e-9), 1.0
+    )
+    scale = jnp.where(finite, scale, 0.0)
+
+    c1 = 1.0 - cfg.b1**step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2**step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        # scrub non-finite entries so a skipped step cannot poison moments
+        g = jnp.where(jnp.isfinite(g), g, 0.0) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1.0 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1.0 - cfg.b2)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        new_p = p.astype(jnp.float32) - lr * delta
+        new_p = jnp.where(finite, new_p, p.astype(jnp.float32))
+        return (
+            new_p.astype(p.dtype),
+            m32.astype(m.dtype),
+            v32.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "finite": finite.astype(jnp.float32)}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["make_schedule"]
+
+
+def make_schedule(
+    kind: str = "cosine",
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    def cosine(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        decay = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, decay)
+
+    def constant(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup_steps, 1), 1.0)
+        return peak_lr * warm
+
+    return {"cosine": cosine, "constant": constant}[kind]

@@ -1,0 +1,3 @@
+"""Train/serve step factories."""
+
+from repro.train.train_loop import TrainConfig, make_train_step  # noqa: F401

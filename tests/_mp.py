@@ -1,0 +1,32 @@
+"""Helper: run a snippet in a subprocess with N forced host devices.
+
+Multi-device tests must not pollute the main pytest process (jax locks the
+device count at first init), so they execute in a child interpreter.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_with_devices(snippet: str, devices: int = 8, timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", snippet],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+        )
+    return proc.stdout

@@ -1,0 +1,142 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.likelihood import IntensityModel
+from repro.core.precision import get_policy
+from repro.kernels.likelihood import ops as lik_ops
+from repro.kernels.likelihood import ref as lik_ref
+from repro.kernels.logsumexp import ops as lse_ops
+from repro.kernels.logsumexp import ref as lse_ref
+from repro.kernels.resample import ops as res_ops
+from repro.kernels.resample import ref as res_ref
+
+SIZES = [7, 128, 1000, 8192, 65536]
+DTYPES = [jnp.float32, jnp.float16, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dt", DTYPES, ids=lambda d: d.__name__)
+def test_logsumexp_kernel_sweep(n, dt):
+    x = (jax.random.normal(jax.random.key(n), (n,), jnp.float32) * 50).astype(dt)
+    w, m, lse = lse_ops.normalize_weights(x)
+    wr, mr, lr = lse_ref.normalize_weights_ref(x)
+    np.testing.assert_allclose(float(m), float(mr), rtol=1e-6)
+    np.testing.assert_allclose(float(lse), float(lr), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(w, np.float32), np.asarray(wr, np.float32), atol=2e-3
+    )
+    assert w.dtype == dt
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 256])
+def test_logsumexp_block_shape_invariance(block_rows):
+    """BlockSpec sweep (the paper's threads-per-block analogue): results
+    must not depend on the launch geometry."""
+    x = jax.random.normal(jax.random.key(0), (65536,), jnp.float32) * 30
+    w, m, lse = lse_ops.normalize_weights(x, block_rows=block_rows)
+    wr, mr, lr = lse_ref.normalize_weights_ref(x)
+    np.testing.assert_allclose(float(lse), float(lr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=1e-6)
+
+
+def test_logsumexp_kernel_neg_inf_padding():
+    x = jnp.asarray([-jnp.inf, 0.0, -jnp.inf, 1.0], jnp.float32)
+    w, m, lse = lse_ops.normalize_weights(x)
+    want = float(jnp.log(jnp.exp(0.0) + jnp.exp(1.0)))
+    np.testing.assert_allclose(float(lse), want, rtol=1e-6)
+    assert bool(jnp.isfinite(w).all())
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_cumsum_kernel_sweep(n):
+    w = jax.random.uniform(jax.random.key(n + 1), (n,), jnp.float32)
+    cs = res_ops.inclusive_cumsum(w)
+    csr = res_ref.inclusive_cumsum_ref(w)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(csr), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_systematic_kernel_vs_ref(n):
+    w = jax.random.uniform(jax.random.key(n + 2), (n,), jnp.float32)
+    anc = np.asarray(res_ops.systematic_resample(jax.random.key(7), w))
+    u0 = jax.random.uniform(jax.random.key(7), (), jnp.float32)
+    ancr = np.asarray(res_ref.systematic_resample_ref(u0, w))
+    diff = np.abs(anc - ancr)
+    # identical except CDF-tie boundaries (different fp32 summation
+    # grouping); those may differ by exactly one index
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.005
+    assert (np.diff(anc) >= 0).all()
+
+
+def test_systematic_kernel_counts_property():
+    w = np.zeros(512, np.float32)
+    w[100] = 0.5
+    w[200] = 0.25
+    w[300] = 0.25
+    anc = np.asarray(
+        res_ops.systematic_resample(jax.random.key(0), jnp.asarray(w))
+    )
+    counts = np.bincount(anc, minlength=512)
+    assert counts[100] in (255, 256, 257)
+    assert counts[200] in (127, 128, 129)
+    assert counts[300] in (127, 128, 129)
+
+
+@pytest.mark.parametrize("p", [4, 100, 512, 1000])
+@pytest.mark.parametrize("j", [9, 69, 128])
+@pytest.mark.parametrize(
+    "pname", ["fp16", "bf16", "fp32", "bf16_mixed"]
+)
+def test_likelihood_kernel_sweep(p, j, pname):
+    pol = get_policy(pname)
+    model = IntensityModel(radius=4)
+    patches = jax.random.uniform(
+        jax.random.key(p * j), (p, j), jnp.float32, 60.0, 250.0
+    )
+    ll, m = lik_ops.intensity_loglik_with_max(patches, model, pol)
+    accum16 = jnp.dtype(pol.accum_dtype).itemsize == 2
+    llr, mr = lik_ref.intensity_loglik_ref(
+        patches.astype(pol.compute_dtype),
+        bg=model.background,
+        fg=model.foreground,
+        isq=(model.scale * j) ** -0.5,
+        accum16=accum16,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ll, np.float32), np.asarray(llr, np.float32),
+        rtol=2e-2, atol=0.5,
+    )
+    np.testing.assert_allclose(float(m), float(mr), rtol=1e-3, atol=0.5)
+
+
+def test_likelihood_kernel_matches_core_stable_path():
+    """Kernel == core.likelihood (the jnp reference path used in filter)."""
+    from repro.core import likelihood as core_lik
+
+    pol = get_policy("fp32")
+    model = IntensityModel(radius=4)
+    patches = jax.random.uniform(
+        jax.random.key(5), (256, model.num_points), jnp.float32, 60.0, 250.0
+    )
+    ll_kernel = lik_ops.intensity_loglik(patches, model, pol)
+    ll_core = core_lik.intensity_loglik(patches, model, pol)
+    np.testing.assert_allclose(
+        np.asarray(ll_kernel), np.asarray(ll_core), rtol=1e-5, atol=1e-4
+    )
+
+
+@given(st.integers(2, 2000))
+@settings(max_examples=20, deadline=None)
+def test_cumsum_kernel_property_random_sizes(n):
+    w = jax.random.uniform(jax.random.key(n), (n,), jnp.float32)
+    cs = res_ops.inclusive_cumsum(w)
+    np.testing.assert_allclose(
+        float(cs[-1]), float(jnp.sum(w)), rtol=1e-5
+    )

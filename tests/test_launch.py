@@ -1,0 +1,61 @@
+"""Launch-layer plumbing: cell building, dry-run compile, meter solve."""
+
+import pytest
+
+from tests._mp import run_with_devices
+
+
+def test_build_cell_compiles_on_small_mesh():
+    """One reduced train cell + one decode cell lower+compile end to end
+    (8 host devices, (2,4) mesh) — the dryrun machinery in miniature."""
+    out = run_with_devices(
+        """
+import jax, jax.numpy as jnp
+from repro.launch.specs import build_cell
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+jax.set_mesh(mesh)
+for arch, shape, kw in [
+    ("minitron-8b", "train_4k", dict(train_micro=2, seq_override=64, batch_override=8)),
+    ("minitron-8b", "decode_32k", dict(seq_override=128, batch_override=8)),
+]:
+    cell = build_cell(arch, shape, mesh,
+                      cfg_overrides=dict(num_layers=2, d_model=128, num_heads=4,
+                                         num_kv_heads=2, head_dim=32, d_ff=256,
+                                         vocab_size=512),
+                      **kw)
+    compiled = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                       out_shardings=cell["out_shardings"],
+                       donate_argnums=cell["donate"]).lower(*cell["args"]).compile()
+    ca = compiled.cost_analysis()
+    assert ca.get("flops", 0) > 0, (arch, shape)
+    print(arch, shape, "ok", ca.get("flops"))
+""",
+        devices=8,
+        timeout=560,
+    )
+    assert out.count("ok") == 2
+
+
+def test_skip_policy():
+    from repro.launch.specs import cell_skip_reason
+
+    assert cell_skip_reason("command-r-35b", "long_500k")
+    assert cell_skip_reason("hubert-xlarge", "decode_32k")
+    assert cell_skip_reason("gemma3-27b", "long_500k") is None
+    assert cell_skip_reason("rwkv6-7b", "long_500k") is None
+    assert cell_skip_reason("zamba2-2.7b", "train_4k") is None
+
+
+def test_meter_layer_points_cover_archs():
+    from repro.configs import get_config, list_archs
+    from repro.launch.meter import _layer_points
+
+    for arch in list_archs():
+        cfg = get_config(arch)
+        ks, compose = _layer_points(cfg)
+        # compose must reproduce an affine model exactly
+        f = {k: 3.0 + 2.0 * k for k in ks}
+        want = 3.0 + 2.0 * cfg.num_layers
+        got = compose(f)
+        assert abs(got - want) < 1e-6, (arch, got, want)

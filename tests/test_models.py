@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency.
+
+Every assigned architecture instantiates a reduced same-family config and
+runs one forward + one train step on CPU, asserting shapes and finiteness;
+recurrent/cached decode must agree with the full-sequence forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.core.precision import get_policy
+from repro.models import model as M
+from repro.optim import init_opt_state
+from repro.train import TrainConfig, make_train_step
+
+POL = get_policy("bf16_mixed")
+B, S = 2, 64
+
+ALL_ARCHS = list_archs()
+
+
+def make_batch(cfg, key=None):
+    k = key or jax.random.key(0)
+    if cfg.frontend == "frames":
+        return {
+            "frames": jax.random.normal(k, (B, S, cfg.frame_dim), jnp.float32),
+            "labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+            "mask": jax.random.bernoulli(k, 0.3, (B, S)).astype(jnp.float32),
+        }
+    if cfg.frontend == "vlm":
+        return {
+            "tokens": jax.random.randint(
+                k, (B, S - cfg.vlm_image_seq), 0, cfg.vocab_size
+            ),
+            "patch_embeds": jax.random.normal(
+                k, (B, cfg.vlm_image_seq, cfg.d_model), jnp.float32
+            ),
+        }
+    return {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    params = M.init_params(jax.random.key(1), cfg, jnp.float32)
+    batch = make_batch(cfg)
+
+    logits, aux = jax.jit(lambda p, b: M.forward(p, b, cfg, POL))(params, batch)
+    s_out = S if cfg.frontend != "vlm" else S
+    assert logits.shape == (B, s_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    tcfg = TrainConfig(microbatches=2, total_steps=10, warmup_steps=2)
+    opt = init_opt_state(params, tcfg.opt)
+    step_fn = jax.jit(make_train_step(cfg, POL, tcfg))
+    # step 1: the warmup schedule gives lr=0 at step 0 by construction
+    params2, opt2, metrics = step_fn(params, opt, batch, jnp.int32(1))
+    assert bool(jnp.isfinite(metrics["loss"])), arch
+    assert float(metrics["finite"]) == 1.0, arch
+    # parameters actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda a, b: float(jnp.sum(jnp.abs(a - b))), params, params2
+        ),
+    )
+    assert delta > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_decode_step(arch):
+    cfg = reduced_config(get_config(arch))
+    if cfg.is_encoder:
+        pytest.skip("encoder-only: no decode step")
+    params = M.init_params(jax.random.key(1), cfg, jnp.float32)
+    cache = M.init_cache(cfg, B, 128, jnp.float32)
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, t, c: M.decode_step(p, t, jnp.int32(0), c, cfg, POL)
+    )(params, tok, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize(
+    "arch", ["minitron-8b", "rwkv6-7b", "zamba2-2.7b", "gemma3-27b",
+             "deepseek-moe-16b"]
+)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the full forward (fp32)."""
+    cfg = reduced_config(get_config(arch))
+    pol = get_policy("fp32")
+    s = 16
+    params = M.init_params(jax.random.key(1), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (B, s), 0, cfg.vocab_size)
+    logits_full, _ = M.forward(params, {"tokens": toks}, cfg, pol)
+    cache = M.init_cache(cfg, B, s, jnp.float32)
+    outs = []
+    dstep = jax.jit(
+        lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol)
+    )
+    for i in range(s):
+        lg, cache = dstep(params, toks[:, i], jnp.int32(i), cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(logits_full), atol=5e-4, rtol=1e-3
+    )
+
+
+def test_ring_buffer_cache_smaller_than_context():
+    """Sliding-window layers allocate window-sized ring caches."""
+    cfg = reduced_config(get_config("gemma3-27b"))
+    assert cfg.window and cfg.window < 4096
+    cache = M.init_cache(cfg, B, 4096, jnp.float32)
+    # local caches: (n_super, g-1, B, window, kv, hd)
+    local_k = cache["supers_local"]["kv"]["k"]
+    assert local_k.shape[3] == cfg.window
+    glob_k = cache["supers_global"]["kv"]["k"]
+    assert glob_k.shape[2] == 4096
+
+
+def test_param_counts_match_expectation():
+    """Analytic parameter counts are pinned (regression guard for the spec
+    trees).  Values follow from the assigned configs; nameplate sizes that
+    differ (command-r '35B' -> 30.3B from the given dims; internvl '76B'
+    counts the stubbed 6B ViT frontend) are documented in DESIGN.md."""
+    expect_b = {
+        "command-r-35b": 30.28,
+        "minitron-8b": 9.88,
+        "stablelm-12b": 12.14,
+        "gemma3-27b": 27.01,
+        "zamba2-2.7b": 2.34,
+        "grok-1-314b": 315.68,
+        "deepseek-moe-16b": 16.88,
+        "internvl2-76b": 70.62,
+        "hubert-xlarge": 1.26,
+        "rwkv6-7b": 7.53,
+    }
+    for arch, nb in expect_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert abs(n - nb) / nb < 0.01, (arch, n, nb)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("grok-1-314b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()

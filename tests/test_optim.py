@@ -1,0 +1,88 @@
+"""Optimizer correctness: AdamW vs numpy reference, clipping, skip-on-nan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.optim.schedule import make_schedule
+
+
+def _np_adamw(p, g, m, v, step, lr, cfg):
+    gn = np.sqrt((g**2).sum())
+    scale = min(1.0, cfg.clip_norm / max(gn, 1e-9))
+    g = g * scale
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mhat = m / (1 - cfg.b1**step)
+    vhat = v / (1 - cfg.b2**step)
+    p = p - lr * (mhat / (np.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+    return p, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = OptConfig(m_dtype=jnp.float32, v_dtype=jnp.float32, clip_norm=1e9)
+    rng = np.random.default_rng(0)
+    p_np = rng.normal(size=(32,)).astype(np.float32)
+    params = {"w": jnp.asarray(p_np)}
+    state = init_opt_state(params, cfg)
+    m_np = np.zeros(32, np.float32)
+    v_np = np.zeros(32, np.float32)
+    for step in range(1, 6):
+        g_np = rng.normal(size=(32,)).astype(np.float32)
+        params, state, _ = adamw_update(
+            params, {"w": jnp.asarray(g_np)}, state, jnp.float32(1e-2), cfg
+        )
+        p_np, m_np, v_np = _np_adamw(p_np, g_np, m_np, v_np, step, 1e-2, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), p_np, rtol=2e-5, atol=1e-6)
+
+
+def test_clipping_applied():
+    cfg = OptConfig(clip_norm=1.0, m_dtype=jnp.float32)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state = init_opt_state(params, cfg)
+    big = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw_update(params, big, state, jnp.float32(0.1), cfg)
+    assert float(metrics["grad_norm"]) > 1.0  # reported pre-clip
+
+
+def test_nonfinite_grads_skip_update():
+    cfg = OptConfig(m_dtype=jnp.float32)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = init_opt_state(params, cfg)
+    bad = {"w": jnp.asarray([1.0, jnp.nan, 1.0, 1.0])}
+    new_params, new_state, metrics = adamw_update(
+        params, bad, state, jnp.float32(0.1), cfg
+    )
+    assert float(metrics["finite"]) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(new_params["w"]), np.asarray(params["w"])
+    )
+    assert bool(jnp.isfinite(new_state["m"]["w"]).all())
+
+
+def test_bf16_first_moment_close_to_fp32():
+    """The low-precision-m trick: trajectories track the fp32 optimizer."""
+    cfg16 = OptConfig(m_dtype=jnp.bfloat16, clip_norm=1e9)
+    cfg32 = OptConfig(m_dtype=jnp.float32, clip_norm=1e9)
+    rng = np.random.default_rng(1)
+    p16 = {"w": jnp.ones((64,), jnp.float32)}
+    p32 = {"w": jnp.ones((64,), jnp.float32)}
+    s16 = init_opt_state(p16, cfg16)
+    s32 = init_opt_state(p32, cfg32)
+    for step in range(20):
+        g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+        p16, s16, _ = adamw_update(p16, g, s16, jnp.float32(1e-2), cfg16)
+        p32, s32, _ = adamw_update(p32, g, s32, jnp.float32(1e-2), cfg32)
+    diff = np.abs(np.asarray(p16["w"]) - np.asarray(p32["w"])).max()
+    drift = np.abs(np.asarray(p32["w"]) - 1.0).max()
+    assert diff < 0.1 * drift, (diff, drift)
+
+
+def test_schedules():
+    sched = make_schedule("cosine", peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert abs(float(sched(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(sched(jnp.int32(100))) < 0.2
+    const = make_schedule("constant", peak_lr=0.5, warmup_steps=10)
+    assert abs(float(const(jnp.int32(50))) - 0.5) < 1e-7

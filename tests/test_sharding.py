@@ -1,0 +1,99 @@
+"""Logical-axis sharding rules + HLO collective parser."""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo import collective_stats, op_mix
+from repro.models.params import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    ParamSpec,
+    gather_for_compute,
+    logical_to_spec,
+)
+
+
+def _mesh2d():
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def test_divisibility_fallback():
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    # 8 kv heads on a 16-way axis would replicate; with size-1 axes anything
+    # "divides" — exercise the non-divisible path with a fake big mesh via
+    # direct call against axis sizes
+    spec = logical_to_spec(mesh, (10, 3), ("embed", "heads"), TRAIN_RULES)
+    assert isinstance(spec, P)
+
+
+def test_no_axis_reuse_across_dims():
+    """Two dims mapping to the same mesh axis: second one replicates."""
+    mesh = _mesh2d()
+    spec = logical_to_spec(
+        mesh, (8, 8), ("embed", "embed"), TRAIN_RULES
+    )  # both want "data"
+    used = [s for s in spec if s is not None]
+    assert len(used) <= 1
+
+
+def test_gather_for_compute_noop_without_mesh():
+    p = {"w": jnp.ones((4, 4))}
+    s = {"w": ParamSpec((4, 4), ("embed", "mlp"))}
+    out = gather_for_compute(p, s)
+    assert out["w"] is p["w"]
+
+
+def test_serve_rules_differ():
+    assert TRAIN_RULES["embed"] == "data"
+    assert SERVE_RULES["embed"] is None
+    # context parallelism: cache seq takes whatever the batch leaves free
+    assert SERVE_RULES["cache_seq"] == ("model", "data")
+
+
+def test_tuple_axis_subset_fallback():
+    """cache_seq -> ("model","data") keeps "model" when batch took "data"."""
+    mesh = _mesh2d()  # (n, 1) so "model" is size 1 — exercise shape logic
+    spec = logical_to_spec(
+        mesh, (8, 64, 2, 4), ("batch", "cache_seq", "kv_heads", "head_dim"),
+        SERVE_RULES,
+    )
+    # batch gets ("data",) (divisible), cache_seq can only use leftover axes
+    flat = [s for s in spec if s is not None]
+    assert len(set(str(f) for f in flat)) == len(flat)  # no axis reused
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[256,16384]{1,0} all-gather(%p), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  %ar = f32[512]{0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%sum
+  %cp = bf16[64,64]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %conv1 = f32[8]{0} convert(%z)
+  %e = f32[8]{0} exponential(%conv1)
+}
+"""
+
+
+def test_collective_parser():
+    stats = collective_stats(HLO_SAMPLE, 512)
+    wb = stats["wire_bytes"]
+    # all-gather: 256*16384*2 bytes * 15/16
+    assert abs(wb["all-gather"] - 256 * 16384 * 2 * 15 / 16) < 1
+    # all-reduce: 512*4 * 2*15/16 (group size 16 from iota form)
+    assert abs(wb["all-reduce"] - 512 * 4 * 2 * 15 / 16) < 1
+    assert wb["collective-permute"] == 64 * 64 * 2
+    assert stats["counts"]["all-gather"] == 1
+
+
+def test_op_mix_counts():
+    mix = op_mix(HLO_SAMPLE)
+    assert mix["convert"] == 1
+    assert mix["exponential"] == 1

@@ -1,0 +1,108 @@
+"""Property tests (hypothesis) for the stability primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import stability
+
+finite_f = st.floats(
+    min_value=-300.0, max_value=300.0, allow_nan=False, allow_infinity=False
+)
+
+
+@st.composite
+def logw_arrays(draw, max_len=64):
+    n = draw(st.integers(2, max_len))
+    return np.array(draw(st.lists(finite_f, min_size=n, max_size=n)), np.float32)
+
+
+@given(logw_arrays())
+@settings(max_examples=50, deadline=None)
+def test_logsumexp_matches_scipy(x):
+    got = float(stability.logsumexp(jnp.asarray(x)))
+    want = float(jax.scipy.special.logsumexp(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(logw_arrays())
+@settings(max_examples=50, deadline=None)
+def test_normalized_weights_sum_to_one(x):
+    w, lz = stability.normalize_log_weights(jnp.asarray(x))
+    # exp(x - lse) carries O(eps * |x|) relative error per weight — this is
+    # exactly why the filter's estimators are scale-invariant (divide by the
+    # actual sum); see core.filter._weighted_mean.
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-4)
+    assert np.isfinite(float(lz))
+
+
+@given(logw_arrays(), logw_arrays())
+@settings(max_examples=50, deadline=None)
+def test_lse_combine_associative_and_matches_concat(a, b):
+    """Merging shard-local online states == LSE of the concatenation."""
+    sa = stability.lse_update(stability.lse_init(), jnp.asarray(a))
+    sb = stability.lse_update(stability.lse_init(), jnp.asarray(b))
+    merged = stability.lse_combine(sa, sb)
+    got = float(stability.lse_finalize(merged))
+    want = float(
+        jax.scipy.special.logsumexp(jnp.concatenate([jnp.asarray(a), jnp.asarray(b)]))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # commutativity
+    merged2 = stability.lse_combine(sb, sa)
+    np.testing.assert_allclose(
+        float(stability.lse_finalize(merged2)), got, rtol=1e-6
+    )
+
+
+@given(logw_arrays())
+@settings(max_examples=30, deadline=None)
+def test_online_streaming_matches_two_pass(x):
+    """Folding blocks one at a time == two-pass logsumexp (kernel contract)."""
+    arr = jnp.asarray(x)
+    state = stability.lse_init()
+    for i in range(0, arr.shape[0], 8):
+        state = stability.lse_update(state, arr[i : i + 8])
+    np.testing.assert_allclose(
+        float(stability.lse_finalize(state)),
+        float(stability.logsumexp(arr)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_lse_all_neg_inf():
+    x = jnp.full((16,), -jnp.inf, jnp.float32)
+    assert float(stability.logsumexp(x)) == -jnp.inf
+    w, lz = stability.normalize_log_weights(x)
+    assert bool(jnp.isfinite(w).all())  # exp(-inf - 0) = 0, no NaN
+
+
+def test_scaled_square_avoids_fp16_overflow():
+    """Paper Eq. 3 vs Eq. 4 at the paper's intensity values."""
+    vals = jnp.full((69,), 228.0, jnp.float16)  # foreground disk
+    # naive: sum of raw squared diffs overflows fp16 (24025 * 69 >> 65504)
+    naive_sum = jnp.sum((vals - 100.0) ** 2)
+    assert bool(jnp.isinf(naive_sum))
+    # stable: scale inside the square
+    isq = jnp.float16((50.0 * 69) ** -0.5)
+    stable_sum = jnp.sum(stability.scaled_square_diff(vals, jnp.float16(100.0), isq))
+    assert bool(jnp.isfinite(stable_sum))
+
+
+def test_stable_softmax_fp16_large_logits():
+    x = jnp.asarray([300.0, 200.0, 100.0], jnp.float16)
+    p = stability.stable_softmax(x, accum_dtype=jnp.float32)
+    assert bool(jnp.isfinite(p).all())
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-3)
+
+
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=32))
+@settings(max_examples=30, deadline=None)
+def test_ess_bounds(ws):
+    w = jnp.asarray(np.array(ws, np.float32))
+    w = w / jnp.sum(w)
+    ess = float(stability.effective_sample_size(w))
+    assert 1.0 - 1e-4 <= ess <= w.shape[0] + 1e-4

@@ -1,0 +1,67 @@
+"""Training-loop semantics: descent, microbatch equivalence, loss scaling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.precision import get_policy
+from repro.data.tokens import BatchSpec, make_batch
+from repro.models import model as M
+from repro.optim import init_opt_state
+from repro.train import TrainConfig, make_train_step
+
+CFG = reduced_config(get_config("minitron-8b"))
+
+
+def _run(policy_name, micro, steps=12, seed=42):
+    pol = get_policy(policy_name)
+    tcfg = TrainConfig(microbatches=micro, total_steps=50, warmup_steps=2)
+    params = M.init_params(jax.random.key(1), CFG, jnp.float32)
+    opt = init_opt_state(params, tcfg.opt)
+    step_fn = jax.jit(make_train_step(CFG, pol, tcfg))
+    spec = BatchSpec("train", 8, 64)
+    losses = []
+    for i in range(steps):
+        batch = make_batch(CFG, spec, seed, i)
+        params, opt, m = step_fn(params, opt, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+def test_loss_descends():
+    _, losses = _run("bf16_mixed", micro=2, steps=15)
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_microbatch_equivalence_fp32():
+    """1 vs 4 microbatches: same summed-gradient semantics (fp32, modulo
+    accumulation order)."""
+    p1, l1 = _run("fp32", micro=1, steps=3)
+    p4, l4 = _run("fp32", micro=4, steps=3)
+    np.testing.assert_allclose(l1, l4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-4, rtol=1e-3
+        )
+
+
+def test_fp16_loss_scaling_finite():
+    """fp16_mixed scales the loss by 2^12; reported metrics are unscaled
+    and finite, and training still descends."""
+    _, losses = _run("fp16_mixed", micro=2, steps=10)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    assert losses[0] < 20.0  # unscaled (a scaled loss would be ~2.6e4)
+
+
+def test_data_pipeline_determinism():
+    spec = BatchSpec("train", 4, 32)
+    b1 = make_batch(CFG, spec, 7, 3)
+    b2 = make_batch(CFG, spec, 7, 3)
+    b3 = make_batch(CFG, spec, 7, 4)
+    np.testing.assert_array_equal(
+        np.asarray(b1["tokens"]), np.asarray(b2["tokens"])
+    )
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert int(b1["tokens"].max()) < CFG.vocab_size
