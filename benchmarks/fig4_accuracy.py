@@ -1,16 +1,34 @@
-"""Paper Fig. 4: tracking accuracy per precision vs ground truth."""
+"""Paper Fig. 4: tracking accuracy per precision vs ground truth.
+
+Every precision drives the same ``ParticleFilter`` engine; only the
+``FilterConfig.policy`` name changes (the paper's
+``particleFilter<double/float/half>`` axis as a registry lookup).
+"""
 
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import TrackerConfig, get_policy, track
+from repro import compat
+from repro.core import TrackerConfig, get_policy, make_tracker_filter
 from repro.data.synthetic_video import VideoConfig, generate_video
+
+
+def _time_tracker(pol, video, frames, size, particles):
+    cfg = TrackerConfig(num_particles=particles, height=size, width=size)
+    flt = make_tracker_filter(cfg, pol)
+    t0 = time.perf_counter()
+    _, outs = jax.jit(lambda k, v: flt.run(k, v, particles))(
+        jax.random.key(1), video
+    )
+    traj = outs.estimate["pos"]
+    jax.block_until_ready(traj)
+    us = (time.perf_counter() - t0) / frames * 1e6
+    return traj, us
 
 
 def run(frames: int = 60, size: int = 256, particles: int = 1024) -> list[str]:
@@ -20,32 +38,22 @@ def run(frames: int = 60, size: int = 256, particles: int = 1024) -> list[str]:
     )
     rows = []
     for pname in ["fp32", "bf16", "fp16", "bf16_mixed", "fp16_naive"]:
-        pol = get_policy(pname)
-        cfg = TrackerConfig(num_particles=particles, height=size, width=size)
-        t0 = time.perf_counter()
-        traj, outs = jax.jit(lambda k, v: track(k, v, cfg, pol))(
-            jax.random.key(1), video
+        traj, us = _time_tracker(
+            get_policy(pname), video, frames, size, particles
         )
-        jax.block_until_ready(traj)
-        us = (time.perf_counter() - t0) / frames * 1e6
         t = np.asarray(traj, np.float64)
         rmse = float(np.sqrt(np.mean(np.sum((t - np.asarray(truth)) ** 2, -1))))
         rows.append(
             csv_row(f"fig4_accuracy/{pname}", us, f"rmse_px={rmse:.3f}")
         )
-    with jax.enable_x64(True):
+    with compat.enable_x64(True):
         video64, truth64 = generate_video(
             jax.random.key(0),
             VideoConfig(num_frames=frames, height=size, width=size),
         )
-        pol = get_policy("fp64")
-        cfg = TrackerConfig(num_particles=particles, height=size, width=size)
-        t0 = time.perf_counter()
-        traj, _ = jax.jit(lambda k, v: track(k, v, cfg, pol))(
-            jax.random.key(1), video64
+        traj, us = _time_tracker(
+            get_policy("fp64"), video64, frames, size, particles
         )
-        jax.block_until_ready(traj)
-        us = (time.perf_counter() - t0) / frames * 1e6
         rmse = float(
             np.sqrt(np.mean(np.sum((np.asarray(traj) - np.asarray(truth64)) ** 2, -1)))
         )

@@ -4,21 +4,26 @@ CPU wall-clock (this container's only clock): relative precision behaviour
 differs from CUDA — fp16 is emulated on CPU — so the CSV also derives the
 projected v5e step time from the arithmetic (flops/particle from the
 metered kernel chain at the respective dtype width).
+
+Each cell times one jitted ``ParticleFilter.step`` — the engine's
+per-frame kernel chain, the unit the paper measures.
 """
 
 from __future__ import annotations
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
-from repro.core import get_policy
-from repro.core.filter import pf_init, pf_step
-from repro.core.tracking import TrackerConfig, make_tracker_spec
-from repro.data.synthetic_video import VideoConfig, generate_video
+from repro import compat
+from repro.core import TrackerConfig, get_policy, make_tracker_filter
 
 
 def run(sizes=(32_768, 65_536)) -> list[str]:
+    from repro.data.synthetic_video import VideoConfig, generate_video
+
     video, _ = generate_video(
         jax.random.key(0), VideoConfig(num_frames=3, height=256, width=256)
     )
@@ -28,21 +33,17 @@ def run(sizes=(32_768, 65_536)) -> list[str]:
     for n in sizes:
         for pname in ["fp64", "fp32", "bf16", "fp16"]:
             if pname == "fp64":
-                ctx = jax.enable_x64(True)
+                ctx = compat.enable_x64(True)
             else:
-                import contextlib
-
                 ctx = contextlib.nullcontext()
             with ctx:
                 pol = get_policy(pname)
                 cfg = TrackerConfig(
                     num_particles=n, height=256, width=256
                 )
-                spec = make_tracker_spec(cfg, pol)
-                state = pf_init(spec, pol, jax.random.key(1), n)
-                step = jax.jit(
-                    lambda st, f, k: pf_step(spec, pol, st, f, k)
-                )
+                flt = make_tracker_filter(cfg, pol)
+                state = flt.init(jax.random.key(1), n)
+                step = flt.jit_step
                 us = time_fn(
                     lambda st, f: step(st, f, jax.random.key(2)),
                     state,

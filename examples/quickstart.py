@@ -3,9 +3,13 @@
     PYTHONPATH=src python examples/quickstart.py [--precision bf16] \
         [--particles 4096] [--backend pallas]
 
-Generates the Rodinia-style synthetic video, runs the particle filter at
-the chosen precision, and prints per-frame estimates + accuracy. Mirrors
-the paper's verification experiment (Fig. 4).
+Generates the Rodinia-style synthetic video and runs the tracker through
+the ``ParticleFilter`` engine (``repro.core.engine``): the precision
+policy, kernel backend, resampler, and ESS threshold are all fields of one
+``FilterConfig``, so switching ``--precision fp16`` or ``--backend
+pallas`` changes a registry name, never the call site.  Prints per-frame
+estimates + accuracy, mirroring the paper's verification experiment
+(Fig. 4).
 """
 
 import argparse
@@ -29,7 +33,7 @@ def main() -> None:
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     args = ap.parse_args()
 
-    from repro.core import TrackerConfig, get_policy, track
+    from repro.core import TrackerConfig, get_policy, make_tracker_filter
     from repro.data.synthetic_video import VideoConfig, generate_video
 
     policy = get_policy(args.precision)
@@ -43,10 +47,12 @@ def main() -> None:
         width=args.size,
         backend=args.backend,
     )
+    flt = make_tracker_filter(cfg, policy)
     t0 = time.perf_counter()
-    traj, outs = jax.jit(lambda k, v: track(k, v, cfg, policy))(
-        jax.random.key(1), video
-    )
+    final, outs = jax.jit(
+        lambda k, v: flt.run(k, v, cfg.num_particles)
+    )(jax.random.key(1), video)
+    traj = outs.estimate["pos"]
     jax.block_until_ready(traj)
     dt = time.perf_counter() - t0
 

@@ -12,10 +12,12 @@ autoregressive decoding:
     resample    = systematic resampling of sequences by weight (the paper's
                   scheme, in log space with the stable-LSE normalizer)
 
-This is the serving-side integration of the paper's technique: batched
-decode steps drive all particles at once, and resampling is a batch gather
-of cache states.  A tiny randomly-initialized model keeps it CPU-friendly;
-the mechanics are size-independent.
+Everything above is one ``SMCSpec`` handed to the ``ParticleFilter``
+engine (``repro.core.engine``) — the same object that runs the paper's
+object tracker runs this decode loop via ``stream()``; resampling is a
+batch gather of cache states behind the spec's ``gather`` hook.  A tiny
+randomly-initialized model keeps it CPU-friendly; the mechanics are
+size-independent.
 """
 
 import argparse
@@ -38,8 +40,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced_config
-    from repro.core import resampling, stability
+    from repro.core import FilterConfig, ParticleFilter
     from repro.core.precision import get_policy
+    from repro.launch.serve import make_smc_decode_spec
     from repro.models import model as M
 
     cfg = reduced_config(get_config("minitron-8b"), num_layers=2,
@@ -47,66 +50,49 @@ def main() -> None:
     pol = get_policy(args.precision)
     n = args.particles
     params = M.init_params(jax.random.key(0), cfg, jnp.float32)
-    cache = M.init_cache(cfg, n, args.steps + 1, pol.compute_dtype)
-
-    tok = jnp.zeros((n,), jnp.int32)
-    log_w = jnp.full((n,), -jnp.log(float(n)), jnp.float32)
-    seqs = np.zeros((n, args.steps), np.int32)
     decode = jax.jit(
         lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol)
     )
 
-    key = jax.random.key(42)
+    spec = make_smc_decode_spec(
+        params, cfg, pol, decode,
+        temperature=args.temperature, steps=args.steps,
+    )
+    flt = ParticleFilter(
+        spec, FilterConfig(policy=pol, ess_threshold=args.ess_frac)
+    )
+
     total_resamples = 0
-    for i in range(args.steps):
-        logits, cache = decode(params, tok, jnp.int32(i), cache)
-        logits = logits.astype(jnp.float32)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-
-        key, k_samp, k_res = jax.random.split(key, 3)
-        # propagate: sample at high temperature (exploration)
-        tok = jax.random.categorical(k_samp, logits / args.temperature, axis=-1)
-        # weight: reward = model log-prob of the sampled token at T=1
-        reward = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
-        log_w = log_w + reward
-
-        w, lse = stability.normalize_log_weights(log_w)
-        ess = float(stability.effective_sample_size(w))
-        seqs[:, i] = np.asarray(tok)
-        if ess < args.ess_frac * n:
-            anc = resampling.systematic(k_res, w, pol)
-            # gather sequence state: tokens, caches, histories
-            tok = jnp.take(tok, anc, axis=0)
-            cache = jax.tree.map(
-                lambda x: jnp.take(x, anc, axis=_batch_axis(x, n)), cache
-            )
-            seqs = seqs[np.asarray(anc)]
-            log_w = jnp.full((n,), -jnp.log(float(n)), jnp.float32)
-            total_resamples += 1
-            marker = f"resampled (ess={ess:.1f})"
-        else:
-            marker = f"ess={ess:.1f}"
+    state = None
+    for i, (state, out) in enumerate(
+        flt.stream(jax.random.key(42), range(args.steps), n)
+    ):
+        resampled = bool(out.resampled)
+        total_resamples += resampled
         if i % 4 == 0 or i == args.steps - 1:
-            print(f"step {i:3d} mean_reward={float(reward.mean()):7.3f} "
+            marker = (
+                f"resampled (ess={float(out.ess):.1f})"
+                if resampled
+                else f"ess={float(out.ess):.1f}"
+            )
+            print(f"step {i:3d} mean_reward={float(out.estimate['reward']):7.3f} "
                   f"{marker}")
 
+    from repro.core import stability
+
+    seqs = np.asarray(state.particles["seq"])
+    log_w = state.log_weights.astype(jnp.float32)
     w, _ = stability.normalize_log_weights(log_w)
     best = int(jnp.argmax(w))
-    mean_lp = float(jnp.sum(w * log_w))
+    # The engine renormalizes weights every step, so sequence quality is
+    # read off the lineage log-prob the spec accumulates in the particles.
+    cum = state.particles["cum_reward"].astype(jnp.float32)
+    mean_lp = float(jnp.sum(w * cum))
     print(f"\n{total_resamples} resampling events over {args.steps} steps")
     print(f"best particle (w={float(w[best]):.3f}): "
           f"tokens={seqs[best].tolist()}")
 
-    # baseline: independent sampling (no resampling) for comparison
-    print("SMC mean weighted log-weight:", f"{mean_lp:.2f}")
-
-
-def _batch_axis(x, n):
-    """Locate the particle axis in a cache leaf (size-n dimension)."""
-    for i, d in enumerate(x.shape):
-        if d == n:
-            return i
-    raise ValueError(f"no particle axis in {x.shape}")
+    print("SMC mean weighted cumulative log-prob:", f"{mean_lp:.2f}")
 
 
 if __name__ == "__main__":

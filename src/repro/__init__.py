@@ -1,0 +1,10 @@
+"""repro: half-precision particle filtering on TPU, grown from arXiv:2308.00763.
+
+Importing the package installs :mod:`repro.compat`'s jax version shims so
+every entry point (library, tests, subprocess snippets) sees one API
+surface regardless of the installed jax release.
+"""
+
+from repro import compat as _compat
+
+_compat.install()

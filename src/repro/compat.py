@@ -1,0 +1,160 @@
+"""Version-adaptive shims for jax APIs that moved between releases.
+
+The codebase is written against the current jax surface —
+``jax.enable_x64``, ``jax.set_mesh``, ``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh`` — several of which do not exist on the
+0.4.x line this container ships (``jax.enable_x64`` lives at
+``jax.experimental.enable_x64`` there, ``shard_map`` at
+``jax.experimental.shard_map`` with ``check_rep`` instead of
+``check_vma``, and the context mesh is the legacy ``with mesh:`` resource
+env).  Each symbol below resolves to the native implementation when the
+installed jax has one and to a behavior-equivalent fallback otherwise.
+
+:func:`install` (run on ``import repro``) additionally patches the missing
+attributes onto ``jax`` itself so code that cannot import this module —
+the subprocess snippets in ``tests/`` — runs unchanged.  On a recent jax
+every shim resolves to the native symbol and ``install`` is a no-op.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Any
+
+import jax
+from jax.experimental import enable_x64 as _experimental_enable_x64
+
+__all__ = [
+    "AxisType",
+    "axis_size",
+    "cost_analysis",
+    "enable_x64",
+    "get_abstract_mesh",
+    "install",
+    "make_mesh",
+    "set_mesh",
+    "shard_map",
+]
+
+
+if hasattr(jax, "enable_x64"):
+    enable_x64 = jax.enable_x64
+else:
+    enable_x64 = _experimental_enable_x64
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def _make_mesh_supports_axis_types() -> bool:
+    import inspect
+
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return True  # uninspectable: assume current-jax signature
+
+
+_native_make_mesh = jax.make_mesh
+
+if _make_mesh_supports_axis_types():
+    make_mesh = _native_make_mesh
+else:
+
+    @functools.wraps(_native_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # pre-AxisType jax: every axis is implicitly Auto
+        return _native_make_mesh(axis_shapes, axis_names, **kw)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    # Legacy context mesh: enter the mesh's resource-env context manager
+    # (never exited — process-global, matching jax.set_mesh semantics) so
+    # with_sharding_constraint accepts bare PartitionSpecs under jit.
+    _mesh_stack: list[Any] = []
+
+    def set_mesh(mesh) -> None:
+        _mesh_stack.append(mesh)
+        mesh.__enter__()
+
+    def get_abstract_mesh():
+        """The active context mesh, or None.
+
+        Returns the *concrete* mesh on legacy jax — callers only read
+        ``axis_names`` / ``shape``, which the two types share.
+        """
+        if _mesh_stack:
+            return _mesh_stack[-1]
+        return None
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _legacy_shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=check_vma,
+            **kw,
+        )
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax release.
+
+    0.4.x returns a list with one per-program dict; current jax returns the
+    dict directly.
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+
+    def axis_size(axis_name) -> int:
+        """Static size of a mapped axis.
+
+        ``psum`` of a Python literal folds to ``literal * axis_size``
+        without emitting a collective — the pre-``lax.axis_size`` idiom.
+        """
+        return jax.lax.psum(1, axis_name)
+
+
+def install() -> None:
+    """Patch the shims onto ``jax`` where the native symbols are missing."""
+    for mod, name, value in [
+        (jax, "enable_x64", enable_x64),
+        (jax, "set_mesh", set_mesh),
+        (jax, "shard_map", shard_map),
+        (jax, "make_mesh", make_mesh),
+        (jax.lax, "axis_size", axis_size),
+        (jax.sharding, "AxisType", AxisType),
+        (jax.sharding, "get_abstract_mesh", get_abstract_mesh),
+    ]:
+        # Modules with deprecation __getattr__ raise for removed names, so
+        # hasattr is the correct "native symbol present" probe.
+        if not hasattr(mod, name):
+            setattr(mod, name, value)
+    if jax.make_mesh is not make_mesh:
+        jax.make_mesh = make_mesh

@@ -4,12 +4,24 @@ Layers:
 - ``precision``   — multi-precision policies (fp64/fp32/bf16/fp16 ± stability)
 - ``stability``   — scaled-square, log-sum-exp, online/streaming LSE combine
 - ``likelihood``  — Rodinia intensity observation model (naive + stable)
-- ``resampling``  — systematic / stratified / multinomial
-- ``filter``      — generic SMC step/scan (propagate → weight → resample)
+- ``resampling``  — systematic / stratified / multinomial (registry)
+- ``filter``      — SMC model/state types + legacy pf_* shims
+- ``engine``      — the ParticleFilter engine: FilterConfig-dispatched
+  backends (jnp / pallas), resamplers, and mesh distribution behind one
+  ``init`` / ``step`` / ``run`` / ``stream`` API
 - ``tracking``    — the paper's object-tracking application
-- ``distributed`` — shard_map multi-device filter with hierarchical resampling
+- ``distributed`` — shard_map multi-device step (exact / local-RNA schemes),
+  reached via ``FilterConfig(mesh=...)``
 """
 
+from repro.core.engine import (  # noqa: F401
+    BACKENDS,
+    Backend,
+    FilterConfig,
+    ParticleFilter,
+    get_backend,
+    register_backend,
+)
 from repro.core.filter import (  # noqa: F401
     FilterOutput,
     FilterState,
@@ -22,5 +34,14 @@ from repro.core.precision import (  # noqa: F401
     POLICIES,
     PrecisionPolicy,
     get_policy,
+    register_policy,
 )
-from repro.core.tracking import TrackerConfig, track  # noqa: F401
+from repro.core.resampling import (  # noqa: F401
+    get_resampler,
+    register_resampler,
+)
+from repro.core.tracking import (  # noqa: F401
+    TrackerConfig,
+    make_tracker_filter,
+    track,
+)

@@ -42,15 +42,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.precision import PrecisionPolicy
 
 __all__ = [
+    "SCHEMES",
     "DistributedConfig",
     "dist_normalize",
     "dist_systematic_exact",
     "dist_systematic_local",
     "make_dist_pf_step",
 ]
+
+SCHEMES = ("exact", "local")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +64,13 @@ class DistributedConfig:
     scheme: str = "exact"  # or "local"
     exchange_every: int = 4  # ring-exchange period for the local scheme
     exchange_frac: float = 0.25  # fraction of the local slice exchanged
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise KeyError(
+                f"unknown resampling scheme {self.scheme!r}; "
+                f"have {sorted(SCHEMES)}"
+            )
 
     @property
     def axes(self) -> tuple[str, ...]:
@@ -78,14 +89,14 @@ def _axis_index(axes: tuple[str, ...]) -> jax.Array:
     """Linearized device index along a tuple of mesh axes."""
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _axis_size(axes: tuple[str, ...]) -> int:
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
     return n
 
 
@@ -181,7 +192,7 @@ def dist_systematic_local(
     n_dev = _axis_size(axes)
     k = max(1, int(p_loc * exchange_frac))
     ring_axis = axes[-1]
-    n_ring = jax.lax.axis_size(ring_axis)
+    n_ring = compat.axis_size(ring_axis)
     perm = [(i, (i + 1) % n_ring) for i in range(n_ring)]
 
     def _exchange(args):
@@ -207,9 +218,12 @@ def make_dist_pf_step(
 ):
     """Build a shard_map'd PF step.
 
+    Low-level: ``repro.core.engine.ParticleFilter`` wraps this behind the
+    uniform ``step(state, obs, key)`` API when ``FilterConfig.mesh`` is set.
+
     Signature of the returned fn:
         (particles, log_w, step, obs, key) ->
-        (particles, log_w, step+1, estimate, ess, lse)
+        (particles, log_w, step+1, estimate, ess, lse, max_log_w)
     ``particles`` leaves and ``log_w`` are sharded on ``cfg.axes``; the
     observation and key are replicated.
     """
@@ -226,7 +240,7 @@ def make_dist_pf_step(
             policy.compute_dtype
         )
         log_w = log_w + log_lik
-        w, lse, _ = dist_normalize(log_w, axes, policy.accum_dtype)
+        w, lse, max_lw = dist_normalize(log_w, axes, policy.accum_dtype)
 
         wsum = jax.lax.psum(jnp.sum(w.astype(policy.accum_dtype)), axes)
 
@@ -268,12 +282,12 @@ def make_dist_pf_step(
                 exchange_frac=cfg.exchange_frac,
                 out_log_w_dtype=policy.compute_dtype,
             )
-        return new_particles, new_log_w, step + 1, estimate, ess, lse
+        return new_particles, new_log_w, step + 1, estimate, ess, lse, max_lw
 
     in_specs = (pspec, pspec, P(), P(), P())
-    out_specs = (pspec, pspec, P(), P(), P(), P())
+    out_specs = (pspec, pspec, P(), P(), P(), P(), P())
 
-    return jax.shard_map(
+    return compat.shard_map(
         _step,
         mesh=cfg.mesh,
         in_specs=in_specs,

@@ -1,0 +1,392 @@
+"""The particle-filter engine: one object, every execution axis a config key.
+
+The paper's central move is a filter *generic over precision*
+(``particleFilter<double/float/half>``); this module generalizes the idea to
+every axis the repo has grown since: numeric policy, kernel backend,
+resampling scheme, ESS threshold, and particle distribution over a device
+mesh are all fields of one :class:`FilterConfig`, and one
+:class:`ParticleFilter` executes any combination:
+
+    flt = ParticleFilter(spec, FilterConfig(policy="bf16", backend="pallas"))
+    state = flt.init(key, num_particles)
+    state, out = flt.step(state, observation, key)      # one frame
+    final, outs = flt.run(key, observations, num_particles)   # lax.scan
+    for state, out in flt.stream(key, obs_iter, n): ...       # serving loop
+
+Backends and resamplers are *registries* (:func:`register_backend`,
+:func:`repro.core.resampling.register_resampler`), mirroring
+``precision.register_policy``: the pure-jnp reference forms, the fused
+Pallas kernel chain, and any future accelerator path are looked up by name,
+never imported by the call site.  The multi-device filter is not a separate
+entry point either — ``FilterConfig(mesh=..., scheme="local")`` routes the
+same ``init``/``step``/``run`` through the shard_map step of
+``repro.core.distributed`` (exact / local-RNA resampling schemes).
+
+``pf_step`` / ``pf_scan`` / ``track`` remain as deprecation shims that
+forward here; the jnp backend is bit-identical to the legacy functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import resampling, stability
+from repro.core.filter import FilterOutput, FilterState, SMCSpec
+from repro.core.precision import PrecisionPolicy, get_policy
+
+__all__ = [
+    "Backend",
+    "BACKENDS",
+    "FilterConfig",
+    "ParticleFilter",
+    "get_backend",
+    "register_backend",
+]
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One execution backend for the per-frame kernel chain.
+
+    normalize:  (log_w, policy) -> (weights, log_z, max_log_w) — the paper's
+                max-finding + weighting + normalizing stages (Eq. 5).
+    resamplers: per-resampler-name overrides ``(key, weights, policy) ->
+                ancestors``; names without an override fall back to the
+                registered pure-jnp resampler.
+    """
+
+    name: str
+    normalize: Callable[[jax.Array, PrecisionPolicy], tuple]
+    resamplers: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown filter backend {name!r}; have {sorted(BACKENDS)}"
+        ) from None
+
+
+def _jnp_normalize(log_w: jax.Array, policy: PrecisionPolicy):
+    m = jnp.max(log_w)
+    lse = stability.logsumexp(log_w.astype(policy.accum_dtype), axis=-1)
+    w = jnp.exp(log_w.astype(policy.accum_dtype) - lse).astype(log_w.dtype)
+    return w, lse, m
+
+
+def _pallas_normalize(log_w: jax.Array, policy: PrecisionPolicy):
+    del policy  # the fused kernel carries its own fp32 accumulators
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse = lse_ops.normalize_weights(log_w)
+    return w, lse, m
+
+
+def _pallas_systematic(key: jax.Array, weights: jax.Array, policy):
+    del policy
+    from repro.kernels.resample import ops as res_ops
+
+    return res_ops.systematic_resample(key, weights)
+
+
+register_backend(Backend("jnp", _jnp_normalize))
+register_backend(
+    Backend(
+        "pallas",
+        _pallas_normalize,
+        resamplers={"systematic": _pallas_systematic},
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# Config
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterConfig:
+    """Everything about *how* a filter executes (the model lives in SMCSpec).
+
+    policy / backend / resampler are registry names (policy may also be a
+    :class:`PrecisionPolicy` instance).  Setting ``mesh`` shards particles
+    over the named mesh ``axis`` and switches resampling to the distributed
+    ``scheme`` ("exact" global systematic, or "local" RNA with periodic ring
+    exchange — see ``repro.core.distributed``).
+    """
+
+    policy: str | PrecisionPolicy = "fp32"
+    backend: str = "jnp"
+    resampler: str = "systematic"
+    ess_threshold: float = 1.0  # resample when ESS < threshold * P
+    # Distribution spec (None -> single placement).
+    mesh: Any = None
+    axis: str | tuple[str, ...] = "data"
+    scheme: str = "exact"
+    exchange_every: int = 4
+    exchange_frac: float = 0.25
+
+    def with_(self, **kw: Any) -> "FilterConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+
+
+class ParticleFilter:
+    """A configured filter over one SMC model.
+
+    Construction resolves every registry name (raising immediately on
+    unknown policies/backends/resamplers/schemes); the step methods are pure
+    jax functions of their array arguments, safe under jit/scan.
+    """
+
+    def __init__(self, spec: SMCSpec, config: FilterConfig | None = None):
+        self.spec = spec
+        self.config = config = config or FilterConfig()
+        self.policy = (
+            get_policy(config.policy)
+            if isinstance(config.policy, str)
+            else config.policy
+        )
+        self.backend = get_backend(config.backend)
+        base_resampler = resampling.get_resampler(config.resampler)
+        override = self.backend.resamplers.get(config.resampler)
+        self._resample = override or base_resampler
+
+        self._dist_step = None
+        if config.mesh is not None:
+            from repro.core import distributed
+
+            dist_cfg = distributed.DistributedConfig(
+                mesh=config.mesh,
+                axis=config.axis,
+                scheme=config.scheme,
+                exchange_every=config.exchange_every,
+                exchange_frac=config.exchange_frac,
+            )
+            self._dist_cfg = dist_cfg
+            self._dist_step = distributed.make_dist_pf_step(
+                spec, self.policy, dist_cfg
+            )
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, key: jax.Array, num_particles: int) -> FilterState:
+        """Draw the initial particle cloud with uniform weights."""
+        particles = self.spec.init(key, num_particles)
+        particles = jax.tree.map(
+            lambda x: x.astype(self.policy.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.inexact)
+            else x,
+            particles,
+        )
+        log_w = jnp.full(
+            (num_particles,),
+            -jnp.log(float(num_particles)),
+            self.policy.compute_dtype,
+        )
+        state = FilterState(particles, log_w, jnp.asarray(0, jnp.int32))
+        if self._dist_step is not None:
+            state = self._shard_state(state)
+        return state
+
+    def step(
+        self, state: FilterState, observation: Any, key: jax.Array
+    ) -> tuple[FilterState, FilterOutput]:
+        """One frame: propagate → weight → normalize → estimate → resample."""
+        if self._dist_step is not None:
+            return self._step_distributed(state, observation, key)
+        return self._step_local(state, observation, key)
+
+    def run(
+        self, key: jax.Array, observations: Any, num_particles: int
+    ) -> tuple[FilterState, FilterOutput]:
+        """Filter a whole sequence under ``lax.scan``.
+
+        observations: pytree with a leading time axis (e.g. video (T, H, W)).
+        Returns (final state, stacked per-step outputs).
+        """
+        k_init, k_run = jax.random.split(key)
+        state0 = self.init(k_init, num_particles)
+        num_steps = jax.tree.leaves(observations)[0].shape[0]
+        step_keys = jax.random.split(k_run, num_steps)
+
+        def body(state, xs):
+            obs, k = xs
+            return self.step(state, obs, k)
+
+        return jax.lax.scan(body, state0, (observations, step_keys))
+
+    def stream(
+        self,
+        key: jax.Array,
+        observations: Any,
+        num_particles: int,
+        *,
+        jit: bool = True,
+    ):
+        """Streaming filter for serving: yields (state, output) per frame.
+
+        ``observations`` is any iterable — frames arriving from a queue, an
+        endless generator, decode-step indices.  Per-step keys derive by
+        ``fold_in`` of the step index so the stream never needs to know its
+        length (unlike :meth:`run`, whose key path matches the legacy scan).
+        """
+        k_init, k_run = jax.random.split(key)
+        state = self.init(k_init, num_particles)
+        step = self.jit_step if jit else self.step
+        for i, obs in enumerate(observations):
+            state, out = step(state, obs, jax.random.fold_in(k_run, i))
+            yield state, out
+
+    @functools.cached_property
+    def jit_step(self):
+        """The step function jit-compiled once per engine instance."""
+        return jax.jit(self.step)
+
+    # -- internals ----------------------------------------------------------
+
+    def _normalize(self, log_w: jax.Array):
+        if not self.policy.stable_weighting:
+            # Paper's naive path: direct exponentiation, overflow and all.
+            w, log_z = stability.normalize_log_weights(log_w, stable=False)
+            return w, log_z, jnp.max(log_w)
+        return self.backend.normalize(log_w, self.policy)
+
+    def _step_local(self, state, observation, key):
+        spec, policy = self.spec, self.policy
+        cdt = policy.compute_dtype
+        k_prop, k_res = jax.random.split(key)
+        num_particles = state.log_weights.shape[0]
+
+        # 1. propagation (paper kernel 1)
+        particles = spec.transition(k_prop, state.particles, state.step)
+
+        # 2. likelihood (kernel 2)
+        log_lik = spec.loglik(particles, observation, state.step).astype(cdt)
+        log_w = state.log_weights + log_lik
+
+        # 3-5. max-find + weighting + normalizing (kernels 3-5; fused on the
+        # pallas backend)
+        weights, log_z, max_lw = self._normalize(log_w)
+        prev_lse = stability.logsumexp(
+            state.log_weights.astype(policy.accum_dtype), axis=-1
+        )
+        log_z_inc = log_z - prev_lse
+        w_accum = weights.astype(policy.accum_dtype)
+        ess = stability.effective_sample_size(w_accum)
+
+        if spec.summary is not None:
+            estimate = spec.summary(particles, w_accum)
+        else:
+            estimate = _weighted_mean(particles, weights, policy.accum_dtype)
+
+        # 6. resampling (kernel 6)
+        do_resample = (
+            ess < self.config.ess_threshold * num_particles + 0.5
+        )  # ==1.0 -> always
+        gather = self.spec.gather or resampling.gather_ancestors
+
+        def _resampled():
+            ancestors = self._resample(k_res, weights, policy)
+            new_particles = gather(particles, ancestors)
+            uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
+            return new_particles, uniform
+
+        def _kept():
+            return particles, jnp.log(
+                weights.astype(policy.accum_dtype)
+            ).astype(log_w.dtype)
+
+        new_particles, new_log_w = jax.lax.cond(
+            do_resample, _resampled, _kept
+        )
+
+        new_state = FilterState(
+            particles=new_particles,
+            log_weights=new_log_w,
+            step=state.step + 1,
+        )
+        out = FilterOutput(
+            estimate=estimate,
+            ess=ess,
+            log_z_inc=log_z_inc,
+            resampled=do_resample,
+            max_loglik=max_lw,
+        )
+        return new_state, out
+
+    def _step_distributed(self, state, observation, key):
+        # Both distributed schemes resample every frame; the evidence
+        # increment closes over the (globally sharded) pre-step weights.
+        prev_lse = stability.logsumexp(
+            state.log_weights.astype(self.policy.accum_dtype), axis=-1
+        )
+        particles, log_w, step, estimate, ess, lse, max_lw = self._dist_step(
+            state.particles, state.log_weights, state.step, observation, key
+        )
+        out = FilterOutput(
+            estimate=estimate,
+            ess=ess,
+            log_z_inc=lse - prev_lse,
+            resampled=jnp.asarray(True),
+            max_loglik=max_lw,
+        )
+        return FilterState(particles, log_w, step), out
+
+    def _shard_state(self, state: FilterState) -> FilterState:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        sh = NamedSharding(self.config.mesh, P(self._dist_cfg.axes))
+
+        def place(x):
+            if isinstance(x, jax.core.Tracer):
+                return jax.lax.with_sharding_constraint(x, sh)
+            return jax.device_put(x, sh)
+
+        return FilterState(
+            particles=jax.tree.map(place, state.particles),
+            log_weights=place(state.log_weights),
+            step=state.step,
+        )
+
+
+def _weighted_mean(particles, weights, adt):
+    # Scale-invariant: divide by the *actual* weight sum.  In 16-bit,
+    # exp(log_w - lse) does not sum to 1 (bf16 resolves log-weights ~300
+    # only to ±2, i.e. a factor e^2 on each weight) — trusting the LSE to
+    # normalize inflates the estimate off the image.  Lesson recorded in
+    # EXPERIMENTS.md §Paper-validation.
+    w = weights.astype(adt)
+    total = jnp.sum(w)
+
+    def _mean(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x  # integer states (e.g. token ids) are not averaged
+        wx = w.reshape(w.shape + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(adt) * wx, axis=0) / total
+
+    return jax.tree.map(_mean, particles)

@@ -1,35 +1,44 @@
-"""The particle filter core: propagate → weight → (normalize) → resample.
+"""SMC model/state types + legacy shims for the particle-filter engine.
 
-Generic over the state space: a model is three callables (init, transition,
-log-likelihood) over a pytree of per-particle arrays, so the same machinery
-drives the paper's object tracker (``repro.core.tracking``), the distributed
-filter (``repro.core.distributed``) and SMC decoding of language models
-(``examples/smc_decode.py``).
+The filter itself lives in :mod:`repro.core.engine`: a
+:class:`~repro.core.engine.ParticleFilter` built from a
+:class:`~repro.core.engine.FilterConfig` (precision policy, backend,
+resampler, ESS threshold, mesh distribution spec — all registry names)
+exposes ``init`` / ``step`` / ``run`` / ``stream``.  This module keeps the
+pieces that describe the *model* rather than the execution:
 
-Faithful to the paper's per-frame kernel chain:
+- :class:`SMCSpec` — the model as three callables (init, transition,
+  log-likelihood) over a pytree of per-particle arrays, so the same engine
+  drives the paper's object tracker (``repro.core.tracking``), the
+  distributed filter (``repro.core.distributed``) and SMC decoding of
+  language models (``repro.launch.serve --smc``).
+- :class:`FilterState` / :class:`FilterOutput` — the carried state and the
+  per-frame outputs (estimate, ESS, evidence increment, resample flag, max
+  log-likelihood — the paper's six-kernel chain observables, Fig. 1).
 
-    propagation → likelihood → max-finding → weighting → normalizing →
-    resampling                                  (paper Fig. 1, six kernels)
-
-With ``backend="pallas"`` the max-finding + weighting + normalizing chain is
-replaced by the fused one-pass online-LSE kernel and the CDF build by the
-carry-cumsum kernel (``repro.kernels``) — the TPU-native restructuring; with
-``backend="jnp"`` the pure-jnp reference forms are used.  Both are bit-tested
-against each other.
+``pf_init`` / ``pf_step`` / ``pf_scan`` are deprecation shims kept for old
+call sites; each warns once and forwards to an equivalent engine call
+(bit-identical results — the engine's jnp backend *is* the old code path).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import resampling, stability
 from repro.core.precision import PrecisionPolicy
 
-__all__ = ["SMCSpec", "FilterState", "FilterOutput", "pf_step", "pf_scan"]
+__all__ = [
+    "SMCSpec",
+    "FilterState",
+    "FilterOutput",
+    "pf_init",
+    "pf_step",
+    "pf_scan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,11 +48,22 @@ class SMCSpec:
     init:       (key, num_particles) -> particles pytree, leading dim P
     transition: (key, particles, step) -> particles          (propagation)
     loglik:     (particles, observation, step) -> (P,) log-likelihoods
+
+    Optional hooks for exotic state (e.g. LM caches in SMC decoding):
+
+    gather:     (particles, ancestors) -> particles — ancestor selection for
+                pytrees whose particle axis is not leading everywhere;
+                defaults to ``resampling.gather_ancestors`` (axis 0).
+    summary:    (particles, weights) -> estimate pytree — replaces the
+                default weighted posterior mean (weights in accum dtype);
+                use when averaging the full state is meaningless or costly.
     """
 
     init: Callable[..., Any]
     transition: Callable[..., Any]
     loglik: Callable[..., jax.Array]
+    gather: Callable[..., Any] | None = None
+    summary: Callable[..., Any] | None = None
 
 
 class FilterState(NamedTuple):
@@ -60,39 +80,45 @@ class FilterOutput(NamedTuple):
     max_loglik: jax.Array  # for diagnostics / paper's max kernel parity
 
 
-def _weighted_mean(particles, weights, adt):
-    # Scale-invariant: divide by the *actual* weight sum.  In 16-bit,
-    # exp(log_w - lse) does not sum to 1 (bf16 resolves log-weights ~300
-    # only to ±2, i.e. a factor e^2 on each weight) — trusting the LSE to
-    # normalize inflates the estimate off the image.  Lesson recorded in
-    # EXPERIMENTS.md §Paper-validation.
-    w = weights.astype(adt)
-    total = jnp.sum(w)
-
-    def _mean(x):
-        if not jnp.issubdtype(x.dtype, jnp.inexact):
-            return x  # integer states (e.g. token ids) are not averaged
-        wx = w.reshape(w.shape + (1,) * (x.ndim - 1))
-        return jnp.sum(x.astype(adt) * wx, axis=0) / total
-
-    return jax.tree.map(_mean, particles)
+_WARNED: set[str] = set()
 
 
-def _normalize(log_w, policy: PrecisionPolicy, backend: str):
-    """(normalized weights, log_z, max log-weight) per the active policy."""
-    if not policy.stable_weighting:
-        # Paper's naive path: direct exponentiation, overflow and all.
-        w, log_z = stability.normalize_log_weights(log_w, stable=False)
-        return w, log_z, jnp.max(log_w)
-    if backend == "pallas":
-        from repro.kernels.logsumexp import ops as lse_ops
+def _warn_once(old: str, new: str) -> None:
+    """Warn-once helper shared by every legacy shim (here and tracking)."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.core.engine)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
-        w, m, lse = lse_ops.normalize_weights(log_w)
-        return w, lse, m
-    m = jnp.max(log_w)
-    lse = stability.logsumexp(log_w.astype(policy.accum_dtype), axis=-1)
-    w = jnp.exp(log_w.astype(policy.accum_dtype) - lse).astype(log_w.dtype)
-    return w, lse, m
+
+def _engine(spec, policy, *, resampler, ess_threshold, backend):
+    from repro.core.engine import FilterConfig, ParticleFilter
+
+    return ParticleFilter(
+        spec,
+        FilterConfig(
+            policy=policy,
+            backend=backend,
+            resampler=resampler,
+            ess_threshold=ess_threshold,
+        ),
+    )
+
+
+def pf_init(
+    spec: SMCSpec, policy: PrecisionPolicy, key: jax.Array, num_particles: int
+) -> FilterState:
+    """Deprecated: use ``ParticleFilter(spec, config).init(key, P)``."""
+    _warn_once("repro.core.filter.pf_init", "ParticleFilter.init")
+    from repro.core.engine import FilterConfig, ParticleFilter
+
+    return ParticleFilter(spec, FilterConfig(policy=policy)).init(
+        key, num_particles
+    )
 
 
 def pf_step(
@@ -106,83 +132,15 @@ def pf_step(
     ess_threshold: float = 1.0,
     backend: str = "jnp",
 ) -> tuple[FilterState, FilterOutput]:
-    """One frame of the filter.
-
-    ess_threshold: resample when ESS < threshold * P.  1.0 (default)
-    resamples every step, matching Rodinia/the paper; <1.0 is adaptive.
-    """
-    cdt = policy.compute_dtype
-    k_prop, k_res = jax.random.split(key)
-    num_particles = state.log_weights.shape[0]
-
-    # 1. propagation (paper kernel 1)
-    particles = spec.transition(k_prop, state.particles, state.step)
-
-    # 2. likelihood (kernel 2)
-    log_lik = spec.loglik(particles, observation, state.step).astype(cdt)
-    log_w = state.log_weights + log_lik
-
-    # 3-5. max-find + weighting + normalizing (kernels 3-5; fused for pallas)
-    weights, log_z, max_lw = _normalize(log_w, policy, backend)
-    prev_lse = stability.logsumexp(
-        state.log_weights.astype(policy.accum_dtype), axis=-1
-    )
-    log_z_inc = log_z - prev_lse
-    ess = stability.effective_sample_size(weights.astype(policy.accum_dtype))
-
-    estimate = _weighted_mean(particles, weights, policy.accum_dtype)
-
-    # 6. resampling (kernel 6)
-    do_resample = ess < ess_threshold * num_particles + 0.5  # ==1.0 -> always
-    resample_fn = resampling.make_resampler(resampler)
-
-    def _resampled():
-        if backend == "pallas" and resampler == "systematic":
-            from repro.kernels.resample import ops as res_ops
-
-            ancestors = res_ops.systematic_resample(k_res, weights)
-        else:
-            ancestors = resample_fn(k_res, weights, policy)
-        new_particles = resampling.gather_ancestors(particles, ancestors)
-        uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
-        return new_particles, uniform
-
-    def _kept():
-        return particles, jnp.log(weights.astype(policy.accum_dtype)).astype(
-            log_w.dtype
-        )
-
-    new_particles, new_log_w = jax.lax.cond(do_resample, _resampled, _kept)
-
-    new_state = FilterState(
-        particles=new_particles,
-        log_weights=new_log_w,
-        step=state.step + 1,
-    )
-    out = FilterOutput(
-        estimate=estimate,
-        ess=ess,
-        log_z_inc=log_z_inc,
-        resampled=do_resample,
-        max_loglik=max_lw,
-    )
-    return new_state, out
-
-
-def pf_init(
-    spec: SMCSpec, policy: PrecisionPolicy, key: jax.Array, num_particles: int
-) -> FilterState:
-    particles = spec.init(key, num_particles)
-    particles = jax.tree.map(
-        lambda x: x.astype(policy.compute_dtype)
-        if jnp.issubdtype(x.dtype, jnp.inexact)
-        else x,
-        particles,
-    )
-    log_w = jnp.full(
-        (num_particles,), -jnp.log(float(num_particles)), policy.compute_dtype
-    )
-    return FilterState(particles, log_w, jnp.asarray(0, jnp.int32))
+    """Deprecated: use ``ParticleFilter(spec, config).step(state, obs, key)``."""
+    _warn_once("repro.core.filter.pf_step", "ParticleFilter.step")
+    return _engine(
+        spec,
+        policy,
+        resampler=resampler,
+        ess_threshold=ess_threshold,
+        backend=backend,
+    ).step(state, observation, key)
 
 
 def pf_scan(
@@ -196,27 +154,12 @@ def pf_scan(
     ess_threshold: float = 1.0,
     backend: str = "jnp",
 ) -> tuple[FilterState, FilterOutput]:
-    """Run the filter over a sequence of observations with ``lax.scan``.
-
-    observations: pytree with a leading time axis (e.g. video (T, H, W)).
-    Returns (final state, stacked per-step outputs).
-    """
-    k_init, k_run = jax.random.split(key)
-    state0 = pf_init(spec, policy, k_init, num_particles)
-    num_steps = jax.tree.leaves(observations)[0].shape[0]
-    step_keys = jax.random.split(k_run, num_steps)
-
-    def body(state, xs):
-        obs, k = xs
-        return pf_step(
-            spec,
-            policy,
-            state,
-            obs,
-            k,
-            resampler=resampler,
-            ess_threshold=ess_threshold,
-            backend=backend,
-        )
-
-    return jax.lax.scan(body, state0, (observations, step_keys))
+    """Deprecated: use ``ParticleFilter(spec, config).run(key, obs, P)``."""
+    _warn_once("repro.core.filter.pf_scan", "ParticleFilter.run")
+    return _engine(
+        spec,
+        policy,
+        resampler=resampler,
+        ess_threshold=ess_threshold,
+        backend=backend,
+    ).run(key, observations, num_particles)

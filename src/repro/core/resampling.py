@@ -35,6 +35,9 @@ __all__ = [
     "systematic",
     "stratified",
     "multinomial",
+    "RESAMPLERS",
+    "register_resampler",
+    "get_resampler",
     "make_resampler",
     "gather_ancestors",
 ]
@@ -100,20 +103,38 @@ def multinomial(
     return _search(cdf, u)
 
 
-_RESAMPLERS: dict[str, Resampler] = {
-    "systematic": systematic,
-    "stratified": stratified,
-    "multinomial": multinomial,
-}
+RESAMPLERS: dict[str, Resampler] = {}
 
 
-def make_resampler(name: str) -> Resampler:
+def register_resampler(name: str, fn: Resampler | None = None):
+    """Register ``fn`` under ``name`` (usable as a decorator).
+
+    The registry is the extension point :class:`repro.core.engine.FilterConfig`
+    dispatches on — mirroring ``precision.register_policy`` and
+    ``engine.register_backend``.
+    """
+    if fn is None:
+        return lambda f: register_resampler(name, f)
+    RESAMPLERS[name] = fn
+    return fn
+
+
+register_resampler("systematic", systematic)
+register_resampler("stratified", stratified)
+register_resampler("multinomial", multinomial)
+
+
+def get_resampler(name: str) -> Resampler:
     try:
-        return _RESAMPLERS[name]
+        return RESAMPLERS[name]
     except KeyError:
         raise KeyError(
-            f"unknown resampler {name!r}; have {sorted(_RESAMPLERS)}"
+            f"unknown resampler {name!r}; have {sorted(RESAMPLERS)}"
         ) from None
+
+
+# Pre-registry name, kept for callers of the old lookup API.
+make_resampler = get_resampler
 
 
 def gather_ancestors(particles, ancestors: jax.Array):

@@ -16,11 +16,17 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import filter as pf
 from repro.core import likelihood as lik
+from repro.core.engine import FilterConfig, ParticleFilter
+from repro.core.filter import SMCSpec
 from repro.core.precision import PrecisionPolicy
 
-__all__ = ["TrackerConfig", "make_tracker_spec", "track"]
+__all__ = [
+    "TrackerConfig",
+    "make_tracker_spec",
+    "make_tracker_filter",
+    "track",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +45,7 @@ class TrackerConfig:
 
 def make_tracker_spec(
     cfg: TrackerConfig, policy: PrecisionPolicy, start: jax.Array | None = None
-) -> pf.SMCSpec:
+) -> SMCSpec:
     model = lik.IntensityModel(radius=cfg.radius)
     offsets = model.offsets
     # Paper: noise is drawn in double precision and *converted* to the
@@ -91,7 +97,36 @@ def make_tracker_spec(
             return lik_ops.intensity_loglik(patches, model, policy)
         return lik.intensity_loglik(patches, model, policy)
 
-    return pf.SMCSpec(init=init, transition=transition, loglik=loglik)
+    return SMCSpec(init=init, transition=transition, loglik=loglik)
+
+
+def make_tracker_filter(
+    cfg: TrackerConfig,
+    policy: PrecisionPolicy,
+    start: jax.Array | None = None,
+    filter_config: FilterConfig | None = None,
+) -> ParticleFilter:
+    """The tracker as a configured engine.
+
+    ``filter_config`` overrides the execution axes wholesale (e.g. to hand
+    the tracker a mesh); otherwise the TrackerConfig's resampler /
+    ess_threshold / backend fields are used.
+
+        flt = make_tracker_filter(cfg, policy)
+        final, outs = flt.run(key, video, cfg.num_particles)
+        trajectory = outs.estimate["pos"]
+    """
+    spec = make_tracker_spec(cfg, policy, start)
+    if filter_config is None:
+        filter_config = FilterConfig(
+            policy=policy,
+            backend=cfg.backend,
+            resampler=cfg.resampler,
+            ess_threshold=cfg.ess_threshold,
+        )
+    else:
+        filter_config = filter_config.with_(policy=policy)
+    return ParticleFilter(spec, filter_config)
 
 
 def track(
@@ -101,20 +136,17 @@ def track(
     policy: PrecisionPolicy,
     start: jax.Array | None = None,
 ):
-    """Run the tracker over a (T, H, W) video.
+    """Deprecated: use ``make_tracker_filter(cfg, policy).run(...)``.
 
     Returns (trajectory (T, 2) in accum dtype, per-step FilterOutput).
     """
-    spec = make_tracker_spec(cfg, policy, start)
-    final, outs = pf.pf_scan(
-        spec,
-        policy,
-        key,
-        video,
-        cfg.num_particles,
-        resampler=cfg.resampler,
-        ess_threshold=cfg.ess_threshold,
-        backend=cfg.backend,
+    from repro.core.filter import _warn_once
+
+    _warn_once(
+        "repro.core.tracking.track",
+        "make_tracker_filter(cfg, policy).run(key, video, P)",
     )
+    flt = make_tracker_filter(cfg, policy, start)
+    final, outs = flt.run(key, video, cfg.num_particles)
     trajectory = outs.estimate["pos"]
     return trajectory, outs

@@ -28,6 +28,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro.launch.hlo import collective_stats, op_mix
 from repro.launch.mesh import make_production_mesh
 
@@ -51,7 +52,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
         record["reason"] = skip
     else:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-        jax.set_mesh(mesh)  # context mesh: enables in-model sharding hints
+        compat.set_mesh(mesh)  # context mesh: enables in-model sharding hints
         n_dev = mesh.devices.size
         try:
             t0 = time.time()
@@ -68,7 +69,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0
 
-            ca = compiled.cost_analysis() or {}
+            ca = compat.cost_analysis(compiled)
             ma = compiled.memory_analysis()
             hlo = compiled.as_text()
             coll = collective_stats(hlo, n_dev)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -15,8 +17,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    return compat.make_mesh(
+        shape, axes, axis_types=(compat.AxisType.Auto,) * len(axes)
     )
 
 
@@ -24,6 +26,6 @@ def make_local_mesh(axes: tuple[str, ...] = ("data",)):
     """All local devices on the first axis (CPU tests, examples)."""
     n = len(jax.devices())
     shape = (n,) + (1,) * (len(axes) - 1)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    return compat.make_mesh(
+        shape, axes, axis_types=(compat.AxisType.Auto,) * len(axes)
     )

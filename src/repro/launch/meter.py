@@ -37,6 +37,7 @@ if __name__ == "__main__":  # set before the first jax import (CLI mode)
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs import SHAPES, get_config
 from repro.launch.hlo import collective_stats
 
@@ -134,7 +135,7 @@ def meter_cell(
             with open(cache_path) as f:
                 return MeterResult(json.load(f))
 
-    jax.set_mesh(mesh)  # context mesh: enables in-model sharding hints
+    compat.set_mesh(mesh)  # context mesh: enables in-model sharding hints
     seq_pts, deg = _seq_points(cfg, kind, shape.seq_len)
     seq_pts = sorted(set(seq_pts))
     if len(seq_pts) <= deg:
@@ -176,7 +177,7 @@ def meter_cell(
                 .lower(*cell["args"])
                 .compile()
             )
-            ca = compiled.cost_analysis() or {}
+            ca = compat.cost_analysis(compiled)
             coll = collective_stats(compiled.as_text(), n_dev)
             grid[(s_pt, k)] = {
                 "flops": float(ca.get("flops", 0.0)),

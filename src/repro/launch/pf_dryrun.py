@@ -32,14 +32,15 @@ ART = os.path.abspath(
 def run(num_particles: int = 1 << 25, frame: int = 512) -> list[dict]:
     from jax.sharding import PartitionSpec as P
 
-    from repro.core import get_policy
-    from repro.core.distributed import DistributedConfig, make_dist_pf_step
+    from repro import compat
+    from repro.core import FilterConfig, ParticleFilter, get_policy
+    from repro.core.filter import FilterState
     from repro.core.tracking import TrackerConfig, make_tracker_spec
 
     out = []
     for mesh_kind in ["single", "multi"]:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-        jax.set_mesh(mesh)
+        compat.set_mesh(mesh)
         axes = tuple(mesh.axis_names)  # shard particles over the full mesh
         pol = get_policy("bf16_mixed")
         tcfg = TrackerConfig(
@@ -47,27 +48,40 @@ def run(num_particles: int = 1 << 25, frame: int = 512) -> list[dict]:
         )
         spec = make_tracker_spec(tcfg, pol)
         for scheme in ["exact", "local"]:
-            dcfg = DistributedConfig(mesh=mesh, axis=axes, scheme=scheme)
-            step = make_dist_pf_step(spec, pol, dcfg)
+            flt = ParticleFilter(
+                spec,
+                FilterConfig(policy=pol, mesh=mesh, axis=axes, scheme=scheme),
+            )
             sh = jax.NamedSharding(mesh, P(axes))
             rep = jax.NamedSharding(mesh, P())
-            args = (
-                {"pos": jax.ShapeDtypeStruct((num_particles, 2), pol.compute_dtype)},
-                jax.ShapeDtypeStruct((num_particles,), pol.compute_dtype),
-                jax.ShapeDtypeStruct((), jnp.int32),
-                jax.ShapeDtypeStruct((frame, frame), jnp.float32),
-                jax.ShapeDtypeStruct((), jnp.uint32),  # key placeholder
+            state_struct = FilterState(
+                particles={
+                    "pos": jax.ShapeDtypeStruct(
+                        (num_particles, 2), pol.compute_dtype
+                    )
+                },
+                log_weights=jax.ShapeDtypeStruct(
+                    (num_particles,), pol.compute_dtype
+                ),
+                step=jax.ShapeDtypeStruct((), jnp.int32),
             )
-            key_struct = jax.eval_shape(lambda: jax.random.key(0))
-            args = args[:4] + (key_struct,)
+            args = (
+                state_struct,
+                jax.ShapeDtypeStruct((frame, frame), jnp.float32),
+                jax.eval_shape(lambda: jax.random.key(0)),
+            )
             t0 = time.time()
             jf = jax.jit(
-                step,
-                in_shardings=({"pos": sh}, sh, rep, rep, rep),
+                flt.step,
+                in_shardings=(
+                    FilterState({"pos": sh}, sh, rep),
+                    rep,
+                    rep,
+                ),
             )
             lowered = jf.lower(*args)
             compiled = lowered.compile()
-            ca = compiled.cost_analysis() or {}
+            ca = compat.cost_analysis(compiled)
             coll = collective_stats(compiled.as_text(), mesh.devices.size)
             rec = dict(
                 arch="rodinia-pf",

@@ -6,9 +6,12 @@
 Demonstrates the serving stack end to end on CPU with a reduced config:
 sharded weights, ring-buffer/sliding caches, one fused decode step for the
 whole batch, greedy or temperature sampling — and optionally the paper's
-particle filter as the sampler (``--smc``: systematic resampling of
-sequence states by model log-prob, the SMC decoding from
-examples/smc_decode.py behind a production-style driver).
+particle filter as the sampler (``--smc``).  The SMC path is the engine
+API end to end: decoding is expressed as an ``SMCSpec`` (one particle =
+one partial sequence, its cache the state; propagation = sample a token;
+weight = model log-prob at T=1) and driven by
+``ParticleFilter.stream`` — the same engine that runs the object tracker,
+with adaptive systematic resampling batch-gathering the cache states.
 """
 
 from __future__ import annotations
@@ -19,6 +22,75 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def make_smc_decode_spec(
+    params, cfg, policy, decode, *, temperature: float, steps: int
+):
+    """SMC decoding as a particle-filter model.
+
+    Particle state: token, KV/recurrent cache, last reward, token history.
+    The transition runs one batched decode step and samples at the
+    exploration temperature; the likelihood is the reward recorded by the
+    transition (the model's own T=1 log-prob of the sampled token).
+    ``gather`` locates the particle axis per cache leaf; ``summary`` keeps
+    the per-step estimate to one scalar (mean reward) instead of averaging
+    whole caches.
+    """
+    from repro.core.filter import SMCSpec
+    from repro.models import model as M
+
+    def init(key, n):
+        del key
+        return {
+            "tok": jnp.zeros((n,), jnp.int32),
+            "cache": M.init_cache(cfg, n, steps + 1, policy.compute_dtype),
+            "reward": jnp.zeros((n,), jnp.float32),
+            # Lineage log-prob: cumulative reward along the surviving
+            # ancestry (travels through resampling gathers), since the
+            # engine renormalizes the filter weights every step.
+            "cum_reward": jnp.zeros((n,), jnp.float32),
+            "seq": jnp.zeros((n, steps), jnp.int32),
+        }
+
+    def transition(key, p, step):
+        logits, cache = decode(
+            params, p["tok"], step.astype(jnp.int32), p["cache"]
+        )
+        logits = logits.astype(jnp.float32)
+        if temperature > 0:
+            tok = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            tok = jnp.argmax(logits, -1)
+        logp = jax.nn.log_softmax(logits, -1)
+        reward = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+        return {
+            "tok": tok,
+            "cache": cache,
+            "reward": reward,
+            "cum_reward": p["cum_reward"] + reward,
+            "seq": p["seq"].at[:, step].set(tok),
+        }
+
+    def loglik(p, obs, step):
+        del obs, step
+        return p["reward"]
+
+    def gather(p, anc):
+        n = p["tok"].shape[0]
+        take = lambda x: jnp.take(x, anc, axis=_batch_axis(x, n))  # noqa: E731
+        return {
+            "tok": jnp.take(p["tok"], anc, axis=0),
+            "cache": jax.tree.map(take, p["cache"]),
+            "reward": jnp.take(p["reward"], anc, axis=0),
+            "cum_reward": jnp.take(p["cum_reward"], anc, axis=0),
+            "seq": jnp.take(p["seq"], anc, axis=0),
+        }
+
+    def summary(p, w):
+        return {"reward": jnp.sum(w * p["reward"].astype(w.dtype))}
+
+    return SMCSpec(init, transition, loglik, gather=gather, summary=summary)
 
 
 def main() -> None:
@@ -36,7 +108,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced_config
-    from repro.core import resampling, stability
+    from repro.core import FilterConfig, ParticleFilter
     from repro.core.precision import get_policy
     from repro.models import model as M
 
@@ -50,40 +122,46 @@ def main() -> None:
     s_max = args.steps + 1
 
     params = M.init_params(jax.random.key(1), cfg, policy.param_dtype)
-    cache = M.init_cache(cfg, b, s_max, policy.compute_dtype)
     decode = jax.jit(
         lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, policy)
     )
 
-    tok = jnp.zeros((b,), jnp.int32)
-    log_w = jnp.full((b,), -jnp.log(float(b)), jnp.float32)
-    seqs = np.zeros((b, args.steps), np.int32)
-    key = jax.random.key(args.seed)
     t0 = time.perf_counter()
-    n_resample = 0
-    for i in range(args.steps):
-        logits, cache = decode(params, tok, jnp.int32(i), cache)
-        logits = logits.astype(jnp.float32)
-        key, k1, k2 = jax.random.split(key, 3)
-        if args.temperature > 0:
-            tok = jax.random.categorical(k1, logits / args.temperature, -1)
-        else:
-            tok = jnp.argmax(logits, -1)
-        seqs[:, i] = np.asarray(tok)
-        if args.smc:
-            logp = jax.nn.log_softmax(logits, -1)
-            log_w = log_w + jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
-            w, _ = stability.normalize_log_weights(log_w)
-            ess = float(stability.effective_sample_size(w))
-            if ess < args.ess_frac * b:
-                anc = resampling.systematic(k2, w, get_policy("fp32"))
-                tok = jnp.take(tok, anc, 0)
-                cache = jax.tree.map(
-                    lambda x: jnp.take(x, anc, axis=_batch_axis(x, b)), cache
+    if args.smc:
+        spec = make_smc_decode_spec(
+            params, cfg, policy, decode,
+            temperature=args.temperature, steps=args.steps,
+        )
+        # Engine resampling criterion: ESS < frac * n + 0.5 (the canonical
+        # filter semantics; the pre-engine loop compared strictly).
+        flt = ParticleFilter(
+            spec,
+            FilterConfig(policy=policy, ess_threshold=args.ess_frac),
+        )
+        n_resample = 0
+        state = None
+        for state, out in flt.stream(
+            jax.random.key(args.seed), range(args.steps), b
+        ):
+            n_resample += int(out.resampled)
+        seqs = np.asarray(state.particles["seq"])
+    else:
+        cache = M.init_cache(cfg, b, s_max, policy.compute_dtype)
+        tok = jnp.zeros((b,), jnp.int32)
+        seqs = np.zeros((b, args.steps), np.int32)
+        key = jax.random.key(args.seed)
+        n_resample = 0
+        for i in range(args.steps):
+            logits, cache = decode(params, tok, jnp.int32(i), cache)
+            logits = logits.astype(jnp.float32)
+            key, k1 = jax.random.split(key)
+            if args.temperature > 0:
+                tok = jax.random.categorical(
+                    k1, logits / args.temperature, -1
                 )
-                seqs = seqs[np.asarray(anc)]
-                log_w = jnp.full((b,), -jnp.log(float(b)), jnp.float32)
-                n_resample += 1
+            else:
+                tok = jnp.argmax(logits, -1)
+            seqs[:, i] = np.asarray(tok)
     dt = time.perf_counter() - t0
     mode = "smc" if args.smc else "independent"
     print(f"arch={cfg.name} {mode} batch={b} steps={args.steps} "

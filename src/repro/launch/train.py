@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -51,7 +53,7 @@ def main() -> None:
         cfg = reduced_config(cfg)
     policy = get_policy(args.precision)
     mesh = make_local_mesh(("data", "model"))
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"devices={mesh.devices.size} policy={policy.name}")
 

@@ -15,6 +15,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import stability
 from repro.models.layers import rope
 from repro.models.params import ParamSpec
@@ -68,7 +69,7 @@ def _pin_cache(kv: jax.Array, cfg) -> jax.Array:
     """Constrain a (b, s, kh, hd) cache tensor to its storage sharding."""
     if not getattr(cfg, "pin_decode_cache", False):
         return kv
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return kv
     from repro.models.params import SERVE_RULES, logical_to_spec

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = [
     "ParamSpec",
     "LogicalRules",
@@ -111,7 +113,7 @@ def gather_for_compute(params: Any, specs: Any, compute_dtype=None) -> Any:
     Only float params narrower than fp32 benefit; int/recurrent leaves pass
     through.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return params
 

@@ -25,6 +25,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import model as M
 from repro.optim.adamw import OptConfig, adamw_update
 from repro.optim.schedule import make_schedule
@@ -135,7 +136,7 @@ def make_shardmap_step(model_cfg, policy, tcfg: TrainConfig, mesh, dp_axis="data
             g, err = compress.compressed_psum(g, dp_axis, err)
         else:
             g = jax.lax.psum(g, dp_axis)
-        nd = jax.lax.axis_size(dp_axis)
+        nd = compat.axis_size(dp_axis)
         inv = 1.0 / (nd * policy.loss_scale)
         g = jax.tree.map(lambda x: x * inv, g)
         params, opt_state, om = adamw_update(
@@ -147,7 +148,7 @@ def make_shardmap_step(model_cfg, policy, tcfg: TrainConfig, mesh, dp_axis="data
 
     rep = P()
     bspec = P(dp_axis)
-    return jax.shard_map(
+    return compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(rep, rep, bspec, bspec, rep),

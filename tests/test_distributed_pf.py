@@ -6,31 +6,25 @@ from tests._mp import run_with_devices
 
 TRACK = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P
-from repro.core import get_policy
+from repro.core import FilterConfig, ParticleFilter, get_policy
 from repro.core.tracking import TrackerConfig, make_tracker_spec
-from repro.core.distributed import DistributedConfig, make_dist_pf_step
-from repro.core import filter as pf
+from repro.compat import make_mesh
 from repro.data.synthetic_video import VideoConfig, generate_video
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
 video, truth = generate_video(jax.random.key(0),
                               VideoConfig(num_frames=25, height=128, width=128))
 pol = get_policy("{policy}")
 tcfg = TrackerConfig(num_particles=1024, height=128, width=128)
 spec = make_tracker_spec(tcfg, pol)
-dcfg = DistributedConfig(mesh=mesh, axis="data", scheme="{scheme}")
-step_fn = jax.jit(make_dist_pf_step(spec, pol, dcfg))
-state = pf.pf_init(spec, pol, jax.random.key(1), 1024)
-sh = jax.NamedSharding(mesh, P("data"))
-particles = jax.device_put(state.particles, jax.tree.map(lambda _: sh, state.particles))
-log_w = jax.device_put(state.log_weights, sh)
-step = jnp.int32(0)
+flt = ParticleFilter(
+    spec, FilterConfig(policy=pol, mesh=mesh, axis="data", scheme="{scheme}"))
+state = flt.init(jax.random.key(1), 1024)
 ests = []
 for t in range(25):
-    particles, log_w, step, est, ess, lse = step_fn(
-        particles, log_w, step, video[t], jax.random.key(100 + t))
-    ests.append(np.asarray(est["pos"]))
+    state, out = flt.jit_step(state, video[t], jax.random.key(100 + t))
+    ests.append(np.asarray(out.estimate["pos"]))
+log_w = state.log_weights
 traj = np.stack(ests)
 err = np.sqrt(np.mean(np.sum((traj - np.asarray(truth[:25]))**2, -1)))
 assert np.isfinite(traj).all()

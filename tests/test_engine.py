@@ -1,0 +1,196 @@
+"""ParticleFilter engine: legacy equivalence, registries, deprecation shims."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FilterConfig,
+    ParticleFilter,
+    SMCSpec,
+    get_policy,
+)
+from repro.core import filter as legacy
+from repro.core import resampling
+from repro.core.engine import get_backend
+from repro.core.tracking import TrackerConfig, make_tracker_filter, make_tracker_spec
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+FRAMES, H, W, P = 12, 64, 64, 256
+
+
+@pytest.fixture(scope="module")
+def video():
+    return generate_video(
+        jax.random.key(0), VideoConfig(num_frames=FRAMES, height=H, width=W)
+    )[0]
+
+
+def _gauss_spec():
+    def init(key, n):
+        return {"x": jax.random.normal(key, (n,), jnp.float32)}
+
+    def transition(key, particles, step):
+        noise = jax.random.normal(key, particles["x"].shape, jnp.float32)
+        return {"x": particles["x"] + 0.1 + 0.5 * noise}
+
+    def loglik(particles, obs, step):
+        return -0.5 * jnp.square(particles["x"] - obs)
+
+    return SMCSpec(init, transition, loglik)
+
+
+@pytest.mark.parametrize("policy", ["fp32", "bf16", "fp16", "bf16_mixed"])
+def test_run_bit_identical_to_legacy_pf_scan(video, policy):
+    """Engine run == legacy pf_scan, bit for bit, on the tracker workload."""
+    pol = get_policy(policy)
+    cfg = TrackerConfig(num_particles=P, height=H, width=W)
+    spec = make_tracker_spec(cfg, pol)
+
+    flt = ParticleFilter(spec, FilterConfig(policy=pol))
+    final_e, outs_e = jax.jit(lambda k, v: flt.run(k, v, P))(
+        jax.random.key(1), video
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        final_l, outs_l = jax.jit(
+            lambda k, v: legacy.pf_scan(spec, pol, k, v, P)
+        )(jax.random.key(1), video)
+
+    np.testing.assert_array_equal(
+        np.asarray(outs_e.estimate["pos"], np.float64),
+        np.asarray(outs_l.estimate["pos"], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(final_e.log_weights, np.float64),
+        np.asarray(final_l.log_weights, np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_e.ess, np.float64), np.asarray(outs_l.ess, np.float64)
+    )
+
+
+def test_track_shim_matches_engine(video):
+    pol = get_policy("fp32")
+    cfg = TrackerConfig(num_particles=P, height=H, width=W)
+    flt = make_tracker_filter(cfg, pol)
+    _, outs = flt.run(jax.random.key(1), video, P)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.tracking import track
+
+        traj, _ = track(jax.random.key(1), video, cfg, pol)
+    np.testing.assert_array_equal(
+        np.asarray(traj), np.asarray(outs.estimate["pos"])
+    )
+
+
+def test_unknown_backend_raises_with_options():
+    with pytest.raises(KeyError, match=r"'jnp', 'pallas'"):
+        ParticleFilter(_gauss_spec(), FilterConfig(backend="cuda"))
+    with pytest.raises(KeyError, match="unknown filter backend 'cuda'"):
+        get_backend("cuda")
+
+
+def test_unknown_resampler_raises_with_options():
+    with pytest.raises(
+        KeyError, match=r"'multinomial', 'stratified', 'systematic'"
+    ):
+        ParticleFilter(_gauss_spec(), FilterConfig(resampler="residual"))
+
+
+def test_unknown_policy_and_scheme_raise():
+    with pytest.raises(KeyError, match="unknown precision policy"):
+        ParticleFilter(_gauss_spec(), FilterConfig(policy="fp8_imaginary"))
+    with pytest.raises(KeyError, match=r"'exact', 'local'"):
+        ParticleFilter(
+            _gauss_spec(), FilterConfig(mesh=object(), scheme="global")
+        )
+
+
+def test_registered_resampler_dispatches():
+    calls = []
+
+    @resampling.register_resampler("_test_echo")
+    def _echo(key, weights, policy, num_samples=None):
+        calls.append(weights.shape[0])
+        return jnp.arange(weights.shape[0], dtype=jnp.int32)
+
+    try:
+        flt = ParticleFilter(
+            _gauss_spec(), FilterConfig(resampler="_test_echo")
+        )
+        state = flt.init(jax.random.key(0), 32)
+        flt.step(state, jnp.float32(0.0), jax.random.key(1))
+        assert calls == [32]
+    finally:
+        del resampling.RESAMPLERS["_test_echo"]
+
+
+def test_shims_warn_exactly_once_and_forward():
+    spec = _gauss_spec()
+    pol = get_policy("fp32")
+    legacy._WARNED.clear()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        state1 = legacy.pf_init(spec, pol, jax.random.key(0), 64)
+        state2 = legacy.pf_init(spec, pol, jax.random.key(0), 64)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "pf_init" in str(dep[0].message)
+
+    # forwards correctly: shim output == engine output
+    ref = ParticleFilter(spec, FilterConfig(policy=pol)).init(
+        jax.random.key(0), 64
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state1.particles["x"]), np.asarray(ref.particles["x"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state2.log_weights), np.asarray(ref.log_weights)
+    )
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy.pf_step(spec, pol, state1, jnp.float32(0.0), jax.random.key(1))
+        legacy.pf_step(spec, pol, state1, jnp.float32(0.0), jax.random.key(1))
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "pf_step" in str(dep[0].message)
+
+
+def test_stream_matches_step_by_step():
+    spec = _gauss_spec()
+    flt = ParticleFilter(spec, FilterConfig(policy="fp32"))
+    obs = jnp.cumsum(jnp.full((8,), 0.1))
+
+    key = jax.random.key(3)
+    streamed = [
+        float(out.ess)
+        for _, out in flt.stream(key, list(obs), 128, jit=False)
+    ]
+    # replay manually with the same fold_in key path
+    k_init, k_run = jax.random.split(key)
+    state = flt.init(k_init, 128)
+    replayed = []
+    for i in range(8):
+        state, out = flt.step(state, obs[i], jax.random.fold_in(k_run, i))
+        replayed.append(float(out.ess))
+    assert streamed == replayed
+
+
+def test_backend_pallas_close_to_jnp(video):
+    pol = get_policy("fp32")
+    cfg = TrackerConfig(num_particles=P, height=H, width=W)
+    spec = make_tracker_spec(cfg, pol)
+    ref = None
+    for backend in ["jnp", "pallas"]:
+        flt = ParticleFilter(spec, FilterConfig(policy=pol, backend=backend))
+        _, outs = flt.run(jax.random.key(1), video, P)
+        est = np.asarray(outs.estimate["pos"], np.float64)
+        assert np.isfinite(est).all()
+        if ref is None:
+            ref = est
+        else:
+            np.testing.assert_allclose(est, ref, atol=1e-2)

@@ -12,6 +12,7 @@ def test_build_cell_compiles_on_small_mesh():
         """
 import jax, jax.numpy as jnp
 from repro.launch.specs import build_cell
+from repro.compat import cost_analysis
 mesh = jax.make_mesh((2, 4), ("data", "model"),
                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
 jax.set_mesh(mesh)
@@ -27,7 +28,7 @@ for arch, shape, kw in [
     compiled = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
                        out_shardings=cell["out_shardings"],
                        donate_argnums=cell["donate"]).lower(*cell["args"]).compile()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis(compiled)
     assert ca.get("flops", 0) > 0, (arch, shape)
     print(arch, shape, "ok", ca.get("flops"))
 """,

@@ -12,10 +12,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import TrackerConfig, get_policy, track
+from repro import compat
+from repro.core import TrackerConfig, get_policy, make_tracker_filter
 from repro.data.synthetic_video import VideoConfig, generate_video
 
 FRAMES, H, W, P = 40, 128, 128, 512
+
+
+def _run_tracker(key, video, cfg, pol):
+    flt = make_tracker_filter(cfg, pol)
+    final, outs = jax.jit(lambda k, v: flt.run(k, v, cfg.num_particles))(
+        key, video
+    )
+    return outs.estimate["pos"], outs
 
 
 @pytest.fixture(scope="module")
@@ -36,10 +45,7 @@ def _track(video, policy_name, backend="jnp"):
     cfg = TrackerConfig(
         num_particles=P, height=H, width=W, backend=backend
     )
-    traj, outs = jax.jit(lambda k, v: track(k, v, cfg, pol))(
-        jax.random.key(1), video[0]
-    )
-    return traj, outs
+    return _run_tracker(jax.random.key(1), video[0], cfg, pol)
 
 
 @pytest.mark.parametrize("policy", ["fp32", "fp16", "bf16", "bf16_mixed"])
@@ -55,17 +61,17 @@ def test_fp32_matches_fp64(video):
     methodology: identical fp64 RNG draws cast to the target dtype — we run
     both policies under x64 so they share the draw stream (see
     tracking.make_tracker_spec)."""
-    with jax.enable_x64(True):
+    with compat.enable_x64(True):
         video64 = generate_video(
             jax.random.key(0), VideoConfig(num_frames=FRAMES, height=H, width=W)
         )
         cfg = TrackerConfig(num_particles=P, height=H, width=W)
-        traj32, _ = jax.jit(
-            lambda k, v: track(k, v, cfg, get_policy("fp32"))
-        )(jax.random.key(1), video64[0])
-        traj64, _ = jax.jit(
-            lambda k, v: track(k, v, cfg, get_policy("fp64"))
-        )(jax.random.key(1), video64[0])
+        traj32, _ = _run_tracker(
+            jax.random.key(1), video64[0], cfg, get_policy("fp32")
+        )
+        traj64, _ = _run_tracker(
+            jax.random.key(1), video64[0], cfg, get_policy("fp64")
+        )
     d = np.abs(np.asarray(traj32, np.float64) - np.asarray(traj64, np.float64))
     # Shared fp64 draws make the two filters agree to ~1e-5 px until a
     # resampling tie lands exactly on a CDF boundary that fp32 rounds the
