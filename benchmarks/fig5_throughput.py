@@ -7,6 +7,12 @@ metered kernel chain at the respective dtype width).
 
 Each cell times one jitted ``ParticleFilter.step`` — the engine's
 per-frame kernel chain, the unit the paper measures.
+
+Beyond the paper: a bank-size sweep (B independent filters x P particles,
+``FilterBank.jit_step_shared``) measures the many-filter batching payoff —
+aggregate particle-step throughput vs B at fixed per-filter size, the
+occupancy lever a production tracker (one filter per target/request)
+actually pulls.
 """
 
 from __future__ import annotations
@@ -18,7 +24,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
 from repro import compat
-from repro.core import TrackerConfig, get_policy, make_tracker_filter
+from repro.core import (
+    TrackerConfig,
+    get_policy,
+    make_multi_tracker_filter,
+    make_tracker_filter,
+)
 
 
 def run(sizes=(32_768, 65_536)) -> list[str]:
@@ -59,6 +70,65 @@ def run(sizes=(32_768, 65_536)) -> list[str]:
                     f"fig5_throughput/{n//1024}k_{pname}",
                     us,
                     f"speedup_vs_fp64={speedup:.2f}",
+                )
+            )
+    rows.extend(bank_sweep())
+    return rows
+
+
+def bank_sweep(
+    bank_sizes=(1, 2, 4, 8, 16),
+    particle_sizes=(512, 4_096),
+    policy_name: str = "bf16",
+) -> list[str]:
+    """B x P grid: aggregate throughput of one banked step vs bank size.
+
+    Per cell: one ``FilterBank.jit_step_shared`` over B slots of P
+    particles each (shared frame, per-slot keys/weights/resampling).
+    Derived columns: aggregate particle-steps/s and the scaling factor vs
+    the B=1 bank of the same P — the batching payoff, measured.  The win
+    concentrates at small per-filter clouds (the many-small-filters regime
+    of Cerati et al.): one small filter cannot fill the machine, a bank
+    can; large clouds saturate it alone, so their scaling flattens toward
+    1 (and on this CPU container below 1 — there are no idle lanes left
+    to recover, only batching overhead).
+    """
+    from repro.data.synthetic_video import VideoConfig, generate_video
+
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=2, height=256, width=256)
+    )
+    frame = video[0].astype(jnp.float32)
+    pol = get_policy(policy_name)
+    rows = []
+    for p in particle_sizes:
+        base_rate = None
+        for b in bank_sizes:
+            cfg = TrackerConfig(num_particles=p, height=256, width=256)
+            starts = 128.0 + 8.0 * jnp.stack(
+                [jnp.arange(b, dtype=jnp.float32)] * 2, -1
+            )
+            bank = make_multi_tracker_filter(cfg, pol, starts)
+            state = bank.init(jax.random.key(1), p)
+            keys = jax.random.split(jax.random.key(2), b)
+            step = bank.jit_step_shared
+            us = time_fn(
+                lambda st, f, ks: step(st, f, ks),
+                state,
+                frame,
+                keys,
+                reps=3,
+                warmup=1,
+            )
+            rate = b * p / us * 1e6  # particle-steps per second, aggregate
+            if b == bank_sizes[0]:
+                base_rate = rate
+            rows.append(
+                csv_row(
+                    f"fig5_throughput/bank_B{b}_P{p}_{policy_name}",
+                    us,
+                    f"agg_particle_steps_per_s={rate:.3e};"
+                    f"scaling_vs_B1={rate / base_rate:.2f}",
                 )
             )
     return rows

@@ -1,0 +1,102 @@
+"""Multi-object quickstart: one FilterBank slot per tracked target.
+
+    PYTHONPATH=src python examples/multi_object.py [--targets 3] \
+        [--precision bf16] [--particles 2048] [--backend pallas]
+
+Composites N independently-moving objects into one synthetic video and
+tracks them with a ``FilterBank`` (``repro.core.engine``): every target is
+one bank slot sharing the same transition/likelihood model and the same
+frame stream, with its own particle cloud seeded at its start position —
+``make_multi_tracker_filter`` wires the per-slot starts through the spec's
+``slot_init`` hook.  The whole bank steps as one jitted program: per-slot
+weights, ESS, and resampling, batched kernels underneath.  Prints per-target
+trajectories and RMSE, the bank-axis extension of ``quickstart.py``.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--targets", type=int, default=3)
+    ap.add_argument("--precision", default="bf16",
+                    choices=["fp64", "fp32", "bf16", "fp16", "bf16_mixed",
+                             "fp16_mixed"])
+    ap.add_argument("--particles", type=int, default=2048)
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--size", type=int, default=128)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--resampler", default="systematic",
+                    choices=["systematic", "stratified", "multinomial",
+                             "metropolis"])
+    args = ap.parse_args()
+
+    from repro.core import TrackerConfig, get_policy
+    from repro.core.tracking import make_multi_tracker_filter
+    from repro.data.synthetic_video import VideoConfig, generate_video
+
+    policy = get_policy(args.precision)
+    # N objects, each its own trajectory; composite by per-pixel max
+    # (objects are brighter than background).
+    rng = np.random.default_rng(0)
+    margin = 16
+    video, truths = None, []
+    for i in range(args.targets):
+        start = tuple(rng.uniform(margin, args.size - margin, 2))
+        v, t = generate_video(
+            jax.random.key(i),
+            VideoConfig(num_frames=args.frames, height=args.size,
+                        width=args.size, start=start),
+        )
+        video = v if video is None else jnp.maximum(video, v)
+        truths.append(np.asarray(t))
+    truth = np.stack(truths, axis=1)  # (T, N, 2)
+
+    starts = jnp.asarray(truth[0], jnp.float32)
+    cfg = TrackerConfig(
+        num_particles=args.particles,
+        height=args.size,
+        width=args.size,
+        backend=args.backend,
+        resampler=args.resampler,
+    )
+    bank = make_multi_tracker_filter(cfg, policy, starts)
+    t0 = time.perf_counter()
+    final, outs = jax.jit(
+        lambda k, v: bank.run(k, v, cfg.num_particles)
+    )(jax.random.key(1), video)
+    traj = outs.estimate["pos"]  # (T, N, 2)
+    jax.block_until_ready(traj)
+    dt = time.perf_counter() - t0
+
+    est = np.asarray(traj, np.float64)
+    err = np.sqrt(np.sum((est - truth) ** 2, -1))  # (T, N)
+    print(f"targets={args.targets} precision={args.precision} "
+          f"backend={args.backend} resampler={args.resampler} "
+          f"particles/slot={args.particles}")
+    print(f"{'frame':>5} " + " ".join(
+        f"tgt{j}:(row,col,err)".rjust(22) for j in range(args.targets)))
+    for i in range(0, args.frames, max(1, args.frames // 8)):
+        cells = " ".join(
+            f"({est[i, j, 0]:6.1f},{est[i, j, 1]:6.1f},{err[i, j]:5.1f})"
+            for j in range(args.targets)
+        )
+        print(f"{i:5d} {cells}")
+    rmse = np.sqrt((err**2).mean(0))
+    print(f"\nper-target RMSE (px): {np.round(rmse, 2).tolist()}  "
+          f"({dt / args.frames * 1e3:.1f} ms/frame incl. compile, "
+          f"{args.targets} filters as one program)")
+    if not np.isfinite(est).all():
+        print("NOTE: non-finite estimates — check precision policy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ Layers:
 from repro.core.engine import (  # noqa: F401
     BACKENDS,
     Backend,
+    FilterBank,
     FilterConfig,
     ParticleFilter,
     get_backend,
@@ -42,6 +43,7 @@ from repro.core.resampling import (  # noqa: F401
 )
 from repro.core.tracking import (  # noqa: F401
     TrackerConfig,
+    make_multi_tracker_filter,
     make_tracker_filter,
     track,
 )

@@ -24,6 +24,35 @@ same ``init``/``step``/``run`` through the shard_map step of
 
 ``pf_step`` / ``pf_scan`` / ``track`` remain as deprecation shims that
 forward here; the jnp backend is bit-identical to the legacy functions.
+
+The bank axis
+-------------
+
+One large particle cloud saturates the device for one filter, but a
+production tracker runs *many independent filters at once* — one per
+tracked object, one per serving request.  :class:`FilterBank` adds that
+axis: ``B`` filters sharing one :class:`~repro.core.filter.SMCSpec` and one
+:class:`FilterConfig`, with per-slot state (leading bank axis on particles,
+log-weights, and step counters) and per-slot keys, executed as one jitted
+program.  The kernel chain is batch-dispatched — the Pallas backend runs
+bank-wide kernels with per-row fp32 carries instead of vmapping single-
+filter kernels — and per-slot lifecycle is dynamic: ``init_slot`` /
+``reset_slot`` (re)start one slot by traced index, so a serving loop can
+admit and retire requests mid-flight without recompiling.
+
+    bank = FilterBank(spec, FilterConfig(policy="bf16"), num_slots=8)
+    state = bank.init(key, num_particles)              # (8, P, ...) slots
+    state, outs = bank.step(state, frame, keys, shared_obs=True)
+    state = bank.reset_slot(state, slot=3, key=k2)     # restart slot 3
+    final, outs = bank.run(key, video, num_particles)  # scan over frames
+
+``FilterBank(spec, cfg, num_slots=1)`` is bit-identical to
+``ParticleFilter(spec, cfg)`` — the B=1 key path collapses to the single-
+filter path.  Multi-object tracking builds on this in
+``repro.core.tracking.make_multi_tracker_filter`` (N targets = N slots over
+one shared frame stream); continuous-batching serving in
+``repro.launch.serve --smc`` (requests admitted into free slots mid-flight,
+the bank stepping every tick regardless of occupancy).
 """
 
 from __future__ import annotations
@@ -42,6 +71,7 @@ from repro.core.precision import PrecisionPolicy, get_policy
 __all__ = [
     "Backend",
     "BACKENDS",
+    "FilterBank",
     "FilterConfig",
     "ParticleFilter",
     "get_backend",
@@ -62,11 +92,28 @@ class Backend:
     resamplers: per-resampler-name overrides ``(key, weights, policy) ->
                 ancestors``; names without an override fall back to the
                 registered pure-jnp resampler.
+
+    Banked forms (used by :class:`FilterBank`, leading bank axis B):
+
+    normalize_banked:  (log_w (B, P), policy) -> (weights (B, P), log_z (B,),
+                       max_log_w (B,)) in one launch; None falls back to
+                       vmapping ``normalize``.
+    resamplers_banked: per-resampler overrides ``(keys (B,), weights (B, P),
+                       policy) -> ancestors (B, P)``; names without one fall
+                       back to vmapping the registered pure-jnp resampler
+                       (NOT the single-filter backend override — a bank
+                       must never vmap a Pallas kernel).
     """
 
     name: str
     normalize: Callable[[jax.Array, PrecisionPolicy], tuple]
     resamplers: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    normalize_banked: Callable[[jax.Array, PrecisionPolicy], tuple] | None = (
+        None
+    )
+    resamplers_banked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
 
@@ -110,12 +157,29 @@ def _pallas_systematic(key: jax.Array, weights: jax.Array, policy):
     return res_ops.systematic_resample(key, weights)
 
 
+def _pallas_normalize_banked(log_w: jax.Array, policy: PrecisionPolicy):
+    del policy  # the batched kernel carries per-row fp32 accumulators
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse = lse_ops.normalize_weights_batched(log_w)
+    return w, lse, m
+
+
+def _pallas_systematic_banked(keys: jax.Array, weights: jax.Array, policy):
+    del policy
+    from repro.kernels.resample import ops as res_ops
+
+    return res_ops.systematic_resample_batched(keys, weights)
+
+
 register_backend(Backend("jnp", _jnp_normalize))
 register_backend(
     Backend(
         "pallas",
         _pallas_normalize,
         resamplers={"systematic": _pallas_systematic},
+        normalize_banked=_pallas_normalize_banked,
+        resamplers_banked={"systematic": _pallas_systematic_banked},
     )
 )
 
@@ -304,9 +368,6 @@ class ParticleFilter:
             estimate = _weighted_mean(particles, weights, policy.accum_dtype)
 
         # 6. resampling (kernel 6)
-        do_resample = (
-            ess < self.config.ess_threshold * num_particles + 0.5
-        )  # ==1.0 -> always
         gather = self.spec.gather or resampling.gather_ancestors
 
         def _resampled():
@@ -320,9 +381,17 @@ class ParticleFilter:
                 weights.astype(policy.accum_dtype)
             ).astype(log_w.dtype)
 
-        new_particles, new_log_w = jax.lax.cond(
-            do_resample, _resampled, _kept
-        )
+        # threshold >= 1.0 means "always resample" (ESS can never exceed P),
+        # gated statically; sub-1.0 thresholds compare *exactly* — a fudge
+        # term here (the old ``+ 0.5``) makes them fire early.
+        if self.config.ess_threshold >= 1.0:
+            do_resample = jnp.asarray(True)
+            new_particles, new_log_w = _resampled()
+        else:
+            do_resample = ess < self.config.ess_threshold * num_particles
+            new_particles, new_log_w = jax.lax.cond(
+                do_resample, _resampled, _kept
+            )
 
         new_state = FilterState(
             particles=new_particles,
@@ -372,6 +441,302 @@ class ParticleFilter:
             log_weights=place(state.log_weights),
             step=state.step,
         )
+
+
+# ---------------------------------------------------------------------------
+# FilterBank: B independent filters as one jitted program
+
+
+class FilterBank:
+    """``num_slots`` independent filters over one shared SMCSpec and config.
+
+    State carries a leading bank axis: particles ``(B, P, ...)``, log-weights
+    ``(B, P)``, per-slot step counters ``(B,)``.  Every per-frame stage is
+    vectorized over the bank — spec callables via ``vmap``, the normalize /
+    resample kernel chain via the backend's banked entry points (the Pallas
+    backend runs one kernel launch for the whole bank with per-row fp32
+    carries).  Slots never interact: no weight, resampling, or key traffic
+    crosses rows.
+
+    Lifecycle is per-slot and recompile-free: :meth:`init_slot` /
+    :meth:`reset_slot` take a *traced* slot index, so a continuous-batching
+    serving loop admits a request into a free slot and retires it on
+    completion while the bank steps every tick regardless of occupancy.
+
+    ``FilterBank(spec, cfg, num_slots=1)`` is bit-identical to
+    ``ParticleFilter(spec, cfg)``: with one slot the key derivation
+    collapses to the single-filter path and every banked stage reduces over
+    the same elements in the same order.
+
+    Quickstart (multi-object tracking — N targets over one frame stream)::
+
+        from repro.core import TrackerConfig, get_policy
+        from repro.core.tracking import make_multi_tracker_filter
+
+        starts = jnp.asarray([[64.0, 64.0], [192.0, 64.0]])   # per-target
+        bank = make_multi_tracker_filter(
+            TrackerConfig(num_particles=4096), get_policy("bf16"), starts
+        )
+        final, outs = bank.run(jax.random.key(0), video, 4096)
+        trajectories = outs.estimate["pos"]                   # (T, N, 2)
+
+    Mesh distribution does not compose with the bank axis yet (see ROADMAP
+    "mesh × bank composition"); ``FilterConfig(mesh=...)`` raises.
+    """
+
+    def __init__(
+        self,
+        spec: SMCSpec,
+        config: FilterConfig | None = None,
+        num_slots: int = 1,
+    ):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        config = config or FilterConfig()
+        if config.mesh is not None:
+            raise NotImplementedError(
+                "FilterBank does not compose with mesh distribution yet "
+                "(ROADMAP: mesh x bank composition); run a ParticleFilter "
+                "per mesh or an unmeshed bank"
+            )
+        # Reuse the single-filter engine for registry resolution/validation.
+        self.filter = ParticleFilter(spec, config)
+        self.spec = spec
+        self.config = self.filter.config
+        self.policy = self.filter.policy
+        self.backend = self.filter.backend
+        self.num_slots = num_slots
+
+        banked_norm = self.backend.normalize_banked
+        if banked_norm is None:
+            base_norm = self.backend.normalize
+
+            def banked_norm(log_w, policy):
+                w, lse, m = jax.vmap(
+                    lambda row: base_norm(row, policy)
+                )(log_w)
+                return w, lse, m
+
+        self._normalize_banked_impl = banked_norm
+
+        banked_res = self.backend.resamplers_banked.get(config.resampler)
+        if banked_res is None:
+            base_res = resampling.get_resampler(config.resampler)
+
+            def banked_res(keys, weights, policy):
+                return jax.vmap(
+                    lambda k, row: base_res(k, row, policy)
+                )(keys, weights)
+
+        self._resample_banked = banked_res
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _init_slot_particles(self, key, num_particles: int, slot):
+        init = self.spec.slot_init
+        particles = (
+            init(key, num_particles, slot)
+            if init is not None
+            else self.spec.init(key, num_particles)
+        )
+        return jax.tree.map(
+            lambda x: x.astype(self.policy.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.inexact)
+            else x,
+            particles,
+        )
+
+    def init(self, key: jax.Array, num_particles: int) -> FilterState:
+        """Draw every slot's initial cloud from per-slot keys.
+
+        B == 1 uses ``key`` unsplit so a one-slot bank reproduces
+        ``ParticleFilter.init(key, P)`` bit for bit.
+        """
+        nb = self.num_slots
+        keys = key[None] if nb == 1 else jax.random.split(key, nb)
+        return self.init_slots(keys, num_particles)
+
+    def init_slots(self, keys: jax.Array, num_particles: int) -> FilterState:
+        """Banked init from explicit per-slot keys ((B,) key array)."""
+        nb = self.num_slots
+        particles = jax.vmap(
+            lambda k, s: self._init_slot_particles(k, num_particles, s)
+        )(keys, jnp.arange(nb, dtype=jnp.int32))
+        log_w = jnp.full(
+            (nb, num_particles),
+            -jnp.log(float(num_particles)),
+            self.policy.compute_dtype,
+        )
+        return FilterState(particles, log_w, jnp.zeros((nb,), jnp.int32))
+
+    def init_slot(
+        self, state: FilterState, slot, key: jax.Array
+    ) -> FilterState:
+        """(Re)start one slot in place; ``slot`` may be traced (no recompile).
+
+        The slot gets a fresh particle cloud, uniform weights, and step 0;
+        every other slot's state is untouched bit for bit.
+        """
+        num_particles = state.log_weights.shape[-1]
+        slot = jnp.asarray(slot, jnp.int32)
+        fresh = self._init_slot_particles(key, num_particles, slot)
+        particles = jax.tree.map(
+            lambda s, f: s.at[slot].set(f), state.particles, fresh
+        )
+        log_w = state.log_weights.at[slot].set(
+            jnp.full(
+                (num_particles,),
+                -jnp.log(float(num_particles)),
+                state.log_weights.dtype,
+            )
+        )
+        return FilterState(particles, log_w, state.step.at[slot].set(0))
+
+    # A reset is a re-init: same fresh-cloud semantics, serving-loop name.
+    reset_slot = init_slot
+
+    def step(
+        self,
+        state: FilterState,
+        observations: Any,
+        keys: jax.Array,
+        *,
+        shared_obs: bool = False,
+    ) -> tuple[FilterState, FilterOutput]:
+        """One frame for every slot (idle slots step too — no ragged grid).
+
+        observations: pytree with a leading bank axis (one observation per
+        slot), or a single shared observation with ``shared_obs=True`` (the
+        multi-object tracker: every target sees the same frame).
+        keys: (B,) per-slot PRNG keys.
+        """
+        spec, policy = self.spec, self.policy
+        cdt = policy.compute_dtype
+        nb, num_particles = state.log_weights.shape
+        split = jax.vmap(jax.random.split)(keys)
+        k_prop, k_res = split[:, 0], split[:, 1]
+        obs_ax = None if shared_obs else 0
+
+        # 1. propagation (paper kernel 1), per-slot keys and step counters
+        particles = jax.vmap(spec.transition)(
+            k_prop, state.particles, state.step
+        )
+
+        # 2. likelihood (kernel 2)
+        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+            particles, observations, state.step
+        ).astype(cdt)
+        log_w = state.log_weights + log_lik
+
+        # 3-5. banked max-find + weighting + normalizing (one launch on the
+        # pallas backend, per-row fp32 carries)
+        weights, log_z, max_lw = self._normalize_banked(log_w)
+        prev_lse = stability.logsumexp(
+            state.log_weights.astype(policy.accum_dtype), axis=-1
+        )
+        log_z_inc = log_z - prev_lse
+        w_accum = weights.astype(policy.accum_dtype)
+        ess = stability.effective_sample_size(w_accum)
+
+        if spec.summary is not None:
+            estimate = jax.vmap(spec.summary)(particles, w_accum)
+        else:
+            estimate = jax.vmap(
+                lambda p, w: _weighted_mean(p, w, policy.accum_dtype)
+            )(particles, weights)
+
+        # 6. resampling (kernel 6), per-slot trigger
+        gather = spec.gather or resampling.gather_ancestors
+        uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
+        if self.config.ess_threshold >= 1.0:
+            do_resample = jnp.ones((nb,), bool)
+            ancestors = self._resample_banked(k_res, weights, policy)
+            new_particles = jax.vmap(gather)(particles, ancestors)
+            new_log_w = uniform
+        else:
+            do_resample = ess < self.config.ess_threshold * num_particles
+            # Slots select per-row between the resampled and kept branches;
+            # both are computed (select semantics, as under any vmapped
+            # cond) — values match ParticleFilter's cond branches exactly.
+            ancestors = self._resample_banked(k_res, weights, policy)
+            res_particles = jax.vmap(gather)(particles, ancestors)
+            kept_log_w = jnp.log(w_accum).astype(log_w.dtype)
+            new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
+            new_particles = jax.tree.map(
+                lambda r, k: jnp.where(
+                    do_resample.reshape((nb,) + (1,) * (r.ndim - 1)), r, k
+                ),
+                res_particles,
+                particles,
+            )
+
+        new_state = FilterState(
+            particles=new_particles,
+            log_weights=new_log_w,
+            step=state.step + 1,
+        )
+        out = FilterOutput(
+            estimate=estimate,
+            ess=ess,
+            log_z_inc=log_z_inc,
+            resampled=do_resample,
+            max_loglik=max_lw,
+        )
+        return new_state, out
+
+    def run(
+        self,
+        key: jax.Array,
+        observations: Any,
+        num_particles: int,
+        *,
+        shared_obs: bool = True,
+    ) -> tuple[FilterState, FilterOutput]:
+        """Filter a whole sequence under ``lax.scan``, all slots at once.
+
+        observations: pytree with a leading time axis — shared across slots
+        by default (multi-object tracking over one frame stream); pass
+        ``shared_obs=False`` for per-slot streams with leading (T, B) axes.
+        Returns (final state, per-step outputs stacked over (T, B, ...)).
+        """
+        k_init, k_run = jax.random.split(key)
+        state0 = self.init(k_init, num_particles)
+        num_steps = jax.tree.leaves(observations)[0].shape[0]
+        # (T, B) keys; for B == 1 this is exactly ParticleFilter.run's
+        # split(k_run, T) key path, reshaped.
+        step_keys = jax.random.split(
+            k_run, num_steps * self.num_slots
+        ).reshape(num_steps, self.num_slots)
+
+        def body(state, xs):
+            obs, ks = xs
+            return self.step(state, obs, ks, shared_obs=shared_obs)
+
+        return jax.lax.scan(body, state0, (observations, step_keys))
+
+    @functools.cached_property
+    def jit_step(self):
+        """Per-slot-observation step, jit-compiled once per bank instance."""
+        return jax.jit(functools.partial(self.step, shared_obs=False))
+
+    @functools.cached_property
+    def jit_step_shared(self):
+        """Shared-observation step, jit-compiled once per bank instance."""
+        return jax.jit(functools.partial(self.step, shared_obs=True))
+
+    @functools.cached_property
+    def jit_init_slot(self):
+        """``init_slot`` jit-compiled once; slot index stays traced."""
+        return jax.jit(self.init_slot)
+
+    # -- internals ----------------------------------------------------------
+
+    def _normalize_banked(self, log_w: jax.Array):
+        if not self.policy.stable_weighting:
+            # Paper's naive path: direct exponentiation, overflow and all.
+            w, log_z = stability.normalize_log_weights(log_w, stable=False)
+            return w, log_z, jnp.max(log_w, axis=-1)
+        return self._normalize_banked_impl(log_w, self.policy)
 
 
 def _weighted_mean(particles, weights, adt):

@@ -57,6 +57,12 @@ class SMCSpec:
     summary:    (particles, weights) -> estimate pytree — replaces the
                 default weighted posterior mean (weights in accum dtype);
                 use when averaging the full state is meaningless or costly.
+    slot_init:  (key, num_particles, slot) -> particles — banked per-slot
+                initialization for :class:`repro.core.engine.FilterBank`;
+                ``slot`` is the (possibly traced) int32 slot index, letting a
+                shared spec start each slot differently (e.g. per-target
+                start positions in multi-object tracking).  Falls back to
+                ``init`` when None; ignored by ``ParticleFilter``.
     """
 
     init: Callable[..., Any]
@@ -64,6 +70,7 @@ class SMCSpec:
     loglik: Callable[..., jax.Array]
     gather: Callable[..., Any] | None = None
     summary: Callable[..., Any] | None = None
+    slot_init: Callable[..., Any] | None = None
 
 
 class FilterState(NamedTuple):

@@ -14,6 +14,15 @@ conditional chain each CUDA thread runs becomes one vectorized sorted-search.
 The CDF build + search also exist as a Pallas kernel
 (``repro.kernels.resample``) with a blockwise fp32 carry.
 
+Beyond the CDF family, ``metropolis`` implements Murray's rejection-chain
+resampler (arXiv:1202.6163): each offspring runs a fixed-length Metropolis
+chain over ancestor indices with acceptance ratio ``w_j / w_k``.  It needs
+*no* collective over the weights — no cumsum, no normalization — which is
+what makes it the cheap per-filter scheme at high bank counts
+(``FilterBank``): every bank row resamples independently from its own key
+with zero cross-row or cross-particle reductions.  The fixed chain length
+trades a small, controllable bias for that collective-freedom.
+
 Precision note: with 64k particles and fp16 weights, individual weights sit
 at ~1.5e-5 — *below* the fp16 normal range (6.1e-5): a pure-fp16 CDF loses
 mass to rounding.  The paper accepts this (pure-fp16 policy); our default
@@ -35,6 +44,8 @@ __all__ = [
     "systematic",
     "stratified",
     "multinomial",
+    "metropolis",
+    "METROPOLIS_ITERS",
     "RESAMPLERS",
     "register_resampler",
     "get_resampler",
@@ -103,6 +114,51 @@ def multinomial(
     return _search(cdf, u)
 
 
+# Default chain length for ``metropolis``.  Murray's convergence bound is
+# B = O(log eps / log(1 - w*)) with w* the largest normalized weight; 32
+# steps put the total-variation bias below resampling noise for the weight
+# profiles the tracker produces (see tests/test_resampling.py).
+METROPOLIS_ITERS = 32
+
+
+def metropolis(
+    key: jax.Array,
+    weights: jax.Array,
+    policy: PrecisionPolicy,
+    num_samples: int | None = None,
+    *,
+    iters: int = METROPOLIS_ITERS,
+) -> jax.Array:
+    """Murray's Metropolis resampler: fixed-iteration rejection chains.
+
+    Offspring ``i`` starts its chain at ancestor ``i`` and runs ``iters``
+    Metropolis steps: propose ``j`` uniformly, accept with probability
+    ``min(1, w_j / w_k)``.  The test ``u < w_j / w_k`` is evaluated as
+    ``u * w_k < w_j`` so zero weights never divide.  Weights may be
+    unnormalized (the ratio cancels the normalizer) and are compared in
+    ``accum_dtype`` — in pure fp16 the ratio itself is the only operation,
+    so there is no CDF accumulation to lose mass (the hazard the CDF
+    family has; see module docstring).
+
+    All draws derive from ``key`` by ``fold_in`` of the chain step, so a
+    banked caller (``FilterBank``) just vmaps this with per-row keys.
+    """
+    n = weights.shape[-1]
+    n_out = num_samples or n
+    w = weights.astype(policy.accum_dtype)
+
+    def chain_step(t, anc):
+        kt = jax.random.fold_in(key, t)
+        k_prop, k_u = jax.random.split(kt)
+        prop = jax.random.randint(k_prop, (n_out,), 0, n, dtype=jnp.int32)
+        u = jax.random.uniform(k_u, (n_out,), w.dtype)
+        accept = u * jnp.take(w, anc) < jnp.take(w, prop)
+        return jnp.where(accept, prop, anc)
+
+    init = jnp.arange(n_out, dtype=jnp.int32) % n
+    return jax.lax.fori_loop(0, iters, chain_step, init)
+
+
 RESAMPLERS: dict[str, Resampler] = {}
 
 
@@ -122,6 +178,7 @@ def register_resampler(name: str, fn: Resampler | None = None):
 register_resampler("systematic", systematic)
 register_resampler("stratified", stratified)
 register_resampler("multinomial", multinomial)
+register_resampler("metropolis", metropolis)
 
 
 def get_resampler(name: str) -> Resampler:

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import likelihood as lik
-from repro.core.engine import FilterConfig, ParticleFilter
+from repro.core.engine import FilterBank, FilterConfig, ParticleFilter
 from repro.core.filter import SMCSpec
 from repro.core.precision import PrecisionPolicy
 
@@ -25,6 +25,7 @@ __all__ = [
     "TrackerConfig",
     "make_tracker_spec",
     "make_tracker_filter",
+    "make_multi_tracker_filter",
     "track",
 ]
 
@@ -44,8 +45,19 @@ class TrackerConfig:
 
 
 def make_tracker_spec(
-    cfg: TrackerConfig, policy: PrecisionPolicy, start: jax.Array | None = None
+    cfg: TrackerConfig,
+    policy: PrecisionPolicy,
+    start: jax.Array | None = None,
+    *,
+    starts: jax.Array | None = None,
 ) -> SMCSpec:
+    """The tracker as an SMC model.
+
+    ``start`` seeds the single-filter init cloud ((2,), default frame
+    center).  ``starts`` ((B, 2)) instead populates the spec's banked
+    ``slot_init`` hook: under a :class:`~repro.core.engine.FilterBank` each
+    slot draws its cloud around its own row — one tracked target per slot.
+    """
     model = lik.IntensityModel(radius=cfg.radius)
     offsets = model.offsets
     # Paper: noise is drawn in double precision and *converted* to the
@@ -62,16 +74,26 @@ def make_tracker_spec(
     drift = jnp.asarray(cfg.drift, draw_dtype)
     std = jnp.asarray(cfg.std, draw_dtype)
 
+    def init_at(key, num_particles, center):
+        jitter = jax.random.normal(key, (num_particles, 2), draw_dtype)
+        return {"pos": center.astype(draw_dtype) + std * jitter}
+
     def init(key, num_particles):
         center = (
             jnp.asarray(
                 [cfg.height / 2.0, cfg.width / 2.0], draw_dtype
             )
             if start is None
-            else start.astype(draw_dtype)
+            else start
         )
-        jitter = jax.random.normal(key, (num_particles, 2), draw_dtype)
-        return {"pos": center + std * jitter}
+        return init_at(key, num_particles, center)
+
+    slot_init = None
+    if starts is not None:
+        starts_arr = jnp.asarray(starts)
+
+        def slot_init(key, num_particles, slot):
+            return init_at(key, num_particles, starts_arr[slot])
 
     def transition(key, particles, step):
         del step
@@ -97,7 +119,9 @@ def make_tracker_spec(
             return lik_ops.intensity_loglik(patches, model, policy)
         return lik.intensity_loglik(patches, model, policy)
 
-    return SMCSpec(init=init, transition=transition, loglik=loglik)
+    return SMCSpec(
+        init=init, transition=transition, loglik=loglik, slot_init=slot_init
+    )
 
 
 def make_tracker_filter(
@@ -127,6 +151,42 @@ def make_tracker_filter(
     else:
         filter_config = filter_config.with_(policy=policy)
     return ParticleFilter(spec, filter_config)
+
+
+def make_multi_tracker_filter(
+    cfg: TrackerConfig,
+    policy: PrecisionPolicy,
+    starts: jax.Array,
+    filter_config: FilterConfig | None = None,
+) -> FilterBank:
+    """N-target tracker: one FilterBank slot per row of ``starts`` ((B, 2)).
+
+    All targets share the transition/likelihood model and one frame stream;
+    each slot draws its initial cloud around its own start position and
+    filters independently (per-slot weights, ESS, resampling).
+
+        bank = make_multi_tracker_filter(cfg, policy, starts)
+        final, outs = bank.run(key, video, cfg.num_particles)
+        trajectories = outs.estimate["pos"]        # (T, B, 2)
+
+    Lost targets can be re-acquired mid-stream without recompiling:
+    ``state = bank.reset_slot(state, slot, key)`` redraws that slot's cloud
+    at its start position.
+    """
+    starts = jnp.asarray(starts)
+    if starts.ndim != 2 or starts.shape[-1] != 2:
+        raise ValueError(f"starts must be (num_targets, 2), got {starts.shape}")
+    spec = make_tracker_spec(cfg, policy, starts=starts)
+    if filter_config is None:
+        filter_config = FilterConfig(
+            policy=policy,
+            backend=cfg.backend,
+            resampler=cfg.resampler,
+            ess_threshold=cfg.ess_threshold,
+        )
+    else:
+        filter_config = filter_config.with_(policy=policy)
+    return FilterBank(spec, filter_config, num_slots=starts.shape[0])
 
 
 def track(

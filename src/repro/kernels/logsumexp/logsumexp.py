@@ -1,4 +1,4 @@
-"""Pallas kernel: one-pass online LSE + fused normalization.
+"""Pallas kernel: one-pass online LSE + fused normalization (bank-batched).
 
 The paper runs three kernels per frame for weight handling: max-finding,
 weighting (``exp(L - max L)``), and normalizing (divide by the sum).  The
@@ -9,16 +9,22 @@ flash attention — then a second phase over the same blocks writes the
 normalized weights.  Total traffic: read x twice, write w once; no separate
 max pass.
 
-Layout: the 1-D weight vector is viewed as (rows, 128) so the last dim fills
-the 128 VPU lanes; 16-bit inputs pack two elements per 32-bit lane, which is
-the TPU equivalent of the paper's ``half2`` packing.  Accumulation is fp32
-in SMEM (free on the VPU, unlike CUDA's FP16 pipe).
+Layout: each filter's 1-D weight vector is viewed as (rows, 128) so the last
+dim fills the 128 VPU lanes; 16-bit inputs pack two elements per 32-bit
+lane, which is the TPU equivalent of the paper's ``half2`` packing.
+Accumulation is fp32 in SMEM (free on the VPU, unlike CUDA's FP16 pipe).
 
-Grid: (2, num_blocks) — phase 0 reduces, phase 1 normalizes.  TPU grids run
-sequentially on a core, so the SMEM carry is exact.
+Bank axis: the kernel takes (B, rows, 128) — one row of blocks per
+independent filter in a :class:`~repro.core.engine.FilterBank` — with grid
+``(B, 2, num_blocks)``.  TPU grids run sequentially on a core with the last
+dimension innermost, so for each bank row the reduce phase completes before
+the normalize phase and the per-row fp32 SMEM carry is exact; the carry is
+re-initialized at block 0 of every row.  ``B == 1`` is exactly the old
+single-filter kernel.
 
 VMEM per step: block_rows*128*itemsize (in) + block_rows*128*itemsize (out);
-with the default block_rows=64 and bf16 that is 16 KiB + 16 KiB.
+with the default block_rows=64 and bf16 that is 16 KiB + 16 KiB, independent
+of B.
 """
 
 from __future__ import annotations
@@ -34,16 +40,16 @@ LANES = 128
 
 
 def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
-    phase = pl.program_id(0)
-    i = pl.program_id(1)
-    nb = pl.num_programs(1)
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
 
     @pl.when(jnp.logical_and(phase == 0, i == 0))
     def _init():
         m_s[0, 0] = jnp.float32(-jnp.inf)
         s_s[0, 0] = jnp.float32(0.0)
 
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[0].astype(jnp.float32)
 
     @pl.when(phase == 0)
     def _reduce():
@@ -64,42 +70,45 @@ def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
         )
         m_out[0, 0] = m
         lse_out[0, 0] = lse
-        s_s[0, 0] = lse  # reuse scratch: phase 1 reads the final lse here
+        s_s[0, 0] = lse  # reuse scratch: phase 1 reads this row's final lse
 
     @pl.when(phase == 1)
     def _normalize():
         lse = s_s[0, 0]
         lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
-        w_ref[...] = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+        w_ref[0] = jnp.exp(x - lse_safe).astype(w_ref.dtype)
 
 
 def fused_normalize_call(
-    x2d: jax.Array, *, block_rows: int, interpret: bool
+    x3d: jax.Array, *, block_rows: int, interpret: bool
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """x2d: (rows, 128) log-weights. Returns (w (rows,128), m (1,1), lse (1,1))."""
-    rows, lanes = x2d.shape
-    assert lanes == LANES and rows % block_rows == 0, (x2d.shape, block_rows)
+    """x3d: (B, rows, 128) log-weights, one bank row per filter.
+
+    Returns (w (B, rows, 128), m (B, 1), lse (B, 1)) with per-row stats.
+    """
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
     nb = rows // block_rows
     w, m, lse = pl.pallas_call(
         _kernel,
-        grid=(2, nb),
+        grid=(nbank, 2, nb),
         in_specs=[
-            pl.BlockSpec((block_rows, LANES), lambda p, i: (i, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, LANES), lambda p, i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
+            pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, LANES), x2d.dtype),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.SMEM((1, 1), jnp.float32),
             pltpu.SMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(x2d)
+    )(x3d)
     return w, m, lse

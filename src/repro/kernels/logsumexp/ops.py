@@ -1,4 +1,10 @@
-"""Public entry points for the fused LSE kernel (jit'd, interpret-aware)."""
+"""Public entry points for the fused LSE kernel (jit'd, interpret-aware).
+
+``normalize_weights`` handles one filter (1-D log-weights);
+``normalize_weights_batched`` handles a bank (2-D, one row per filter) in a
+single kernel launch with per-row fp32 carries — the kernel-level face of
+:class:`repro.core.engine.FilterBank`.
+"""
 
 from __future__ import annotations
 
@@ -10,14 +16,18 @@ import jax.numpy as jnp
 from repro.kernels.common import pad_to_multiple, should_interpret
 from repro.kernels.logsumexp.logsumexp import LANES, fused_normalize_call
 
-__all__ = ["normalize_weights", "online_logsumexp"]
+__all__ = [
+    "normalize_weights",
+    "normalize_weights_batched",
+    "online_logsumexp",
+]
 
 DEFAULT_BLOCK_ROWS = 64
 
 
 def _as_blocks(log_w: jax.Array, block_rows: int) -> jax.Array:
-    x = pad_to_multiple(log_w, LANES * block_rows, axis=0, value=-jnp.inf)
-    return x.reshape(-1, LANES)
+    x = pad_to_multiple(log_w, LANES * block_rows, axis=-1, value=-jnp.inf)
+    return x.reshape(x.shape[:-1] + (-1, LANES))
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -35,12 +45,36 @@ def normalize_weights(
     if interpret is None:
         interpret = should_interpret()
     n = log_w.shape[0]
-    x2d = _as_blocks(log_w, block_rows)
-    w2d, m, lse = fused_normalize_call(
-        x2d, block_rows=block_rows, interpret=interpret
+    x3d = _as_blocks(log_w, block_rows)[None]
+    w3d, m, lse = fused_normalize_call(
+        x3d, block_rows=block_rows, interpret=interpret
     )
-    w = w2d.reshape(-1)[:n]
+    w = w3d.reshape(-1)[:n]
     return w, m[0, 0], lse[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights_batched(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row fused normalize over a (B, P) bank of log-weight rows.
+
+    One kernel launch for the whole bank: returns (w (B, P), m (B,),
+    lse (B,)).  Each row reduces with its own fp32 carry, so the result is
+    bit-identical to running ``normalize_weights`` row by row.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, m, lse = fused_normalize_call(
+        x3d, block_rows=block_rows, interpret=interpret
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    return w, m[:, 0], lse[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,4 +1,9 @@
-"""Public entry points for the resampling kernels."""
+"""Public entry points for the resampling kernels.
+
+1-D entry points handle one filter; the ``*_batched`` forms take a bank
+(leading B axis, one independent filter per row) and run it as a single
+kernel launch with per-row fp32 carries and per-row systematic offsets.
+"""
 
 from __future__ import annotations
 
@@ -14,9 +19,18 @@ from repro.kernels.resample.resample import (
     search_call,
 )
 
-__all__ = ["inclusive_cumsum", "systematic_resample"]
+__all__ = [
+    "inclusive_cumsum",
+    "systematic_resample",
+    "systematic_resample_batched",
+]
 
 DEFAULT_BLOCK_ROWS = 64
+
+
+def _as_blocks(w: jax.Array, block_rows: int) -> jax.Array:
+    x = pad_to_multiple(w, LANES * block_rows, axis=-1, value=0)
+    return x.reshape(x.shape[:-1] + (-1, LANES))
 
 
 @functools.partial(
@@ -33,13 +47,31 @@ def inclusive_cumsum(
     if interpret is None:
         interpret = should_interpret()
     n = x.shape[0]
-    x2d = pad_to_multiple(x, LANES * block_rows, axis=0, value=0).reshape(
-        -1, LANES
-    )
+    x3d = _as_blocks(x, block_rows)[None]
     out = cumsum_call(
-        x2d, block_rows=block_rows, out_dtype=out_dtype, interpret=interpret
+        x3d, block_rows=block_rows, out_dtype=out_dtype, interpret=interpret
     )
     return out.reshape(-1)[:n]
+
+
+def _systematic_impl(u0, w2d, *, num_out, block_rows, block_rows_out, interpret):
+    """(B,) offsets + (B, N) weights -> (B, num_out) ancestors."""
+    nbank, n = w2d.shape
+    w3d = _as_blocks(w2d, block_rows)
+    cdf3d = cumsum_call(
+        w3d, block_rows=block_rows, out_dtype=jnp.float32, interpret=interpret
+    )
+    total = cdf3d[:, -1, -1]
+    cdf3d = cdf3d / total[:, None, None]
+    anc = search_call(
+        u0,
+        cdf3d,
+        n_total=num_out,
+        num_out=num_out,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+    return jnp.minimum(anc, n - 1)
 
 
 @functools.partial(
@@ -65,22 +97,46 @@ def systematic_resample(
     if interpret is None:
         interpret = should_interpret()
     n = weights.shape[0]
-    n_out = num_out or n
-    w2d = pad_to_multiple(
-        weights, LANES * block_rows, axis=0, value=0
-    ).reshape(-1, LANES)
-    cdf2d = cumsum_call(
-        w2d, block_rows=block_rows, out_dtype=jnp.float32, interpret=interpret
-    )
-    total = cdf2d[-1, -1]
-    cdf2d = cdf2d / total
-    u0 = jax.random.uniform(key, (), jnp.float32)
-    anc = search_call(
+    u0 = jax.random.uniform(key, (), jnp.float32).reshape(1)
+    anc = _systematic_impl(
         u0,
-        cdf2d,
-        n_total=n_out,
-        num_out=n_out,
+        weights[None],
+        num_out=num_out or n,
+        block_rows=block_rows,
         block_rows_out=block_rows_out,
         interpret=interpret,
     )
-    return jnp.minimum(anc, n - 1)
+    return anc[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "block_rows", "block_rows_out", "interpret"),
+)
+def systematic_resample_batched(
+    keys: jax.Array,
+    weights: jax.Array,
+    *,
+    num_out: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows_out: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-row systematic resampling of a (B, P) weight bank.
+
+    ``keys``: (B,) per-row PRNG keys — each filter draws its own offset, so
+    rows resample independently (bit-identical to ``systematic_resample``
+    row by row with the same keys).  Returns (B, num_out) int32 ancestors.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = weights.shape
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _systematic_impl(
+        u0,
+        weights,
+        num_out=num_out or n,
+        block_rows=block_rows,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )

@@ -1,4 +1,4 @@
-"""Pallas kernels for systematic resampling.
+"""Pallas kernels for systematic resampling (bank-batched).
 
 Two kernels, matching the paper's resampling stage but reshaped for TPU:
 
@@ -16,6 +16,13 @@ Two kernels, matching the paper's resampling stage but reshaped for TPU:
    budget) and each step gathers one probe value per output lane.
    The searched constant ``1/N`` and offset u0 are precomputed scalars —
    the hoisting that fixed the paper's XU-pipeline bottleneck.
+
+Both kernels carry a leading bank dimension: inputs are (B, rows, 128), one
+bank row per independent filter of a :class:`~repro.core.engine.FilterBank`,
+with the bank as the outermost (sequential) grid axis.  The cumsum carry is
+re-initialized at block 0 of every bank row, so each filter's CDF is exact
+and independent; the search takes a per-row u0 from SMEM.  ``B == 1``
+reproduces the old single-filter kernels exactly.
 
 The paper's key performance lesson (conversion-free inner loops) shows up
 here as: probe indices are carried as int32 vectors, never round-tripped
@@ -38,52 +45,53 @@ LANES = 128
 
 
 def _cumsum_kernel(x_ref, out_ref, carry_s):
-    i = pl.program_id(0)
+    i = pl.program_id(1)
 
     @pl.when(i == 0)
     def _init():
         carry_s[0, 0] = jnp.float32(0.0)
 
-    x = x_ref[...].astype(jnp.float32)  # (br, 128)
+    x = x_ref[0].astype(jnp.float32)  # (br, 128)
     lane_cum = jnp.cumsum(x, axis=1)  # within-row inclusive
     row_tot = lane_cum[:, -1:]  # (br, 1)
     row_prefix = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
     block = lane_cum + row_prefix + carry_s[0, 0]
-    out_ref[...] = block.astype(out_ref.dtype)
+    out_ref[0] = block.astype(out_ref.dtype)
     carry_s[0, 0] = block[-1, -1]
 
 
 def cumsum_call(
-    x2d: jax.Array,
+    x3d: jax.Array,
     *,
     block_rows: int,
     out_dtype,
     interpret: bool,
 ) -> jax.Array:
-    """Inclusive cumsum over row-major order of (rows, 128) array."""
-    rows, lanes = x2d.shape
+    """Per-bank-row inclusive cumsum over row-major order of (B, rows, 128)."""
+    nbank, rows, lanes = x3d.shape
     assert lanes == LANES and rows % block_rows == 0
     return pl.pallas_call(
         _cumsum_kernel,
-        grid=(rows // block_rows,),
-        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        grid=(nbank, rows // block_rows),
+        in_specs=[pl.BlockSpec((1, block_rows, LANES), lambda b, i: (b, i, 0))],
+        out_specs=pl.BlockSpec((1, block_rows, LANES), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbank, rows, LANES), out_dtype),
         scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
         interpret=interpret,
-    )(x2d)
+    )(x3d)
 
 
 def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
-    """Vectorized binary search of the systematic u-grid into the CDF.
+    """Vectorized binary search of the systematic u-grid into one bank row.
 
-    cdf_ref: the full (rows, 128) CDF in VMEM (normalized: last entry == 1).
-    anc_ref: (bo, 128) int32 output block of ancestor indices.
+    cdf_ref: this bank row's full (1, rows, 128) CDF in VMEM (normalized:
+    last entry == 1).  u0_ref: this row's offset, (1, 1) in SMEM.
+    anc_ref: (1, bo, 128) int32 output block of ancestor indices.
     Index of first cdf entry > u  ==  count of entries <= u (right-side
     searchsorted), computed by bisection on the flattened CDF.
     """
-    o = pl.program_id(0)
-    bo, lanes = anc_ref.shape
+    o = pl.program_id(1)
+    _, bo, lanes = anc_ref.shape
     base = o * (bo * lanes)
     # u-grid for this block, built in fp32 once (no per-step converts).
     ramp = jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 0) * lanes
@@ -91,7 +99,7 @@ def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
     u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * jnp.float32(
         1.0 / n_total
     )
-    cdf = cdf_ref[...].reshape(-1)  # resident in VMEM/registers
+    cdf = cdf_ref[0].reshape(-1)  # resident in VMEM/registers
     lo = jnp.zeros((bo, lanes), jnp.int32)  # lowest candidate
     hi = jnp.full((bo, lanes), n_cdf, jnp.int32)  # exclusive upper bound
     # answer lives in [lo, hi] — n_cdf+1 candidates — so bit_length(n_cdf)
@@ -107,21 +115,24 @@ def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
         return jnp.where(gt, mid + 1, lo), jnp.where(gt, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    anc_ref[...] = jnp.minimum(lo, n_cdf - 1)
+    anc_ref[0] = jnp.minimum(lo, n_cdf - 1)
 
 
 def search_call(
     u0: jax.Array,
-    cdf2d: jax.Array,
+    cdf3d: jax.Array,
     *,
     n_total: int,
     num_out: int,
     block_rows_out: int,
     interpret: bool,
 ) -> jax.Array:
-    """Ancestor indices (num_out,) padded to (rows_out, 128) blocks."""
-    rows_cdf, lanes = cdf2d.shape
-    assert lanes == LANES
+    """Ancestor indices (B, num_out) padded to (B, rows_out, 128) blocks.
+
+    u0: (B,) per-bank-row systematic offsets; cdf3d: (B, rows, 128).
+    """
+    nbank, rows_cdf, lanes = cdf3d.shape
+    assert lanes == LANES and u0.shape == (nbank,)
     rows_out = pl.cdiv(num_out, LANES)
     rows_out = ((rows_out + block_rows_out - 1) // block_rows_out) * block_rows_out
     n_cdf = rows_cdf * LANES
@@ -130,13 +141,15 @@ def search_call(
     )
     anc = pl.pallas_call(
         kernel,
-        grid=(rows_out // block_rows_out,),
+        grid=(nbank, rows_out // block_rows_out),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda o: (0, 0), memory_space=pltpu.SMEM),
-            pl.BlockSpec((rows_cdf, LANES), lambda o: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, o: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, rows_cdf, LANES), lambda b, o: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows_out, LANES), lambda o: (o, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows_out, LANES), jnp.int32),
+        out_specs=pl.BlockSpec(
+            (1, block_rows_out, LANES), lambda b, o: (b, o, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((nbank, rows_out, LANES), jnp.int32),
         interpret=interpret,
-    )(u0.reshape(1, 1).astype(jnp.float32), cdf2d)
-    return anc.reshape(-1)[:num_out]
+    )(u0.reshape(nbank, 1).astype(jnp.float32), cdf3d)
+    return anc.reshape(nbank, -1)[:, :num_out]

@@ -1,7 +1,8 @@
-"""Batched serving driver: prefill queue -> synchronized decode loop.
+"""Batched serving driver: prefill queue -> continuous-batching decode loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --reduce \
-        --batch 8 --steps 32 [--smc --particles-per-slot 4]
+        --batch 8 --steps 32 [--smc --slots 4 --requests 8 \
+        --particles-per-slot 4]
 
 Demonstrates the serving stack end to end on CPU with a reduced config:
 sharded weights, ring-buffer/sliding caches, one fused decode step for the
@@ -9,14 +10,18 @@ whole batch, greedy or temperature sampling — and optionally the paper's
 particle filter as the sampler (``--smc``).  The SMC path is the engine
 API end to end: decoding is expressed as an ``SMCSpec`` (one particle =
 one partial sequence, its cache the state; propagation = sample a token;
-weight = model log-prob at T=1) and driven by
-``ParticleFilter.stream`` — the same engine that runs the object tracker,
-with adaptive systematic resampling batch-gathering the cache states.
+weight = model log-prob at T=1) and served by a ``FilterBank`` — one slot
+per in-flight request, ``--particles-per-slot`` particles each — under a
+continuous-batching scheduler: requests are admitted into free slots
+mid-flight, retired on completion, and the bank steps every tick regardless
+of occupancy (the scheduler never waits to fill the batch and never
+recompiles; slot lifecycle is ``reset_slot`` by traced index).
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -35,7 +40,8 @@ def make_smc_decode_spec(
     transition (the model's own T=1 log-prob of the sampled token).
     ``gather`` locates the particle axis per cache leaf; ``summary`` keeps
     the per-step estimate to one scalar (mean reward) instead of averaging
-    whole caches.
+    whole caches.  ``steps`` sizes the cache/history buffers — the *maximum*
+    request length a serving slot can hold.
     """
     from repro.core.filter import SMCSpec
     from repro.models import model as M
@@ -64,12 +70,16 @@ def make_smc_decode_spec(
             tok = jnp.argmax(logits, -1)
         logp = jax.nn.log_softmax(logits, -1)
         reward = jnp.take_along_axis(logp, tok[:, None], -1)[:, 0]
+        # Freed slots keep ticking past their request's budget ("the bank
+        # steps every tick"); clamp the history index so their writes land
+        # on the last column instead of out of bounds.
+        pos = jnp.minimum(step, steps - 1)
         return {
             "tok": tok,
             "cache": cache,
             "reward": reward,
             "cum_reward": p["cum_reward"] + reward,
-            "seq": p["seq"].at[:, step].set(tok),
+            "seq": p["seq"].at[:, pos].set(tok),
         }
 
     def loglik(p, obs, step):
@@ -93,6 +103,92 @@ def make_smc_decode_spec(
     return SMCSpec(init, transition, loglik, gather=gather, summary=summary)
 
 
+def run_continuous_batching(
+    bank,
+    *,
+    num_requests: int,
+    max_steps: int,
+    particles: int,
+    key: jax.Array,
+    arrival_every: int = 1,
+    min_steps: int | None = None,
+) -> dict:
+    """Admit → step → retire loop over a FilterBank of decode slots.
+
+    Requests arrive on a fixed schedule (request ``i`` at tick
+    ``i * arrival_every``) with budgets in [min_steps, max_steps].  A free
+    slot is claimed by ``reset_slot`` (traced slot index — no recompile);
+    the whole bank steps every tick whether or not every slot holds a
+    request; a slot retires the moment its step counter reaches its
+    request's budget, returning the highest-cumulative-reward particle's
+    sequence.  Returns per-request results plus occupancy/latency stats.
+    """
+    nb = bank.num_slots
+    if min_steps is None:
+        min_steps = max(1, max_steps // 2)
+    if not 0 <= min_steps <= max_steps:
+        raise ValueError(f"need 0 <= min_steps <= max_steps, got "
+                         f"{min_steps} > {max_steps}")
+    lengths = np.random.default_rng(0).integers(
+        min_steps, max_steps + 1, num_requests
+    )
+    pending = collections.deque(
+        {"id": i, "steps": int(lengths[i]), "arrival": i * arrival_every}
+        for i in range(num_requests)
+    )
+    k_state, k_admit, k_run = jax.random.split(key, 3)
+    state = bank.init(k_state, particles)
+    obs = jnp.zeros((nb,), jnp.int32)  # the decode spec ignores observations
+    step = bank.jit_step
+    reset = bank.jit_init_slot
+    active: dict[int, dict] = {}
+    free = list(range(nb))[::-1]
+    results, tick, busy_slot_ticks = [], 0, 0
+    while pending or active:
+        while free and pending and pending[0]["arrival"] <= tick:
+            req = pending.popleft()
+            slot = free.pop()
+            state = reset(
+                state,
+                jnp.int32(slot),
+                jax.random.fold_in(k_admit, req["id"]),
+            )
+            req["admitted_tick"] = tick
+            active[slot] = req
+        keys = jax.random.split(jax.random.fold_in(k_run, tick), nb)
+        state, _ = step(state, obs, keys)
+        tick += 1
+        busy_slot_ticks += len(active)
+        if active:
+            steps_now = np.asarray(state.step)
+            done = [s for s in active if steps_now[s] >= active[s]["steps"]]
+            if done:
+                cum = np.asarray(
+                    state.particles["cum_reward"], np.float32
+                )
+                seqs = np.asarray(state.particles["seq"])
+                for slot in done:
+                    req = active.pop(slot)
+                    best = int(np.argmax(cum[slot]))
+                    results.append(
+                        {
+                            "id": req["id"],
+                            "steps": req["steps"],
+                            "tokens": seqs[slot, best, : req["steps"]],
+                            "admitted_tick": req["admitted_tick"],
+                            "finished_tick": tick,
+                        }
+                    )
+                    free.append(slot)
+    results.sort(key=lambda r: r["id"])
+    return {
+        "results": results,
+        "ticks": tick,
+        "busy_slot_ticks": busy_slot_ticks,
+        "occupancy": busy_slot_ticks / max(1, tick * nb),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -102,13 +198,21 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--precision", default="bf16_mixed")
     ap.add_argument("--smc", action="store_true",
-                    help="particle-filter sampling (systematic resampling)")
+                    help="particle-filter sampling, continuous-batched "
+                         "(one FilterBank slot per request)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--smc: concurrent request slots in the bank")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="--smc: total requests to serve")
+    ap.add_argument("--particles-per-slot", type=int, default=4)
+    ap.add_argument("--arrival-every", type=int, default=1,
+                    help="--smc: ticks between request arrivals")
     ap.add_argument("--ess-frac", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced_config
-    from repro.core import FilterConfig, ParticleFilter
+    from repro.core import FilterBank, FilterConfig
     from repro.core.precision import get_policy
     from repro.models import model as M
 
@@ -132,41 +236,57 @@ def main() -> None:
             params, cfg, policy, decode,
             temperature=args.temperature, steps=args.steps,
         )
-        # Engine resampling criterion: ESS < frac * n + 0.5 (the canonical
-        # filter semantics; the pre-engine loop compared strictly).
-        flt = ParticleFilter(
+        # Engine resampling criterion: ESS < frac * particles, exact
+        # comparison (frac >= 1 -> resample every step).
+        bank = FilterBank(
             spec,
             FilterConfig(policy=policy, ess_threshold=args.ess_frac),
+            num_slots=args.slots,
         )
-        n_resample = 0
-        state = None
-        for state, out in flt.stream(
-            jax.random.key(args.seed), range(args.steps), b
-        ):
-            n_resample += int(out.resampled)
-        seqs = np.asarray(state.particles["seq"])
-    else:
-        cache = M.init_cache(cfg, b, s_max, policy.compute_dtype)
-        tok = jnp.zeros((b,), jnp.int32)
-        seqs = np.zeros((b, args.steps), np.int32)
-        key = jax.random.key(args.seed)
-        n_resample = 0
-        for i in range(args.steps):
-            logits, cache = decode(params, tok, jnp.int32(i), cache)
-            logits = logits.astype(jnp.float32)
-            key, k1 = jax.random.split(key)
-            if args.temperature > 0:
-                tok = jax.random.categorical(
-                    k1, logits / args.temperature, -1
-                )
-            else:
-                tok = jnp.argmax(logits, -1)
-            seqs[:, i] = np.asarray(tok)
+        stats = run_continuous_batching(
+            bank,
+            num_requests=args.requests,
+            max_steps=args.steps,
+            particles=args.particles_per_slot,
+            key=jax.random.key(args.seed),
+            arrival_every=args.arrival_every,
+        )
+        dt = time.perf_counter() - t0
+        n_steps = sum(r["steps"] for r in stats["results"])
+        ticks = max(1, stats["ticks"])
+        print(
+            f"arch={cfg.name} smc slots={args.slots} "
+            f"requests={args.requests} particles/slot="
+            f"{args.particles_per_slot} ticks={stats['ticks']} "
+            f"occupancy={stats['occupancy']:.0%} "
+            f"({dt / ticks * 1e3:.1f} ms/tick incl. compile, "
+            f"{n_steps / dt:.1f} request-steps/s)"
+        )
+        for r in stats["results"][:4]:
+            print(
+                f"  req[{r['id']}] steps={r['steps']} "
+                f"latency={r['finished_tick'] - r['admitted_tick']} ticks: "
+                f"{r['tokens'][:12].tolist()}..."
+            )
+        return
+    cache = M.init_cache(cfg, b, s_max, policy.compute_dtype)
+    tok = jnp.zeros((b,), jnp.int32)
+    seqs = np.zeros((b, args.steps), np.int32)
+    key = jax.random.key(args.seed)
+    for i in range(args.steps):
+        logits, cache = decode(params, tok, jnp.int32(i), cache)
+        logits = logits.astype(jnp.float32)
+        key, k1 = jax.random.split(key)
+        if args.temperature > 0:
+            tok = jax.random.categorical(
+                k1, logits / args.temperature, -1
+            )
+        else:
+            tok = jnp.argmax(logits, -1)
+        seqs[:, i] = np.asarray(tok)
     dt = time.perf_counter() - t0
-    mode = "smc" if args.smc else "independent"
-    print(f"arch={cfg.name} {mode} batch={b} steps={args.steps} "
-          f"({dt / args.steps * 1e3:.1f} ms/step incl. compile)"
-          + (f" resamples={n_resample}" if args.smc else ""))
+    print(f"arch={cfg.name} independent batch={b} steps={args.steps} "
+          f"({dt / args.steps * 1e3:.1f} ms/step incl. compile)")
     for row in range(min(b, 4)):
         print(f"  seq[{row}]: {seqs[row, :16].tolist()}...")
 

@@ -1,0 +1,295 @@
+"""FilterBank semantics: B=1 bit-identity, slot lifecycle, batched kernels,
+multi-object tracking, and the continuous-batching serving scheduler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FilterBank,
+    FilterConfig,
+    ParticleFilter,
+    SMCSpec,
+    get_policy,
+)
+from repro.core.tracking import (
+    TrackerConfig,
+    make_multi_tracker_filter,
+    make_tracker_spec,
+)
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+FRAMES, H, W, P = 10, 64, 64, 256
+
+
+@pytest.fixture(scope="module")
+def video():
+    return generate_video(
+        jax.random.key(0), VideoConfig(num_frames=FRAMES, height=H, width=W)
+    )[0]
+
+
+def _bank_and_filter(policy, ess_threshold=1.0, backend="jnp"):
+    cfg = TrackerConfig(num_particles=P, height=H, width=W, backend=backend)
+    spec = make_tracker_spec(cfg, policy)
+    fc = FilterConfig(
+        policy=policy, backend=backend, ess_threshold=ess_threshold
+    )
+    return FilterBank(spec, fc, num_slots=1), ParticleFilter(spec, fc)
+
+
+# Every registered policy: the paper's three precisions, the TPU mixed
+# pair, the naive (stability fixes off) halves, and the fp8-weight serving
+# policy.  fp64 needs x64 and gets its own test below.
+@pytest.mark.parametrize(
+    "pname",
+    [
+        "fp32",
+        "bf16",
+        "fp16",
+        "bf16_mixed",
+        "fp16_mixed",
+        "fp16_naive",
+        "bf16_naive",
+        "bf16_w8",
+    ],
+)
+def test_bank1_bit_identical_to_particle_filter(video, pname):
+    """FilterBank(B=1).run == ParticleFilter.run, bit for bit, per policy."""
+    pol = get_policy(pname)
+    bank, flt = _bank_and_filter(pol)
+    final_f, outs_f = jax.jit(lambda k, v: flt.run(k, v, P))(
+        jax.random.key(1), video
+    )
+    final_b, outs_b = jax.jit(lambda k, v: bank.run(k, v, P))(
+        jax.random.key(1), video
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_f.estimate["pos"], np.float64),
+        np.asarray(outs_b.estimate["pos"][:, 0], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(final_f.log_weights, np.float64),
+        np.asarray(final_b.log_weights[0], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_f.ess, np.float64),
+        np.asarray(outs_b.ess[:, 0], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(final_f.particles["pos"], np.float64),
+        np.asarray(final_b.particles["pos"][0], np.float64),
+    )
+
+
+def test_bank1_bit_identical_fp64(video):
+    """The remaining registered policy, under x64."""
+    from repro import compat
+
+    with compat.enable_x64(True):
+        pol = get_policy("fp64")
+        bank, flt = _bank_and_filter(pol)
+        _, outs_f = flt.run(jax.random.key(1), video, P)
+        _, outs_b = bank.run(jax.random.key(1), video, P)
+        np.testing.assert_array_equal(
+            np.asarray(outs_f.estimate["pos"]),
+            np.asarray(outs_b.estimate["pos"][:, 0]),
+        )
+
+
+def test_bank1_bit_identical_adaptive_threshold(video):
+    """The per-slot where-select path == ParticleFilter's lax.cond path."""
+    pol = get_policy("fp32")
+    bank, flt = _bank_and_filter(pol, ess_threshold=0.5)
+    _, outs_f = jax.jit(lambda k, v: flt.run(k, v, P))(
+        jax.random.key(1), video
+    )
+    _, outs_b = jax.jit(lambda k, v: bank.run(k, v, P))(
+        jax.random.key(1), video
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_f.estimate["pos"]),
+        np.asarray(outs_b.estimate["pos"][:, 0]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_f.resampled), np.asarray(outs_b.resampled[:, 0])
+    )
+
+
+def test_bank_slots_independent_of_bank_size(video):
+    """A slot's trajectory depends only on its own key, not on B."""
+    pol = get_policy("fp32")
+    cfg = TrackerConfig(num_particles=P, height=H, width=W)
+    spec = make_tracker_spec(cfg, pol)
+    bank2 = FilterBank(spec, FilterConfig(policy=pol), num_slots=2)
+    keys = jax.random.split(jax.random.key(5), 2)
+    state2 = bank2.init_slots(keys, P)
+    bank1 = FilterBank(spec, FilterConfig(policy=pol), num_slots=1)
+    state1 = bank1.init_slots(keys[1:], P)
+    for t in range(3):
+        tk = jax.random.split(jax.random.fold_in(jax.random.key(7), t), 2)
+        state2, _ = bank2.step(state2, video[t], tk, shared_obs=True)
+        state1, _ = bank1.step(state1, video[t], tk[1:], shared_obs=True)
+    np.testing.assert_array_equal(
+        np.asarray(state2.particles["pos"][1]),
+        np.asarray(state1.particles["pos"][0]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state2.log_weights[1]), np.asarray(state1.log_weights[0])
+    )
+
+
+def test_reset_slot_mid_stream(video):
+    """reset_slot restarts exactly one slot (fresh cloud at its start, step
+    0, uniform weights) and leaves every other slot bit-untouched, without
+    recompiling across slot indices."""
+    pol = get_policy("fp32")
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0], [32.0, 32.0]])
+    bank = make_multi_tracker_filter(
+        TrackerConfig(num_particles=P, height=H, width=W), pol, starts
+    )
+    state = bank.init(jax.random.key(1), P)
+    for t in range(3):
+        ks = jax.random.split(jax.random.fold_in(jax.random.key(2), t), 3)
+        state, _ = bank.jit_step_shared(state, video[t], ks)
+    before = jax.tree.map(np.asarray, state)
+
+    state = bank.jit_init_slot(state, jnp.int32(1), jax.random.key(9))
+    assert np.asarray(state.step).tolist() == [3, 0, 3]
+    for keep in (0, 2):
+        np.testing.assert_array_equal(
+            before.particles["pos"][keep],
+            np.asarray(state.particles["pos"][keep]),
+        )
+        np.testing.assert_array_equal(
+            before.log_weights[keep], np.asarray(state.log_weights[keep])
+        )
+    # fresh slot: uniform weights, cloud redrawn around its start position
+    np.testing.assert_array_equal(
+        np.asarray(state.log_weights[1]),
+        np.full((P,), -np.log(P), np.float32),
+    )
+    center = np.asarray(state.particles["pos"][1]).mean(0)
+    np.testing.assert_allclose(center, [48.0, 48.0], atol=3.0)
+
+    # traced slot index: a different slot reuses the same compiled fn
+    n_before = bank.jit_init_slot._cache_size()
+    state = bank.jit_init_slot(state, jnp.int32(0), jax.random.key(10))
+    assert bank.jit_init_slot._cache_size() == n_before
+    assert int(state.step[0]) == 0
+    # and the bank keeps stepping after a reset
+    ks = jax.random.split(jax.random.key(11), 3)
+    state, out = bank.jit_step_shared(state, video[3], ks)
+    assert bool(np.isfinite(np.asarray(out.estimate["pos"])).all())
+
+
+# Pure-16-bit policies accumulate in 16 bit on the jnp path while the
+# Pallas kernels always carry fp32; the weight deltas steer resampling down
+# different (equally valid) paths, so those trajectories only agree to a
+# few pixels.  fp32-accumulating policies match tightly.
+@pytest.mark.parametrize(
+    "pname,atol", [("fp32", 1e-1), ("bf16", 4.0), ("fp16_mixed", 1e-1)]
+)
+def test_bank_pallas_matches_jnp(video, pname, atol):
+    """Banked pallas kernel chain ~= banked jnp chain on a 3-slot tracker."""
+    pol = get_policy(pname)
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0], [32.0, 32.0]])
+    est = {}
+    for backend in ("jnp", "pallas"):
+        cfg = TrackerConfig(
+            num_particles=P, height=H, width=W, backend=backend
+        )
+        bank = make_multi_tracker_filter(cfg, pol, starts)
+        _, outs = bank.run(jax.random.key(1), video, P)
+        est[backend] = np.asarray(outs.estimate["pos"], np.float64)
+        assert np.isfinite(est[backend]).all()
+    np.testing.assert_allclose(est["pallas"], est["jnp"], atol=atol)
+
+
+def test_multi_object_bank_tracks_two_targets():
+    """Two objects in one composited stream: each slot locks to its own."""
+    pol = get_policy("fp32")
+    base = dict(num_frames=24, height=96, width=96)
+    va, ta = generate_video(
+        jax.random.key(0), VideoConfig(start=(20.0, 20.0), **base)
+    )
+    vb, tb = generate_video(
+        jax.random.key(1), VideoConfig(start=(70.0, 60.0), **base)
+    )
+    video2 = jnp.maximum(va, vb)  # brighter-object composite
+    starts = jnp.stack([ta[0], tb[0]])
+    bank = make_multi_tracker_filter(
+        TrackerConfig(num_particles=1024, height=96, width=96), pol, starts
+    )
+    _, outs = jax.jit(lambda k, v: bank.run(k, v, 1024))(
+        jax.random.key(2), video2
+    )
+    est = np.asarray(outs.estimate["pos"], np.float64)  # (T, 2, 2)
+    truth = np.stack([np.asarray(ta), np.asarray(tb)], axis=1)
+    rmse = np.sqrt(((est - truth) ** 2).sum(-1).mean(0))
+    assert (rmse < 6.0).all(), rmse
+
+
+def test_bank_metropolis_resampler(video):
+    """Murray's collective-free scheme drives a bank end to end."""
+    pol = get_policy("fp32")
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0]])
+    cfg = TrackerConfig(
+        num_particles=P, height=H, width=W, resampler="metropolis"
+    )
+    bank = make_multi_tracker_filter(cfg, pol, starts)
+    _, outs = bank.run(jax.random.key(1), video, P)
+    est = np.asarray(outs.estimate["pos"])
+    assert est.shape == (FRAMES, 2, 2) and np.isfinite(est).all()
+
+
+def test_bank_rejects_mesh():
+    spec = make_tracker_spec(
+        TrackerConfig(num_particles=P, height=H, width=W), get_policy("fp32")
+    )
+    with pytest.raises(NotImplementedError, match="mesh"):
+        FilterBank(spec, FilterConfig(mesh=object()), num_slots=2)
+    with pytest.raises(ValueError, match="num_slots"):
+        FilterBank(spec, num_slots=0)
+
+
+def test_continuous_batching_scheduler():
+    """serve --smc in miniature: more requests than slots, staggered
+    arrivals, every request served exactly once with its own budget."""
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import make_smc_decode_spec, run_continuous_batching
+    from repro.models import model as M
+
+    cfg = reduced_config(get_config("minitron-8b"))
+    pol = get_policy("fp32")
+    steps = 6
+    params = M.init_params(jax.random.key(1), cfg, pol.param_dtype)
+    decode = jax.jit(
+        lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol)
+    )
+    spec = make_smc_decode_spec(
+        params, cfg, pol, decode, temperature=1.0, steps=steps
+    )
+    bank = FilterBank(
+        spec, FilterConfig(policy=pol, ess_threshold=0.5), num_slots=3
+    )
+    stats = run_continuous_batching(
+        bank,
+        num_requests=5,
+        max_steps=steps,
+        particles=2,
+        key=jax.random.key(0),
+        arrival_every=1,
+    )
+    results = stats["results"]
+    assert [r["id"] for r in results] == list(range(5))
+    for r in results:
+        assert 1 <= r["steps"] <= steps
+        assert r["tokens"].shape == (r["steps"],)
+        assert (r["tokens"] >= 0).all() and (r["tokens"] < cfg.vocab_size).all()
+        # a slot serves one request at a time: latency == budget here
+        assert r["finished_tick"] - r["admitted_tick"] == r["steps"]
+    # with 5 requests on 3 slots some request must wait for a free slot
+    assert stats["ticks"] >= max(r["steps"] for r in results)
+    assert 0.0 < stats["occupancy"] <= 1.0

@@ -180,6 +180,74 @@ def test_stream_matches_step_by_step():
     assert streamed == replayed
 
 
+def _fixed_weight_spec(target_w):
+    """Loglik forces post-step normalized weights to ``target_w`` exactly
+    (transition is identity, init weights are uniform so the loglik alone
+    sets the weight profile)."""
+    target_log_w = jnp.log(jnp.asarray(target_w, jnp.float32))
+
+    def init(key, n):
+        del key
+        return {"x": jnp.zeros((n,), jnp.float32)}
+
+    def transition(key, particles, step):
+        return particles
+
+    def loglik(particles, obs, step):
+        return target_log_w
+
+    return SMCSpec(init, transition, loglik)
+
+
+def test_ess_threshold_exact_no_early_fire():
+    """Regression for the ``+ 0.5`` fudge: at threshold=0.5, ESS in
+    [0.5*P, 0.5*P + 0.5) must NOT trigger a resample (the old comparison
+    ``ess < 0.5*P + 0.5`` fired early)."""
+    P = 8
+    # Two-level weights with ESS = 1/sum(w^2) = 4.2 in [4, 4.5).
+    d = np.sqrt((1 / 4.2 - 1 / 8) / 8)
+    w = np.full(8, 0.125)
+    w[:4] += d
+    w[4:] -= d
+    ess = 1.0 / np.sum(w**2)
+    assert 4.0 < ess < 4.5
+    spec = _fixed_weight_spec(w)
+    flt = ParticleFilter(spec, FilterConfig(ess_threshold=0.5))
+    state = flt.init(jax.random.key(0), P)
+    state, out = flt.step(state, jnp.float32(0.0), jax.random.key(1))
+    np.testing.assert_allclose(float(out.ess), ess, rtol=1e-5)
+    assert not bool(out.resampled)
+    # unresampled: the weight profile persists in the carried log-weights
+    np.testing.assert_allclose(
+        np.exp(np.asarray(state.log_weights)), w, rtol=1e-5
+    )
+    # ESS strictly below the exact threshold *does* fire
+    w_low = np.asarray([0.4, 0.4, 0.04, 0.04, 0.04, 0.04, 0.02, 0.02])
+    assert 1.0 / np.sum(w_low**2) < 4.0
+    flt_low = ParticleFilter(
+        _fixed_weight_spec(w_low), FilterConfig(ess_threshold=0.5)
+    )
+    state = flt_low.init(jax.random.key(0), P)
+    _, out = flt_low.step(state, jnp.float32(0.0), jax.random.key(1))
+    assert bool(out.resampled)
+
+
+def test_ess_threshold_one_always_resamples():
+    """threshold >= 1.0 is the explicit always-resample gate, firing even
+    at the ESS == P maximum (uniform weights, where a strict comparison
+    against P would not)."""
+    P = 16
+    spec = _fixed_weight_spec(np.full(P, 1.0 / P))
+    flt = ParticleFilter(spec, FilterConfig(ess_threshold=1.0))
+    state = flt.init(jax.random.key(0), P)
+    state, out = flt.step(state, jnp.float32(0.0), jax.random.key(1))
+    np.testing.assert_allclose(float(out.ess), P, rtol=1e-6)
+    assert bool(out.resampled)
+    np.testing.assert_allclose(
+        np.asarray(state.log_weights), np.full(P, -np.log(P)), rtol=1e-6
+    )
+
+
 def test_backend_pallas_close_to_jnp(video):
     pol = get_policy("fp32")
     cfg = TrackerConfig(num_particles=P, height=H, width=W)

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests need the dev extra
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:  # property tests need the dev extra; the rest run everywhere
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    given = None
 
 from repro.core.likelihood import IntensityModel
 from repro.core.precision import get_policy
@@ -115,7 +117,10 @@ def test_likelihood_kernel_sweep(p, j, pname):
         np.asarray(ll, np.float32), np.asarray(llr, np.float32),
         rtol=2e-2, atol=0.5,
     )
-    np.testing.assert_allclose(float(m), float(mr), rtol=1e-3, atol=0.5)
+    # the max may land one compute-dtype ulp apart (different reduction
+    # grouping); at bf16 magnitudes ~250 one ulp is 2.0
+    ulp = float(jnp.finfo(pol.compute_dtype).eps) * max(1.0, abs(float(mr)))
+    np.testing.assert_allclose(float(m), float(mr), rtol=1e-3, atol=0.5 + ulp)
 
 
 def test_likelihood_kernel_matches_core_stable_path():
@@ -134,11 +139,69 @@ def test_likelihood_kernel_matches_core_stable_path():
     )
 
 
-@given(st.integers(2, 2000))
-@settings(max_examples=20, deadline=None)
-def test_cumsum_kernel_property_random_sizes(n):
-    w = jax.random.uniform(jax.random.key(n), (n,), jnp.float32)
-    cs = res_ops.inclusive_cumsum(w)
-    np.testing.assert_allclose(
-        float(cs[-1]), float(jnp.sum(w)), rtol=1e-5
+@pytest.mark.parametrize("nbank", [1, 3, 8])
+@pytest.mark.parametrize("dt", DTYPES, ids=lambda d: d.__name__)
+def test_logsumexp_batched_matches_per_row(nbank, dt):
+    """Bank-batched kernel == the 1-D kernel applied row by row, bitwise:
+    the per-row fp32 carries must not leak across bank rows."""
+    x = (
+        jax.random.normal(jax.random.key(nbank), (nbank, 1000), jnp.float32)
+        * 40
+    ).astype(dt)
+    wb, mb, lseb = lse_ops.normalize_weights_batched(x)
+    assert wb.shape == x.shape and mb.shape == (nbank,) and wb.dtype == dt
+    for i in range(nbank):
+        wi, mi, lsei = lse_ops.normalize_weights(x[i])
+        np.testing.assert_array_equal(
+            np.asarray(wb[i], np.float32), np.asarray(wi, np.float32)
+        )
+        np.testing.assert_array_equal(float(mb[i]), float(mi))
+        np.testing.assert_array_equal(float(lseb[i]), float(lsei))
+
+
+def test_logsumexp_batched_matches_jnp_reference():
+    """Batched pallas vs the vmapped pure-jnp oracle."""
+    x = jax.random.normal(jax.random.key(0), (4, 8192), jnp.float32) * 30
+    wb, mb, lseb = lse_ops.normalize_weights_batched(x)
+    wr, mr, lr = jax.vmap(lse_ref.normalize_weights_ref)(x)
+    np.testing.assert_allclose(np.asarray(mb), np.asarray(mr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lseb), np.asarray(lr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(wb), np.asarray(wr), atol=1e-6)
+
+
+@pytest.mark.parametrize("nbank", [1, 4])
+def test_systematic_batched_matches_per_row(nbank):
+    """Per-row keys ⇒ the batched resample kernel reproduces the 1-D kernel
+    row by row (independent offsets, independent CDF carries)."""
+    keys = jax.random.split(jax.random.key(3), nbank)
+    w = jax.random.uniform(jax.random.key(4), (nbank, 1000), jnp.float32)
+    ancb = np.asarray(res_ops.systematic_resample_batched(keys, w))
+    assert ancb.shape == (nbank, 1000)
+    for i in range(nbank):
+        anci = np.asarray(res_ops.systematic_resample(keys[i], w[i]))
+        np.testing.assert_array_equal(ancb[i], anci)
+        assert (np.diff(ancb[i]) >= 0).all()
+
+
+def test_systematic_batched_rows_differ():
+    """Different per-row keys must give different offsets (no accidental
+    key sharing across the bank)."""
+    keys = jax.random.split(jax.random.key(5), 3)
+    w = jnp.tile(
+        jax.random.uniform(jax.random.key(6), (1, 512), jnp.float32), (3, 1)
     )
+    anc = np.asarray(res_ops.systematic_resample_batched(keys, w))
+    assert not np.array_equal(anc[0], anc[1])
+    assert not np.array_equal(anc[1], anc[2])
+
+
+if given is not None:
+
+    @given(st.integers(2, 2000))
+    @settings(max_examples=20, deadline=None)
+    def test_cumsum_kernel_property_random_sizes(n):
+        w = jax.random.uniform(jax.random.key(n), (n,), jnp.float32)
+        cs = res_ops.inclusive_cumsum(w)
+        np.testing.assert_allclose(
+            float(cs[-1]), float(jnp.sum(w)), rtol=1e-5
+        )

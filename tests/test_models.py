@@ -123,6 +123,73 @@ def test_decode_matches_forward(arch):
     )
 
 
+def test_moe_capacity_drop_policy_pinned():
+    """Pin the drop policy itself, not just the drop-free case.
+
+    Token-choice with static capacity: routed pairs are stably sorted by
+    expert, and within an expert the first ``cap`` pairs in flat
+    (token-major) order are kept — every later pair contributes exactly
+    zero.  Verified three ways: (1) a rigged all-to-one-expert routing
+    against a hand-built reference (which tokens drop, and that kept
+    tokens get the plain expert FFN), (2) scatter vs einsum dispatch agree
+    under drops (independent mechanisms, same slot assignment), and (3)
+    teacher-forced decode == forward at a *dropping* capacity when both
+    group the same tokens (s=1), so the decode path applies the identical
+    policy.
+    """
+    import dataclasses
+
+    from repro.models.moe import _einsum_dispatch, _expert_ffn, _group_dispatch
+
+    cfg = reduced_config(get_config("deepseek-moe-16b"), capacity_factor=0.5)
+    e, k, d, f = cfg.num_experts, cfg.experts_per_token, cfg.d_model, cfg.moe_d_ff
+    t = 8
+    cap = int(t * k / e * cfg.capacity_factor) + 1  # the policy's capacity
+    kw = jax.random.split(jax.random.key(0), 3)
+    w = {
+        "wi_gate": 0.1 * jax.random.normal(kw[0], (e, d, f), jnp.float32),
+        "wi_up": 0.1 * jax.random.normal(kw[1], (e, d, f), jnp.float32),
+        "wo": 0.1 * jax.random.normal(kw[2], (e, f, d), jnp.float32),
+    }
+    xt = jax.random.normal(jax.random.key(1), (t, d), jnp.float32)
+
+    # (1) all t*k pairs routed to expert 0 -> only the first cap pairs (in
+    # token-major order) survive; token i keeps min(k, max(0, cap - i*k))
+    # of its k copies, each gate-weight 1.
+    ids = jnp.zeros((t, k), jnp.int32)
+    gates = jnp.ones((t, k), jnp.float32)
+    out = _group_dispatch(xt, ids, gates, w, cfg)
+    kept = np.minimum(k, np.maximum(0, cap - np.arange(t) * k))
+    w0 = {name: v[:1] for name, v in w.items()}
+    ffn0 = _expert_ffn(w0, xt[None], cfg.act)[0]
+    expect = np.asarray(ffn0) * kept[:, None]
+    assert kept.max() == k and kept.min() == 0  # drops actually happen
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+
+    # (2) scatter and one-hot-einsum dispatch implement one drop policy
+    logits = jax.random.normal(jax.random.key(2), (t, e), jnp.float32)
+    gates_r, ids_r = jax.lax.top_k(jax.nn.softmax(logits), k)
+    out_scatter = _group_dispatch(xt, ids_r, gates_r, w, cfg)
+    out_einsum = _einsum_dispatch(xt, ids_r, gates_r, w, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_scatter), np.asarray(out_einsum), rtol=1e-4, atol=1e-5
+    )
+
+    # (3) decode parity at a dropping capacity: with s=1 the forward groups
+    # one token exactly like decode does, cap = int(k/e * 0.5) + 1 = 1 < k,
+    # so second-choice experts drop in *both* paths identically.
+    pol = get_policy("fp32")
+    assert int(k / e * cfg.capacity_factor) + 1 < k
+    params = M.init_params(jax.random.key(1), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.key(3), (B, 1), 0, cfg.vocab_size)
+    logits_full, _ = M.forward(params, {"tokens": toks}, cfg, pol)
+    cache = M.init_cache(cfg, B, 1, jnp.float32)
+    dec, _ = M.decode_step(params, toks[:, 0], jnp.int32(0), cache, cfg, pol)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(logits_full[:, 0]), atol=5e-4, rtol=1e-3
+    )
+
+
 def test_ring_buffer_cache_smaller_than_context():
     """Sliding-window layers allocate window-sized ring caches."""
     cfg = reduced_config(get_config("gemma3-27b"))

@@ -1,13 +1,17 @@
 """Property tests for the resampling schemes."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests need the dev extra
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:  # property tests need the dev extra; the rest run everywhere
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    given = None
 
 from repro.core import resampling
 from repro.core.precision import get_policy
@@ -15,38 +19,38 @@ from repro.core.precision import get_policy
 POL = get_policy("fp32")
 
 
-@st.composite
-def weight_arrays(draw, max_len=128):
-    n = draw(st.integers(4, max_len))
-    ws = draw(
-        st.lists(st.floats(1e-6, 1.0), min_size=n, max_size=n)
-    )
-    w = np.array(ws, np.float32)
-    return w / w.sum()
+if given is not None:
 
+    @st.composite
+    def weight_arrays(draw, max_len=128):
+        n = draw(st.integers(4, max_len))
+        ws = draw(
+            st.lists(st.floats(1e-6, 1.0), min_size=n, max_size=n)
+        )
+        w = np.array(ws, np.float32)
+        return w / w.sum()
 
-@given(weight_arrays())
-@settings(max_examples=50, deadline=None)
-def test_systematic_counts_floor_ceil(w):
-    """Systematic resampling guarantee: count_i in {floor(Nw_i), ceil(Nw_i)}."""
-    n = w.shape[0]
-    anc = np.asarray(
-        resampling.systematic(jax.random.key(3), jnp.asarray(w), POL)
-    )
-    counts = np.bincount(anc, minlength=n)
-    expect = n * w
-    assert (counts >= np.floor(expect) - 1e-6).all()
-    assert (counts <= np.ceil(expect) + 1e-6).all()
+    @given(weight_arrays())
+    @settings(max_examples=50, deadline=None)
+    def test_systematic_counts_floor_ceil(w):
+        """Systematic guarantee: count_i in {floor(Nw_i), ceil(Nw_i)}."""
+        n = w.shape[0]
+        anc = np.asarray(
+            resampling.systematic(jax.random.key(3), jnp.asarray(w), POL)
+        )
+        counts = np.bincount(anc, minlength=n)
+        expect = n * w
+        assert (counts >= np.floor(expect) - 1e-6).all()
+        assert (counts <= np.ceil(expect) + 1e-6).all()
 
-
-@given(weight_arrays())
-@settings(max_examples=30, deadline=None)
-def test_ancestors_sorted_and_in_range(w):
-    for scheme in ("systematic", "stratified", "multinomial"):
-        fn = resampling.make_resampler(scheme)
-        anc = np.asarray(fn(jax.random.key(5), jnp.asarray(w), POL))
-        assert (np.diff(anc) >= 0).all(), scheme  # CDF inversion is monotone
-        assert anc.min() >= 0 and anc.max() < w.shape[0], scheme
+    @given(weight_arrays())
+    @settings(max_examples=30, deadline=None)
+    def test_ancestors_sorted_and_in_range(w):
+        for scheme in ("systematic", "stratified", "multinomial"):
+            fn = resampling.make_resampler(scheme)
+            anc = np.asarray(fn(jax.random.key(5), jnp.asarray(w), POL))
+            assert (np.diff(anc) >= 0).all(), scheme  # monotone inversion
+            assert anc.min() >= 0 and anc.max() < w.shape[0], scheme
 
 
 def test_multinomial_unbiased():
@@ -93,6 +97,81 @@ def test_fp16_cdf_subnormal_regime():
     )
     counts_mixed = np.bincount(anc_mixed, minlength=n)
     assert counts_mixed.max() <= 2
+
+
+@functools.partial(jax.jit, static_argnames=("n", "iters"))
+def _metropolis(key, w, *, n, iters=resampling.METROPOLIS_ITERS):
+    return resampling.metropolis(key, w, POL, num_samples=n, iters=iters)
+
+
+def test_metropolis_in_range_and_registered():
+    w = jnp.asarray([0.25, 0.25, 0.25, 0.25], jnp.float32)
+    anc = np.asarray(resampling.get_resampler("metropolis")(
+        jax.random.key(0), w, POL
+    ))
+    assert anc.shape == (4,) and anc.dtype == np.int32
+    assert anc.min() >= 0 and anc.max() < 4
+
+
+def test_metropolis_degenerate_one_hot():
+    """One-hot weights are the fixed-chain worst case: a chain only moves
+    when it *proposes* the heavy index (accepting it for good), so coverage
+    needs B >> n draws — Murray's B ~ log(eps)/log(1 - 1/n) bound, ~530
+    for n=64, eps=1e-4.  At B=1024 every chain must have converged; at the
+    default B=32 most chains are still stuck on their zero-weight start."""
+    w = jnp.zeros((64,), jnp.float32).at[17].set(1.0)
+    anc = np.asarray(_metropolis(jax.random.key(0), w, n=64, iters=1024))
+    assert (anc == 17).all()
+    anc_short = np.asarray(_metropolis(jax.random.key(0), w, n=64))
+    assert (anc_short == 17).mean() < 0.9  # the knob matters
+
+
+def test_metropolis_unbiased_vs_systematic():
+    """Bias test against the systematic baseline: at the default chain
+    length the mean offspring counts match N*w about as tightly as
+    systematic's floor/ceil guarantee; at chain length 2 the truncation
+    bias is an order of magnitude larger (the fixed-iteration trade-off
+    Murray's scheme makes for being collective-free)."""
+    w = jnp.asarray([0.5, 0.25, 0.125, 0.125], jnp.float32)
+    n_out, reps = 256, 50
+    counts = np.zeros(4)
+    for i in range(reps):
+        anc = np.asarray(_metropolis(jax.random.key(i), w, n=n_out))
+        counts += np.bincount(anc, minlength=4)
+    est = counts / (reps * n_out)
+    np.testing.assert_allclose(est, np.asarray(w), atol=0.02)
+
+    # systematic: single-draw counts already floor/ceil-exact
+    anc_sys = np.asarray(
+        resampling.systematic(jax.random.key(0), w, POL, n_out)
+    )
+    sys_err = np.abs(
+        np.bincount(anc_sys, minlength=4) / n_out - np.asarray(w)
+    ).max()
+    assert sys_err <= 1.0 / n_out + 1e-6
+
+    def chain_err(iters):
+        tot = np.zeros(4)
+        for i in range(10):
+            anc = np.asarray(
+                _metropolis(jax.random.key(100 + i), w, n=4096, iters=iters)
+            )
+            tot += np.bincount(anc, minlength=4)
+        return np.abs(tot / tot.sum() - np.asarray(w)).max()
+
+    short, converged = chain_err(2), chain_err(resampling.METROPOLIS_ITERS)
+    assert converged < 0.01
+    assert short > 5 * converged  # truncation bias is real and monotone
+
+
+def test_metropolis_no_collectives_in_hlo():
+    """The scheme's point: no cumsum/sort over the weights — the compiled
+    step contains no reduce-window (prefix-sum) or sort ops."""
+    w = jnp.asarray(np.full(128, 1 / 128, np.float32))
+    hlo = jax.jit(
+        lambda k, ww: resampling.metropolis(k, ww, POL)
+    ).lower(jax.random.key(0), w).compile().as_text()
+    assert "reduce-window" not in hlo and "sort(" not in hlo
 
 
 def test_gather_ancestors_pytree():
