@@ -13,6 +13,14 @@ Beyond the paper: a bank-size sweep (B independent filters x P particles,
 aggregate particle-step throughput vs B at fixed per-filter size, the
 occupancy lever a production tracker (one filter per target/request)
 actually pulls.
+
+``mesh_bank_sweep`` extends the grid with the device axis: D devices x B
+slots x P particles, the meshed FilterBank (slots over "data", particles
+over "model") measured as aggregate particle-steps/s.  Run standalone with
+forced host devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python benchmarks/fig5_throughput.py mesh_bank_sweep
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv_row, time_fn
 from repro import compat
 from repro.core import (
+    FilterConfig,
     TrackerConfig,
     get_policy,
     make_multi_tracker_filter,
@@ -131,4 +140,96 @@ def bank_sweep(
                     f"scaling_vs_B1={rate / base_rate:.2f}",
                 )
             )
+    rows.extend(mesh_bank_sweep())
     return rows
+
+
+def mesh_bank_sweep(
+    mesh_shapes=((1, 1), (2, 1), (1, 2), (2, 2), (2, 4), (4, 2)),
+    bank_sizes=(4, 8),
+    particle_sizes=(512, 4_096),
+    policy_name: str = "bf16",
+    scheme: str = "local",
+) -> list[str]:
+    """D x B x P grid: aggregate throughput of the *meshed* bank.
+
+    Per cell: one ``FilterBank.jit_step_shared`` over B slots of P
+    particles on a (D_data, D_model) mesh — slots sharded over "data",
+    each slot's particles over "model" (``scheme`` resampling, see
+    ``repro.core.distributed``).  Derived columns: aggregate
+    particle-steps/s and scaling vs the (1, 1) mesh of the same B x P —
+    the device-axis payoff on top of the bank-axis payoff.  Mesh shapes
+    that exceed the visible device count, or don't divide B / P, are
+    skipped (the CPU container sees 1 device unless
+    ``--xla_force_host_platform_device_count`` forces more).
+    """
+    from repro.data.synthetic_video import VideoConfig, generate_video
+
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=2, height=256, width=256)
+    )
+    frame = video[0].astype(jnp.float32)
+    pol = get_policy(policy_name)
+    n_dev = len(jax.devices())
+    rows = []
+    for p in particle_sizes:
+        for b in bank_sizes:
+            base_rate = None
+            for d_data, d_model in mesh_shapes:
+                if d_data * d_model > n_dev:
+                    continue
+                if b % d_data or p % d_model:
+                    continue
+                mesh = compat.make_mesh(
+                    (d_data, d_model),
+                    ("data", "model"),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                )
+                cfg = TrackerConfig(num_particles=p, height=256, width=256)
+                starts = 128.0 + 8.0 * jnp.stack(
+                    [jnp.arange(b, dtype=jnp.float32)] * 2, -1
+                )
+                bank = make_multi_tracker_filter(
+                    cfg,
+                    pol,
+                    starts,
+                    FilterConfig(mesh=mesh, scheme=scheme),
+                )
+                state = bank.init(jax.random.key(1), p)
+                keys = jax.random.split(jax.random.key(2), b)
+                step = bank.jit_step_shared
+                us = time_fn(
+                    lambda st, f, ks: step(st, f, ks),
+                    state,
+                    frame,
+                    keys,
+                    reps=3,
+                    warmup=1,
+                )
+                rate = b * p / us * 1e6  # aggregate particle-steps/s
+                if base_rate is None:
+                    base_rate = rate
+                rows.append(
+                    csv_row(
+                        f"fig5_throughput/mesh_bank_D{d_data}x{d_model}"
+                        f"_B{b}_P{p}_{policy_name}_{scheme}",
+                        us,
+                        f"agg_particle_steps_per_s={rate:.3e};"
+                        f"scaling_vs_1x1={rate / base_rate:.2f}",
+                    )
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "run"
+    fns = {
+        "run": run,
+        "bank_sweep": bank_sweep,
+        "mesh_bank_sweep": mesh_bank_sweep,
+    }
+    print("name,us_per_call,derived")
+    for row in fns[which]():
+        print(row)

@@ -31,6 +31,19 @@ mesh axis set, and the two global stages become collectives:
 Determinism: u0 derives from a key every device computes identically
 (fold_in of the step), so exact-mode ancestry is reproducible across mesh
 shapes — the property the elastic-reshard test relies on.
+
+The bank axis composes with the mesh (:func:`make_dist_bank_step`): a
+:class:`~repro.core.engine.FilterBank`'s slots shard over
+``DistributedConfig.bank_axis`` (``data`` by default) while each slot's
+particles shard over ``axes`` (``model``).  Every weight collective spans
+only the particle axes — slots are independent filters, so no traffic ever
+crosses the bank axis — and the per-slot online-LSE states merge with one
+``pmax`` + one ``psum`` of a ``(B_loc,)`` vector per device, i.e. one
+collective launch per row-batch regardless of bank size.  The ``local``
+scheme's ring exchange runs per slot over the particle ring; its period
+gate is *per-slot* (slots admitted at different ticks carry different step
+counters), so the ``ppermute`` always executes and each row selects
+between the exchanged and kept block.
 """
 
 from __future__ import annotations
@@ -49,8 +62,12 @@ __all__ = [
     "SCHEMES",
     "DistributedConfig",
     "dist_normalize",
+    "dist_normalize_banked",
     "dist_systematic_exact",
+    "dist_systematic_exact_banked",
     "dist_systematic_local",
+    "dist_systematic_local_banked",
+    "make_dist_bank_step",
     "make_dist_pf_step",
 ]
 
@@ -64,12 +81,29 @@ class DistributedConfig:
     scheme: str = "exact"  # or "local"
     exchange_every: int = 4  # ring-exchange period for the local scheme
     exchange_frac: float = 0.25  # fraction of the local slice exchanged
+    bank_axis: str | None = None  # FilterBank slot axis (mesh x bank)
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
             raise KeyError(
                 f"unknown resampling scheme {self.scheme!r}; "
                 f"have {sorted(SCHEMES)}"
+            )
+        # A zero/negative period or an out-of-range fraction would silently
+        # disable the RNA weight-variance exchange — reject it up front.
+        if self.exchange_every < 1:
+            raise ValueError(
+                f"exchange_every must be >= 1, got {self.exchange_every}"
+            )
+        if not 0.0 < self.exchange_frac <= 1.0:
+            raise ValueError(
+                f"exchange_frac must be in (0, 1], got {self.exchange_frac}"
+            )
+        if self.bank_axis is not None and self.bank_axis in self.axes:
+            raise ValueError(
+                f"bank_axis {self.bank_axis!r} collides with particle "
+                f"axes {self.axes}; slots and particles must shard over "
+                "disjoint mesh axes"
             )
 
     @property
@@ -120,10 +154,14 @@ def dist_systematic_exact(
     weights: jax.Array,
     particles: Any,
     axes: tuple[str, ...],
+    gather: Any = None,
 ) -> Any:
     """Global systematic resampling inside shard_map.
 
     weights: (P_loc,) globally normalized (psum over shards == 1).
+    ``gather`` overrides ancestor selection on the all-gathered particles
+    (``SMCSpec.gather`` — pytrees whose particle axis is not leading
+    everywhere); default takes along axis 0.
     Returns resampled particles with the same local shapes.
     """
     p_loc = weights.shape[0]
@@ -150,6 +188,8 @@ def dist_systematic_exact(
     gathered = jax.tree.map(
         lambda x: jax.lax.all_gather(x, axes, tiled=True), particles
     )
+    if gather is not None:
+        return gather(gathered, anc)
     return jax.tree.map(lambda x: jnp.take(x, anc, axis=0), gathered)
 
 
@@ -163,6 +203,7 @@ def dist_systematic_local(
     exchange_every: int,
     exchange_frac: float,
     out_log_w_dtype,
+    gather: Any = None,
 ) -> tuple[Any, jax.Array]:
     """RNA-style local resampling with periodic weighted ring exchange.
 
@@ -183,7 +224,10 @@ def dist_systematic_local(
     anc = jnp.clip(
         jnp.searchsorted(cdf, u, side="right"), 0, p_loc - 1
     ).astype(jnp.int32)
-    res = jax.tree.map(lambda x: jnp.take(x, anc, axis=0), particles)
+    if gather is not None:
+        res = gather(particles, anc)
+    else:
+        res = jax.tree.map(lambda x: jnp.take(x, anc, axis=0), particles)
     log_w = jnp.full(
         (p_loc,), 0.0, jnp.float32
     ) + (jnp.log(local_sum) - jnp.log(jnp.float32(p_loc)))
@@ -208,6 +252,205 @@ def dist_systematic_local(
         n_dev > 1, (step % exchange_every) == (exchange_every - 1)
     )
     res, log_w = jax.lax.cond(do_x, _exchange, lambda a: a, (res, log_w))
+    return res, log_w.astype(out_log_w_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Banked forms: a FilterBank row-batch of B_loc slots per device.  Row
+# semantics are identical to the single-filter functions above (same
+# reduction order along the particle axis, same key derivations per row);
+# collectives carry (B_loc,) vectors instead of scalars, so the whole local
+# bank merges in one launch.
+
+
+def dist_normalize_banked(
+    log_w: jax.Array,
+    axes: tuple[str, ...],
+    accum_dtype,
+    local_stats: Any = None,
+):
+    """Per-slot log-weights (B_loc, P_loc) -> (weights, lse (B_loc,), max).
+
+    Runs inside shard_map; collectives span only the particle ``axes``.
+    ``local_stats`` optionally supplies the shard-local reduction as a
+    fused kernel — ``(log_w) -> (m_loc (B_loc,), lse_loc (B_loc,))`` in
+    fp32 (``repro.kernels.logsumexp.ops.online_logsumexp_batched``); the
+    per-shard online-LSE states then merge with the same one pmax + one
+    psum per row.
+    """
+    x = log_w.astype(accum_dtype)
+    if local_stats is None:
+        m_loc = jnp.max(x, axis=-1)
+        m = jax.lax.pmax(m_loc, axes)
+        m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+        s = jax.lax.psum(
+            jnp.sum(jnp.exp(x - m_safe[:, None]), axis=-1), axes
+        )
+        lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
+    else:
+        m_loc, lse_loc = local_stats(log_w)
+        m_loc = m_loc.astype(accum_dtype)
+        lse_loc = lse_loc.astype(accum_dtype)
+        m = jax.lax.pmax(m_loc, axes)
+        m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+        # exp(lse_loc - m_safe) is the shard's exp-sum rebased to the
+        # global max (0 where the shard saw only -inf) — the online merge.
+        s = jax.lax.psum(jnp.exp(lse_loc - m_safe), axes)
+        lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
+    w = jnp.exp(x - jnp.where(jnp.isfinite(lse), lse, 0.0)[:, None])
+    return w.astype(log_w.dtype), lse, m
+
+
+def dist_systematic_exact_banked(
+    u0: jax.Array,
+    weights: jax.Array,
+    particles: Any,
+    axes: tuple[str, ...],
+    gather: Any = None,
+    particle_axes: Any = None,
+) -> Any:
+    """Per-slot global systematic resampling inside shard_map.
+
+    u0: (B_loc,) per-slot offsets; weights: (B_loc, P_loc) globally
+    normalized per row.  Each row all-gathers its CDF slice and particle
+    states along the particle axes and selects the ancestors for this
+    device's output slice — slots never exchange anything.
+    ``particle_axes``: per-leaf particle-axis pytree (``SMCSpec``
+    convention, bank axis excluded); None means axis 0 after the bank dim.
+    """
+    nb, p_loc = weights.shape
+    n_dev = _axis_size(axes)
+    n_total = p_loc * n_dev
+    d = _axis_index(axes)
+
+    w32 = weights.astype(jnp.float32)
+    local_sum = jnp.sum(w32, axis=-1)  # (B_loc,)
+    sums = jax.lax.all_gather(local_sum, axes, tiled=False)  # (n_dev, B_loc)
+    offset = jnp.sum(
+        jnp.where((jnp.arange(n_dev) < d)[:, None], sums, 0.0), axis=0
+    )
+    cdf = offset[:, None] + jnp.cumsum(w32, axis=-1)
+    total = jnp.sum(sums, axis=0)
+
+    g = d * p_loc + jnp.arange(p_loc, dtype=jnp.float32)
+    u = (
+        (g[None, :] + u0.astype(jnp.float32)[:, None])
+        * jnp.float32(1.0 / n_total)
+        * total[:, None]
+    )
+
+    cdf_all = jax.lax.all_gather(cdf, axes, tiled=True, axis=1)
+    anc = jax.vmap(
+        lambda c, uu: jnp.searchsorted(c, uu, side="right")
+    )(cdf_all, u)
+    anc = jnp.clip(anc, 0, n_total - 1).astype(jnp.int32)
+
+    if particle_axes is None:
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axes, tiled=True, axis=1),
+            particles,
+        )
+    else:
+        gathered = jax.tree.map(
+            lambda x, ax: jax.lax.all_gather(
+                x, axes, tiled=True, axis=1 + ax
+            ),
+            particles,
+            particle_axes,
+        )
+    if gather is not None:
+        return jax.vmap(gather)(gathered, anc)
+    return jax.tree.map(
+        lambda x: jax.vmap(lambda row, a: jnp.take(row, a, axis=0))(x, anc),
+        gathered,
+    )
+
+
+def dist_systematic_local_banked(
+    keys: jax.Array,
+    weights: jax.Array,
+    particles: Any,
+    axes: tuple[str, ...],
+    *,
+    step: jax.Array,
+    exchange_every: int,
+    exchange_frac: float,
+    out_log_w_dtype,
+    gather: Any = None,
+    local_resample: Any = None,
+    particle_axes: Any = None,
+) -> tuple[Any, jax.Array]:
+    """Per-slot RNA local resampling with per-slot-gated ring exchange.
+
+    keys: (B_loc,) per-slot keys; weights: (B_loc, P_loc) globally
+    normalized per row; step: (B_loc,) per-slot step counters.  The
+    exchange gate is per slot (slots admitted at different ticks disagree
+    on parity), so the ``ppermute`` runs unconditionally and each row
+    selects between exchanged and kept blocks — O(exchange_frac·P/D·state)
+    collective bytes every step instead of every ``exchange_every`` steps,
+    the price of recompile-free mid-flight admission.  ``local_resample``
+    optionally supplies the shard-local systematic inverse as a fused
+    kernel: ``(u0 (B_loc,), weights) -> ancestors (B_loc, P_loc)``.
+    """
+    nb, p_loc = weights.shape
+    d = _axis_index(axes)
+    w32 = weights.astype(jnp.float32)
+    local_sum = jnp.sum(w32, axis=-1)  # (B_loc,)
+
+    u0 = jax.vmap(
+        lambda k: jax.random.uniform(
+            jax.random.fold_in(k, d), (), jnp.float32
+        )
+    )(keys)
+    if local_resample is not None:
+        anc = local_resample(u0, weights)
+    else:
+        cdf = jnp.cumsum(w32, axis=-1)
+        cdf = cdf / cdf[:, -1:]
+        u = (
+            jnp.arange(p_loc, dtype=jnp.float32)[None, :] + u0[:, None]
+        ) * jnp.float32(1.0 / p_loc)
+        anc = jax.vmap(
+            lambda c, uu: jnp.searchsorted(c, uu, side="right")
+        )(cdf, u)
+        anc = jnp.clip(anc, 0, p_loc - 1).astype(jnp.int32)
+    if gather is not None:
+        res = jax.vmap(gather)(particles, anc)
+    else:
+        res = jax.tree.map(
+            lambda x: jax.vmap(lambda row, a: jnp.take(row, a, axis=0))(
+                x, anc
+            ),
+            particles,
+        )
+    log_w = jnp.broadcast_to(
+        (jnp.log(local_sum) - jnp.log(jnp.float32(p_loc)))[:, None],
+        (nb, p_loc),
+    )
+
+    n_dev = _axis_size(axes)
+    k = max(1, int(p_loc * exchange_frac))
+    ring_axis = axes[-1]
+    n_ring = compat.axis_size(ring_axis)
+    perm = [(i, (i + 1) % n_ring) for i in range(n_ring)]
+    do_x = jnp.logical_and(
+        n_dev > 1, (step % exchange_every) == (exchange_every - 1)
+    )  # (B_loc,) — per-slot gate
+
+    def swap(x, ax=0):
+        pax = 1 + ax  # bank dim leads every leaf
+        head = jax.lax.slice_in_dim(x, 0, k, axis=pax)
+        tail = jax.lax.slice_in_dim(x, k, None, axis=pax)
+        recv = jax.lax.ppermute(head, ring_axis, perm)
+        swapped = jnp.concatenate([recv, tail], axis=pax)
+        sel = do_x.reshape((nb,) + (1,) * (x.ndim - 1))
+        return jnp.where(sel, swapped, x)
+
+    if particle_axes is None:
+        res = jax.tree.map(swap, res)
+    else:
+        res = jax.tree.map(swap, res, particle_axes)
+    log_w = swap(log_w)
     return res, log_w.astype(out_log_w_dtype)
 
 
@@ -257,7 +500,16 @@ def make_dist_pf_step(
                 / wsum
             )
 
-        estimate = jax.tree.map(_wmean, particles)
+        if spec.summary is not None:
+            # Per-shard partial summary, psum-merged: under a mesh the
+            # summary must be a weighted *sum* (linear in (w, particle)
+            # pairs, like the decode spec's mean reward) so partials add.
+            partial = spec.summary(particles, w.astype(policy.accum_dtype))
+            estimate = jax.tree.map(
+                lambda x: jax.lax.psum(x, axes), partial
+            )
+        else:
+            estimate = jax.tree.map(_wmean, particles)
         ess = jnp.square(wsum) / jax.lax.psum(
             jnp.sum(jnp.square(w.astype(policy.accum_dtype))), axes
         )
@@ -265,7 +517,9 @@ def make_dist_pf_step(
         p_loc = log_w.shape[0]
         if cfg.scheme == "exact":
             u0 = jax.random.uniform(k_res, (), jnp.float32)
-            new_particles = dist_systematic_exact(u0, w, particles, axes)
+            new_particles = dist_systematic_exact(
+                u0, w, particles, axes, gather=spec.gather
+            )
             new_log_w = jnp.full(
                 (p_loc,),
                 -jnp.log(float(p_loc * cfg.num_shards)),
@@ -281,11 +535,154 @@ def make_dist_pf_step(
                 exchange_every=cfg.exchange_every,
                 exchange_frac=cfg.exchange_frac,
                 out_log_w_dtype=policy.compute_dtype,
+                gather=spec.gather,
             )
         return new_particles, new_log_w, step + 1, estimate, ess, lse, max_lw
 
     in_specs = (pspec, pspec, P(), P(), P())
     out_specs = (pspec, pspec, P(), P(), P(), P(), P())
+
+    return compat.shard_map(
+        _step,
+        mesh=cfg.mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )
+
+
+def make_dist_bank_step(
+    spec,
+    policy: PrecisionPolicy,
+    cfg: DistributedConfig,
+    *,
+    shared_obs: bool = False,
+    local_stats: Any = None,
+    local_resample: Any = None,
+):
+    """Build a shard_map'd FilterBank step: mesh × bank composition.
+
+    Low-level: ``repro.core.engine.FilterBank`` wraps this behind the
+    uniform ``step(state, observations, keys)`` API when
+    ``FilterConfig.mesh`` is set.  Slots shard over ``cfg.bank_axis``
+    and each slot's particles over ``cfg.axes``; per-slot numerics mirror
+    :func:`make_dist_pf_step` row for row (a meshed B=1 bank in ``exact``
+    mode is bit-comparable to the meshed single filter given the same
+    keys).
+
+    Signature of the returned fn:
+        (particles (B, P, ...), log_w (B, P), step (B,), obs, keys (B,)) ->
+        (particles, log_w, step+1, estimate, ess, lse, max_log_w)
+    ``obs`` is replicated when ``shared_obs`` (every slot sees the same
+    frame) and sharded on its leading bank axis otherwise.  ``local_stats``
+    / ``local_resample`` are the backend's fused shard-local kernels (see
+    :func:`dist_normalize_banked` / :func:`dist_systematic_local_banked`).
+    """
+    if cfg.bank_axis is None:
+        raise ValueError("make_dist_bank_step needs cfg.bank_axis set")
+    axes = cfg.axes
+    bspec = P(cfg.bank_axis)
+    pspec = P(cfg.bank_axis, axes)
+    paxes = spec.particle_axes
+    if paxes is not None and (spec.summary is None or spec.gather is None):
+        raise ValueError(
+            "a meshed FilterBank over a spec with non-leading particle "
+            "axes (particle_axes set) needs an explicit summary AND "
+            "gather: the default weighted-mean estimate and the default "
+            "ancestor take assume a leading particle axis on every leaf"
+        )
+    if paxes is None:
+        part_specs: Any = pspec  # prefix broadcast over the pytree
+    else:
+        # Per-leaf placement: bank axis leads, particle axes land on the
+        # leaf's own particle dimension (LM caches are not leading-axis).
+        part_specs = jax.tree.map(
+            lambda ax: P(cfg.bank_axis, *([None] * ax), axes), paxes
+        )
+    obs_ax = None if shared_obs else 0
+    adt = policy.accum_dtype
+
+    def _step(particles, log_w, step, obs, keys):
+        # Per-slot key chain — the single-filter derivation applied row by
+        # row, so a B=1 bank consumes keys exactly like ParticleFilter.
+        split = jax.vmap(
+            lambda k: jax.random.split(jax.random.fold_in(k, 0))
+        )(keys)
+        k_prop, k_res = split[:, 0], split[:, 1]
+        d = _axis_index(axes)
+        prop_keys = jax.vmap(lambda k: jax.random.fold_in(k, d))(k_prop)
+        particles = jax.vmap(spec.transition)(prop_keys, particles, step)
+        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+            particles, obs, step
+        ).astype(policy.compute_dtype)
+        log_w = log_w + log_lik
+        w, lse, max_lw = dist_normalize_banked(
+            log_w, axes, adt, local_stats=local_stats
+        )
+
+        w_acc = w.astype(adt)
+        wsum = jax.lax.psum(jnp.sum(w_acc, axis=-1), axes)  # (B_loc,)
+
+        def _wmean(x):
+            if not jnp.issubdtype(x.dtype, jnp.inexact):
+                return x
+            wx = w_acc.reshape(w_acc.shape + (1,) * (x.ndim - 2))
+            num = jax.lax.psum(
+                jnp.sum(x.astype(adt) * wx, axis=1), axes
+            )
+            return num / wsum.reshape((-1,) + (1,) * (x.ndim - 2))
+
+        if spec.summary is not None:
+            # Per-shard, per-slot partial summaries psum-merge over the
+            # particle axes (the summary must be a weighted sum — see
+            # make_dist_pf_step).
+            partial = jax.vmap(spec.summary)(particles, w_acc)
+            estimate = jax.tree.map(
+                lambda x: jax.lax.psum(x, axes), partial
+            )
+        else:
+            estimate = jax.tree.map(_wmean, particles)
+        ess = jnp.square(wsum) / jax.lax.psum(
+            jnp.sum(jnp.square(w_acc), axis=-1), axes
+        )
+
+        p_loc = log_w.shape[-1]
+        if cfg.scheme == "exact":
+            u0 = jax.vmap(
+                lambda k: jax.random.uniform(k, (), jnp.float32)
+            )(k_res)
+            new_particles = dist_systematic_exact_banked(
+                u0, w, particles, axes,
+                gather=spec.gather,
+                particle_axes=paxes,
+            )
+            new_log_w = jnp.full_like(
+                log_w, -jnp.log(float(p_loc * cfg.num_shards))
+            )
+        else:
+            new_particles, new_log_w = dist_systematic_local_banked(
+                k_res,
+                w,
+                particles,
+                axes,
+                step=step,
+                exchange_every=cfg.exchange_every,
+                exchange_frac=cfg.exchange_frac,
+                out_log_w_dtype=policy.compute_dtype,
+                gather=spec.gather,
+                local_resample=local_resample,
+                particle_axes=paxes,
+            )
+        return new_particles, new_log_w, step + 1, estimate, ess, lse, max_lw
+
+    in_specs = (
+        part_specs,
+        pspec,
+        bspec,
+        P() if shared_obs else bspec,
+        bspec,
+    )
+    out_specs = (part_specs, pspec, bspec, bspec, bspec, bspec, bspec)
 
     return compat.shard_map(
         _step,

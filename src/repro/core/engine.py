@@ -53,6 +53,12 @@ filter path.  Multi-object tracking builds on this in
 one shared frame stream); continuous-batching serving in
 ``repro.launch.serve --smc`` (requests admitted into free slots mid-flight,
 the bank stepping every tick regardless of occupancy).
+
+The bank composes with the mesh: ``FilterBank(spec, FilterConfig(mesh=...),
+num_slots=B)`` shards slots over the "data" axis and each slot's particles
+over "model", with per-slot collectives confined to the particle axes (see
+``repro.core.distributed.make_dist_bank_step``) — the multi-device serving
+configuration.
 """
 
 from __future__ import annotations
@@ -103,6 +109,19 @@ class Backend:
                        back to vmapping the registered pure-jnp resampler
                        (NOT the single-filter backend override — a bank
                        must never vmap a Pallas kernel).
+
+    Shard-local forms (used by the meshed :class:`FilterBank`, running
+    *inside* shard_map on each device's (B_loc, P_loc) slice):
+
+    local_stats_banked: (log_w (B, P_loc)) -> (max (B,), lse (B,)) fp32 —
+                       the per-shard online-LSE state that
+                       ``repro.core.distributed.dist_normalize_banked``
+                       merges with one pmax + psum per row; None falls
+                       back to the pure-jnp reduction.
+    ancestors_from_u0_banked: per-resampler overrides ``(u0 (B,), weights
+                       (B, P_loc)) -> ancestors (B, P_loc)`` for the RNA
+                       ``local`` scheme's shard-local systematic inverse
+                       (u0 already folds in the device index).
     """
 
     name: str
@@ -114,6 +133,10 @@ class Backend:
         None
     )
     resamplers_banked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    local_stats_banked: Callable[[jax.Array], tuple] | None = None
+    ancestors_from_u0_banked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
 
@@ -172,6 +195,18 @@ def _pallas_systematic_banked(keys: jax.Array, weights: jax.Array, policy):
     return res_ops.systematic_resample_batched(keys, weights)
 
 
+def _pallas_local_stats_banked(log_w: jax.Array):
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    return lse_ops.online_logsumexp_batched(log_w)
+
+
+def _pallas_ancestors_from_u0_banked(u0: jax.Array, weights: jax.Array):
+    from repro.kernels.resample import ops as res_ops
+
+    return res_ops.systematic_ancestors_batched(u0, weights)
+
+
 register_backend(Backend("jnp", _jnp_normalize))
 register_backend(
     Backend(
@@ -180,6 +215,10 @@ register_backend(
         resamplers={"systematic": _pallas_systematic},
         normalize_banked=_pallas_normalize_banked,
         resamplers_banked={"systematic": _pallas_systematic_banked},
+        local_stats_banked=_pallas_local_stats_banked,
+        ancestors_from_u0_banked={
+            "systematic": _pallas_ancestors_from_u0_banked
+        },
     )
 )
 
@@ -196,7 +235,11 @@ class FilterConfig:
     :class:`PrecisionPolicy` instance).  Setting ``mesh`` shards particles
     over the named mesh ``axis`` and switches resampling to the distributed
     ``scheme`` ("exact" global systematic, or "local" RNA with periodic ring
-    exchange — see ``repro.core.distributed``).
+    exchange — see ``repro.core.distributed``).  Under a :class:`FilterBank`
+    the mesh composes with the bank: slots shard over ``bank_axis`` and each
+    slot's particles over ``axis`` — with the defaults (both "data") the
+    bank resolves particles onto the "model" axis, i.e.
+    ``FilterConfig(mesh=...)`` means slots × particles = "data" × "model".
     """
 
     policy: str | PrecisionPolicy = "fp32"
@@ -209,6 +252,7 @@ class FilterConfig:
     scheme: str = "exact"
     exchange_every: int = 4
     exchange_frac: float = 0.25
+    bank_axis: str = "data"  # FilterBank slot axis (ignored by ParticleFilter)
 
     def with_(self, **kw: Any) -> "FilterConfig":
         return dataclasses.replace(self, **kw)
@@ -243,6 +287,14 @@ class ParticleFilter:
         if config.mesh is not None:
             from repro.core import distributed
 
+            if spec.particle_axes is not None:
+                raise ValueError(
+                    "the meshed ParticleFilter assumes a leading particle "
+                    "axis on every leaf; specs with particle_axes set "
+                    "(non-leading cache axes) are only supported by the "
+                    "meshed FilterBank — use FilterBank(spec, config, "
+                    "num_slots=1)"
+                )
             dist_cfg = distributed.DistributedConfig(
                 mesh=config.mesh,
                 axis=config.axis,
@@ -480,8 +532,26 @@ class FilterBank:
         final, outs = bank.run(jax.random.key(0), video, 4096)
         trajectories = outs.estimate["pos"]                   # (T, N, 2)
 
-    Mesh distribution does not compose with the bank axis yet (see ROADMAP
-    "mesh × bank composition"); ``FilterConfig(mesh=...)`` raises.
+    Mesh distribution composes with the bank axis:
+    ``FilterConfig(mesh=...)`` shards slots over the ``bank_axis`` mesh
+    axis ("data") and each slot's particles over ``axis`` (resolved to
+    "model" when left at its single-filter default), and routes the step
+    through the shard_map'd banked step of ``repro.core.distributed`` —
+    per-slot online-LSE normalization merged with one ``pmax`` + ``psum``
+    per row, per-slot ``exact`` all-gather or ``local`` RNA ring-exchange
+    resampling, no collective ever crossing the bank axis.  Like the meshed
+    :class:`ParticleFilter`, the distributed schemes resample every frame
+    (``ess_threshold`` is ignored), and a meshed ``B=1`` bank in ``exact``
+    mode is bit-comparable to the meshed single filter.  ``num_slots`` must
+    divide by the bank-axis size and ``num_particles`` by the particle-axes
+    size; ``init_slot`` / ``reset_slot`` stay recompile-free and place the
+    reset onto the correct shard, so the continuous-batching scheduler in
+    ``repro.launch.serve`` admits mid-flight on a sharded bank::
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        bank = FilterBank(spec, FilterConfig(mesh=mesh, scheme="local"),
+                          num_slots=8)              # 4 slots per data shard
+        state = bank.init(key, 4096)                # 1024 particles/device
     """
 
     def __init__(
@@ -493,19 +563,46 @@ class FilterBank:
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         config = config or FilterConfig()
-        if config.mesh is not None:
-            raise NotImplementedError(
-                "FilterBank does not compose with mesh distribution yet "
-                "(ROADMAP: mesh x bank composition); run a ParticleFilter "
-                "per mesh or an unmeshed bank"
-            )
-        # Reuse the single-filter engine for registry resolution/validation.
-        self.filter = ParticleFilter(spec, config)
+        # Reuse the single-filter engine for registry resolution/validation
+        # (mesh withheld: the bank owns its own distributed step).
+        self.filter = ParticleFilter(spec, config.with_(mesh=None))
         self.spec = spec
-        self.config = self.filter.config
+        self.config = config
         self.policy = self.filter.policy
         self.backend = self.filter.backend
         self.num_slots = num_slots
+
+        self._dist_cfg = None
+        self._dist_steps: dict[bool, Callable] = {}
+        if config.mesh is not None:
+            from repro.core import distributed
+
+            part_axes = (
+                (config.axis,)
+                if isinstance(config.axis, str)
+                else tuple(config.axis)
+            )
+            if part_axes == (config.bank_axis,):
+                # Single-filter default: slots take the bank axis,
+                # particles move to "model".
+                part_axes = ("model",)
+            mesh_names = tuple(config.mesh.axis_names)
+            for a in (config.bank_axis, *part_axes):
+                if a not in mesh_names:
+                    raise ValueError(
+                        f"mesh has no axis {a!r} (mesh axes: {mesh_names}); "
+                        f"a meshed FilterBank shards slots over "
+                        f"bank_axis={config.bank_axis!r} and particles "
+                        f"over {part_axes}"
+                    )
+            self._dist_cfg = distributed.DistributedConfig(
+                mesh=config.mesh,
+                axis=part_axes,
+                scheme=config.scheme,
+                exchange_every=config.exchange_every,
+                exchange_frac=config.exchange_frac,
+                bank_axis=config.bank_axis,
+            )
 
         banked_norm = self.backend.normalize_banked
         if banked_norm is None:
@@ -559,6 +656,8 @@ class FilterBank:
     def init_slots(self, keys: jax.Array, num_particles: int) -> FilterState:
         """Banked init from explicit per-slot keys ((B,) key array)."""
         nb = self.num_slots
+        if self._dist_cfg is not None:
+            self._check_mesh_divisibility(num_particles)
         particles = jax.vmap(
             lambda k, s: self._init_slot_particles(k, num_particles, s)
         )(keys, jnp.arange(nb, dtype=jnp.int32))
@@ -567,7 +666,10 @@ class FilterBank:
             -jnp.log(float(num_particles)),
             self.policy.compute_dtype,
         )
-        return FilterState(particles, log_w, jnp.zeros((nb,), jnp.int32))
+        state = FilterState(particles, log_w, jnp.zeros((nb,), jnp.int32))
+        if self._dist_cfg is not None:
+            state = self._shard_state(state)
+        return state
 
     def init_slot(
         self, state: FilterState, slot, key: jax.Array
@@ -590,7 +692,13 @@ class FilterBank:
                 state.log_weights.dtype,
             )
         )
-        return FilterState(particles, log_w, state.step.at[slot].set(0))
+        state = FilterState(particles, log_w, state.step.at[slot].set(0))
+        if self._dist_cfg is not None:
+            # Pin the traced-index update back onto the bank sharding so a
+            # reset never pulls slot state off its shard (the scatter
+            # lowers to a masked in-place update on the owning device).
+            state = self._shard_state(state)
+        return state
 
     # A reset is a re-init: same fresh-cloud semantics, serving-loop name.
     reset_slot = init_slot
@@ -610,6 +718,8 @@ class FilterBank:
         multi-object tracker: every target sees the same frame).
         keys: (B,) per-slot PRNG keys.
         """
+        if self._dist_cfg is not None:
+            return self._step_distributed(state, observations, keys, shared_obs)
         spec, policy = self.spec, self.policy
         cdt = policy.compute_dtype
         nb, num_particles = state.log_weights.shape
@@ -737,6 +847,101 @@ class FilterBank:
             w, log_z = stability.normalize_log_weights(log_w, stable=False)
             return w, log_z, jnp.max(log_w, axis=-1)
         return self._normalize_banked_impl(log_w, self.policy)
+
+    def _dist_step(self, shared_obs: bool):
+        """The shard_map'd banked step, built once per obs mode."""
+        fn = self._dist_steps.get(shared_obs)
+        if fn is None:
+            from repro.core import distributed
+
+            local_resample = None
+            if self.config.scheme == "local":
+                local_resample = self.backend.ancestors_from_u0_banked.get(
+                    self.config.resampler
+                )
+            fn = distributed.make_dist_bank_step(
+                self.spec,
+                self.policy,
+                self._dist_cfg,
+                shared_obs=shared_obs,
+                local_stats=self.backend.local_stats_banked,
+                local_resample=local_resample,
+            )
+            self._dist_steps[shared_obs] = fn
+        return fn
+
+    def _step_distributed(self, state, observations, keys, shared_obs):
+        # Both distributed schemes resample every frame; the evidence
+        # increment closes over the (globally sharded) pre-step weights.
+        prev_lse = stability.logsumexp(
+            state.log_weights.astype(self.policy.accum_dtype), axis=-1
+        )
+        particles, log_w, step, estimate, ess, lse, max_lw = self._dist_step(
+            shared_obs
+        )(state.particles, state.log_weights, state.step, observations, keys)
+        out = FilterOutput(
+            estimate=estimate,
+            ess=ess,
+            log_z_inc=lse - prev_lse,
+            resampled=jnp.ones((self.num_slots,), bool),
+            max_loglik=max_lw,
+        )
+        return FilterState(particles, log_w, step), out
+
+    def _check_mesh_divisibility(self, num_particles: int) -> None:
+        cfg = self._dist_cfg
+        shape = dict(zip(cfg.mesh.axis_names, cfg.mesh.devices.shape))
+        d_bank = shape[cfg.bank_axis]
+        d_part = cfg.num_shards
+        if self.num_slots % d_bank:
+            raise ValueError(
+                f"num_slots={self.num_slots} must divide by the "
+                f"{cfg.bank_axis!r} axis size {d_bank}"
+            )
+        if num_particles % d_part:
+            raise ValueError(
+                f"num_particles={num_particles} must divide by the "
+                f"particle axes {cfg.axes} size {d_part}"
+            )
+
+    def _shard_state(self, state: FilterState) -> FilterState:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        cfg = self._dist_cfg
+        mesh = self.config.mesh
+        sh_bp = NamedSharding(mesh, P(cfg.bank_axis, cfg.axes))
+        sh_b = NamedSharding(mesh, P(cfg.bank_axis))
+
+        def place(x, sh):
+            if isinstance(x, jax.core.Tracer):
+                return jax.lax.with_sharding_constraint(x, sh)
+            return jax.device_put(x, sh)
+
+        paxes = self.spec.particle_axes
+        if paxes is None:
+            particles = jax.tree.map(
+                lambda x: place(x, sh_bp), state.particles
+            )
+        else:
+            # Leaves whose particle axis is not leading (LM caches) shard
+            # on their own particle dimension.
+            particles = jax.tree.map(
+                lambda x, ax: place(
+                    x,
+                    NamedSharding(
+                        mesh,
+                        P(cfg.bank_axis, *([None] * ax), cfg.axes),
+                    ),
+                ),
+                state.particles,
+                paxes,
+            )
+        return FilterState(
+            particles=particles,
+            log_weights=place(state.log_weights, sh_bp),
+            step=place(state.step, sh_b),
+        )
 
 
 def _weighted_mean(particles, weights, adt):

@@ -63,6 +63,13 @@ class SMCSpec:
                 shared spec start each slot differently (e.g. per-target
                 start positions in multi-object tracking).  Falls back to
                 ``init`` when None; ignored by ``ParticleFilter``.
+    particle_axes: pytree of ints matching ``particles`` — each leaf's
+                particle-axis position, for pytrees whose particle axis is
+                not leading everywhere (LM caches).  Mesh distribution uses
+                it to shard, all-gather, and ring-exchange each leaf along
+                the right dimension; None means axis 0 everywhere.  Specs
+                setting it should also set ``gather`` (same layout
+                knowledge) and, under a meshed bank, ``summary``.
     """
 
     init: Callable[..., Any]
@@ -71,6 +78,7 @@ class SMCSpec:
     gather: Callable[..., Any] | None = None
     summary: Callable[..., Any] | None = None
     slot_init: Callable[..., Any] | None = None
+    particle_axes: Any = None
 
 
 class FilterState(NamedTuple):

@@ -172,6 +172,16 @@ def make_multi_tracker_filter(
     Lost targets can be re-acquired mid-stream without recompiling:
     ``state = bank.reset_slot(state, slot, key)`` redraws that slot's cloud
     at its start position.
+
+    Meshed multi-object mode: hand the bank a mesh through
+    ``filter_config`` and targets shard over "data" while each target's
+    particles shard over "model" — the same trajectories API at
+    multi-device scale (the distributed schemes resample every frame)::
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        bank = make_multi_tracker_filter(
+            cfg, policy, starts,                   # len(starts) % 2 == 0
+            FilterConfig(mesh=mesh, scheme="local"))
     """
     starts = jnp.asarray(starts)
     if starts.ndim != 2 or starts.shape[-1] != 2:

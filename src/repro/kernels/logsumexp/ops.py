@@ -4,6 +4,12 @@
 ``normalize_weights_batched`` handles a bank (2-D, one row per filter) in a
 single kernel launch with per-row fp32 carries — the kernel-level face of
 :class:`repro.core.engine.FilterBank`.
+
+``online_logsumexp`` / ``online_logsumexp_batched`` expose only the (max,
+lse) reduction state: under mesh distribution they are the *shard-local*
+pass of the paper's Eq.-5 — each device reduces its slice with the fused
+kernel, and ``repro.core.distributed.dist_normalize[_banked]`` merges the
+per-shard states with one ``pmax`` + one ``psum`` per row.
 """
 
 from __future__ import annotations
@@ -20,6 +26,7 @@ __all__ = [
     "normalize_weights",
     "normalize_weights_batched",
     "online_logsumexp",
+    "online_logsumexp_batched",
 ]
 
 DEFAULT_BLOCK_ROWS = 64
@@ -86,6 +93,22 @@ def online_logsumexp(
 ) -> tuple[jax.Array, jax.Array]:
     """(max, lse) only — same kernel, weights output discarded by DCE-safe slice."""
     _, m, lse = normalize_weights(
+        log_w, block_rows=block_rows, interpret=interpret
+    )
+    return m, lse
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def online_logsumexp_batched(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row (max (B,), lse (B,)) of a (B, P) bank — the shard-local
+    online-LSE state of the meshed :class:`~repro.core.engine.FilterBank`
+    (``dist_normalize_banked`` merges these across the particle axes)."""
+    _, m, lse = normalize_weights_batched(
         log_w, block_rows=block_rows, interpret=interpret
     )
     return m, lse

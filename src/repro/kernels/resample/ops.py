@@ -3,6 +3,12 @@
 1-D entry points handle one filter; the ``*_batched`` forms take a bank
 (leading B axis, one independent filter per row) and run it as a single
 kernel launch with per-row fp32 carries and per-row systematic offsets.
+
+``systematic_ancestors_batched`` takes explicit per-row offsets instead of
+keys: inside a meshed :class:`~repro.core.engine.FilterBank` the offsets
+derive from the per-slot key chain *and* the device index (the RNA
+``local`` scheme of ``repro.core.distributed``), so the caller owns the
+u0 derivation and the kernel only inverts the CDF.
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ from repro.kernels.resample.resample import (
 
 __all__ = [
     "inclusive_cumsum",
+    "systematic_ancestors_batched",
     "systematic_resample",
     "systematic_resample_batched",
 ]
@@ -132,6 +139,40 @@ def systematic_resample_batched(
         interpret = should_interpret()
     nbank, n = weights.shape
     u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _systematic_impl(
+        u0,
+        weights,
+        num_out=num_out or n,
+        block_rows=block_rows,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "block_rows", "block_rows_out", "interpret"),
+)
+def systematic_ancestors_batched(
+    u0: jax.Array,
+    weights: jax.Array,
+    *,
+    num_out: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows_out: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-row systematic ancestors from explicit offsets.
+
+    ``u0``: (B,) per-row offsets in [0, 1) — already drawn by the caller
+    (the meshed bank folds the device index into each slot's key before
+    drawing, so every shard inverts a distinct slice of its slot's
+    systematic grid).  Semantics otherwise match
+    ``systematic_resample_batched``.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = weights.shape[-1]
     return _systematic_impl(
         u0,
         weights,

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --reduce \
         --batch 8 --steps 32 [--smc --slots 4 --requests 8 \
-        --particles-per-slot 4]
+        --particles-per-slot 4 --mesh 2x2 --async-admit]
 
 Demonstrates the serving stack end to end on CPU with a reduced config:
 sharded weights, ring-buffer/sliding caches, one fused decode step for the
@@ -16,6 +16,18 @@ continuous-batching scheduler: requests are admitted into free slots
 mid-flight, retired on completion, and the bank steps every tick regardless
 of occupancy (the scheduler never waits to fill the batch and never
 recompiles; slot lifecycle is ``reset_slot`` by traced index).
+
+The bank composes with a device mesh (``--mesh DxM``): slots shard over
+the "data" axis and each slot's particles over "model" (the engine's
+mesh × bank composition — ``repro.core.distributed.make_dist_bank_step``),
+so the same scheduler serves a multi-device bank unchanged: admissions
+place their traced-index reset onto the owning shard, and every retire
+reads back only that request's slot.  ``--async-admit`` switches the
+scheduler to the double-buffered path: the next bank step is dispatched
+*before* the host blocks on the previous tick's counters, so admit/retire
+bookkeeping (and the host↔device slot swaps it triggers) overlap device
+compute instead of serializing with it — identical schedules, one step of
+read-back lag.
 """
 
 from __future__ import annotations
@@ -38,13 +50,25 @@ def make_smc_decode_spec(
     The transition runs one batched decode step and samples at the
     exploration temperature; the likelihood is the reward recorded by the
     transition (the model's own T=1 log-prob of the sampled token).
-    ``gather`` locates the particle axis per cache leaf; ``summary`` keeps
+    ``gather`` selects ancestors along each cache leaf's *known* particle
+    axis — derived once from the cache layout, never guessed from shapes
+    (a dimension that merely equals the particle count, e.g. a layer or
+    head count, must not be mistaken for the batch axis); ``summary`` keeps
     the per-step estimate to one scalar (mean reward) instead of averaging
     whole caches.  ``steps`` sizes the cache/history buffers — the *maximum*
     request length a serving slot can hold.
     """
     from repro.core.filter import SMCSpec
     from repro.models import model as M
+
+    # Per-leaf particle axis: the one dimension whose extent follows the
+    # batch argument of the cache layout (shape-only — nothing allocated).
+    cache_axes = jax.tree.map(
+        lambda a, b: _changed_axis(a.shape, b.shape),
+        M.cache_specs(cfg, 2, steps + 1),
+        M.cache_specs(cfg, 3, steps + 1),
+        is_leaf=_is_param_spec,
+    )
 
     def init(key, n):
         del key
@@ -87,11 +111,13 @@ def make_smc_decode_spec(
         return p["reward"]
 
     def gather(p, anc):
-        n = p["tok"].shape[0]
-        take = lambda x: jnp.take(x, anc, axis=_batch_axis(x, n))  # noqa: E731
         return {
             "tok": jnp.take(p["tok"], anc, axis=0),
-            "cache": jax.tree.map(take, p["cache"]),
+            "cache": jax.tree.map(
+                lambda x, ax: jnp.take(x, anc, axis=ax),
+                p["cache"],
+                cache_axes,
+            ),
             "reward": jnp.take(p["reward"], anc, axis=0),
             "cum_reward": jnp.take(p["cum_reward"], anc, axis=0),
             "seq": jnp.take(p["seq"], anc, axis=0),
@@ -100,7 +126,35 @@ def make_smc_decode_spec(
     def summary(p, w):
         return {"reward": jnp.sum(w * p["reward"].astype(w.dtype))}
 
-    return SMCSpec(init, transition, loglik, gather=gather, summary=summary)
+    return SMCSpec(
+        init,
+        transition,
+        loglik,
+        gather=gather,
+        summary=summary,
+        particle_axes={
+            "tok": 0,
+            "cache": cache_axes,
+            "reward": 0,
+            "cum_reward": 0,
+            "seq": 0,
+        },
+    )
+
+
+def _request_budgets(
+    key: jax.Array, num_requests: int, min_steps: int, max_steps: int
+) -> np.ndarray:
+    """Per-request decode budgets in [min_steps, max_steps], keyed.
+
+    The whole workload derives from the scheduler key — two seeds draw two
+    schedules, one seed reproduces (the old hardcoded
+    ``np.random.default_rng(0)`` made every ``--seed`` serve the same
+    traffic).
+    """
+    return np.asarray(
+        jax.random.randint(key, (num_requests,), min_steps, max_steps + 1)
+    )
 
 
 def run_continuous_batching(
@@ -112,31 +166,44 @@ def run_continuous_batching(
     key: jax.Array,
     arrival_every: int = 1,
     min_steps: int | None = None,
+    async_admit: bool = False,
 ) -> dict:
     """Admit → step → retire loop over a FilterBank of decode slots.
 
     Requests arrive on a fixed schedule (request ``i`` at tick
-    ``i * arrival_every``) with budgets in [min_steps, max_steps].  A free
-    slot is claimed by ``reset_slot`` (traced slot index — no recompile);
-    the whole bank steps every tick whether or not every slot holds a
-    request; a slot retires the moment its step counter reaches its
-    request's budget, returning the highest-cumulative-reward particle's
-    sequence.  Returns per-request results plus occupancy/latency stats.
+    ``i * arrival_every``) with key-derived budgets in
+    [min_steps, max_steps].  A free slot is claimed by ``reset_slot``
+    (traced slot index — no recompile); the whole bank steps every tick
+    whether or not every slot holds a request; a slot retires the moment
+    its step counter reaches its request's budget, returning the
+    highest-cumulative-reward particle's sequence.  Works unchanged over a
+    mesh-sharded bank (``FilterConfig(mesh=...)``): resets land on the
+    owning shard, retires read back per-slot rows.
+
+    ``async_admit`` double-buffers the loop: each tick's bank step is
+    dispatched *before* the host blocks on the previous tick's counters,
+    so retire/extract bookkeeping overlaps device compute (the retiring
+    slot's data is read from the already-materialized pre-step state — the
+    in-flight step never gates a host decision).  While free slots exist
+    the schedule matches the synchronous path tick for tick; when a
+    request queues for a freed slot its admission lags by one tick — the
+    price of never stalling the device on a host decision.  Returns
+    per-request results plus occupancy/latency stats.
     """
     nb = bank.num_slots
     if min_steps is None:
         min_steps = max(1, max_steps // 2)
     if not 0 <= min_steps <= max_steps:
-        raise ValueError(f"need 0 <= min_steps <= max_steps, got "
-                         f"{min_steps} > {max_steps}")
-    lengths = np.random.default_rng(0).integers(
-        min_steps, max_steps + 1, num_requests
-    )
+        raise ValueError(
+            f"need 0 <= min_steps <= max_steps, got min_steps={min_steps}, "
+            f"max_steps={max_steps}"
+        )
+    k_state, k_admit, k_run, k_sched = jax.random.split(key, 4)
+    lengths = _request_budgets(k_sched, num_requests, min_steps, max_steps)
     pending = collections.deque(
         {"id": i, "steps": int(lengths[i]), "arrival": i * arrival_every}
         for i in range(num_requests)
     )
-    k_state, k_admit, k_run = jax.random.split(key, 3)
     state = bank.init(k_state, particles)
     obs = jnp.zeros((nb,), jnp.int32)  # the decode spec ignores observations
     step = bank.jit_step
@@ -144,7 +211,8 @@ def run_continuous_batching(
     active: dict[int, dict] = {}
     free = list(range(nb))[::-1]
     results, tick, busy_slot_ticks = [], 0, 0
-    while pending or active:
+
+    def admit(state, tick):
         while free and pending and pending[0]["arrival"] <= tick:
             req = pending.popleft()
             slot = free.pop()
@@ -155,31 +223,54 @@ def run_continuous_batching(
             )
             req["admitted_tick"] = tick
             active[slot] = req
+        return state
+
+    def retire(ex_state, ex_tick):
+        """Retire against a state holding ``ex_tick`` completed steps."""
+        if not active:
+            return
+        steps_now = np.asarray(ex_state.step)
+        done = [
+            s
+            for s in active
+            if active[s]["admitted_tick"] < ex_tick
+            and steps_now[s] >= active[s]["steps"]
+        ]
+        if not done:
+            return
+        cum = np.asarray(ex_state.particles["cum_reward"], np.float32)
+        seqs = np.asarray(ex_state.particles["seq"])
+        for slot in done:
+            req = active.pop(slot)
+            best = int(np.argmax(cum[slot]))
+            results.append(
+                {
+                    "id": req["id"],
+                    "steps": req["steps"],
+                    "tokens": seqs[slot, best, : req["steps"]],
+                    "admitted_tick": req["admitted_tick"],
+                    "finished_tick": ex_tick,
+                }
+            )
+            free.append(slot)
+
+    while pending or active:
+        state = admit(state, tick)
         keys = jax.random.split(jax.random.fold_in(k_run, tick), nb)
-        state, _ = step(state, obs, keys)
-        tick += 1
-        busy_slot_ticks += len(active)
-        if active:
-            steps_now = np.asarray(state.step)
-            done = [s for s in active if steps_now[s] >= active[s]["steps"]]
-            if done:
-                cum = np.asarray(
-                    state.particles["cum_reward"], np.float32
-                )
-                seqs = np.asarray(state.particles["seq"])
-                for slot in done:
-                    req = active.pop(slot)
-                    best = int(np.argmax(cum[slot]))
-                    results.append(
-                        {
-                            "id": req["id"],
-                            "steps": req["steps"],
-                            "tokens": seqs[slot, best, : req["steps"]],
-                            "admitted_tick": req["admitted_tick"],
-                            "finished_tick": tick,
-                        }
-                    )
-                    free.append(slot)
+        if async_admit:
+            # Dispatch first, decide later: the retire pass below blocks
+            # only on the *pre-step* state (already materialized), while
+            # this tick's step runs on device.
+            new_state, _ = step(state, obs, keys)
+            busy_slot_ticks += len(active)
+            retire(state, tick)
+            state = new_state
+            tick += 1
+        else:
+            state, _ = step(state, obs, keys)
+            tick += 1
+            busy_slot_ticks += len(active)
+            retire(state, tick)
     results.sort(key=lambda r: r["id"])
     return {
         "results": results,
@@ -208,6 +299,16 @@ def main() -> None:
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="--smc: ticks between request arrivals")
     ap.add_argument("--ess-frac", type=float, default=0.5)
+    ap.add_argument("--mesh", default="",
+                    help="--smc: DxM device mesh, e.g. 2x2 — slots shard "
+                         "over 'data' (D), particles over 'model' (M); "
+                         "needs D*M visible devices")
+    ap.add_argument("--scheme", default="local",
+                    choices=["exact", "local"],
+                    help="--smc --mesh: distributed resampling scheme")
+    ap.add_argument("--async-admit", action="store_true",
+                    help="--smc: double-buffered admit/retire overlapping "
+                         "the bank step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -237,10 +338,27 @@ def main() -> None:
             temperature=args.temperature, steps=args.steps,
         )
         # Engine resampling criterion: ESS < frac * particles, exact
-        # comparison (frac >= 1 -> resample every step).
+        # comparison (frac >= 1 -> resample every step).  With --mesh the
+        # bank shards slots x particles over data x model and the
+        # distributed scheme resamples every step.
+        mesh = None
+        if args.mesh:
+            from repro import compat
+
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+            mesh = compat.make_mesh(
+                (d, m),
+                ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2,
+            )
         bank = FilterBank(
             spec,
-            FilterConfig(policy=policy, ess_threshold=args.ess_frac),
+            FilterConfig(
+                policy=policy,
+                ess_threshold=args.ess_frac,
+                mesh=mesh,
+                scheme=args.scheme,
+            ),
             num_slots=args.slots,
         )
         stats = run_continuous_batching(
@@ -250,6 +368,7 @@ def main() -> None:
             particles=args.particles_per_slot,
             key=jax.random.key(args.seed),
             arrival_every=args.arrival_every,
+            async_admit=args.async_admit,
         )
         dt = time.perf_counter() - t0
         n_steps = sum(r["steps"] for r in stats["results"])
@@ -257,7 +376,10 @@ def main() -> None:
         print(
             f"arch={cfg.name} smc slots={args.slots} "
             f"requests={args.requests} particles/slot="
-            f"{args.particles_per_slot} ticks={stats['ticks']} "
+            f"{args.particles_per_slot}"
+            + (f" mesh={args.mesh} scheme={args.scheme}" if mesh else "")
+            + (" async" if args.async_admit else "")
+            + f" ticks={stats['ticks']} "
             f"occupancy={stats['occupancy']:.0%} "
             f"({dt / ticks * 1e3:.1f} ms/tick incl. compile, "
             f"{n_steps / dt:.1f} request-steps/s)"
@@ -292,10 +414,40 @@ def main() -> None:
 
 
 def _batch_axis(x, n):
-    for i, d in enumerate(x.shape):
-        if d == n:
-            return i
-    raise ValueError(f"no batch axis in {x.shape}")
+    """The unique axis of extent ``n`` — raises when absent *or ambiguous*.
+
+    Guessing "first dimension equal to n" silently picks the wrong axis for
+    square shapes (batch == seq-len, batch == num-layers, ...); callers
+    that know the layout should thread the axis through instead (see
+    ``make_smc_decode_spec``'s cache_axes).
+    """
+    hits = [i for i, d in enumerate(x.shape) if d == n]
+    if not hits:
+        raise ValueError(f"no batch axis of extent {n} in {x.shape}")
+    if len(hits) > 1:
+        raise ValueError(
+            f"ambiguous batch axis: {len(hits)} dimensions of extent {n} "
+            f"in {x.shape} (axes {hits}); thread the known axis through "
+            "instead of guessing"
+        )
+    return hits[0]
+
+
+def _changed_axis(shape_a: tuple, shape_b: tuple) -> int:
+    """The single axis on which two layouts of different batch size differ."""
+    diff = [i for i, (a, b) in enumerate(zip(shape_a, shape_b)) if a != b]
+    if len(diff) != 1:
+        raise ValueError(
+            f"expected exactly one batch-dependent axis, got {diff} "
+            f"between {shape_a} and {shape_b}"
+        )
+    return diff[0]
+
+
+def _is_param_spec(x) -> bool:
+    from repro.models.params import ParamSpec
+
+    return isinstance(x, ParamSpec)
 
 
 if __name__ == "__main__":

@@ -244,14 +244,45 @@ def test_bank_metropolis_resampler(video):
     assert est.shape == (FRAMES, 2, 2) and np.isfinite(est).all()
 
 
-def test_bank_rejects_mesh():
+def test_bank_mesh_validation():
+    """Mesh × bank composition validates its axes up front: the bank needs
+    both a slot axis and a particle axis on the mesh."""
     spec = make_tracker_spec(
         TrackerConfig(num_particles=P, height=H, width=W), get_policy("fp32")
     )
-    with pytest.raises(NotImplementedError, match="mesh"):
-        FilterBank(spec, FilterConfig(mesh=object()), num_slots=2)
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="mesh has no axis 'model'"):
+        FilterBank(spec, FilterConfig(mesh=mesh), num_slots=2)
+    with pytest.raises(ValueError, match="bank_axis"):
+        FilterBank(
+            spec,
+            FilterConfig(mesh=mesh, axis="data", bank_axis="x"),
+            num_slots=2,
+        )
     with pytest.raises(ValueError, match="num_slots"):
         FilterBank(spec, num_slots=0)
+
+
+def test_meshed_bank_single_device_mesh(video):
+    """A (1, 1) data×model mesh runs the full distributed bank path in
+    process (shard_map over one device) and stays a working filter."""
+    pol = get_policy("fp32")
+    spec = make_tracker_spec(
+        TrackerConfig(num_particles=P, height=H, width=W), pol
+    )
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bank = FilterBank(
+        spec, FilterConfig(policy=pol, mesh=mesh, scheme="exact"), num_slots=2
+    )
+    state = bank.init(jax.random.key(1), P)
+    for t in range(3):
+        ks = jax.random.split(jax.random.fold_in(jax.random.key(2), t), 2)
+        state, out = bank.jit_step_shared(state, video[t], ks)
+    assert np.isfinite(np.asarray(out.estimate["pos"])).all()
+    assert np.asarray(state.step).tolist() == [3, 3]
+    # resets compose with the meshed bank
+    state = bank.jit_init_slot(state, jnp.int32(0), jax.random.key(9))
+    assert np.asarray(state.step).tolist() == [0, 3]
 
 
 def test_continuous_batching_scheduler():

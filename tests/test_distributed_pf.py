@@ -56,3 +56,24 @@ def test_exact_scheme_matches_single_device():
     out = run_with_devices(TRACK.format(scheme="exact", policy="fp32"), devices=8)
     rmse = float(out.strip().split()[-1])
     assert rmse < 1.0, rmse
+
+
+def test_distributed_config_validation():
+    """Bad scheme/period/fraction/axis combinations fail at construction —
+    a zero period or fraction would silently disable the RNA exchange."""
+    from repro.core.distributed import DistributedConfig
+
+    DistributedConfig(mesh=None)  # defaults are valid
+    DistributedConfig(mesh=None, exchange_every=1, exchange_frac=1.0)
+    with pytest.raises(KeyError, match="scheme"):
+        DistributedConfig(mesh=None, scheme="gossip")
+    with pytest.raises(ValueError, match="exchange_every"):
+        DistributedConfig(mesh=None, exchange_every=0)
+    with pytest.raises(ValueError, match="exchange_every"):
+        DistributedConfig(mesh=None, exchange_every=-3)
+    with pytest.raises(ValueError, match="exchange_frac"):
+        DistributedConfig(mesh=None, exchange_frac=0.0)
+    with pytest.raises(ValueError, match="exchange_frac"):
+        DistributedConfig(mesh=None, exchange_frac=1.5)
+    with pytest.raises(ValueError, match="bank_axis"):
+        DistributedConfig(mesh=None, axis="model", bank_axis="model")

@@ -1,0 +1,212 @@
+"""Serving-scheduler regressions: keyed budgets, batch-axis threading,
+argument validation, and sync/async scheduler equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import (
+    _batch_axis,
+    _request_budgets,
+    run_continuous_batching,
+)
+
+
+def test_request_budgets_follow_the_key():
+    """Two seeds draw two workloads; one seed reproduces (the old code
+    hardcoded np.random.default_rng(0), so --seed never changed traffic)."""
+    a = _request_budgets(jax.random.key(0), 32, 1, 64)
+    b = _request_budgets(jax.random.key(1), 32, 1, 64)
+    a2 = _request_budgets(jax.random.key(0), 32, 1, 64)
+    assert a.shape == (32,)
+    assert (a >= 1).all() and (a <= 64).all()
+    assert not np.array_equal(a, b)
+    np.testing.assert_array_equal(a, a2)
+
+
+def test_min_steps_validation_message():
+    """The ValueError names both bounds — it used to print
+    "{min_steps} > {max_steps}" even when the failure was min_steps < 0."""
+
+    class _Bank:
+        num_slots = 2
+
+    with pytest.raises(ValueError, match=r"min_steps=-1.*max_steps=8"):
+        run_continuous_batching(
+            _Bank(),
+            num_requests=2,
+            max_steps=8,
+            particles=2,
+            key=jax.random.key(0),
+            min_steps=-1,
+        )
+    with pytest.raises(ValueError, match=r"min_steps=9.*max_steps=8"):
+        run_continuous_batching(
+            _Bank(),
+            num_requests=2,
+            max_steps=8,
+            particles=2,
+            key=jax.random.key(0),
+            min_steps=9,
+        )
+
+
+def test_batch_axis_raises_on_ambiguity():
+    """A dimension that merely equals the batch count must not be guessed:
+    the first-match rule silently picked the layer axis for square shapes."""
+    x = jnp.zeros((2, 2, 7, 2, 32))  # (layers, batch, seq, kv_heads, dh)
+    with pytest.raises(ValueError, match="ambiguous"):
+        _batch_axis(x, 2)
+    with pytest.raises(ValueError, match="no batch axis"):
+        _batch_axis(x, 5)
+    assert _batch_axis(jnp.zeros((4, 7, 32)), 7) == 1
+
+
+def test_decode_spec_gather_threads_cache_batch_axis():
+    """With particles == num_layers == kv_heads (triply square cache
+    shapes), the decode spec's gather must still select ancestors along the
+    true batch axis of every cache leaf."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.precision import get_policy
+    from repro.launch.serve import make_smc_decode_spec
+    from repro.models import model as M
+
+    cfg = reduced_config(get_config("minitron-8b"))
+    pol = get_policy("fp32")
+    n, steps = 2, 6  # n == cfg.num_layers == cfg.num_kv_heads
+    params = M.init_params(jax.random.key(1), cfg, pol.param_dtype)
+    decode = jax.jit(lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol))
+    spec = make_smc_decode_spec(
+        params, cfg, pol, decode, temperature=1.0, steps=steps
+    )
+    assert spec.particle_axes is not None
+
+    p = spec.init(jax.random.key(0), n)
+    p = spec.transition(jax.random.key(2), p, jnp.int32(0))
+    anc = jnp.asarray([1, 1], jnp.int32)
+    g = spec.gather(p, anc)
+    # leading-axis leaves
+    np.testing.assert_array_equal(np.asarray(g["tok"]), np.asarray(p["tok"])[[1, 1]])
+    np.testing.assert_array_equal(np.asarray(g["seq"]), np.asarray(p["seq"])[[1, 1]])
+    # cache leaves: ancestors taken along each leaf's *true* batch axis
+    flat_p = jax.tree.leaves(p["cache"])
+    flat_g = jax.tree.leaves(g["cache"])
+    flat_ax = jax.tree.leaves(spec.particle_axes["cache"])
+    assert any(ax != 0 for ax in flat_ax)  # the layout that broke guessing
+    for leaf_p, leaf_g, ax in zip(flat_p, flat_g, flat_ax):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_g), np.take(np.asarray(leaf_p), [1, 1], axis=ax)
+        )
+
+
+def test_async_admit_matches_sync_when_slots_free():
+    """With a slot for every request and no retirement before the last
+    admission (equal budgets), the double-buffered path serves the
+    identical schedule (same slots, admissions, tokens, latencies)."""
+    from repro.core import FilterBank, FilterConfig, SMCSpec
+    from repro.core.precision import get_policy
+
+    steps = 5
+
+    def init(key, n):
+        del key
+        return dict(
+            tok=jnp.zeros((n,), jnp.int32),
+            reward=jnp.zeros((n,), jnp.float32),
+            cum_reward=jnp.zeros((n,), jnp.float32),
+            seq=jnp.zeros((n, steps), jnp.int32),
+        )
+
+    def transition(key, p, step):
+        tok = jax.random.randint(key, p["tok"].shape, 0, 100)
+        reward = jax.random.uniform(
+            jax.random.fold_in(key, 1), p["reward"].shape
+        )
+        pos = jnp.minimum(step, steps - 1)
+        return dict(
+            tok=tok,
+            reward=reward,
+            cum_reward=p["cum_reward"] + reward,
+            seq=p["seq"].at[:, pos].set(tok),
+        )
+
+    def loglik(p, obs, step):
+        del obs, step
+        return p["reward"]
+
+    spec = SMCSpec(init, transition, loglik)
+    out = {}
+    for mode in (False, True):
+        bank = FilterBank(
+            spec,
+            FilterConfig(policy=get_policy("fp32"), ess_threshold=0.5),
+            num_slots=4,
+        )
+        out[mode] = run_continuous_batching(
+            bank,
+            num_requests=4,
+            max_steps=steps,
+            particles=3,
+            key=jax.random.key(7),
+            arrival_every=1,
+            min_steps=steps,  # equal budgets: no slot frees mid-admission
+            async_admit=mode,
+        )
+    sync, async_ = out[False]["results"], out[True]["results"]
+    assert len(sync) == len(async_) == 4
+    for rs, ra in zip(sync, async_):
+        assert rs["id"] == ra["id"]
+        assert rs["steps"] == ra["steps"]
+        assert rs["admitted_tick"] == ra["admitted_tick"]
+        assert rs["finished_tick"] == ra["finished_tick"]
+        np.testing.assert_array_equal(rs["tokens"], ra["tokens"])
+
+
+def test_meshed_engine_rejects_non_leading_particle_axes():
+    """Specs with non-leading particle axes (particle_axes set) fail fast
+    under a meshed ParticleFilter (use FilterBank B=1) and under a meshed
+    bank without the layout-aware gather/summary hooks — silent axis-0
+    gathers would corrupt cache leaves."""
+    from repro.core import FilterConfig, ParticleFilter, SMCSpec
+    from repro.core.distributed import DistributedConfig, make_dist_bank_step
+    from repro.core.precision import get_policy
+
+    def init(key, n):
+        del key
+        return {"x": jnp.zeros((3, n))}  # particle axis 1, not leading
+
+    spec = SMCSpec(
+        init,
+        lambda k, p, s: p,
+        lambda p, o, s: jnp.zeros(p["x"].shape[1]),
+        particle_axes={"x": 1},
+    )
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="FilterBank"):
+        ParticleFilter(spec, FilterConfig(mesh=mesh))
+    with pytest.raises(ValueError, match="summary AND.*gather"):
+        make_dist_bank_step(
+            spec,
+            get_policy("fp32"),
+            DistributedConfig(mesh=mesh, axis=("data",), bank_axis="b"),
+        )
+
+
+def test_engine_rejects_disabled_exchange():
+    """FilterConfig(mesh=...) with a zero period or out-of-range fraction
+    must fail fast instead of silently never exchanging."""
+    from repro.core import FilterConfig, ParticleFilter
+    from repro.core.tracking import TrackerConfig, make_tracker_spec
+    from repro.core.precision import get_policy
+
+    spec = make_tracker_spec(TrackerConfig(num_particles=64), get_policy("fp32"))
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="exchange_every"):
+        ParticleFilter(
+            spec, FilterConfig(mesh=mesh, scheme="local", exchange_every=0)
+        )
+    with pytest.raises(ValueError, match="exchange_frac"):
+        ParticleFilter(
+            spec, FilterConfig(mesh=mesh, scheme="local", exchange_frac=0.0)
+        )
