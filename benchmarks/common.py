@@ -2,11 +2,13 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 
-__all__ = ["time_fn", "csv_row"]
+__all__ = ["time_fn", "csv_row", "write_bench_json"]
 
 
 def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -26,3 +28,25 @@ def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def write_bench_json(name: str, records: list[dict], **meta) -> str:
+    """Write a machine-readable ``BENCH_<name>.json`` next to the cwd.
+
+    ``records`` is a list of flat dicts (one per swept config — aggregate
+    particle-steps/s and friends); ``meta`` adds sweep-level fields
+    (device count, derived summary numbers).  CI and downstream tooling
+    parse these instead of scraping the CSV stdout.
+    """
+    payload = {
+        "bench": name,
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        **meta,
+        "records": records,
+    }
+    path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

@@ -21,6 +21,15 @@ forced host devices::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src:. python benchmarks/fig5_throughput.py mesh_bank_sweep
+
+``ragged_sweep`` measures the per-request particle-budget payoff: a
+key-derived mix of request budgets served (a) padded to one max-width
+dense bank vs (b) packed into per-size-class ragged banks — the useful
+(budgeted) particle-steps/s gain of not paying max-P for easy requests.
+
+Every sweep also emits a machine-readable ``BENCH_<sweep>.json``
+(aggregate particle-steps/s per config) via
+``benchmarks.common.write_bench_json``.
 """
 
 from __future__ import annotations
@@ -30,7 +39,7 @@ import contextlib
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, time_fn
+from benchmarks.common import csv_row, time_fn, write_bench_json
 from repro import compat
 from repro.core import (
     FilterConfig,
@@ -41,7 +50,10 @@ from repro.core import (
 )
 
 
-def run(sizes=(32_768, 65_536)) -> list[str]:
+def run(sizes=(32_768, 65_536), ragged=(8, 256, 2_048)) -> list[str]:
+    """Paper grid + bank/mesh/ragged sweeps.  ``ragged`` is the
+    (num_requests, p_min, p_max) shape of the ragged sweep so quick runs
+    can shrink it alongside ``sizes``."""
     from repro.data.synthetic_video import VideoConfig, generate_video
 
     video, _ = generate_video(
@@ -49,6 +61,7 @@ def run(sizes=(32_768, 65_536)) -> list[str]:
     )
     frame = video[0]
     rows = []
+    records = []
     base_us = {}
     for n in sizes:
         for pname in ["fp64", "fp32", "bf16", "fp16"]:
@@ -81,7 +94,20 @@ def run(sizes=(32_768, 65_536)) -> list[str]:
                     f"speedup_vs_fp64={speedup:.2f}",
                 )
             )
+            records.append(
+                {
+                    "particles": n,
+                    "policy": pname,
+                    "us_per_step": us,
+                    "particle_steps_per_s": n / us * 1e6,
+                    "speedup_vs_fp64": speedup,
+                }
+            )
+    write_bench_json("fig5", records)
     rows.extend(bank_sweep())
+    rows.extend(
+        ragged_sweep(num_requests=ragged[0], p_min=ragged[1], p_max=ragged[2])
+    )
     return rows
 
 
@@ -110,6 +136,7 @@ def bank_sweep(
     frame = video[0].astype(jnp.float32)
     pol = get_policy(policy_name)
     rows = []
+    records = []
     for p in particle_sizes:
         base_rate = None
         for b in bank_sizes:
@@ -140,6 +167,17 @@ def bank_sweep(
                     f"scaling_vs_B1={rate / base_rate:.2f}",
                 )
             )
+            records.append(
+                {
+                    "bank": b,
+                    "particles": p,
+                    "policy": policy_name,
+                    "us_per_step": us,
+                    "agg_particle_steps_per_s": rate,
+                    "scaling_vs_B1": rate / base_rate,
+                }
+            )
+    write_bench_json("bank", records)
     rows.extend(mesh_bank_sweep())
     return rows
 
@@ -172,6 +210,7 @@ def mesh_bank_sweep(
     pol = get_policy(policy_name)
     n_dev = len(jax.devices())
     rows = []
+    records = []
     for p in particle_sizes:
         for b in bank_sizes:
             base_rate = None
@@ -218,6 +257,165 @@ def mesh_bank_sweep(
                         f"scaling_vs_1x1={rate / base_rate:.2f}",
                     )
                 )
+                records.append(
+                    {
+                        "mesh": [d_data, d_model],
+                        "bank": b,
+                        "particles": p,
+                        "policy": policy_name,
+                        "scheme": scheme,
+                        "us_per_step": us,
+                        "agg_particle_steps_per_s": rate,
+                        "scaling_vs_1x1": rate / base_rate,
+                    }
+                )
+    write_bench_json("mesh_bank", records)
+    return rows
+
+
+def ragged_sweep(
+    num_requests: int = 8,
+    p_min: int = 256,
+    p_max: int = 2_048,
+    policy_name: str = "bf16",
+    seed: int = 0,
+) -> list[str]:
+    """Per-request particle budgets: pad-to-max vs size-class-packed ragged.
+
+    Workload: ``num_requests`` tracker requests with key-derived particle
+    budgets uniform in [p_min, p_max] (the heterogeneous-difficulty mix a
+    ragged serving bank admits).  Two ways to run one frame for all of
+    them:
+
+    - **padded**: one dense bank at lane width p_max — every request pays
+      the hardest request's cloud (the pre-ragged serving configuration);
+    - **ragged**: requests grouped into power-of-two size classes, one
+      *ragged* bank per class at the class width with ``n_active`` = the
+      true budgets — each request pays its class, masking covers the
+      within-class remainder.
+
+    Throughput is *useful* (budgeted) particle-steps per second — the
+    padded bank burns the same wall time on sum(p_max) lanes but only
+    sum(budgets) of them were requested.  The summary row reports the
+    ragged/padded useful-throughput gain; BENCH_ragged.json carries the
+    full breakdown.
+    """
+    import numpy as np
+
+    from repro.data.synthetic_video import VideoConfig, generate_video
+    from repro.launch.serve import particle_size_classes
+
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=2, height=256, width=256)
+    )
+    frame = video[0].astype(jnp.float32)
+    pol = get_policy(policy_name)
+    budgets = np.asarray(
+        jax.random.randint(
+            jax.random.key(seed), (num_requests,), p_min, p_max + 1
+        )
+    )
+    classes = particle_size_classes(p_min, p_max)
+    cls_of = [min(c for c in classes if c >= n) for n in budgets]
+    useful = int(budgets.sum())
+    rows, records = [], []
+
+    def timed_bank(width, n_active, tag):
+        b = len(n_active)
+        cfg = TrackerConfig(num_particles=width, height=256, width=256)
+        starts = 128.0 + 8.0 * jnp.stack(
+            [jnp.arange(b, dtype=jnp.float32)] * 2, -1
+        )
+        bank = make_multi_tracker_filter(
+            cfg, pol, starts,
+            budgets=None if tag == "padded" else jnp.asarray(n_active),
+        )
+        state = bank.init(jax.random.key(1), width)
+        keys = jax.random.split(jax.random.key(2), b)
+        step = bank.jit_step_shared
+        return time_fn(
+            lambda st, f, ks: step(st, f, ks),
+            state, frame, keys, reps=3, warmup=1,
+        )
+
+    # Padded baseline: every request at p_max, one dense bank.
+    us_pad = timed_bank(p_max, [p_max] * num_requests, "padded")
+    rate_pad = useful / us_pad * 1e6
+    rows.append(
+        csv_row(
+            f"fig5_throughput/ragged_padded_B{num_requests}_P{p_max}"
+            f"_{policy_name}",
+            us_pad,
+            f"useful_particle_steps_per_s={rate_pad:.3e};"
+            f"lanes={num_requests * p_max}",
+        )
+    )
+    records.append(
+        {
+            "config": "padded",
+            "bank": num_requests,
+            "width": p_max,
+            "useful_particles": useful,
+            "us_per_step": us_pad,
+            "useful_particle_steps_per_s": rate_pad,
+        }
+    )
+
+    # Ragged: one masked bank per size class at the class width.
+    us_ragged = 0.0
+    for c in classes:
+        members = [int(n) for n, k in zip(budgets, cls_of) if k == c]
+        if not members:
+            continue
+        us_c = timed_bank(c, members, "ragged")
+        us_ragged += us_c
+        rate_c = sum(members) / us_c * 1e6
+        rows.append(
+            csv_row(
+                f"fig5_throughput/ragged_class{c}_B{len(members)}"
+                f"_{policy_name}",
+                us_c,
+                f"useful_particle_steps_per_s={rate_c:.3e};"
+                f"budgets={'+'.join(map(str, members))}",
+            )
+        )
+        records.append(
+            {
+                "config": f"class_{c}",
+                "bank": len(members),
+                "width": c,
+                "useful_particles": sum(members),
+                "us_per_step": us_c,
+                "useful_particle_steps_per_s": rate_c,
+            }
+        )
+    rate_ragged = useful / us_ragged * 1e6
+    gain = rate_ragged / rate_pad
+    rows.append(
+        csv_row(
+            f"fig5_throughput/ragged_total_{policy_name}",
+            us_ragged,
+            f"useful_particle_steps_per_s={rate_ragged:.3e};"
+            f"gain_vs_padded={gain:.2f}",
+        )
+    )
+    records.append(
+        {
+            "config": "ragged_total",
+            "useful_particles": useful,
+            "us_per_step": us_ragged,
+            "useful_particle_steps_per_s": rate_ragged,
+            "gain_vs_padded": gain,
+        }
+    )
+    write_bench_json(
+        "ragged",
+        records,
+        p_min=p_min,
+        p_max=p_max,
+        budgets=[int(x) for x in budgets],
+        gain_vs_padded=gain,
+    )
     return rows
 
 
@@ -229,6 +427,7 @@ if __name__ == "__main__":
         "run": run,
         "bank_sweep": bank_sweep,
         "mesh_bank_sweep": mesh_bank_sweep,
+        "ragged_sweep": ragged_sweep,
     }
     print("name,us_per_call,derived")
     for row in fns[which]():

@@ -5,7 +5,7 @@ Layers:
 - ``stability``   — scaled-square, log-sum-exp, online/streaming LSE combine
 - ``likelihood``  — Rodinia intensity observation model (naive + stable)
 - ``resampling``  — systematic / stratified / multinomial (registry)
-- ``filter``      — SMC model/state types + legacy pf_* shims
+- ``filter``      — SMC model/state types (SMCSpec, FilterState, FilterOutput)
 - ``engine``      — the ParticleFilter engine: FilterConfig-dispatched
   backends (jnp / pallas), resamplers, and mesh distribution behind one
   ``init`` / ``step`` / ``run`` / ``stream`` API
@@ -27,9 +27,6 @@ from repro.core.filter import (  # noqa: F401
     FilterOutput,
     FilterState,
     SMCSpec,
-    pf_init,
-    pf_scan,
-    pf_step,
 )
 from repro.core.precision import (  # noqa: F401
     POLICIES,
@@ -45,5 +42,4 @@ from repro.core.tracking import (  # noqa: F401
     TrackerConfig,
     make_multi_tracker_filter,
     make_tracker_filter,
-    track,
 )

@@ -44,6 +44,15 @@ scheme's ring exchange runs per slot over the particle ring; its period
 gate is *per-slot* (slots admitted at different ticks carry different step
 counters), so the ``ppermute`` always executes and each row selects
 between the exchanged and kept block.
+
+Ragged banks compose with both (``make_dist_bank_step(ragged=True)``):
+per-slot active counts mask each shard's slice to the slot's global active
+prefix — masked lanes enter the LSE merge at -inf and every collective
+(pmax, psum, all-gather, ppermute) keeps its dense shape, so raggedness
+costs no extra traffic; the exact scheme's systematic grid spans the
+active count and the local scheme resamples each shard's active sub-slice
+(ring-mixing only full-width slots — see
+:func:`dist_systematic_local_banked`).
 """
 
 from __future__ import annotations
@@ -177,8 +186,10 @@ def dist_systematic_exact(
     total = jnp.sum(sums)
 
     # Output positions owned by this device: g in [d*p_loc, (d+1)*p_loc).
+    # IEEE fp32 reciprocal — same bits as the banked/ragged grids.
     g = d * p_loc + jnp.arange(p_loc, dtype=jnp.float32)
-    u = (g + u0.astype(jnp.float32)) * jnp.float32(1.0 / n_total) * total
+    inv = jnp.float32(1.0) / jnp.float32(n_total)
+    u = (g + u0.astype(jnp.float32)) * inv * total
 
     cdf_all = jax.lax.all_gather(cdf, axes, tiled=True)  # (P_total,)
     anc = jnp.clip(
@@ -220,7 +231,9 @@ def dist_systematic_local(
     u0 = jax.random.uniform(jax.random.fold_in(key, d), (), jnp.float32)
     cdf = jnp.cumsum(w32)
     cdf = cdf / cdf[-1]
-    u = (jnp.arange(p_loc, dtype=jnp.float32) + u0) * jnp.float32(1.0 / p_loc)
+    u = (jnp.arange(p_loc, dtype=jnp.float32) + u0) * (
+        jnp.float32(1.0) / jnp.float32(p_loc)
+    )
     anc = jnp.clip(
         jnp.searchsorted(cdf, u, side="right"), 0, p_loc - 1
     ).astype(jnp.int32)
@@ -268,6 +281,8 @@ def dist_normalize_banked(
     axes: tuple[str, ...],
     accum_dtype,
     local_stats: Any = None,
+    local_stats_masked: Any = None,
+    n_loc: jax.Array | None = None,
 ):
     """Per-slot log-weights (B_loc, P_loc) -> (weights, lse (B_loc,), max).
 
@@ -276,9 +291,16 @@ def dist_normalize_banked(
     fused kernel — ``(log_w) -> (m_loc (B_loc,), lse_loc (B_loc,))`` in
     fp32 (``repro.kernels.logsumexp.ops.online_logsumexp_batched``); the
     per-shard online-LSE states then merge with the same one pmax + one
-    psum per row.
+    psum per row.  On a ragged bank ``n_loc`` gives each row's
+    *shard-local* active count and ``local_stats_masked`` the count-aware
+    kernel (``online_logsumexp_masked`` — lanes past the count pinned to
+    -inf in the carry); the caller still pre-masks ``log_w``, which the
+    pure-jnp and dense-kernel paths rely on and which keeps the weight
+    output exactly 0 past the count on every path.
     """
     x = log_w.astype(accum_dtype)
+    if local_stats_masked is not None and n_loc is not None:
+        local_stats = lambda lw: local_stats_masked(lw, n_loc)  # noqa: E731
     if local_stats is None:
         m_loc = jnp.max(x, axis=-1)
         m = jax.lax.pmax(m_loc, axes)
@@ -308,6 +330,7 @@ def dist_systematic_exact_banked(
     axes: tuple[str, ...],
     gather: Any = None,
     particle_axes: Any = None,
+    n_active: jax.Array | None = None,
 ) -> Any:
     """Per-slot global systematic resampling inside shard_map.
 
@@ -317,6 +340,11 @@ def dist_systematic_exact_banked(
     device's output slice — slots never exchange anything.
     ``particle_axes``: per-leaf particle-axis pytree (``SMCSpec``
     convention, bank axis excluded); None means axis 0 after the bank dim.
+    ``n_active``: (B_loc,) per-slot *global* active counts (ragged bank) —
+    the u-grid spans the active count, so only output positions below it
+    receive meaningful draws (the caller pins the rest to -inf weight);
+    inactive lanes carry weight 0, so the gathered CDF is flat past each
+    slot's prefix and no padding lane is ever selected.
     """
     nb, p_loc = weights.shape
     n_dev = _axis_size(axes)
@@ -333,9 +361,17 @@ def dist_systematic_exact_banked(
     total = jnp.sum(sums, axis=0)
 
     g = d * p_loc + jnp.arange(p_loc, dtype=jnp.float32)
+    if n_active is None:
+        # IEEE fp32 reciprocal: folds bit-identically to the ragged path's
+        # runtime division, so a full-width ragged bank matches this dense
+        # grid exactly.
+        inv = jnp.float32(1.0) / jnp.float32(n_total)
+        inv = jnp.broadcast_to(inv, total.shape)
+    else:
+        inv = jnp.float32(1.0) / jnp.maximum(n_active, 1).astype(jnp.float32)
     u = (
         (g[None, :] + u0.astype(jnp.float32)[:, None])
-        * jnp.float32(1.0 / n_total)
+        * inv[:, None]
         * total[:, None]
     )
 
@@ -379,6 +415,8 @@ def dist_systematic_local_banked(
     gather: Any = None,
     local_resample: Any = None,
     particle_axes: Any = None,
+    n_active: jax.Array | None = None,
+    local_resample_masked: Any = None,
 ) -> tuple[Any, jax.Array]:
     """Per-slot RNA local resampling with per-slot-gated ring exchange.
 
@@ -391,6 +429,18 @@ def dist_systematic_local_banked(
     the price of recompile-free mid-flight admission.  ``local_resample``
     optionally supplies the shard-local systematic inverse as a fused
     kernel: ``(u0 (B_loc,), weights) -> ancestors (B_loc, P_loc)``.
+
+    Ragged rows (``n_active``: per-slot *global* counts): each shard
+    resamples its own *active slice* — ``n_loc = clip(n_active - d·P_loc,
+    0, P_loc)`` lanes — and its offspring inherit ``log(local_sum) -
+    log(n_loc)``; fully inactive shards contribute zero mass and -inf
+    rows.  The ring exchange is additionally gated on the slot being
+    full-width: a partial slot's head block could land on a neighbour's
+    padding lanes, which must stay at -inf weight to keep the mask
+    consistent, and silently dropping exchanged mass would bias the
+    estimator — so partial slots keep RNA's unbiasedness and skip only the
+    variance-control mixing.  ``local_resample_masked`` is the count-aware
+    kernel form ``(u0, weights, n_loc) -> ancestors``.
     """
     nb, p_loc = weights.shape
     d = _axis_index(axes)
@@ -402,18 +452,54 @@ def dist_systematic_local_banked(
             jax.random.fold_in(k, d), (), jnp.float32
         )
     )(keys)
-    if local_resample is not None:
-        anc = local_resample(u0, weights)
+    if n_active is None:
+        n_loc = None
+        if local_resample is not None:
+            anc = local_resample(u0, weights)
+        else:
+            cdf = jnp.cumsum(w32, axis=-1)
+            cdf = cdf / cdf[:, -1:]
+            u = (
+                jnp.arange(p_loc, dtype=jnp.float32)[None, :] + u0[:, None]
+            ) * (jnp.float32(1.0) / jnp.float32(p_loc))
+            anc = jax.vmap(
+                lambda c, uu: jnp.searchsorted(c, uu, side="right")
+            )(cdf, u)
+            anc = jnp.clip(anc, 0, p_loc - 1).astype(jnp.int32)
+        n_loc_f = jnp.float32(p_loc)
+        log_w = jnp.broadcast_to(
+            (jnp.log(local_sum) - jnp.log(n_loc_f))[:, None],
+            (nb, p_loc),
+        )
     else:
-        cdf = jnp.cumsum(w32, axis=-1)
-        cdf = cdf / cdf[:, -1:]
-        u = (
-            jnp.arange(p_loc, dtype=jnp.float32)[None, :] + u0[:, None]
-        ) * jnp.float32(1.0 / p_loc)
-        anc = jax.vmap(
-            lambda c, uu: jnp.searchsorted(c, uu, side="right")
-        )(cdf, u)
-        anc = jnp.clip(anc, 0, p_loc - 1).astype(jnp.int32)
+        n_loc = jnp.clip(n_active - d * p_loc, 0, p_loc)  # (B_loc,)
+        if local_resample_masked is not None:
+            anc = local_resample_masked(u0, weights, n_loc)
+        else:
+            # Same unguarded division as the dense branch: a zero-mass
+            # slice (all weight on other shards, or n_loc == 0) yields NaN
+            # cdf and deterministic clipped garbage ancestors in *both*
+            # paths — those offspring carry -inf RNA weight either way, and
+            # a full-width ragged bank stays bit-identical to the dense
+            # one.
+            cdf = jnp.cumsum(w32, axis=-1)
+            cdf = cdf / cdf[:, -1:]
+            u = (
+                jnp.arange(p_loc, dtype=jnp.float32)[None, :] + u0[:, None]
+            ) * (
+                jnp.float32(1.0)
+                / jnp.maximum(n_loc, 1).astype(jnp.float32)
+            )[:, None]
+            anc = jax.vmap(
+                lambda c, uu: jnp.searchsorted(c, uu, side="right")
+            )(cdf, u)
+            anc = jnp.clip(anc, 0, p_loc - 1).astype(jnp.int32)
+        n_loc_f = jnp.maximum(n_loc, 1).astype(jnp.float32)
+        log_w = jnp.where(
+            jnp.arange(p_loc)[None, :] < n_loc[:, None],
+            (jnp.log(local_sum) - jnp.log(n_loc_f))[:, None],
+            jnp.float32(-jnp.inf),
+        )
     if gather is not None:
         res = jax.vmap(gather)(particles, anc)
     else:
@@ -423,10 +509,6 @@ def dist_systematic_local_banked(
             ),
             particles,
         )
-    log_w = jnp.broadcast_to(
-        (jnp.log(local_sum) - jnp.log(jnp.float32(p_loc)))[:, None],
-        (nb, p_loc),
-    )
 
     n_dev = _axis_size(axes)
     k = max(1, int(p_loc * exchange_frac))
@@ -436,6 +518,9 @@ def dist_systematic_local_banked(
     do_x = jnp.logical_and(
         n_dev > 1, (step % exchange_every) == (exchange_every - 1)
     )  # (B_loc,) — per-slot gate
+    if n_active is not None:
+        # Only full-width slots mix (see docstring).
+        do_x = jnp.logical_and(do_x, n_active == p_loc * n_dev)
 
     def swap(x, ax=0):
         pax = 1 + ax  # bank dim leads every leaf
@@ -557,8 +642,11 @@ def make_dist_bank_step(
     cfg: DistributedConfig,
     *,
     shared_obs: bool = False,
+    ragged: bool = False,
     local_stats: Any = None,
+    local_stats_masked: Any = None,
     local_resample: Any = None,
+    local_resample_masked: Any = None,
 ):
     """Build a shard_map'd FilterBank step: mesh × bank composition.
 
@@ -577,6 +665,16 @@ def make_dist_bank_step(
     frame) and sharded on its leading bank axis otherwise.  ``local_stats``
     / ``local_resample`` are the backend's fused shard-local kernels (see
     :func:`dist_normalize_banked` / :func:`dist_systematic_local_banked`).
+
+    ``ragged=True`` appends two (B,) bank-sharded inputs — per-slot global
+    active counts ``n_active`` and stored uniform log-weights
+    ``log_uniform`` — and masks each shard's slice of every slot to its
+    active prefix: lanes at global position >= n_active[b] enter the
+    online-LSE merge at -inf (weight exactly 0 — the pmax/psum collectives
+    are unchanged), the exact scheme's u-grid spans the active count, and
+    the local scheme resamples each shard's active sub-slice (mixing only
+    full-width slots).  A full-width ragged bank is bit-identical to the
+    dense step.
     """
     if cfg.bank_axis is None:
         raise ValueError("make_dist_bank_step needs cfg.bank_axis set")
@@ -602,7 +700,7 @@ def make_dist_bank_step(
     obs_ax = None if shared_obs else 0
     adt = policy.accum_dtype
 
-    def _step(particles, log_w, step, obs, keys):
+    def _step(particles, log_w, step, obs, keys, n_active=None, log_uni=None):
         # Per-slot key chain — the single-filter derivation applied row by
         # row, so a B=1 bank consumes keys exactly like ParticleFilter.
         split = jax.vmap(
@@ -615,9 +713,28 @@ def make_dist_bank_step(
         log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
             particles, obs, step
         ).astype(policy.compute_dtype)
-        log_w = log_w + log_lik
+        if n_active is None:
+            active = None
+            n_loc = None
+            log_w = log_w + log_lik
+        else:
+            # This shard owns global lanes [d*P_loc, (d+1)*P_loc); mask its
+            # slice of every slot to the slot's active prefix (which is a
+            # *local* prefix of n_loc lanes — particles shard contiguously).
+            p_loc_ = log_w.shape[-1]
+            gpos = d * p_loc_ + jnp.arange(p_loc_)
+            active = gpos[None, :] < n_active[:, None]
+            n_loc = jnp.clip(n_active - d * p_loc_, 0, p_loc_)
+            log_w = jnp.where(
+                active,
+                log_w + log_lik,
+                jnp.asarray(-jnp.inf, policy.compute_dtype),
+            )
         w, lse, max_lw = dist_normalize_banked(
-            log_w, axes, adt, local_stats=local_stats
+            log_w, axes, adt,
+            local_stats=local_stats,
+            local_stats_masked=local_stats_masked,
+            n_loc=n_loc,
         )
 
         w_acc = w.astype(adt)
@@ -655,10 +772,22 @@ def make_dist_bank_step(
                 u0, w, particles, axes,
                 gather=spec.gather,
                 particle_axes=paxes,
+                n_active=n_active,
             )
-            new_log_w = jnp.full_like(
-                log_w, -jnp.log(float(p_loc * cfg.num_shards))
-            )
+            if n_active is None:
+                new_log_w = jnp.full_like(
+                    log_w, -jnp.log(float(p_loc * cfg.num_shards))
+                )
+            else:
+                # The stored per-slot uniform (-log(n_active), same bits as
+                # the dense Python constant for full-width slots).
+                new_log_w = jnp.where(
+                    active,
+                    jnp.broadcast_to(
+                        log_uni[:, None], log_w.shape
+                    ).astype(log_w.dtype),
+                    jnp.asarray(-jnp.inf, log_w.dtype),
+                )
         else:
             new_particles, new_log_w = dist_systematic_local_banked(
                 k_res,
@@ -672,6 +801,8 @@ def make_dist_bank_step(
                 gather=spec.gather,
                 local_resample=local_resample,
                 particle_axes=paxes,
+                n_active=n_active,
+                local_resample_masked=local_resample_masked,
             )
         return new_particles, new_log_w, step + 1, estimate, ess, lse, max_lw
 
@@ -682,6 +813,8 @@ def make_dist_bank_step(
         P() if shared_obs else bspec,
         bspec,
     )
+    if ragged:
+        in_specs = in_specs + (bspec, bspec)
     out_specs = (part_specs, pspec, bspec, bspec, bspec, bspec, bspec)
 
     return compat.shard_map(

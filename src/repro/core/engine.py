@@ -22,8 +22,8 @@ entry point either — ``FilterConfig(mesh=..., scheme="local")`` routes the
 same ``init``/``step``/``run`` through the shard_map step of
 ``repro.core.distributed`` (exact / local-RNA resampling schemes).
 
-``pf_step`` / ``pf_scan`` / ``track`` remain as deprecation shims that
-forward here; the jnp backend is bit-identical to the legacy functions.
+The legacy ``pf_step`` / ``pf_scan`` / ``track`` shims are gone; the jnp
+backend remains bit-identical to the pre-engine functions they wrapped.
 
 The bank axis
 -------------
@@ -53,6 +53,23 @@ filter path.  Multi-object tracking builds on this in
 one shared frame stream); continuous-batching serving in
 ``repro.launch.serve --smc`` (requests admitted into free slots mid-flight,
 the bank stepping every tick regardless of occupancy).
+
+Ragged banks
+------------
+
+A serving bank should also trade *particle count* per request: easy
+targets track well at P=256 while hard ones need P=4096, and a dense bank
+makes every slot pay the max.  ``init(key, P, n_active=counts)`` makes the
+bank ragged: ``P`` stays the static lane width, but slot ``b`` filters
+with its first ``n_active[b]`` lanes only — inactive lanes carry -inf
+log-weight (weight exactly 0) through normalization, ESS, estimates and
+the evidence, and resampling draws its systematic grid over the active
+count, never selecting a padding lane.  ``init_slot(state, slot, key,
+n_active=n)`` re-admits one slot at a new *traced* count — no recompile
+per size, the contract the continuous-batching scheduler relies on.  A
+ragged bank with every slot full is bit-identical to the dense bank (which
+keeps its mask-free fast path), and a masked row's active prefix is
+bitwise the unmasked width-n kernels (see ``repro.kernels``).
 
 The bank composes with the mesh: ``FilterBank(spec, FilterConfig(mesh=...),
 num_slots=B)`` shards slots over the "data" axis and each slot's particles
@@ -110,6 +127,23 @@ class Backend:
                        (NOT the single-filter backend override — a bank
                        must never vmap a Pallas kernel).
 
+    Masked forms (used by *ragged* :class:`FilterBank`\\ s — per-slot active
+    lane counts ``n_active (B,)``; lanes past the count are padding):
+
+    normalize_masked:  (log_w (B, P), n_active, policy) -> (weights, log_z,
+                       max_log_w) with lanes >= n_active[b] pinned to -inf
+                       inside the kernel carry (weight exactly 0); None
+                       falls back to ``normalize_banked`` on the engine's
+                       pre-masked log-weights.
+    resamplers_masked: per-resampler overrides ``(keys (B,), weights (B, P),
+                       policy, n_active) -> ancestors (B, P)`` drawing the
+                       grid over the active count; names without one fall
+                       back to the pure-jnp masked references in
+                       ``resampling.MASKED_RESAMPLERS`` (count-aware grids
+                       for the CDF family, mask-correct chains for
+                       metropolis).  A resampler with neither masked form
+                       cannot run ragged (the engine raises at init).
+
     Shard-local forms (used by the meshed :class:`FilterBank`, running
     *inside* shard_map on each device's (B_loc, P_loc) slice):
 
@@ -118,10 +152,26 @@ class Backend:
                        ``repro.core.distributed.dist_normalize_banked``
                        merges with one pmax + psum per row; None falls
                        back to the pure-jnp reduction.
+    local_stats_masked: the ragged twin — ``(log_w, n_loc (B,)) -> (max,
+                       lse)`` with per-row *shard-local* active counts
+                       pinned to -inf inside the kernel carry; None falls
+                       back to ``local_stats_banked`` on the pre-masked
+                       rows.
     ancestors_from_u0_banked: per-resampler overrides ``(u0 (B,), weights
                        (B, P_loc)) -> ancestors (B, P_loc)`` for the RNA
                        ``local`` scheme's shard-local systematic inverse
                        (u0 already folds in the device index).
+    ancestors_from_u0_masked: the ragged twin: ``(u0, weights, n_loc) ->
+                       ancestors`` with per-row *shard-local* active counts.
+
+    Application hooks:
+
+    intensity_loglik:  (patches (P, J), model, policy) -> (P,) — the paper's
+                       Rodinia intensity likelihood as a fused kernel;
+                       ``repro.core.tracking`` dispatches on it so
+                       ``backend="pallas"`` tracking runs the kernel without
+                       the spec hard-coding backend names.  None falls back
+                       to ``repro.core.likelihood.intensity_loglik``.
     """
 
     name: str
@@ -135,10 +185,19 @@ class Backend:
     resamplers_banked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
+    normalize_masked: Callable | None = None
+    resamplers_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
     local_stats_banked: Callable[[jax.Array], tuple] | None = None
+    local_stats_masked: Callable | None = None
     ancestors_from_u0_banked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
+    ancestors_from_u0_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    intensity_loglik: Callable | None = None
 
 
 BACKENDS: dict[str, Backend] = {}
@@ -195,16 +254,55 @@ def _pallas_systematic_banked(keys: jax.Array, weights: jax.Array, policy):
     return res_ops.systematic_resample_batched(keys, weights)
 
 
+def _pallas_normalize_masked(
+    log_w: jax.Array, n_active: jax.Array, policy: PrecisionPolicy
+):
+    del policy  # the masked kernel carries per-row fp32 accumulators
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse = lse_ops.normalize_weights_masked(log_w, n_active)
+    return w, lse, m
+
+
+def _pallas_systematic_masked(
+    keys: jax.Array, weights: jax.Array, policy, n_active: jax.Array
+):
+    del policy
+    from repro.kernels.resample import ops as res_ops
+
+    return res_ops.systematic_resample_masked(keys, weights, n_active)
+
+
 def _pallas_local_stats_banked(log_w: jax.Array):
     from repro.kernels.logsumexp import ops as lse_ops
 
     return lse_ops.online_logsumexp_batched(log_w)
 
 
+def _pallas_local_stats_masked(log_w: jax.Array, n_loc: jax.Array):
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    return lse_ops.online_logsumexp_masked(log_w, n_loc)
+
+
 def _pallas_ancestors_from_u0_banked(u0: jax.Array, weights: jax.Array):
     from repro.kernels.resample import ops as res_ops
 
     return res_ops.systematic_ancestors_batched(u0, weights)
+
+
+def _pallas_ancestors_from_u0_masked(
+    u0: jax.Array, weights: jax.Array, n_active: jax.Array
+):
+    from repro.kernels.resample import ops as res_ops
+
+    return res_ops.systematic_ancestors_masked(u0, weights, n_active)
+
+
+def _pallas_intensity_loglik(patches: jax.Array, model, policy):
+    from repro.kernels.likelihood import ops as lik_ops
+
+    return lik_ops.intensity_loglik(patches, model, policy)
 
 
 register_backend(Backend("jnp", _jnp_normalize))
@@ -215,10 +313,17 @@ register_backend(
         resamplers={"systematic": _pallas_systematic},
         normalize_banked=_pallas_normalize_banked,
         resamplers_banked={"systematic": _pallas_systematic_banked},
+        normalize_masked=_pallas_normalize_masked,
+        resamplers_masked={"systematic": _pallas_systematic_masked},
         local_stats_banked=_pallas_local_stats_banked,
+        local_stats_masked=_pallas_local_stats_masked,
         ancestors_from_u0_banked={
             "systematic": _pallas_ancestors_from_u0_banked
         },
+        ancestors_from_u0_masked={
+            "systematic": _pallas_ancestors_from_u0_masked
+        },
+        intensity_loglik=_pallas_intensity_loglik,
     )
 )
 
@@ -256,6 +361,25 @@ class FilterConfig:
 
     def with_(self, **kw: Any) -> "FilterConfig":
         return dataclasses.replace(self, **kw)
+
+
+def _neg_log_count(n, dtype):
+    """``-log(n)`` for a particle count, bit-stable across call sites.
+
+    Concrete counts go through host double log then one rounding to
+    ``dtype`` — exactly the bits of the Python-constant path the dense
+    filter uses (``-jnp.log(float(P))``).  Traced counts (recompile-free
+    ragged ``init_slot``) use the runtime fp32 log.  The two can differ by
+    1 ulp for some counts (XLA's folded log != its runtime vectorized log),
+    which is why the engine *stores* the value per slot (``FilterState.
+    log_uniform``) instead of recomputing it: every reset in a slot's
+    lifetime reuses identical bits.
+    """
+    import numpy as np
+
+    if isinstance(n, jax.core.Tracer):
+        return (-jnp.log(n.astype(jnp.float32))).astype(dtype)
+    return jnp.asarray(-np.log(np.asarray(n, np.float64)), dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -573,7 +697,7 @@ class FilterBank:
         self.num_slots = num_slots
 
         self._dist_cfg = None
-        self._dist_steps: dict[bool, Callable] = {}
+        self._dist_steps: dict[tuple[bool, bool], Callable] = {}
         if config.mesh is not None:
             from repro.core import distributed
 
@@ -627,6 +751,34 @@ class FilterBank:
 
         self._resample_banked = banked_res
 
+        # Ragged (masked) forms.  Normalize: the engine pins inactive lanes
+        # to -inf before the call, so the dense banked kernel is already
+        # correct; a backend masked kernel (count input) is preferred as it
+        # is junk-proof without the pre-mask.  Resample: backend masked
+        # kernel first, then the pure-jnp masked reference
+        # (``resampling.MASKED_RESAMPLERS`` — count-aware grids for the
+        # CDF family, mask-correct chains for metropolis).  A custom
+        # resampler with neither stays None and ragged init raises: its
+        # dense grid would silently truncate the active mass.
+        masked_norm = self.backend.normalize_masked
+        if masked_norm is None:
+            dense_norm = self._normalize_banked_impl
+
+            def masked_norm(log_w, n_active, policy):
+                del n_active  # log_w is pre-masked to -inf past the count
+                return dense_norm(log_w, policy)
+
+        self._normalize_masked_impl = masked_norm
+
+        self._resample_masked = self.backend.resamplers_masked.get(
+            config.resampler
+        ) or resampling.MASKED_RESAMPLERS.get(config.resampler)
+
+        # Per-slot active-count default, set by factories (e.g. per-target
+        # budgets in ``make_multi_tracker_filter``); ``init`` uses it when
+        # no explicit ``n_active`` is passed.
+        self.default_n_active = None
+
     # -- lifecycle ----------------------------------------------------------
 
     def _init_slot_particles(self, key, num_particles: int, slot):
@@ -643,41 +795,123 @@ class FilterBank:
             particles,
         )
 
-    def init(self, key: jax.Array, num_particles: int) -> FilterState:
+    def init(
+        self,
+        key: jax.Array,
+        num_particles: int,
+        n_active: Any = None,
+    ) -> FilterState:
         """Draw every slot's initial cloud from per-slot keys.
 
         B == 1 uses ``key`` unsplit so a one-slot bank reproduces
         ``ParticleFilter.init(key, P)`` bit for bit.
+
+        ``n_active``: optional (B,) per-slot active lane counts — the ragged
+        bank.  ``num_particles`` stays the static lane width of every slot;
+        slot ``b`` filters with its first ``n_active[b]`` lanes only (the
+        rest carry -inf log-weight and weight exactly 0).  Defaults to the
+        bank's ``default_n_active`` (set by factories), else dense.
         """
         nb = self.num_slots
         keys = key[None] if nb == 1 else jax.random.split(key, nb)
-        return self.init_slots(keys, num_particles)
+        return self.init_slots(keys, num_particles, n_active)
 
-    def init_slots(self, keys: jax.Array, num_particles: int) -> FilterState:
+    def init_slots(
+        self,
+        keys: jax.Array,
+        num_particles: int,
+        n_active: Any = None,
+    ) -> FilterState:
         """Banked init from explicit per-slot keys ((B,) key array)."""
         nb = self.num_slots
+        if n_active is None:
+            n_active = self.default_n_active
         if self._dist_cfg is not None:
             self._check_mesh_divisibility(num_particles)
         particles = jax.vmap(
             lambda k, s: self._init_slot_particles(k, num_particles, s)
         )(keys, jnp.arange(nb, dtype=jnp.int32))
-        log_w = jnp.full(
-            (nb, num_particles),
-            -jnp.log(float(num_particles)),
-            self.policy.compute_dtype,
-        )
-        state = FilterState(particles, log_w, jnp.zeros((nb,), jnp.int32))
+        if n_active is None:
+            log_w = jnp.full(
+                (nb, num_particles),
+                -jnp.log(float(num_particles)),
+                self.policy.compute_dtype,
+            )
+            state = FilterState(particles, log_w, jnp.zeros((nb,), jnp.int32))
+        else:
+            n_active = self._check_n_active(n_active, num_particles)
+            cdt = self.policy.compute_dtype
+            log_uniform = _neg_log_count(n_active, cdt)
+            lane = jnp.arange(num_particles)
+            log_w = jnp.where(
+                lane[None, :] < n_active[:, None],
+                jnp.broadcast_to(
+                    log_uniform[:, None], (nb, num_particles)
+                ),
+                jnp.asarray(-jnp.inf, cdt),
+            )
+            state = FilterState(
+                particles,
+                log_w,
+                jnp.zeros((nb,), jnp.int32),
+                n_active=n_active,
+                log_uniform=log_uniform,
+            )
         if self._dist_cfg is not None:
             state = self._shard_state(state)
         return state
 
+    def _check_n_active(self, n_active, num_particles: int):
+        n_active = jnp.asarray(n_active, jnp.int32)
+        if n_active.shape != (self.num_slots,):
+            raise ValueError(
+                f"n_active must be shaped ({self.num_slots},) — one count "
+                f"per slot — got {n_active.shape}"
+            )
+        if self._resample_masked is None and self._dist_cfg is None:
+            raise ValueError(
+                f"resampler {self.config.resampler!r} has no masked "
+                "(ragged) form — its dense grid would truncate the active "
+                "mass; register one via Backend.resamplers_masked or "
+                "resampling.MASKED_RESAMPLERS"
+            )
+        self._check_count_range(n_active, num_particles)
+        return n_active
+
+    @staticmethod
+    def _check_count_range(n, num_particles: int) -> None:
+        """Concrete counts must fit the lane width (traced counts can't be
+        checked at trace time; an oversized traced count would mis-scale
+        the systematic grid, so admission paths validate what they can)."""
+        if isinstance(n, jax.core.Tracer):
+            return
+        import numpy as np
+
+        counts = np.atleast_1d(np.asarray(n))
+        if (counts < 0).any() or (counts > num_particles).any():
+            raise ValueError(
+                f"n_active must lie in [0, {num_particles}] (the bank's "
+                f"lane width); got {np.asarray(n).tolist()}"
+            )
+
     def init_slot(
-        self, state: FilterState, slot, key: jax.Array
+        self,
+        state: FilterState,
+        slot,
+        key: jax.Array,
+        n_active: Any = None,
     ) -> FilterState:
         """(Re)start one slot in place; ``slot`` may be traced (no recompile).
 
         The slot gets a fresh particle cloud, uniform weights, and step 0;
         every other slot's state is untouched bit for bit.
+
+        On a ragged bank (state carries per-slot counts) ``n_active`` sets
+        the slot's new active lane count — and may itself be *traced*, so a
+        continuous-batching scheduler admits requests of any particle
+        budget without recompiling.  Omitted, the slot restarts at full
+        width.  Passing a count on a dense bank raises: raggedness changes
+        the state pytree, which must be decided at ``init``.
         """
         num_particles = state.log_weights.shape[-1]
         slot = jnp.asarray(slot, jnp.int32)
@@ -685,14 +919,42 @@ class FilterBank:
         particles = jax.tree.map(
             lambda s, f: s.at[slot].set(f), state.particles, fresh
         )
-        log_w = state.log_weights.at[slot].set(
-            jnp.full(
-                (num_particles,),
-                -jnp.log(float(num_particles)),
-                state.log_weights.dtype,
+        if state.n_active is None:
+            if n_active is not None:
+                raise ValueError(
+                    "init_slot(n_active=...) needs a ragged bank; this "
+                    "state is dense — init the bank with n_active to "
+                    "enable per-slot counts (the state pytree cannot "
+                    "change shape under jit)"
+                )
+            log_w = state.log_weights.at[slot].set(
+                jnp.full(
+                    (num_particles,),
+                    -jnp.log(float(num_particles)),
+                    state.log_weights.dtype,
+                )
             )
-        )
-        state = FilterState(particles, log_w, state.step.at[slot].set(0))
+            state = FilterState(particles, log_w, state.step.at[slot].set(0))
+        else:
+            if n_active is None:
+                n = jnp.asarray(num_particles, jnp.int32)
+            else:
+                n = jnp.asarray(n_active, jnp.int32)
+                self._check_count_range(n, num_particles)
+            log_u = _neg_log_count(n, state.log_weights.dtype)
+            lane = jnp.arange(num_particles)
+            row = jnp.where(
+                lane < n,
+                log_u,
+                jnp.asarray(-jnp.inf, state.log_weights.dtype),
+            )
+            state = FilterState(
+                particles,
+                state.log_weights.at[slot].set(row),
+                state.step.at[slot].set(0),
+                n_active=state.n_active.at[slot].set(n),
+                log_uniform=state.log_uniform.at[slot].set(log_u),
+            )
         if self._dist_cfg is not None:
             # Pin the traced-index update back onto the bank sharding so a
             # reset never pulls slot state off its shard (the scatter
@@ -717,9 +979,15 @@ class FilterBank:
         slot), or a single shared observation with ``shared_obs=True`` (the
         multi-object tracker: every target sees the same frame).
         keys: (B,) per-slot PRNG keys.
+
+        Ragged states (per-slot ``n_active``) take the masked path; dense
+        states take the fast path below, which is exactly the pre-ragged
+        banked step (no mask arithmetic when every slot is full-width).
         """
         if self._dist_cfg is not None:
             return self._step_distributed(state, observations, keys, shared_obs)
+        if state.n_active is not None:
+            return self._step_masked(state, observations, keys, shared_obs)
         spec, policy = self.spec, self.policy
         cdt = policy.compute_dtype
         nb, num_particles = state.log_weights.shape
@@ -794,6 +1062,107 @@ class FilterBank:
         )
         return new_state, out
 
+    def _step_masked(self, state, observations, keys, shared_obs):
+        """One frame of a ragged bank: per-slot active prefixes via masking.
+
+        Inactive lanes still propagate (static shapes), but their
+        log-weights are pinned to -inf before normalization, so they carry
+        weight exactly 0 through ESS, estimates, and the evidence, and
+        ancestors are drawn over the active prefix only (count-aware
+        systematic grid).  With every slot full-width this is bitwise the
+        dense step: every mask selects the unmasked value and the
+        count-aware grids divide by the same fp32 counts.
+        """
+        spec, policy = self.spec, self.policy
+        cdt = policy.compute_dtype
+        nb, num_particles = state.log_weights.shape
+        n_act = state.n_active
+        lane = jnp.arange(num_particles)
+        active = lane[None, :] < n_act[:, None]
+        neg_inf = jnp.asarray(-jnp.inf, cdt)
+        split = jax.vmap(jax.random.split)(keys)
+        k_prop, k_res = split[:, 0], split[:, 1]
+        obs_ax = None if shared_obs else 0
+
+        # 1. propagation — every lane steps (static shapes); the mask below
+        # keeps the inactive ones out of every statistic.
+        particles = jax.vmap(spec.transition)(
+            k_prop, state.particles, state.step
+        )
+
+        # 2. likelihood, then pin inactive lanes to -inf (a junk lane's
+        # -inf carry plus a +inf log-lik would otherwise produce nan).
+        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+            particles, observations, state.step
+        ).astype(cdt)
+        log_w = jnp.where(active, state.log_weights + log_lik, neg_inf)
+
+        # 3-5. masked banked normalize (count-aware kernel on pallas)
+        weights, log_z, max_lw = self._normalize_masked(log_w, n_act)
+        prev_lse = stability.logsumexp(
+            state.log_weights.astype(policy.accum_dtype), axis=-1
+        )
+        log_z_inc = log_z - prev_lse
+        w_accum = weights.astype(policy.accum_dtype)
+        ess = stability.effective_sample_size(w_accum)
+
+        if spec.summary is not None:
+            estimate = jax.vmap(spec.summary)(particles, w_accum)
+        else:
+            estimate = jax.vmap(
+                lambda p, w: _weighted_mean(p, w, policy.accum_dtype)
+            )(particles, weights)
+
+        # 6. resampling over the active prefix; the reset row reuses the
+        # per-slot stored uniform value (see FilterState.log_uniform).
+        gather = spec.gather or resampling.gather_ancestors
+        uniform = jnp.where(
+            active,
+            jnp.broadcast_to(
+                state.log_uniform[:, None], (nb, num_particles)
+            ).astype(cdt),
+            neg_inf,
+        )
+        if self.config.ess_threshold >= 1.0:
+            do_resample = jnp.ones((nb,), bool)
+            ancestors = self._resample_masked(k_res, weights, policy, n_act)
+            new_particles = jax.vmap(gather)(particles, ancestors)
+            new_log_w = uniform
+        else:
+            # Per-slot trigger against the slot's own budget, not the lane
+            # width: ESS can never exceed n_active.  Compare in ess's own
+            # dtype, as the dense path's weak Python scalar does.
+            do_resample = ess < (
+                self.config.ess_threshold * n_act.astype(jnp.float32)
+            ).astype(ess.dtype)
+            ancestors = self._resample_masked(k_res, weights, policy, n_act)
+            res_particles = jax.vmap(gather)(particles, ancestors)
+            kept_log_w = jnp.log(w_accum).astype(log_w.dtype)  # -inf at w=0
+            new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
+            new_particles = jax.tree.map(
+                lambda r, k: jnp.where(
+                    do_resample.reshape((nb,) + (1,) * (r.ndim - 1)), r, k
+                ),
+                res_particles,
+                particles,
+            )
+
+        new_state = FilterState(
+            particles=new_particles,
+            log_weights=new_log_w,
+            step=state.step + 1,
+            n_active=n_act,
+            log_uniform=state.log_uniform,
+        )
+        out = FilterOutput(
+            estimate=estimate,
+            ess=ess,
+            log_z_inc=log_z_inc,
+            resampled=do_resample,
+            max_loglik=max_lw,
+        )
+        return new_state, out
+
     def run(
         self,
         key: jax.Array,
@@ -801,16 +1170,18 @@ class FilterBank:
         num_particles: int,
         *,
         shared_obs: bool = True,
+        n_active: Any = None,
     ) -> tuple[FilterState, FilterOutput]:
         """Filter a whole sequence under ``lax.scan``, all slots at once.
 
         observations: pytree with a leading time axis — shared across slots
         by default (multi-object tracking over one frame stream); pass
         ``shared_obs=False`` for per-slot streams with leading (T, B) axes.
+        ``n_active``: optional (B,) per-slot active counts (ragged bank).
         Returns (final state, per-step outputs stacked over (T, B, ...)).
         """
         k_init, k_run = jax.random.split(key)
-        state0 = self.init(k_init, num_particles)
+        state0 = self.init(k_init, num_particles, n_active)
         num_steps = jax.tree.leaves(observations)[0].shape[0]
         # (T, B) keys; for B == 1 this is exactly ParticleFilter.run's
         # split(k_run, T) key path, reshaped.
@@ -848,26 +1219,43 @@ class FilterBank:
             return w, log_z, jnp.max(log_w, axis=-1)
         return self._normalize_banked_impl(log_w, self.policy)
 
-    def _dist_step(self, shared_obs: bool):
-        """The shard_map'd banked step, built once per obs mode."""
-        fn = self._dist_steps.get(shared_obs)
+    def _normalize_masked(self, log_w: jax.Array, n_active: jax.Array):
+        if not self.policy.stable_weighting:
+            # Naive path: exp(-inf) = 0, so masked lanes drop out of the
+            # direct-exponentiation sums exactly as in the stable path.
+            w, log_z = stability.normalize_log_weights(log_w, stable=False)
+            return w, log_z, jnp.max(log_w, axis=-1)
+        return self._normalize_masked_impl(log_w, n_active, self.policy)
+
+    def _dist_step(self, shared_obs: bool, ragged: bool = False):
+        """The shard_map'd banked step, built once per (obs, ragged) mode."""
+        fn = self._dist_steps.get((shared_obs, ragged))
         if fn is None:
             from repro.core import distributed
 
             local_resample = None
+            local_resample_masked = None
             if self.config.scheme == "local":
                 local_resample = self.backend.ancestors_from_u0_banked.get(
                     self.config.resampler
+                )
+                local_resample_masked = (
+                    self.backend.ancestors_from_u0_masked.get(
+                        self.config.resampler
+                    )
                 )
             fn = distributed.make_dist_bank_step(
                 self.spec,
                 self.policy,
                 self._dist_cfg,
                 shared_obs=shared_obs,
+                ragged=ragged,
                 local_stats=self.backend.local_stats_banked,
+                local_stats_masked=self.backend.local_stats_masked,
                 local_resample=local_resample,
+                local_resample_masked=local_resample_masked,
             )
-            self._dist_steps[shared_obs] = fn
+            self._dist_steps[(shared_obs, ragged)] = fn
         return fn
 
     def _step_distributed(self, state, observations, keys, shared_obs):
@@ -876,9 +1264,29 @@ class FilterBank:
         prev_lse = stability.logsumexp(
             state.log_weights.astype(self.policy.accum_dtype), axis=-1
         )
-        particles, log_w, step, estimate, ess, lse, max_lw = self._dist_step(
-            shared_obs
-        )(state.particles, state.log_weights, state.step, observations, keys)
+        ragged = state.n_active is not None
+        if ragged:
+            particles, log_w, step, estimate, ess, lse, max_lw = (
+                self._dist_step(shared_obs, ragged=True)(
+                    state.particles,
+                    state.log_weights,
+                    state.step,
+                    observations,
+                    keys,
+                    state.n_active,
+                    state.log_uniform,
+                )
+            )
+        else:
+            particles, log_w, step, estimate, ess, lse, max_lw = (
+                self._dist_step(shared_obs)(
+                    state.particles,
+                    state.log_weights,
+                    state.step,
+                    observations,
+                    keys,
+                )
+            )
         out = FilterOutput(
             estimate=estimate,
             ess=ess,
@@ -886,7 +1294,13 @@ class FilterBank:
             resampled=jnp.ones((self.num_slots,), bool),
             max_loglik=max_lw,
         )
-        return FilterState(particles, log_w, step), out
+        return FilterState(
+            particles,
+            log_w,
+            step,
+            n_active=state.n_active,
+            log_uniform=state.log_uniform,
+        ), out
 
     def _check_mesh_divisibility(self, num_particles: int) -> None:
         cfg = self._dist_cfg
@@ -941,6 +1355,12 @@ class FilterBank:
             particles=particles,
             log_weights=place(state.log_weights, sh_bp),
             step=place(state.step, sh_b),
+            n_active=None
+            if state.n_active is None
+            else place(state.n_active, sh_b),
+            log_uniform=None
+            if state.log_uniform is None
+            else place(state.log_uniform, sh_b),
         )
 
 

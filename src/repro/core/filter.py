@@ -1,4 +1,4 @@
-"""SMC model/state types + legacy shims for the particle-filter engine.
+"""SMC model/state types for the particle-filter engine.
 
 The filter itself lives in :mod:`repro.core.engine`: a
 :class:`~repro.core.engine.ParticleFilter` built from a
@@ -16,28 +16,22 @@ pieces that describe the *model* rather than the execution:
   per-frame outputs (estimate, ESS, evidence increment, resample flag, max
   log-likelihood — the paper's six-kernel chain observables, Fig. 1).
 
-``pf_init`` / ``pf_step`` / ``pf_scan`` are deprecation shims kept for old
-call sites; each warns once and forwards to an equivalent engine call
-(bit-identical results — the engine's jnp backend *is* the old code path).
+The long-deprecated ``pf_init`` / ``pf_step`` / ``pf_scan`` shims (and
+``repro.core.tracking.track``) are gone: every caller goes through the
+engine API now.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
-
-from repro.core.precision import PrecisionPolicy
 
 __all__ = [
     "SMCSpec",
     "FilterState",
     "FilterOutput",
-    "pf_init",
-    "pf_step",
-    "pf_scan",
 ]
 
 
@@ -82,9 +76,28 @@ class SMCSpec:
 
 
 class FilterState(NamedTuple):
+    """Carried filter state; a bank adds a leading slot axis per leaf.
+
+    The two trailing fields exist only on *ragged* banks (per-slot active
+    particle counts — see ``FilterBank.init(..., n_active=...)``); they are
+    ``None`` on dense banks and single filters, so the dense pytree
+    structure is unchanged.
+
+    n_active:    (B,) int32 per-slot active lane counts (lanes >= n_active
+                 are padding: log-weight -inf, weight exactly 0).
+    log_uniform: (B,) compute-dtype ``-log(n_active)`` — the uniform
+                 log-weight each slot resets to after resampling.  Stored
+                 (not recomputed per step) so every reset in a slot's
+                 lifetime uses bit-identical values: ``log`` is
+                 transcendental, and XLA's constant-folded log differs from
+                 its runtime vectorized log by 1 ulp for some counts.
+    """
+
     particles: Any
     log_weights: jax.Array  # (P,) unnormalized, compute dtype
     step: jax.Array  # int32 scalar
+    n_active: Any = None
+    log_uniform: Any = None
 
 
 class FilterOutput(NamedTuple):
@@ -93,88 +106,3 @@ class FilterOutput(NamedTuple):
     log_z_inc: jax.Array  # per-step log evidence increment
     resampled: jax.Array  # bool: did this step resample
     max_loglik: jax.Array  # for diagnostics / paper's max kernel parity
-
-
-_WARNED: set[str] = set()
-
-
-def _warn_once(old: str, new: str) -> None:
-    """Warn-once helper shared by every legacy shim (here and tracking)."""
-    if old in _WARNED:
-        return
-    _WARNED.add(old)
-    warnings.warn(
-        f"{old} is deprecated; use {new} (see repro.core.engine)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def _engine(spec, policy, *, resampler, ess_threshold, backend):
-    from repro.core.engine import FilterConfig, ParticleFilter
-
-    return ParticleFilter(
-        spec,
-        FilterConfig(
-            policy=policy,
-            backend=backend,
-            resampler=resampler,
-            ess_threshold=ess_threshold,
-        ),
-    )
-
-
-def pf_init(
-    spec: SMCSpec, policy: PrecisionPolicy, key: jax.Array, num_particles: int
-) -> FilterState:
-    """Deprecated: use ``ParticleFilter(spec, config).init(key, P)``."""
-    _warn_once("repro.core.filter.pf_init", "ParticleFilter.init")
-    from repro.core.engine import FilterConfig, ParticleFilter
-
-    return ParticleFilter(spec, FilterConfig(policy=policy)).init(
-        key, num_particles
-    )
-
-
-def pf_step(
-    spec: SMCSpec,
-    policy: PrecisionPolicy,
-    state: FilterState,
-    observation: Any,
-    key: jax.Array,
-    *,
-    resampler: str = "systematic",
-    ess_threshold: float = 1.0,
-    backend: str = "jnp",
-) -> tuple[FilterState, FilterOutput]:
-    """Deprecated: use ``ParticleFilter(spec, config).step(state, obs, key)``."""
-    _warn_once("repro.core.filter.pf_step", "ParticleFilter.step")
-    return _engine(
-        spec,
-        policy,
-        resampler=resampler,
-        ess_threshold=ess_threshold,
-        backend=backend,
-    ).step(state, observation, key)
-
-
-def pf_scan(
-    spec: SMCSpec,
-    policy: PrecisionPolicy,
-    key: jax.Array,
-    observations: Any,
-    num_particles: int,
-    *,
-    resampler: str = "systematic",
-    ess_threshold: float = 1.0,
-    backend: str = "jnp",
-) -> tuple[FilterState, FilterOutput]:
-    """Deprecated: use ``ParticleFilter(spec, config).run(key, obs, P)``."""
-    _warn_once("repro.core.filter.pf_scan", "ParticleFilter.run")
-    return _engine(
-        spec,
-        policy,
-        resampler=resampler,
-        ess_threshold=ess_threshold,
-        backend=backend,
-    ).run(key, observations, num_particles)

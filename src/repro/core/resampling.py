@@ -42,10 +42,15 @@ from repro.core.precision import PrecisionPolicy
 __all__ = [
     "build_cdf",
     "systematic",
+    "systematic_masked_banked",
     "stratified",
+    "stratified_masked_banked",
     "multinomial",
+    "multinomial_masked_banked",
     "metropolis",
+    "metropolis_masked_banked",
     "METROPOLIS_ITERS",
+    "MASKED_RESAMPLERS",
     "RESAMPLERS",
     "register_resampler",
     "get_resampler",
@@ -85,6 +90,38 @@ def systematic(
     u0 = jax.random.uniform(key, (), dtype=cdf.dtype)
     u = (jnp.arange(n_out, dtype=cdf.dtype) + u0) / n_out
     return _search(cdf, u)
+
+
+def systematic_masked_banked(
+    keys: jax.Array,
+    weights: jax.Array,
+    policy: PrecisionPolicy,
+    n_active: jax.Array,
+) -> jax.Array:
+    """Ragged-bank systematic resampling: (B,) keys, (B, P) weights, (B,)
+    active counts.
+
+    Weights on lanes >= n_active[b] must already be exactly 0 (the engine
+    masks their log-weights to -inf), so the CDF is flat past the active
+    prefix; the u-grid spans n_active[b] points — ``u_g = (g + u0) /
+    n_active`` — making output lanes < n_active a per-row systematic draw
+    over the active prefix only.  Lanes past the count probe u >= 1 and
+    clip to the CDF tail; the caller pins their weights back to -inf.
+    With ``n_active = P`` everywhere this is bitwise the vmapped
+    :func:`systematic` (IEEE division by the same values, same searches) —
+    the dense fast-path equivalence the ragged FilterBank tests assert.
+    """
+    p = weights.shape[-1]
+
+    def row(key, w, n):
+        cdf = _masked_cdf_row(w, policy)
+        u0 = jax.random.uniform(key, (), dtype=cdf.dtype)
+        u = (jnp.arange(p, dtype=cdf.dtype) + u0) / jnp.maximum(n, 1).astype(
+            cdf.dtype
+        )
+        return _search(cdf, u)
+
+    return jax.vmap(row)(keys, weights, n_active)
 
 
 def stratified(
@@ -159,6 +196,94 @@ def metropolis(
     return jax.lax.fori_loop(0, iters, chain_step, init)
 
 
+def _masked_cdf_row(w, policy):
+    """Per-row CDF for masked draws: zero-mass rows divide by 1, not 0
+    (their draws are junk the engine pins to -inf weight); rows with mass
+    divide by the same bits as :func:`build_cdf`."""
+    cdf = jnp.cumsum(w.astype(policy.accum_dtype), axis=-1)
+    total = cdf[..., -1:]
+    return cdf / jnp.where(total > 0, total, jnp.ones_like(total))
+
+
+def stratified_masked_banked(
+    keys: jax.Array,
+    weights: jax.Array,
+    policy: PrecisionPolicy,
+    n_active: jax.Array,
+) -> jax.Array:
+    """Ragged stratified resampling: strata span the *active* count.
+
+    ``u_i = (i + U_i) / n_active`` — output lanes < n_active are one draw
+    from each of n_active strata covering the whole active CDF (grids that
+    kept the dense 1/P spacing would truncate the top of the mass: only
+    u < n_active/P would survive the mask).  Full-width rows are bitwise
+    the vmapped dense :func:`stratified` (same draws, same division).
+    """
+    p = weights.shape[-1]
+
+    def row(key, w, n):
+        cdf = _masked_cdf_row(w, policy)
+        us = jax.random.uniform(key, (p,), dtype=cdf.dtype)
+        u = (jnp.arange(p, dtype=cdf.dtype) + us) / jnp.maximum(n, 1).astype(
+            cdf.dtype
+        )
+        return _search(cdf, u)
+
+    return jax.vmap(row)(keys, weights, n_active)
+
+
+def multinomial_masked_banked(
+    keys: jax.Array,
+    weights: jax.Array,
+    policy: PrecisionPolicy,
+    n_active: jax.Array,
+) -> jax.Array:
+    """Ragged multinomial resampling: P iid draws, *unsorted*.
+
+    The dense :func:`multinomial` sorts its uniforms (a search-locality
+    optimization); under a mask the first n_active of P *sorted* draws are
+    order statistics — biased toward the low-CDF prefix — so the masked
+    form inverts unsorted uniforms: any prefix of iid draws is iid.  A
+    full-width ragged row therefore matches the dense kernel in
+    *distribution* (same draw multiset, different lane order), not bitwise;
+    the ragged bank's bit-exact dense equivalence holds for the grid-based
+    resamplers (systematic, stratified).
+    """
+    p = weights.shape[-1]
+
+    def row(key, w, n):
+        del n  # every draw covers the full active CDF
+        cdf = _masked_cdf_row(w, policy)
+        u = jax.random.uniform(key, (p,), dtype=cdf.dtype)
+        return _search(cdf, u)
+
+    return jax.vmap(row)(keys, weights, n_active)
+
+
+def metropolis_masked_banked(
+    keys: jax.Array,
+    weights: jax.Array,
+    policy: PrecisionPolicy,
+    n_active: jax.Array,
+) -> jax.Array:
+    """Ragged Metropolis resampling: the dense banked chains are already
+    mask-correct.  Proposals land anywhere in [0, P), but a zero-weight
+    (inactive) proposal can never be accepted from an active ancestor
+    (``u * w_k < 0`` is false), so active lanes only ever adopt active
+    ancestors; inactive output lanes are junk the engine masks.
+    """
+    del n_active
+    return jax.vmap(lambda k, w: metropolis(k, w, policy))(keys, weights)
+
+
+# Masked (ragged-bank) reference forms by resampler name — the pure-jnp
+# fallbacks :class:`repro.core.engine.FilterBank` uses when the backend has
+# no fused masked kernel.  A resampler absent here (a custom registration)
+# cannot run ragged unless its backend supplies a masked form: the dense
+# grids silently truncate the active mass, so the engine raises instead.
+MASKED_RESAMPLERS: dict[str, Resampler] = {}
+
+
 RESAMPLERS: dict[str, Resampler] = {}
 
 
@@ -179,6 +304,13 @@ register_resampler("systematic", systematic)
 register_resampler("stratified", stratified)
 register_resampler("multinomial", multinomial)
 register_resampler("metropolis", metropolis)
+
+MASKED_RESAMPLERS.update(
+    systematic=systematic_masked_banked,
+    stratified=stratified_masked_banked,
+    multinomial=multinomial_masked_banked,
+    metropolis=metropolis_masked_banked,
+)
 
 
 def get_resampler(name: str) -> Resampler:

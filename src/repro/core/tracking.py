@@ -17,7 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import likelihood as lik
-from repro.core.engine import FilterBank, FilterConfig, ParticleFilter
+from repro.core.engine import (
+    FilterBank,
+    FilterConfig,
+    ParticleFilter,
+    get_backend,
+)
 from repro.core.filter import SMCSpec
 from repro.core.precision import PrecisionPolicy
 
@@ -26,7 +31,6 @@ __all__ = [
     "make_tracker_spec",
     "make_tracker_filter",
     "make_multi_tracker_filter",
-    "track",
 ]
 
 
@@ -110,13 +114,17 @@ def make_tracker_spec(
         )
         return {"pos": new.astype(policy.compute_dtype)}
 
+    # Likelihood dispatch goes through the backend registry — any backend
+    # exposing an ``intensity_loglik`` hook (the fused Pallas kernel does)
+    # gets it; the rest fall back to the pure-jnp reference.  Resolved at
+    # spec-build time so unknown backend names fail fast.
+    backend_loglik = get_backend(cfg.backend).intensity_loglik
+
     def loglik(particles, frame, step):
         del step
         patches = lik.gather_patches(frame, particles["pos"], offsets)
-        if cfg.backend == "pallas":
-            from repro.kernels.likelihood import ops as lik_ops
-
-            return lik_ops.intensity_loglik(patches, model, policy)
+        if backend_loglik is not None:
+            return backend_loglik(patches, model, policy)
         return lik.intensity_loglik(patches, model, policy)
 
     return SMCSpec(
@@ -158,6 +166,7 @@ def make_multi_tracker_filter(
     policy: PrecisionPolicy,
     starts: jax.Array,
     filter_config: FilterConfig | None = None,
+    budgets: jax.Array | None = None,
 ) -> FilterBank:
     """N-target tracker: one FilterBank slot per row of ``starts`` ((B, 2)).
 
@@ -172,6 +181,14 @@ def make_multi_tracker_filter(
     Lost targets can be re-acquired mid-stream without recompiling:
     ``state = bank.reset_slot(state, slot, key)`` redraws that slot's cloud
     at its start position.
+
+    ``budgets`` ((B,) ints) gives each target its own particle budget — the
+    ragged bank: ``cfg.num_particles`` stays the lane width, but target
+    ``b`` filters with ``budgets[b]`` active particles (easy targets track
+    at a fraction of the width a hard target needs).  The counts become
+    the bank's ``default_n_active``, picked up by ``init``/``run``; a
+    reset can re-admit a target at any traced count
+    (``bank.reset_slot(state, slot, key, n_active=n)``).
 
     Meshed multi-object mode: hand the bank a mesh through
     ``filter_config`` and targets shard over "data" while each target's
@@ -196,27 +213,13 @@ def make_multi_tracker_filter(
         )
     else:
         filter_config = filter_config.with_(policy=policy)
-    return FilterBank(spec, filter_config, num_slots=starts.shape[0])
-
-
-def track(
-    key: jax.Array,
-    video: jax.Array,
-    cfg: TrackerConfig,
-    policy: PrecisionPolicy,
-    start: jax.Array | None = None,
-):
-    """Deprecated: use ``make_tracker_filter(cfg, policy).run(...)``.
-
-    Returns (trajectory (T, 2) in accum dtype, per-step FilterOutput).
-    """
-    from repro.core.filter import _warn_once
-
-    _warn_once(
-        "repro.core.tracking.track",
-        "make_tracker_filter(cfg, policy).run(key, video, P)",
-    )
-    flt = make_tracker_filter(cfg, policy, start)
-    final, outs = flt.run(key, video, cfg.num_particles)
-    trajectory = outs.estimate["pos"]
-    return trajectory, outs
+    bank = FilterBank(spec, filter_config, num_slots=starts.shape[0])
+    if budgets is not None:
+        budgets = jnp.asarray(budgets, jnp.int32)
+        if budgets.shape != (starts.shape[0],):
+            raise ValueError(
+                f"budgets must be shaped ({starts.shape[0]},) — one count "
+                f"per target — got {budgets.shape}"
+            )
+        bank.default_n_active = budgets
+    return bank

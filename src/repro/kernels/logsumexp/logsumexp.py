@@ -25,6 +25,15 @@ single-filter kernel.
 VMEM per step: block_rows*128*itemsize (in) + block_rows*128*itemsize (out);
 with the default block_rows=64 and bf16 that is 16 KiB + 16 KiB, independent
 of B.
+
+Ragged banks: the ``masked`` variant takes a per-row active count (SMEM
+scalar per bank row) and pins every lane at position >= n_active to -inf in
+the online carry — exp(-inf) = 0 never contributes to the sum and -inf
+never wins the max, so a masked row with ``n_active = n`` is *bitwise* the
+unmasked kernel on a width-``n`` row (extra all-masked blocks fold
+``max(m, -inf)`` and ``s + 0.0``, both exact no-ops), whatever junk the
+inactive lanes hold.  ``n_active = P`` on every row is bitwise the dense
+kernel.
 """
 
 from __future__ import annotations
@@ -34,22 +43,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_normalize_call", "LANES"]
+__all__ = ["fused_normalize_call", "fused_normalize_masked_call", "LANES"]
 
 LANES = 128
 
 
-def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
-    phase = pl.program_id(1)
-    i = pl.program_id(2)
-    nb = pl.num_programs(2)
-
-    @pl.when(jnp.logical_and(phase == 0, i == 0))
-    def _init():
-        m_s[0, 0] = jnp.float32(-jnp.inf)
-        s_s[0, 0] = jnp.float32(0.0)
-
-    x = x_ref[0].astype(jnp.float32)
+def _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s):
+    """Shared reduce/normalize phases over one fp32 block ``x``."""
 
     @pl.when(phase == 0)
     def _reduce():
@@ -77,6 +77,47 @@ def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
         lse = s_s[0, 0]
         lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
         w_ref[0] = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+
+
+def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(phase == 0, i == 0))
+    def _init():
+        m_s[0, 0] = jnp.float32(-jnp.inf)
+        s_s[0, 0] = jnp.float32(0.0)
+
+    x = x_ref[0].astype(jnp.float32)
+    _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s)
+
+
+def _masked_kernel(n_ref, x_ref, w_ref, m_out, lse_out, m_s, s_s):
+    """As ``_kernel``, with lanes at position >= this row's n_active pinned
+    to -inf before they enter the carry (and thus 0 in the weight output)."""
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(phase == 0, i == 0))
+    def _init():
+        m_s[0, 0] = jnp.float32(-jnp.inf)
+        s_s[0, 0] = jnp.float32(0.0)
+
+    rows = x_ref.shape[1]
+    base = i * (rows * LANES)
+    pos = (
+        base
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0) * LANES
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
+    )
+    x = jnp.where(
+        pos < n_ref[0, 0],
+        x_ref[0].astype(jnp.float32),
+        jnp.float32(-jnp.inf),
+    )
+    _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s)
 
 
 def fused_normalize_call(
@@ -111,4 +152,48 @@ def fused_normalize_call(
         ],
         interpret=interpret,
     )(x3d)
+    return w, m, lse
+
+
+def fused_normalize_masked_call(
+    x3d: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked form: x3d (B, rows, 128), n_active (B, 1) int32 per-row counts.
+
+    Lanes at flat position >= n_active[b] are treated as absent (-inf in the
+    carry, 0 in the weight output).  Returns (w, m (B, 1), lse (B, 1)).
+    """
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
+    assert n_active.shape == (nbank, 1), n_active.shape
+    nb = rows // block_rows
+    w, m, lse = pl.pallas_call(
+        _masked_kernel,
+        grid=(nbank, 2, nb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1), lambda b, p, i: (b, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_active.astype(jnp.int32), x3d)
     return w, m, lse

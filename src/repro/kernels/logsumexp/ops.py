@@ -10,6 +10,12 @@ lse) reduction state: under mesh distribution they are the *shard-local*
 pass of the paper's Eq.-5 — each device reduces its slice with the fused
 kernel, and ``repro.core.distributed.dist_normalize[_banked]`` merges the
 per-shard states with one ``pmax`` + one ``psum`` per row.
+
+``normalize_weights_masked`` / ``online_logsumexp_masked`` are the ragged-
+bank forms: a per-row active count pins lanes >= n_active[b] to -inf inside
+the kernel carry, so a masked row with ``n_active = n`` is bitwise the
+unmasked kernel on a width-``n`` row regardless of what the inactive lanes
+hold, and ``n_active = P`` everywhere is bitwise the dense batched kernel.
 """
 
 from __future__ import annotations
@@ -20,13 +26,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import pad_to_multiple, should_interpret
-from repro.kernels.logsumexp.logsumexp import LANES, fused_normalize_call
+from repro.kernels.logsumexp.logsumexp import (
+    LANES,
+    fused_normalize_call,
+    fused_normalize_masked_call,
+)
 
 __all__ = [
     "normalize_weights",
     "normalize_weights_batched",
+    "normalize_weights_masked",
     "online_logsumexp",
     "online_logsumexp_batched",
+    "online_logsumexp_masked",
 ]
 
 DEFAULT_BLOCK_ROWS = 64
@@ -85,6 +97,35 @@ def normalize_weights_batched(
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights_masked(
+    log_w: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row masked fused normalize: (B, P) log-weights + (B,) counts.
+
+    Lanes at position >= n_active[b] never enter row ``b``'s carry (they are
+    pinned to -inf inside the kernel) and come out with weight 0 — the
+    ragged-bank contract: whatever junk an inactive lane holds, the active
+    prefix is bitwise ``normalize_weights`` on that prefix alone.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, m, lse = fused_normalize_masked_call(
+        x3d,
+        n_active.reshape(nbank, 1),
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    return w, m[:, 0], lse[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def online_logsumexp(
     log_w: jax.Array,
     *,
@@ -110,5 +151,21 @@ def online_logsumexp_batched(
     (``dist_normalize_banked`` merges these across the particle axes)."""
     _, m, lse = normalize_weights_batched(
         log_w, block_rows=block_rows, interpret=interpret
+    )
+    return m, lse
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def online_logsumexp_masked(
+    log_w: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row masked (max (B,), lse (B,)): the shard-local online-LSE state
+    of a *ragged* meshed bank (lanes >= n_active[b] excluded in-kernel)."""
+    _, m, lse = normalize_weights_masked(
+        log_w, n_active, block_rows=block_rows, interpret=interpret
     )
     return m, lse

@@ -9,6 +9,13 @@ keys: inside a meshed :class:`~repro.core.engine.FilterBank` the offsets
 derive from the per-slot key chain *and* the device index (the RNA
 ``local`` scheme of ``repro.core.distributed``), so the caller owns the
 u0 derivation and the kernel only inverts the CDF.
+
+The ``*_masked`` forms add a per-row active count for ragged banks: lanes
+at position >= n_active[b] are zeroed before the CDF carry and the
+systematic grid spans the active count (u_g = (g + u0) / n_active[b]), so
+the active prefix of a masked row is bitwise the unmasked kernel on a
+width-n_active row; output lanes past the count clip to the CDF tail and
+must be masked by the caller (the engine pins their weights to -inf).
 """
 
 from __future__ import annotations
@@ -22,14 +29,18 @@ from repro.kernels.common import pad_to_multiple, should_interpret
 from repro.kernels.resample.resample import (
     LANES,
     cumsum_call,
+    masked_cumsum_call,
+    masked_search_call,
     search_call,
 )
 
 __all__ = [
     "inclusive_cumsum",
     "systematic_ancestors_batched",
+    "systematic_ancestors_masked",
     "systematic_resample",
     "systematic_resample_batched",
+    "systematic_resample_masked",
 ]
 
 DEFAULT_BLOCK_ROWS = 64
@@ -74,6 +85,37 @@ def _systematic_impl(u0, w2d, *, num_out, block_rows, block_rows_out, interpret)
         u0,
         cdf3d,
         n_total=num_out,
+        num_out=num_out,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+    return jnp.minimum(anc, n - 1)
+
+
+def _systematic_masked_impl(
+    u0, w2d, n_active, *, num_out, block_rows, block_rows_out, interpret
+):
+    """(B,) offsets + (B, N) weights + (B,) counts -> (B, num_out) ancestors."""
+    nbank, n = w2d.shape
+    w3d = _as_blocks(w2d, block_rows)
+    cdf3d = masked_cumsum_call(
+        w3d,
+        n_active.reshape(nbank, 1),
+        block_rows=block_rows,
+        out_dtype=jnp.float32,
+        interpret=interpret,
+    )
+    total = cdf3d[:, -1, -1]
+    # Same unguarded division as the dense impl: a zero-mass row (n_active
+    # = 0, or a shard slice holding none of its slot's mass) yields NaN
+    # cdf and deterministic clipped garbage ancestors in *both* kernels —
+    # those lanes carry -inf weight in the caller, and a full-count masked
+    # launch stays bitwise the dense one.
+    cdf3d = cdf3d / total[:, None, None]
+    anc = masked_search_call(
+        u0,
+        n_active,
+        cdf3d,
         num_out=num_out,
         block_rows_out=block_rows_out,
         interpret=interpret,
@@ -176,6 +218,79 @@ def systematic_ancestors_batched(
     return _systematic_impl(
         u0,
         weights,
+        num_out=num_out or n,
+        block_rows=block_rows,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "block_rows", "block_rows_out", "interpret"),
+)
+def systematic_resample_masked(
+    keys: jax.Array,
+    weights: jax.Array,
+    n_active: jax.Array,
+    *,
+    num_out: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows_out: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ragged per-row systematic resampling of a (B, P) weight bank.
+
+    ``n_active``: (B,) int32 per-row active counts.  Lanes >= n_active[b]
+    are zeroed before the CDF and the u-grid spans n_active[b] points, so
+    ancestors at output positions < n_active[b] are bitwise
+    ``systematic_resample`` on the width-n_active[b] prefix (same key);
+    positions past the count clip to the CDF tail and must be masked by
+    the caller.  ``n_active = P`` everywhere is bitwise
+    ``systematic_resample_batched``.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = weights.shape
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _systematic_masked_impl(
+        u0,
+        weights,
+        n_active,
+        num_out=num_out or n,
+        block_rows=block_rows,
+        block_rows_out=block_rows_out,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "block_rows", "block_rows_out", "interpret"),
+)
+def systematic_ancestors_masked(
+    u0: jax.Array,
+    weights: jax.Array,
+    n_active: jax.Array,
+    *,
+    num_out: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows_out: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ragged per-row systematic ancestors from explicit offsets.
+
+    The masked twin of ``systematic_ancestors_batched``: inside a meshed
+    *ragged* bank each shard passes its per-slot shard-local active count
+    (global count minus the shard's lane offset, clipped to the slice).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = weights.shape[-1]
+    return _systematic_masked_impl(
+        u0,
+        weights,
+        n_active,
         num_out=num_out or n,
         block_rows=block_rows,
         block_rows_out=block_rows_out,

@@ -28,6 +28,16 @@ The paper's key performance lesson (conversion-free inner loops) shows up
 here as: probe indices are carried as int32 vectors, never round-tripped
 through float, and the u-grid ramp is built once per block with
 ``broadcasted_iota`` in fp32.
+
+Ragged banks: the ``masked`` variants take a per-row active count from SMEM.
+The masked cumsum zeroes lanes at position >= n_active[b] before they enter
+the carry; the masked search draws its systematic grid over the *active*
+count — ``u_g = (g + u0) / n_active[b]`` — so only the first n_active
+outputs are meaningful draws (later grid points fall past the CDF and clip
+to the last entry; ragged callers pin those lanes to -inf weight).  Both the
+dense and masked grids are built by IEEE fp32 division (``1.0f / n``), which
+constant-folds bit-identically to its runtime value — the property the
+ragged == dense equivalence tests rely on.
 """
 
 from __future__ import annotations
@@ -39,9 +49,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["cumsum_call", "search_call", "LANES"]
+__all__ = [
+    "cumsum_call",
+    "masked_cumsum_call",
+    "masked_search_call",
+    "search_call",
+    "LANES",
+]
 
 LANES = 128
+
+
+def _cumsum_body(x, out_ref, carry_s):
+    lane_cum = jnp.cumsum(x, axis=1)  # within-row inclusive
+    row_tot = lane_cum[:, -1:]  # (br, 1)
+    row_prefix = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+    block = lane_cum + row_prefix + carry_s[0, 0]
+    out_ref[0] = block.astype(out_ref.dtype)
+    carry_s[0, 0] = block[-1, -1]
 
 
 def _cumsum_kernel(x_ref, out_ref, carry_s):
@@ -51,13 +76,30 @@ def _cumsum_kernel(x_ref, out_ref, carry_s):
     def _init():
         carry_s[0, 0] = jnp.float32(0.0)
 
-    x = x_ref[0].astype(jnp.float32)  # (br, 128)
-    lane_cum = jnp.cumsum(x, axis=1)  # within-row inclusive
-    row_tot = lane_cum[:, -1:]  # (br, 1)
-    row_prefix = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
-    block = lane_cum + row_prefix + carry_s[0, 0]
-    out_ref[0] = block.astype(out_ref.dtype)
-    carry_s[0, 0] = block[-1, -1]
+    _cumsum_body(x_ref[0].astype(jnp.float32), out_ref, carry_s)
+
+
+def _masked_cumsum_kernel(n_ref, x_ref, out_ref, carry_s):
+    """As ``_cumsum_kernel`` with lanes >= this row's n_active zeroed before
+    the carry — adding exact 0.0 terms, so the active prefix of the CDF is
+    bitwise the unmasked kernel over that prefix alone."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_s[0, 0] = jnp.float32(0.0)
+
+    rows = x_ref.shape[1]
+    base = i * (rows * LANES)
+    pos = (
+        base
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0) * LANES
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
+    )
+    x = jnp.where(
+        pos < n_ref[0, 0], x_ref[0].astype(jnp.float32), jnp.float32(0.0)
+    )
+    _cumsum_body(x, out_ref, carry_s)
 
 
 def cumsum_call(
@@ -81,24 +123,35 @@ def cumsum_call(
     )(x3d)
 
 
-def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
-    """Vectorized binary search of the systematic u-grid into one bank row.
+def masked_cumsum_call(
+    x3d: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int,
+    out_dtype,
+    interpret: bool,
+) -> jax.Array:
+    """Masked per-bank-row cumsum: n_active (B, 1) int32 per-row counts."""
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0
+    assert n_active.shape == (nbank, 1), n_active.shape
+    return pl.pallas_call(
+        _masked_cumsum_kernel,
+        grid=(nbank, rows // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_rows, LANES), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, LANES), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbank, rows, LANES), out_dtype),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(n_active.astype(jnp.int32), x3d)
 
-    cdf_ref: this bank row's full (1, rows, 128) CDF in VMEM (normalized:
-    last entry == 1).  u0_ref: this row's offset, (1, 1) in SMEM.
-    anc_ref: (1, bo, 128) int32 output block of ancestor indices.
-    Index of first cdf entry > u  ==  count of entries <= u (right-side
-    searchsorted), computed by bisection on the flattened CDF.
-    """
-    o = pl.program_id(1)
+
+def _bisect(u, cdf_ref, anc_ref, *, n_cdf: int):
+    """Right-side searchsorted of the u-grid block into this row's CDF."""
     _, bo, lanes = anc_ref.shape
-    base = o * (bo * lanes)
-    # u-grid for this block, built in fp32 once (no per-step converts).
-    ramp = jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 0) * lanes
-    ramp = ramp + jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 1)
-    u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * jnp.float32(
-        1.0 / n_total
-    )
     cdf = cdf_ref[0].reshape(-1)  # resident in VMEM/registers
     lo = jnp.zeros((bo, lanes), jnp.int32)  # lowest candidate
     hi = jnp.full((bo, lanes), n_cdf, jnp.int32)  # exclusive upper bound
@@ -116,6 +169,45 @@ def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
     anc_ref[0] = jnp.minimum(lo, n_cdf - 1)
+
+
+def _u_ramp(o, anc_ref):
+    """Per-block fp32 systematic ramp (flat output positions)."""
+    _, bo, lanes = anc_ref.shape
+    base = o * (bo * lanes)
+    ramp = jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 0) * lanes
+    ramp = ramp + jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 1)
+    return ramp, base
+
+
+def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
+    """Vectorized binary search of the systematic u-grid into one bank row.
+
+    cdf_ref: this bank row's full (1, rows, 128) CDF in VMEM (normalized:
+    last entry == 1).  u0_ref: this row's offset, (1, 1) in SMEM.
+    anc_ref: (1, bo, 128) int32 output block of ancestor indices.
+    Index of first cdf entry > u  ==  count of entries <= u (right-side
+    searchsorted), computed by bisection on the flattened CDF.
+    """
+    o = pl.program_id(1)
+    ramp, base = _u_ramp(o, anc_ref)
+    # IEEE fp32 reciprocal (folds bit-identically to the masked kernel's
+    # runtime division — never the double-rounded Python 1.0 / n).
+    inv = jnp.float32(1.0) / jnp.float32(n_total)
+    u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * inv
+    _bisect(u, cdf_ref, anc_ref, n_cdf=n_cdf)
+
+
+def _masked_search_kernel(u0_ref, n_ref, cdf_ref, anc_ref, *, n_cdf: int):
+    """As ``_search_kernel`` with this row's grid count read from SMEM:
+    u_g = (g + u0) / n_active.  Grid points g >= n_active probe past the
+    CDF and clip to the last entry — the ragged caller masks those lanes."""
+    o = pl.program_id(1)
+    ramp, base = _u_ramp(o, anc_ref)
+    n_f = jnp.maximum(n_ref[0, 0], 1).astype(jnp.float32)
+    inv = jnp.float32(1.0) / n_f
+    u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * inv
+    _bisect(u, cdf_ref, anc_ref, n_cdf=n_cdf)
 
 
 def search_call(
@@ -152,4 +244,47 @@ def search_call(
         out_shape=jax.ShapeDtypeStruct((nbank, rows_out, LANES), jnp.int32),
         interpret=interpret,
     )(u0.reshape(nbank, 1).astype(jnp.float32), cdf3d)
+    return anc.reshape(nbank, -1)[:, :num_out]
+
+
+def masked_search_call(
+    u0: jax.Array,
+    n_active: jax.Array,
+    cdf3d: jax.Array,
+    *,
+    num_out: int,
+    block_rows_out: int,
+    interpret: bool,
+) -> jax.Array:
+    """Per-row-count systematic search: u_g = (g + u0[b]) / n_active[b].
+
+    u0: (B,) offsets; n_active: (B,) int32 grid counts; cdf3d: (B, rows,
+    128) normalized CDFs.  Returns (B, num_out) int32 ancestors — only the
+    first n_active[b] of row ``b`` are meaningful systematic draws.
+    """
+    nbank, rows_cdf, lanes = cdf3d.shape
+    assert lanes == LANES and u0.shape == (nbank,)
+    assert n_active.shape == (nbank,), n_active.shape
+    rows_out = pl.cdiv(num_out, LANES)
+    rows_out = ((rows_out + block_rows_out - 1) // block_rows_out) * block_rows_out
+    n_cdf = rows_cdf * LANES
+    kernel = functools.partial(_masked_search_kernel, n_cdf=n_cdf)
+    anc = pl.pallas_call(
+        kernel,
+        grid=(nbank, rows_out // block_rows_out),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, o: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b, o: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, rows_cdf, LANES), lambda b, o: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_rows_out, LANES), lambda b, o: (b, o, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((nbank, rows_out, LANES), jnp.int32),
+        interpret=interpret,
+    )(
+        u0.reshape(nbank, 1).astype(jnp.float32),
+        n_active.reshape(nbank, 1).astype(jnp.int32),
+        cdf3d,
+    )
     return anc.reshape(nbank, -1)[:, :num_out]

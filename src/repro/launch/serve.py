@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --reduce \
         --batch 8 --steps 32 [--smc --slots 4 --requests 8 \
-        --particles-per-slot 4 --mesh 2x2 --async-admit]
+        --particles 4:32 --mesh 2x2 --async-admit]
 
 Demonstrates the serving stack end to end on CPU with a reduced config:
 sharded weights, ring-buffer/sliding caches, one fused decode step for the
@@ -16,6 +16,16 @@ continuous-batching scheduler: requests are admitted into free slots
 mid-flight, retired on completion, and the bank steps every tick regardless
 of occupancy (the scheduler never waits to fill the batch and never
 recompiles; slot lifecycle is ``reset_slot`` by traced index).
+
+Particle budgets are per request (``--particles MIN:MAX``): the bank is a
+*ragged* FilterBank at lane width MAX, each request draws a key-derived
+power-of-two size class in [MIN, MAX] and is admitted at that traced
+active count (``reset_slot(..., n_active=n)`` — no recompile per size),
+so easy requests stop paying for the hardest request's particle cloud.
+The scheduler reports the padding this removes from the quality ledger
+(``padding_waste``: active vs padded particle-ticks).  A single
+``--particles N`` (or the legacy ``--particles-per-slot``) keeps the dense
+bank and its mask-free fast path.
 
 The bank composes with a device mesh (``--mesh DxM``): slots shard over
 the "data" axis and each slot's particles over "model" (the engine's
@@ -157,12 +167,44 @@ def _request_budgets(
     )
 
 
+def particle_size_classes(p_min: int, p_max: int) -> list[int]:
+    """Power-of-two ladder of particle budgets from p_min up to p_max.
+
+    Requests are binned into these classes rather than arbitrary counts so
+    a packer can group same-class requests (and so budgets stay friendly to
+    lane-width-128 kernels): [p_min, 2*p_min, 4*p_min, ..., p_max].
+    """
+    if not 1 <= p_min <= p_max:
+        raise ValueError(
+            f"need 1 <= min <= max particle budgets, got {p_min}:{p_max}"
+        )
+    classes = []
+    c = p_min
+    while c < p_max:
+        classes.append(c)
+        c *= 2
+    classes.append(p_max)
+    return classes
+
+
+def _request_particles(
+    key: jax.Array, num_requests: int, p_min: int, p_max: int
+) -> np.ndarray:
+    """Key-derived per-request particle budgets drawn from the size-class
+    ladder — the heterogeneous-difficulty workload of a ragged bank."""
+    classes = np.asarray(particle_size_classes(p_min, p_max))
+    idx = np.asarray(
+        jax.random.randint(key, (num_requests,), 0, len(classes))
+    )
+    return classes[idx]
+
+
 def run_continuous_batching(
     bank,
     *,
     num_requests: int,
     max_steps: int,
-    particles: int,
+    particles: int | tuple[int, int],
     key: jax.Array,
     arrival_every: int = 1,
     min_steps: int | None = None,
@@ -179,6 +221,18 @@ def run_continuous_batching(
     highest-cumulative-reward particle's sequence.  Works unchanged over a
     mesh-sharded bank (``FilterConfig(mesh=...)``): resets land on the
     owning shard, retires read back per-slot rows.
+
+    ``particles`` may be a single count (dense bank, every request at the
+    same width) or a ``(min, max)`` range — the *ragged* bank: the bank is
+    built at lane width ``max``, every request draws a key-derived particle
+    budget from the power-of-two size-class ladder in [min, max]
+    (:func:`particle_size_classes`), and admission resets the slot at that
+    *traced* count (``reset_slot(..., n_active=n)`` — no recompile per
+    size).  Easy requests then carry e.g. 256 active lanes while hard ones
+    carry 4096 in the same bank, and the returned stats report the padding
+    this saves from the quality ledger: ``active_particle_ticks`` (lanes
+    that did useful work), ``padded_particle_ticks`` (lanes a pad-to-max
+    bank would bill), and ``padding_waste`` (their gap as a fraction).
 
     ``async_admit`` double-buffers the loop: each tick's bank step is
     dispatched *before* the host blocks on the previous tick's counters,
@@ -198,29 +252,61 @@ def run_continuous_batching(
             f"need 0 <= min_steps <= max_steps, got min_steps={min_steps}, "
             f"max_steps={max_steps}"
         )
+    if isinstance(particles, tuple):
+        p_min, p_max = particles
+    else:
+        p_min = p_max = particles
+    ragged = p_min < p_max
     k_state, k_admit, k_run, k_sched = jax.random.split(key, 4)
     lengths = _request_budgets(k_sched, num_requests, min_steps, max_steps)
+    if ragged:
+        budgets = _request_particles(
+            jax.random.fold_in(k_sched, 1), num_requests, p_min, p_max
+        )
+    else:
+        budgets = np.full((num_requests,), p_max)
     pending = collections.deque(
-        {"id": i, "steps": int(lengths[i]), "arrival": i * arrival_every}
+        {
+            "id": i,
+            "steps": int(lengths[i]),
+            "particles": int(budgets[i]),
+            "arrival": i * arrival_every,
+        }
         for i in range(num_requests)
     )
-    state = bank.init(k_state, particles)
+    if ragged:
+        # Ragged states must be ragged from init (the pytree cannot grow a
+        # count field under jit); empty slots idle at full width.
+        state = bank.init(
+            k_state, p_max, n_active=jnp.full((nb,), p_max, jnp.int32)
+        )
+    else:
+        state = bank.init(k_state, p_max)
     obs = jnp.zeros((nb,), jnp.int32)  # the decode spec ignores observations
     step = bank.jit_step
     reset = bank.jit_init_slot
     active: dict[int, dict] = {}
     free = list(range(nb))[::-1]
     results, tick, busy_slot_ticks = [], 0, 0
+    active_particle_ticks, padded_particle_ticks = 0, 0
 
     def admit(state, tick):
         while free and pending and pending[0]["arrival"] <= tick:
             req = pending.popleft()
             slot = free.pop()
-            state = reset(
-                state,
-                jnp.int32(slot),
-                jax.random.fold_in(k_admit, req["id"]),
-            )
+            if ragged:
+                state = reset(
+                    state,
+                    jnp.int32(slot),
+                    jax.random.fold_in(k_admit, req["id"]),
+                    jnp.int32(req["particles"]),
+                )
+            else:
+                state = reset(
+                    state,
+                    jnp.int32(slot),
+                    jax.random.fold_in(k_admit, req["id"]),
+                )
             req["admitted_tick"] = tick
             active[slot] = req
         return state
@@ -242,11 +328,14 @@ def run_continuous_batching(
         seqs = np.asarray(ex_state.particles["seq"])
         for slot in done:
             req = active.pop(slot)
-            best = int(np.argmax(cum[slot]))
+            # Best particle over the request's *active* lanes only —
+            # inactive lanes hold junk that must never win the argmax.
+            best = int(np.argmax(cum[slot, : req["particles"]]))
             results.append(
                 {
                     "id": req["id"],
                     "steps": req["steps"],
+                    "particles": req["particles"],
                     "tokens": seqs[slot, best, : req["steps"]],
                     "admitted_tick": req["admitted_tick"],
                     "finished_tick": ex_tick,
@@ -257,19 +346,24 @@ def run_continuous_batching(
     while pending or active:
         state = admit(state, tick)
         keys = jax.random.split(jax.random.fold_in(k_run, tick), nb)
+        busy = [active[s]["particles"] for s in active]
         if async_admit:
             # Dispatch first, decide later: the retire pass below blocks
             # only on the *pre-step* state (already materialized), while
             # this tick's step runs on device.
             new_state, _ = step(state, obs, keys)
-            busy_slot_ticks += len(active)
+            busy_slot_ticks += len(busy)
+            active_particle_ticks += sum(busy)
+            padded_particle_ticks += len(busy) * p_max
             retire(state, tick)
             state = new_state
             tick += 1
         else:
             state, _ = step(state, obs, keys)
             tick += 1
-            busy_slot_ticks += len(active)
+            busy_slot_ticks += len(busy)
+            active_particle_ticks += sum(busy)
+            padded_particle_ticks += len(busy) * p_max
             retire(state, tick)
     results.sort(key=lambda r: r["id"])
     return {
@@ -277,6 +371,13 @@ def run_continuous_batching(
         "ticks": tick,
         "busy_slot_ticks": busy_slot_ticks,
         "occupancy": busy_slot_ticks / max(1, tick * nb),
+        "active_particle_ticks": active_particle_ticks,
+        "padded_particle_ticks": padded_particle_ticks,
+        "padding_waste": (
+            1.0 - active_particle_ticks / padded_particle_ticks
+            if padded_particle_ticks
+            else 0.0
+        ),
     }
 
 
@@ -296,6 +397,12 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8,
                     help="--smc: total requests to serve")
     ap.add_argument("--particles-per-slot", type=int, default=4)
+    ap.add_argument("--particles", default="",
+                    help="--smc: per-request particle budgets, either a "
+                         "single count or a MIN:MAX range (ragged bank: "
+                         "the bank runs at lane width MAX and each request "
+                         "draws a key-derived power-of-two size class in "
+                         "[MIN, MAX]); overrides --particles-per-slot")
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="--smc: ticks between request arrivals")
     ap.add_argument("--ess-frac", type=float, default=0.5)
@@ -361,11 +468,12 @@ def main() -> None:
             ),
             num_slots=args.slots,
         )
+        particles = _parse_particles(args)
         stats = run_continuous_batching(
             bank,
             num_requests=args.requests,
             max_steps=args.steps,
-            particles=args.particles_per_slot,
+            particles=particles,
             key=jax.random.key(args.seed),
             arrival_every=args.arrival_every,
             async_admit=args.async_admit,
@@ -373,20 +481,26 @@ def main() -> None:
         dt = time.perf_counter() - t0
         n_steps = sum(r["steps"] for r in stats["results"])
         ticks = max(1, stats["ticks"])
+        pdesc = (
+            f"{particles[0]}:{particles[1]}"
+            if isinstance(particles, tuple)
+            else str(particles)
+        )
         print(
             f"arch={cfg.name} smc slots={args.slots} "
-            f"requests={args.requests} particles/slot="
-            f"{args.particles_per_slot}"
+            f"requests={args.requests} particles/slot={pdesc}"
             + (f" mesh={args.mesh} scheme={args.scheme}" if mesh else "")
             + (" async" if args.async_admit else "")
             + f" ticks={stats['ticks']} "
             f"occupancy={stats['occupancy']:.0%} "
+            f"padding_waste={stats['padding_waste']:.0%} "
             f"({dt / ticks * 1e3:.1f} ms/tick incl. compile, "
             f"{n_steps / dt:.1f} request-steps/s)"
         )
         for r in stats["results"][:4]:
             print(
                 f"  req[{r['id']}] steps={r['steps']} "
+                f"particles={r['particles']} "
                 f"latency={r['finished_tick'] - r['admitted_tick']} ticks: "
                 f"{r['tokens'][:12].tolist()}..."
             )
@@ -411,6 +525,21 @@ def main() -> None:
           f"({dt / args.steps * 1e3:.1f} ms/step incl. compile)")
     for row in range(min(b, 4)):
         print(f"  seq[{row}]: {seqs[row, :16].tolist()}...")
+
+
+def _parse_particles(args) -> int | tuple[int, int]:
+    """``--particles`` ("N" or "MIN:MAX") with --particles-per-slot fallback."""
+    if not args.particles:
+        return args.particles_per_slot
+    spec = args.particles
+    if ":" in spec:
+        lo, hi = (int(x) for x in spec.split(":", 1))
+        if not 1 <= lo <= hi:
+            raise SystemExit(
+                f"--particles range must satisfy 1 <= MIN <= MAX, got {spec}"
+            )
+        return lo if lo == hi else (lo, hi)
+    return int(spec)
 
 
 def _batch_axis(x, n):

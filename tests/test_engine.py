@@ -1,6 +1,4 @@
-"""ParticleFilter engine: legacy equivalence, registries, deprecation shims."""
-
-import warnings
+"""ParticleFilter engine: registries, dispatch, ESS semantics."""
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +11,9 @@ from repro.core import (
     SMCSpec,
     get_policy,
 )
-from repro.core import filter as legacy
 from repro.core import resampling
 from repro.core.engine import get_backend
-from repro.core.tracking import TrackerConfig, make_tracker_filter, make_tracker_spec
+from repro.core.tracking import TrackerConfig, make_tracker_spec
 from repro.data.synthetic_video import VideoConfig, generate_video
 
 FRAMES, H, W, P = 12, 64, 64, 256
@@ -44,8 +41,9 @@ def _gauss_spec():
 
 
 @pytest.mark.parametrize("policy", ["fp32", "bf16", "fp16", "bf16_mixed"])
-def test_run_bit_identical_to_legacy_pf_scan(video, policy):
-    """Engine run == legacy pf_scan, bit for bit, on the tracker workload."""
+def test_run_bit_identical_under_jit(video, policy):
+    """Engine run is deterministic and jit-transparent per policy — the
+    equivalence the legacy pf_scan shims used to anchor."""
     pol = get_policy(policy)
     cfg = TrackerConfig(num_particles=P, height=H, width=W)
     spec = make_tracker_spec(cfg, pol)
@@ -54,11 +52,7 @@ def test_run_bit_identical_to_legacy_pf_scan(video, policy):
     final_e, outs_e = jax.jit(lambda k, v: flt.run(k, v, P))(
         jax.random.key(1), video
     )
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        final_l, outs_l = jax.jit(
-            lambda k, v: legacy.pf_scan(spec, pol, k, v, P)
-        )(jax.random.key(1), video)
+    final_l, outs_l = flt.run(jax.random.key(1), video, P)
 
     np.testing.assert_array_equal(
         np.asarray(outs_e.estimate["pos"], np.float64),
@@ -73,19 +67,18 @@ def test_run_bit_identical_to_legacy_pf_scan(video, policy):
     )
 
 
-def test_track_shim_matches_engine(video):
-    pol = get_policy("fp32")
-    cfg = TrackerConfig(num_particles=P, height=H, width=W)
-    flt = make_tracker_filter(cfg, pol)
-    _, outs = flt.run(jax.random.key(1), video, P)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.core.tracking import track
+def test_legacy_shims_removed():
+    """ROADMAP said drop the pf_* / track shims once nothing uses them —
+    they must stay gone (reappearing names mean a bad merge)."""
+    import repro.core as core
+    import repro.core.filter as filt
+    import repro.core.tracking as tracking
 
-        traj, _ = track(jax.random.key(1), video, cfg, pol)
-    np.testing.assert_array_equal(
-        np.asarray(traj), np.asarray(outs.estimate["pos"])
-    )
+    for mod in (core, filt):
+        for name in ("pf_init", "pf_step", "pf_scan"):
+            assert not hasattr(mod, name), f"{mod.__name__}.{name} is back"
+    assert not hasattr(tracking, "track")
+    assert not hasattr(core, "track")
 
 
 def test_unknown_backend_raises_with_options():
@@ -128,36 +121,6 @@ def test_registered_resampler_dispatches():
         assert calls == [32]
     finally:
         del resampling.RESAMPLERS["_test_echo"]
-
-
-def test_shims_warn_exactly_once_and_forward():
-    spec = _gauss_spec()
-    pol = get_policy("fp32")
-    legacy._WARNED.clear()
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        state1 = legacy.pf_init(spec, pol, jax.random.key(0), 64)
-        state2 = legacy.pf_init(spec, pol, jax.random.key(0), 64)
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1 and "pf_init" in str(dep[0].message)
-
-    # forwards correctly: shim output == engine output
-    ref = ParticleFilter(spec, FilterConfig(policy=pol)).init(
-        jax.random.key(0), 64
-    )
-    np.testing.assert_array_equal(
-        np.asarray(state1.particles["x"]), np.asarray(ref.particles["x"])
-    )
-    np.testing.assert_array_equal(
-        np.asarray(state2.log_weights), np.asarray(ref.log_weights)
-    )
-
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        legacy.pf_step(spec, pol, state1, jnp.float32(0.0), jax.random.key(1))
-        legacy.pf_step(spec, pol, state1, jnp.float32(0.0), jax.random.key(1))
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1 and "pf_step" in str(dep[0].message)
 
 
 def test_stream_matches_step_by_step():

@@ -1,11 +1,11 @@
-"""Filter-level invariants and backend equivalence."""
+"""Filter-level invariants and backend equivalence (engine API)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SMCSpec, get_policy, pf_init, pf_scan, pf_step
+from repro.core import FilterConfig, ParticleFilter, SMCSpec, get_policy
 
 POL = get_policy("fp32")
 
@@ -26,19 +26,22 @@ def _gauss_spec(target=3.0):
     return SMCSpec(init, transition, loglik)
 
 
-def test_pf_init_uniform_weights():
-    state = pf_init(_gauss_spec(), POL, jax.random.key(0), 256)
+def _engine(spec, **kw):
+    return ParticleFilter(spec, FilterConfig(policy=POL, **kw))
+
+
+def test_init_uniform_weights():
+    state = _engine(_gauss_spec()).init(jax.random.key(0), 256)
     np.testing.assert_allclose(
         np.asarray(state.log_weights), -np.log(256.0), rtol=1e-6
     )
+    assert state.n_active is None  # single filters are never ragged
 
 
-def test_pf_step_outputs():
-    spec = _gauss_spec()
-    state = pf_init(spec, POL, jax.random.key(0), 256)
-    new_state, out = pf_step(
-        spec, POL, state, jnp.float32(0.5), jax.random.key(1)
-    )
+def test_step_outputs():
+    flt = _engine(_gauss_spec())
+    state = flt.init(jax.random.key(0), 256)
+    new_state, out = flt.step(state, jnp.float32(0.5), jax.random.key(1))
     assert 1.0 <= float(out.ess) <= 256.0
     assert bool(out.resampled)  # ess_threshold=1.0 resamples always
     # after resampling, weights reset to uniform
@@ -55,30 +58,26 @@ def test_adaptive_resampling_skips():
         transition=lambda k, p, s: p,
         loglik=lambda p, o, s: jnp.zeros_like(p["x"]),
     )
-    state = pf_init(spec, POL, jax.random.key(0), 128)
-    _, out = pf_step(
-        spec, POL, state, jnp.float32(0.0), jax.random.key(1),
-        ess_threshold=0.5,
-    )
+    flt = _engine(spec, ess_threshold=0.5)
+    state = flt.init(jax.random.key(0), 128)
+    _, out = flt.step(state, jnp.float32(0.0), jax.random.key(1))
     assert not bool(out.resampled)
     np.testing.assert_allclose(float(out.ess), 128.0, rtol=1e-5)
 
 
-def test_pf_scan_tracks_drift():
-    spec = _gauss_spec()
+def test_run_tracks_drift():
+    flt = _engine(_gauss_spec())
     obs = jnp.cumsum(jnp.full((60,), 0.1))  # target drifting at the model rate
-    final, outs = pf_scan(
-        spec, POL, jax.random.key(0), obs, 512
-    )
+    final, outs = flt.run(jax.random.key(0), obs, 512)
     est = np.asarray(outs.estimate["x"])
     err = np.abs(est[-20:] - np.asarray(obs[-20:]))
     assert err.mean() < 0.5
 
 
 def test_log_evidence_finite_and_reasonable():
-    spec = _gauss_spec()
+    flt = _engine(_gauss_spec())
     obs = jnp.cumsum(jnp.full((30,), 0.1))
-    _, outs = pf_scan(spec, POL, jax.random.key(0), obs, 256)
+    _, outs = flt.run(jax.random.key(0), obs, 256)
     lz = np.asarray(outs.log_z_inc)
     assert np.isfinite(lz).all()
     # per-step log evidence for a well-matched model ~ -0.5*log(2*pi*var)
@@ -87,11 +86,9 @@ def test_log_evidence_finite_and_reasonable():
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
 def test_backends_agree_fp32(backend):
-    spec = _gauss_spec()
+    flt = _engine(_gauss_spec(), backend=backend)
     obs = jnp.cumsum(jnp.full((20,), 0.1))
-    _, outs = pf_scan(
-        spec, POL, jax.random.key(0), obs, 256, backend=backend
-    )
+    _, outs = flt.run(jax.random.key(0), obs, 256)
     est = np.asarray(outs.estimate["x"])
     assert np.isfinite(est).all()
     # store for cross-check
@@ -116,7 +113,8 @@ def test_integer_states_pass_through():
         },
         loglik=lambda p, o, s: -jnp.square(p["x"] - o),
     )
-    state = pf_init(spec, POL, jax.random.key(0), 64)
-    new_state, out = pf_step(spec, POL, state, jnp.float32(1.0), jax.random.key(1))
+    flt = _engine(spec)
+    state = flt.init(jax.random.key(0), 64)
+    new_state, out = flt.step(state, jnp.float32(1.0), jax.random.key(1))
     assert new_state.particles["tok"].dtype == jnp.int32
     assert out.estimate["tok"].dtype == jnp.int32  # ints not averaged

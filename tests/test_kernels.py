@@ -195,6 +195,145 @@ def test_systematic_batched_rows_differ():
     assert not np.array_equal(anc[1], anc[2])
 
 
+def test_likelihood_backend_hook_matches_core():
+    """The Backend registry's ``intensity_loglik`` hook (what
+    ``backend="pallas"`` tracking now dispatches on) == core.likelihood."""
+    from repro.core import likelihood as core_lik
+    from repro.core.engine import get_backend
+
+    assert get_backend("jnp").intensity_loglik is None  # jnp uses the core path
+    hook = get_backend("pallas").intensity_loglik
+    assert hook is not None
+    pol = get_policy("fp32")
+    model = IntensityModel(radius=4)
+    patches = jax.random.uniform(
+        jax.random.key(11), (256, model.num_points), jnp.float32, 60.0, 250.0
+    )
+    np.testing.assert_allclose(
+        np.asarray(hook(patches, model, pol)),
+        np.asarray(core_lik.intensity_loglik(patches, model, pol)),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Masked (ragged-bank) kernels: a masked row with n_active = n must be
+# *bitwise* the unmasked kernel on the width-n prefix — whatever junk the
+# inactive lanes hold (including non-finite values) — across precisions.
+
+
+def _junk_rows(key, nbank, width, counts, dt):
+    """Bank rows whose active prefixes are normal draws and whose inactive
+    tails are adversarial junk (huge values, nan, inf)."""
+    x = (
+        jax.random.normal(key, (nbank, width), jnp.float32) * 40
+    ).astype(dt)
+    x = np.array(x)  # ml_dtypes-backed numpy view, assignable
+    junk = [3e4, float("nan"), float("inf"), float("-inf")]
+    for i, n in enumerate(counts):
+        for j in range(n, width):
+            x[i, j] = junk[(i + j) % len(junk)]
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=lambda d: d.__name__)
+def test_masked_logsumexp_matches_unmasked_prefix_bitwise(dt):
+    counts = [1000, 517, 128, 7]
+    x = _junk_rows(jax.random.key(1), len(counts), 1000, counts, dt)
+    n_act = jnp.asarray(counts, jnp.int32)
+    wm, mm, lsem = lse_ops.normalize_weights_masked(x, n_act)
+    assert wm.dtype == dt
+    for i, n in enumerate(counts):
+        wi, mi, lsei = lse_ops.normalize_weights(x[i, :n])
+        np.testing.assert_array_equal(
+            np.asarray(wm[i, :n], np.float32), np.asarray(wi, np.float32)
+        )
+        np.testing.assert_array_equal(float(mm[i]), float(mi))
+        np.testing.assert_array_equal(float(lsem[i]), float(lsei))
+        # inactive lanes: weight exactly 0, junk never leaks
+        assert (np.asarray(wm[i, n:], np.float32) == 0.0).all()
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=lambda d: d.__name__)
+def test_masked_full_width_bitwise_dense(dt):
+    """n_active = P on every row == the dense batched kernel, bitwise."""
+    x = (
+        jax.random.normal(jax.random.key(2), (3, 1000), jnp.float32) * 40
+    ).astype(dt)
+    full = jnp.full((3,), 1000, jnp.int32)
+    wm, mm, lsem = lse_ops.normalize_weights_masked(x, full)
+    wb, mb, lseb = lse_ops.normalize_weights_batched(x)
+    np.testing.assert_array_equal(
+        np.asarray(wm, np.float32), np.asarray(wb, np.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(mm), np.asarray(mb))
+    np.testing.assert_array_equal(np.asarray(lsem), np.asarray(lseb))
+
+
+def test_masked_systematic_matches_unmasked_prefix_bitwise():
+    counts = [1000, 517, 128, 7]
+    keys = jax.random.split(jax.random.key(3), len(counts))
+    w = jax.random.uniform(jax.random.key(4), (len(counts), 1000), jnp.float32)
+    wj = np.array(w)
+    for i, n in enumerate(counts):  # junk weights on inactive lanes
+        wj[i, n:] = [99.0, np.nan][i % 2]
+    n_act = jnp.asarray(counts, jnp.int32)
+    ancm = np.asarray(
+        res_ops.systematic_resample_masked(keys, jnp.asarray(wj), n_act)
+    )
+    for i, n in enumerate(counts):
+        anci = np.asarray(res_ops.systematic_resample(keys[i], w[i, :n]))
+        np.testing.assert_array_equal(ancm[i, :n], anci)
+        assert (ancm[i, :n] < n).all()  # never an inactive ancestor
+
+
+def test_masked_systematic_full_width_bitwise_dense():
+    keys = jax.random.split(jax.random.key(5), 3)
+    w = jax.random.uniform(jax.random.key(6), (3, 1000), jnp.float32)
+    full = jnp.full((3,), 1000, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(res_ops.systematic_resample_masked(keys, w, full)),
+        np.asarray(res_ops.systematic_resample_batched(keys, w)),
+    )
+
+
+def test_masked_ancestors_from_u0_matches_batched_when_full():
+    """The meshed ragged bank's shard-local inverse: explicit offsets +
+    per-row counts, full counts == the dense batched form."""
+    u0 = jax.random.uniform(jax.random.key(7), (3,), jnp.float32)
+    w = jax.random.uniform(jax.random.key(8), (3, 512), jnp.float32)
+    full = jnp.full((3,), 512, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(res_ops.systematic_ancestors_masked(u0, w, full)),
+        np.asarray(res_ops.systematic_ancestors_batched(u0, w)),
+    )
+    # partial counts stay inside the prefix
+    part = jnp.asarray([512, 100, 3], jnp.int32)
+    anc = np.asarray(res_ops.systematic_ancestors_masked(u0, w, part))
+    for i, n in enumerate([512, 100, 3]):
+        assert (anc[i, :n] < n).all()
+
+
+def test_masked_zero_count_rows_are_inert():
+    """n_active = 0 rows must not crash or poison their neighbours."""
+    x = jnp.asarray(
+        [[1.0, 2.0, 3.0, 4.0], [jnp.nan, jnp.inf, -1.0, 0.0]], jnp.float32
+    )
+    n_act = jnp.asarray([4, 0], jnp.int32)
+    w, m, lse = lse_ops.normalize_weights_masked(x, n_act)
+    assert np.isfinite(np.asarray(w[0])).all()
+    assert (np.asarray(w[1]) == 0.0).all()
+    assert np.isneginf(float(lse[1])) and np.isneginf(float(m[1]))
+    keys = jax.random.split(jax.random.key(9), 2)
+    anc = np.asarray(
+        res_ops.systematic_resample_masked(
+            keys, jnp.abs(x).at[1].set(0.0), n_act
+        )
+    )
+    assert ((anc >= 0) & (anc < 4)).all()
+
+
 if given is not None:
 
     @given(st.integers(2, 2000))
@@ -205,3 +344,27 @@ if given is not None:
         np.testing.assert_allclose(
             float(cs[-1]), float(jnp.sum(w)), rtol=1e-5
         )
+
+    @given(
+        st.integers(1, 1500),
+        st.sampled_from(DTYPES),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_masked_kernels_prefix_property(n, dt):
+        """∀ n: masked row (junk tail) ≡ unmasked width-n kernels, bitwise."""
+        width = 1536
+        x = _junk_rows(jax.random.key(n), 1, width, [n], dt)
+        n_act = jnp.asarray([n], jnp.int32)
+        wm, mm, lsem = lse_ops.normalize_weights_masked(x, n_act)
+        wi, mi, lsei = lse_ops.normalize_weights(x[0, :n])
+        np.testing.assert_array_equal(
+            np.asarray(wm[0, :n], np.float32), np.asarray(wi, np.float32)
+        )
+        np.testing.assert_array_equal(float(lsem[0]), float(lsei))
+        key = jax.random.key(n + 1)
+        w = jax.random.uniform(jax.random.key(n + 2), (width,), jnp.float32)
+        ancm = np.asarray(
+            res_ops.systematic_resample_masked(key[None], w[None], n_act)
+        )
+        anci = np.asarray(res_ops.systematic_resample(key, w[:n]))
+        np.testing.assert_array_equal(ancm[0, :n], anci)

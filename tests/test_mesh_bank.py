@@ -223,3 +223,164 @@ print("scheduler sharded ok")
 def test_scheduler_admit_retire_over_sharded_bank():
     out = run_with_devices(SCHEDULER_SHARDED, devices=4)
     assert "scheduler sharded ok" in out
+
+
+RAGGED_UNIFORM_BITWISE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import FilterBank, FilterConfig, get_policy
+from repro.core.tracking import TrackerConfig, make_tracker_spec
+from repro.compat import make_mesh
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+video, _ = generate_video(jax.random.key(0),
+                          VideoConfig(num_frames=6, height=64, width=64))
+pol = get_policy("fp32")
+mesh = make_mesh((2, 4), ("data", "model"),
+                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for backend in ("jnp", "pallas"):
+    spec = make_tracker_spec(
+        TrackerConfig(num_particles=512, height=64, width=64,
+                      backend=backend), pol,
+        starts=jnp.asarray([[20.0, 20.0], [44.0, 44.0], [32.0, 32.0],
+                            [16.0, 48.0]]))
+    for scheme in ("exact", "local"):
+        fc = FilterConfig(policy=pol, backend=backend, mesh=mesh,
+                          scheme=scheme)
+        dense = FilterBank(spec, fc, num_slots=4)
+        ragged = FilterBank(spec, fc, num_slots=4)
+        sd = dense.init(jax.random.key(1), 512)
+        sr = ragged.init(jax.random.key(1), 512,
+                         n_active=jnp.full((4,), 512, jnp.int32))
+        for t in range(6):
+            ks = jax.random.split(
+                jax.random.fold_in(jax.random.key(2), t), 4)
+            sd, od = dense.jit_step_shared(sd, video[t], ks)
+            sr, orr = ragged.jit_step_shared(sr, video[t], ks)
+        np.testing.assert_array_equal(np.asarray(od.estimate["pos"]),
+                                      np.asarray(orr.estimate["pos"]))
+        np.testing.assert_array_equal(np.asarray(sd.log_weights),
+                                      np.asarray(sr.log_weights))
+        np.testing.assert_array_equal(np.asarray(sd.particles["pos"]),
+                                      np.asarray(sr.particles["pos"]))
+print("meshed uniform ragged bitwise ok")
+"""
+
+
+def test_meshed_uniform_ragged_bitwise_matches_dense():
+    """Acceptance: a full-width ragged bank == the dense bank, bit for bit,
+    under the forced-8-device mesh — both distributed schemes, both the
+    jnp and fused-pallas shard-local kernel paths (the masked kernels'
+    zero-mass-slice handling must match the dense kernels exactly)."""
+    out = run_with_devices(RAGGED_UNIFORM_BITWISE, devices=8, timeout=600)
+    assert "meshed uniform ragged bitwise ok" in out
+
+
+RAGGED_PARTIAL_MESHED = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import FilterBank, FilterConfig, get_policy
+from repro.core.tracking import TrackerConfig, make_tracker_spec
+from repro.compat import make_mesh
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+video, _ = generate_video(jax.random.key(0),
+                          VideoConfig(num_frames=6, height=64, width=64))
+pol = get_policy("fp32")
+mesh = make_mesh((2, 4), ("data", "model"),
+                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# budgets straddle the shard width (512/4 = 128/shard): slot 1 occupies
+# less than one shard, slot 3 a shard and a half
+budgets = jnp.asarray([512, 100, 256, 192], jnp.int32)
+for backend in ("jnp", "pallas"):
+    spec = make_tracker_spec(
+        TrackerConfig(num_particles=512, height=64, width=64,
+                      backend=backend), pol,
+        starts=jnp.asarray([[20.0, 20.0], [44.0, 44.0], [32.0, 32.0],
+                            [16.0, 48.0]]))
+    for scheme in ("exact", "local"):
+        bank = FilterBank(
+            spec, FilterConfig(policy=pol, backend=backend, mesh=mesh,
+                               scheme=scheme), num_slots=4)
+        st = bank.init(jax.random.key(1), 512, n_active=budgets)
+        for t in range(6):
+            ks = jax.random.split(jax.random.fold_in(jax.random.key(2), t), 4)
+            st, out = bank.jit_step_shared(st, video[t], ks)
+        lw = np.asarray(st.log_weights)
+        assert np.isneginf(lw[1, 100:]).all(), (backend, scheme)
+        assert np.isneginf(lw[3, 192:]).all(), (backend, scheme)
+        ess = np.asarray(out.ess)
+        assert (ess[1] <= 100 + 1e-2) and (ess[3] <= 192 + 1e-2), (
+            backend, scheme, ess)
+        est = np.asarray(out.estimate["pos"])
+        assert np.isfinite(est).all(), (backend, scheme)
+        # mid-flight re-admission at a traced count lands on its shard
+        st = bank.jit_init_slot(st, jnp.int32(1), jax.random.key(9),
+                                jnp.int32(300))
+        assert np.asarray(st.n_active).tolist() == [512, 300, 256, 192]
+        ks = jax.random.split(jax.random.key(10), 4)
+        st, out = bank.jit_step_shared(st, video[0], ks)
+        assert np.isfinite(np.asarray(out.estimate["pos"])).all()
+print("meshed partial ragged ok")
+"""
+
+
+def test_meshed_partial_ragged_bank():
+    """Partial per-slot budgets under the mesh: masked lanes stay masked
+    across the pmax/psum merge, all-gather, and ring exchange, on both the
+    jnp and fused-pallas shard-local kernel paths."""
+    out = run_with_devices(RAGGED_PARTIAL_MESHED, devices=8, timeout=600)
+    assert "meshed partial ragged ok" in out
+
+
+RAGGED_SCHEDULER_SHARDED = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import FilterBank, FilterConfig, SMCSpec, get_policy
+from repro.compat import make_mesh
+from repro.launch.serve import run_continuous_batching
+
+STEPS = 5
+
+def init(key, n):
+    del key
+    return dict(tok=jnp.zeros((n,), jnp.int32),
+                reward=jnp.zeros((n,), jnp.float32),
+                cum_reward=jnp.zeros((n,), jnp.float32),
+                seq=jnp.zeros((n, STEPS), jnp.int32))
+def transition(key, p, step):
+    tok = jax.random.randint(key, p["tok"].shape, 0, 100)
+    reward = jax.random.uniform(jax.random.fold_in(key, 1), p["reward"].shape)
+    pos = jnp.minimum(step, STEPS - 1)
+    return dict(tok=tok, reward=reward,
+                cum_reward=p["cum_reward"] + reward,
+                seq=p["seq"].at[:, pos].set(tok))
+def loglik(p, obs, step):
+    del obs, step
+    return p["reward"]
+def summary(p, w):
+    return dict(reward=jnp.sum(w * p["reward"]))
+
+mesh = make_mesh((2, 2), ("data", "model"),
+                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+spec = SMCSpec(init, transition, loglik, summary=summary)
+bank = FilterBank(
+    spec, FilterConfig(policy=get_policy("fp32"), ess_threshold=0.5,
+                       mesh=mesh, scheme="local"), num_slots=4)
+stats = run_continuous_batching(
+    bank, num_requests=6, max_steps=STEPS, particles=(2, 8),
+    key=jax.random.key(0), arrival_every=1)
+results = stats["results"]
+assert [r["id"] for r in results] == list(range(6))
+for r in results:
+    assert r["particles"] in (2, 4, 8)
+    assert r["tokens"].shape == (r["steps"],)
+    assert (r["tokens"] >= 0).all() and (r["tokens"] < 100).all()
+assert len({r["particles"] for r in results}) > 1
+assert 0.0 < stats["padding_waste"] < 1.0
+print("ragged scheduler sharded ok")
+"""
+
+
+def test_ragged_scheduler_over_sharded_bank():
+    """Heterogeneous particle budgets admitted into a mesh-sharded bank:
+    the end-to-end ragged serving configuration."""
+    out = run_with_devices(RAGGED_SCHEDULER_SHARDED, devices=4)
+    assert "ragged scheduler sharded ok" in out

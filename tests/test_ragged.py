@@ -1,0 +1,442 @@
+"""Ragged FilterBank: per-slot active particle counts from kernels to the
+scheduler.
+
+The equivalence spine: a uniform ragged bank (every slot full-width) is
+*bit-identical* to the dense FilterBank across policies and backends; a
+partial slot's statistics are those of a width-n filter (masked lanes carry
+weight exactly 0 and never win a resampling draw); admission counts are
+traced (no recompile per size); the continuous-batching scheduler serves
+key-derived heterogeneous budgets and accounts the padding it avoids.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FilterBank,
+    FilterConfig,
+    SMCSpec,
+    get_policy,
+)
+from repro.core.tracking import (
+    TrackerConfig,
+    make_multi_tracker_filter,
+    make_tracker_spec,
+)
+from repro.data.synthetic_video import VideoConfig, generate_video
+
+FRAMES, H, W, P = 8, 64, 64, 256
+
+
+@pytest.fixture(scope="module")
+def video():
+    return generate_video(
+        jax.random.key(0), VideoConfig(num_frames=FRAMES, height=H, width=W)
+    )[0]
+
+
+def _banks(policy, backend="jnp", ess_threshold=1.0, slots=3):
+    cfg = TrackerConfig(num_particles=P, height=H, width=W, backend=backend)
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0], [32.0, 32.0]])[:slots]
+    spec = make_tracker_spec(cfg, policy, starts=starts)
+    fc = FilterConfig(
+        policy=policy, backend=backend, ess_threshold=ess_threshold
+    )
+    return FilterBank(spec, fc, num_slots=slots), FilterBank(
+        spec, fc, num_slots=slots
+    )
+
+
+# The acceptance spine: full-width ragged == dense, bit for bit, for every
+# policy/backend combination the bank supports, including the adaptive
+# (sub-1.0 threshold) resampling path.
+@pytest.mark.parametrize(
+    "pname,backend,thr",
+    [
+        ("fp32", "jnp", 1.0),
+        ("fp32", "jnp", 0.5),
+        ("fp32", "pallas", 1.0),
+        ("bf16", "jnp", 1.0),
+        ("bf16", "pallas", 1.0),
+        ("fp16", "jnp", 0.5),
+        ("fp16", "pallas", 1.0),
+        ("bf16_mixed", "jnp", 1.0),
+    ],
+)
+def test_uniform_ragged_bit_identical_to_dense(video, pname, backend, thr):
+    pol = get_policy(pname)
+    dense, ragged = _banks(pol, backend=backend, ess_threshold=thr)
+    fd, od = dense.run(jax.random.key(1), video, P)
+    fr, orr = ragged.run(
+        jax.random.key(1), video, P,
+        n_active=jnp.full((3,), P, jnp.int32),
+    )
+    assert fr.n_active is not None and fd.n_active is None
+    np.testing.assert_array_equal(
+        np.asarray(od.estimate["pos"], np.float64),
+        np.asarray(orr.estimate["pos"], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fd.log_weights, np.float64),
+        np.asarray(fr.log_weights, np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fd.particles["pos"], np.float64),
+        np.asarray(fr.particles["pos"], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(od.ess, np.float64), np.asarray(orr.ess, np.float64)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(od.resampled), np.asarray(orr.resampled)
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_partial_slots_mask_invariants(video, backend):
+    """Lanes past a slot's count stay at -inf log-weight / zero weight
+    through every step, ESS is bounded by the budget, estimates stay
+    finite, and a slot's active lanes never inherit an inactive lane."""
+    pol = get_policy("fp32")
+    budgets = jnp.asarray([P, 64, 16], jnp.int32)
+    _, bank = _banks(pol, backend=backend, ess_threshold=0.5)
+    state = bank.init(jax.random.key(1), P, n_active=budgets)
+
+    # Poison the inactive lanes with a sentinel position: if resampling
+    # ever drew an inactive ancestor, the sentinel would surface in an
+    # active lane after the gather.
+    sentinel = 7777.0
+    lane = np.arange(P)
+    mask = lane[None, :] >= np.asarray(budgets)[:, None]
+    pos = np.array(state.particles["pos"])
+    pos[mask] = sentinel
+    state = state._replace(
+        particles={"pos": jnp.asarray(pos)}
+    )
+
+    for t in range(FRAMES):
+        ks = jax.random.split(jax.random.fold_in(jax.random.key(2), t), 3)
+        state, out = bank.jit_step_shared(state, video[t], ks)
+        lw = np.asarray(state.log_weights)
+        assert np.isneginf(lw[1, 64:]).all()
+        assert np.isneginf(lw[2, 16:]).all()
+        assert np.isfinite(lw[1, :64]).all() or out.resampled[1]
+        ess = np.asarray(out.ess)
+        assert ess[1] <= 64 + 1e-3 and ess[2] <= 16 + 1e-3
+        assert np.isfinite(np.asarray(out.estimate["pos"])).all()
+        p = np.asarray(state.particles["pos"])
+        # the tracker clips positions to the frame, so a surviving
+        # sentinel could only have come from gathering an inactive lane
+        assert (p[1, :64] < H + 1).all() and (p[2, :16] < H + 1).all()
+
+
+def test_partial_slot_estimate_ignores_inactive_lanes(video):
+    """The weighted-mean estimate of a budget-n slot uses only its active
+    prefix: poisoned inactive lanes must not move it."""
+    pol = get_policy("fp32")
+    budgets = jnp.asarray([P, 64, 16], jnp.int32)
+    _, bank = _banks(pol)
+    state_a = bank.init(jax.random.key(1), P, n_active=budgets)
+    pos = np.asarray(state_a.particles["pos"])
+    mask = np.arange(P)[None, :] >= np.asarray(budgets)[:, None]
+    poisoned = pos.copy()
+    poisoned[mask] = 3333.0
+    state_b = state_a._replace(particles={"pos": jnp.asarray(poisoned)})
+    ks = jax.random.split(jax.random.key(3), 3)
+    _, out_a = bank.jit_step_shared(state_a, video[0], ks)
+    _, out_b = bank.jit_step_shared(state_b, video[0], ks)
+    np.testing.assert_array_equal(
+        np.asarray(out_a.estimate["pos"]), np.asarray(out_b.estimate["pos"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_a.ess), np.asarray(out_b.ess)
+    )
+
+
+def test_init_slot_traced_count_no_recompile(video):
+    """Admission at a new particle budget reuses the compiled reset — the
+    recompile-free contract the scheduler relies on."""
+    pol = get_policy("fp32")
+    _, bank = _banks(pol)
+    state = bank.init(
+        jax.random.key(1), P, n_active=jnp.full((3,), P, jnp.int32)
+    )
+    state = bank.jit_init_slot(
+        state, jnp.int32(1), jax.random.key(5), jnp.int32(96)
+    )
+    n0 = bank.jit_init_slot._cache_size()
+    state = bank.jit_init_slot(
+        state, jnp.int32(2), jax.random.key(6), jnp.int32(17)
+    )
+    assert bank.jit_init_slot._cache_size() == n0, "recompiled on new count"
+    assert np.asarray(state.n_active).tolist() == [P, 96, 17]
+    lw = np.asarray(state.log_weights)
+    np.testing.assert_allclose(lw[1, :96], -np.log(96.0), rtol=1e-6)
+    assert np.isneginf(lw[1, 96:]).all()
+    np.testing.assert_allclose(lw[2, :17], -np.log(17.0), rtol=1e-6)
+    # a reset without a count restores full width
+    state = bank.jit_init_slot(state, jnp.int32(2), jax.random.key(7))
+    assert np.asarray(state.n_active).tolist() == [P, 96, P]
+    # and the bank keeps stepping
+    ks = jax.random.split(jax.random.key(8), 3)
+    _, out = bank.jit_step_shared(state, video[0], ks)
+    assert np.isfinite(np.asarray(out.estimate["pos"])).all()
+
+
+def test_ragged_validation():
+    pol = get_policy("fp32")
+    dense, ragged = _banks(pol)
+    with pytest.raises(ValueError, match="one count per slot"):
+        ragged.init(jax.random.key(0), P, n_active=jnp.asarray([P, P]))
+    with pytest.raises(ValueError, match=r"\[0, 256\]"):
+        ragged.init(
+            jax.random.key(0), P, n_active=jnp.asarray([P, P, P + 1])
+        )
+    state = dense.init(jax.random.key(0), P)
+    with pytest.raises(ValueError, match="ragged bank"):
+        dense.init_slot(state, 0, jax.random.key(1), n_active=8)
+    # a concrete re-admission count must also fit the lane width (an
+    # oversized count would silently mis-scale the systematic grid)
+    rstate = ragged.init(
+        jax.random.key(0), P, n_active=jnp.full((3,), P, jnp.int32)
+    )
+    with pytest.raises(ValueError, match=r"\[0, 256\]"):
+        ragged.init_slot(rstate, 0, jax.random.key(1), n_active=2 * P)
+
+
+def test_custom_resampler_without_masked_form_rejected():
+    """A registered resampler with no masked (count-aware) form cannot run
+    ragged: its dense grid would silently truncate the active mass."""
+    from repro.core import resampling
+
+    @resampling.register_resampler("_test_ragged_echo")
+    def _echo(key, weights, policy, num_samples=None):
+        return jnp.arange(weights.shape[-1], dtype=jnp.int32)
+
+    try:
+        pol = get_policy("fp32")
+        spec = make_tracker_spec(
+            TrackerConfig(num_particles=P, height=H, width=W), pol
+        )
+        bank = FilterBank(
+            spec,
+            FilterConfig(policy=pol, resampler="_test_ragged_echo"),
+            num_slots=2,
+        )
+        # dense use stays fine
+        bank.init(jax.random.key(0), P)
+        with pytest.raises(ValueError, match="no masked"):
+            bank.init(
+                jax.random.key(0), P, n_active=jnp.asarray([P, 64])
+            )
+    finally:
+        del resampling.RESAMPLERS["_test_ragged_echo"]
+
+
+@pytest.mark.parametrize("resampler", ["stratified", "multinomial"])
+def test_masked_cdf_resamplers_cover_whole_active_prefix(resampler):
+    """Regression: the masked stratified/multinomial draws must span the
+    *active* CDF.  A dense 1/P grid truncated by the mask only ever probed
+    u < n/P, so particles in the top of the active mass could never be
+    selected — with uniform weights over a half-width prefix, ancestors
+    would all land in the bottom half."""
+    from repro.core import resampling
+
+    pol = get_policy("fp32")
+    n, width = 128, 256
+    w = jnp.zeros((1, width)).at[0, :n].set(1.0 / n)
+    keys = jax.random.split(jax.random.key(0), 1)
+    fn = resampling.MASKED_RESAMPLERS[resampler]
+    anc = np.asarray(fn(keys, w, pol, jnp.asarray([n], jnp.int32)))[0, :n]
+    assert (anc < n).all()  # never an inactive ancestor
+    assert anc.max() > n // 2  # top half of the active mass is reachable
+    # stratified at full width stays bitwise the dense draw
+    if resampler == "stratified":
+        full = np.asarray(
+            fn(keys, w, pol, jnp.asarray([width], jnp.int32))
+        )
+        dense = np.asarray(
+            jax.vmap(
+                lambda k, row: resampling.stratified(k, row, pol)
+            )(keys, w)
+        )
+        np.testing.assert_array_equal(full, dense)
+
+
+def test_ragged_bank_stratified_end_to_end(video):
+    """A ragged bank on a non-systematic CDF resampler filters sanely
+    (finite estimates, mask invariants hold)."""
+    pol = get_policy("fp32")
+    cfg = TrackerConfig(
+        num_particles=P, height=H, width=W, resampler="stratified"
+    )
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0]])
+    spec = make_tracker_spec(cfg, pol, starts=starts)
+    bank = FilterBank(
+        spec,
+        FilterConfig(policy=pol, resampler="stratified"),
+        num_slots=2,
+    )
+    state = bank.init(
+        jax.random.key(1), P, n_active=jnp.asarray([P, 48], jnp.int32)
+    )
+    for t in range(4):
+        ks = jax.random.split(jax.random.fold_in(jax.random.key(2), t), 2)
+        state, out = bank.jit_step_shared(state, video[t], ks)
+    assert np.isfinite(np.asarray(out.estimate["pos"])).all()
+    assert np.isneginf(np.asarray(state.log_weights)[1, 48:]).all()
+
+
+def test_multi_tracker_budgets_still_track():
+    """Per-target budgets: a generously-budgeted and a lean target both
+    lock onto their objects (the lean one pays fewer lanes)."""
+    pol = get_policy("fp32")
+    base = dict(num_frames=24, height=96, width=96)
+    va, ta = generate_video(
+        jax.random.key(0), VideoConfig(start=(20.0, 20.0), **base)
+    )
+    vb, tb = generate_video(
+        jax.random.key(1), VideoConfig(start=(70.0, 60.0), **base)
+    )
+    video2 = jnp.maximum(va, vb)
+    starts = jnp.stack([ta[0], tb[0]])
+    bank = make_multi_tracker_filter(
+        TrackerConfig(num_particles=1024, height=96, width=96),
+        pol,
+        starts,
+        budgets=jnp.asarray([1024, 192]),
+    )
+    assert bank.default_n_active is not None
+    _, outs = jax.jit(lambda k, v: bank.run(k, v, 1024))(
+        jax.random.key(2), video2
+    )
+    est = np.asarray(outs.estimate["pos"], np.float64)  # (T, 2, 2)
+    truth = np.stack([np.asarray(ta), np.asarray(tb)], axis=1)
+    rmse = np.sqrt(((est - truth) ** 2).sum(-1).mean(0))
+    assert (rmse < 6.0).all(), rmse
+    ess = np.asarray(outs.ess)
+    assert (ess[:, 1] <= 192 + 1e-2).all()
+
+
+def test_multi_tracker_budgets_validation():
+    pol = get_policy("fp32")
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0]])
+    with pytest.raises(ValueError, match="one count per target"):
+        make_multi_tracker_filter(
+            TrackerConfig(num_particles=64), pol, starts,
+            budgets=jnp.asarray([64]),
+        )
+
+
+def test_ragged_scheduler_serves_heterogeneous_budgets():
+    """serve --smc with a particle range: every request served once with a
+    key-derived size-class budget; the best-particle extraction stays
+    inside each request's active prefix; padding waste is accounted."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 5
+
+    def init(key, n):
+        del key
+        return dict(
+            tok=jnp.zeros((n,), jnp.int32),
+            reward=jnp.zeros((n,), jnp.float32),
+            cum_reward=jnp.zeros((n,), jnp.float32),
+            seq=jnp.zeros((n, steps), jnp.int32),
+        )
+
+    def transition(key, p, step):
+        tok = jax.random.randint(key, p["tok"].shape, 0, 100)
+        reward = jax.random.uniform(
+            jax.random.fold_in(key, 1), p["reward"].shape
+        )
+        pos = jnp.minimum(step, steps - 1)
+        return dict(
+            tok=tok,
+            reward=reward,
+            cum_reward=p["cum_reward"] + reward,
+            seq=p["seq"].at[:, pos].set(tok),
+        )
+
+    def loglik(p, obs, step):
+        del obs, step
+        return p["reward"]
+
+    spec = SMCSpec(init, transition, loglik)
+    out = {}
+    for mode in (False, True):
+        bank = FilterBank(
+            spec,
+            FilterConfig(policy=get_policy("fp32"), ess_threshold=0.5),
+            num_slots=4,
+        )
+        out[mode] = run_continuous_batching(
+            bank,
+            num_requests=4,  # one slot per request: sync == async schedules
+            max_steps=steps,
+            particles=(2, 8),
+            key=jax.random.key(7),
+            arrival_every=1,
+            min_steps=steps,  # equal step budgets: no mid-admission retire
+            async_admit=mode,
+        )
+    for mode, stats in out.items():
+        results = stats["results"]
+        assert [r["id"] for r in results] == list(range(4))
+        for r in results:
+            assert r["particles"] in (2, 4, 8)
+            assert r["tokens"].shape == (r["steps"],)
+        assert len({r["particles"] for r in results}) > 1, (
+            "key-derived budgets should mix size classes"
+        )
+        assert stats["active_particle_ticks"] < stats["padded_particle_ticks"]
+        assert 0.0 < stats["padding_waste"] < 1.0
+    # sync and async draw the same schedule from the same key
+    for rs, ra in zip(out[False]["results"], out[True]["results"]):
+        assert rs["particles"] == ra["particles"]
+        assert rs["steps"] == ra["steps"]
+        np.testing.assert_array_equal(rs["tokens"], ra["tokens"])
+
+
+def test_dense_scheduler_reports_zero_waste():
+    """A single-count workload keeps the dense bank and zero padding."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 3
+
+    def init(key, n):
+        del key
+        return dict(
+            tok=jnp.zeros((n,), jnp.int32),
+            reward=jnp.zeros((n,), jnp.float32),
+            cum_reward=jnp.zeros((n,), jnp.float32),
+            seq=jnp.zeros((n, steps), jnp.int32),
+        )
+
+    def transition(key, p, step):
+        tok = jax.random.randint(key, p["tok"].shape, 0, 100)
+        reward = jax.random.uniform(
+            jax.random.fold_in(key, 1), p["reward"].shape
+        )
+        pos = jnp.minimum(step, steps - 1)
+        return dict(
+            tok=tok, reward=reward,
+            cum_reward=p["cum_reward"] + reward,
+            seq=p["seq"].at[:, pos].set(tok),
+        )
+
+    spec = SMCSpec(init, transition, lambda p, o, s: p["reward"])
+    bank = FilterBank(
+        spec, FilterConfig(policy=get_policy("fp32")), num_slots=2
+    )
+    stats = run_continuous_batching(
+        bank,
+        num_requests=3,
+        max_steps=steps,
+        particles=4,
+        key=jax.random.key(0),
+    )
+    assert stats["padding_waste"] == 0.0
+    assert all(r["particles"] == 4 for r in stats["results"])

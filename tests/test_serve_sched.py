@@ -9,8 +9,33 @@ import pytest
 from repro.launch.serve import (
     _batch_axis,
     _request_budgets,
+    _request_particles,
+    particle_size_classes,
     run_continuous_batching,
 )
+
+
+def test_particle_size_classes_ladder():
+    """Power-of-two ladder from min to max, max always included."""
+    assert particle_size_classes(256, 4096) == [256, 512, 1024, 2048, 4096]
+    assert particle_size_classes(3, 20) == [3, 6, 12, 20]
+    assert particle_size_classes(8, 8) == [8]
+    with pytest.raises(ValueError, match="1 <= min <= max"):
+        particle_size_classes(0, 8)
+    with pytest.raises(ValueError, match="1 <= min <= max"):
+        particle_size_classes(16, 8)
+
+
+def test_request_particles_follow_the_key():
+    """Per-request particle budgets are key-derived size classes: two seeds
+    draw two mixes, one seed reproduces, every draw is on the ladder."""
+    a = _request_particles(jax.random.key(0), 64, 4, 32)
+    b = _request_particles(jax.random.key(1), 64, 4, 32)
+    a2 = _request_particles(jax.random.key(0), 64, 4, 32)
+    classes = set(particle_size_classes(4, 32))
+    assert set(a.tolist()) <= classes
+    assert not np.array_equal(a, b)
+    np.testing.assert_array_equal(a, a2)
 
 
 def test_request_budgets_follow_the_key():
