@@ -4,11 +4,29 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 
 import jax
 
-__all__ = ["time_fn", "csv_row", "write_bench_json"]
+__all__ = ["git_sha", "time_fn", "csv_row", "write_bench_json"]
+
+
+def git_sha() -> str | None:
+    """The repo HEAD commit, or None outside a git checkout — stamped into
+    every BENCH_*.json so successive runs form a comparable trajectory."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True,
+            text=True,
+            timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
 
 
 def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -40,6 +58,7 @@ def write_bench_json(name: str, records: list[dict], **meta) -> str:
     """
     payload = {
         "bench": name,
+        "git_sha": git_sha(),
         "device_count": jax.device_count(),
         "backend": jax.default_backend(),
         **meta,

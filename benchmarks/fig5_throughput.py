@@ -27,6 +27,11 @@ key-derived mix of request budgets served (a) padded to one max-width
 dense bank vs (b) packed into per-size-class ragged banks — the useful
 (budgeted) particle-steps/s gain of not paying max-P for easy requests.
 
+``fused_sweep`` measures the fused weight epilogue (one-pass normalize +
+ESS + CDF + resample kernel) against the composed kernel chain on the
+isolated weight pipeline, per policy; ``fused_smoke`` is the CI gate
+(fused must be no slower at the largest smoke size).
+
 Every sweep also emits a machine-readable ``BENCH_<sweep>.json``
 (aggregate particle-steps/s per config) via
 ``benchmarks.common.write_bench_json``.
@@ -50,10 +55,15 @@ from repro.core import (
 )
 
 
-def run(sizes=(32_768, 65_536), ragged=(8, 256, 2_048)) -> list[str]:
-    """Paper grid + bank/mesh/ragged sweeps.  ``ragged`` is the
-    (num_requests, p_min, p_max) shape of the ragged sweep so quick runs
-    can shrink it alongside ``sizes``."""
+def run(
+    sizes=(32_768, 65_536),
+    ragged=(8, 256, 2_048),
+    fused_sizes=(8_192, 32_768),
+) -> list[str]:
+    """Paper grid + bank/mesh/ragged/fused sweeps.  ``ragged`` is the
+    (num_requests, p_min, p_max) shape of the ragged sweep and
+    ``fused_sizes`` the particle counts of the fused-epilogue sweep, so
+    quick runs can shrink them alongside ``sizes``."""
     from repro.data.synthetic_video import VideoConfig, generate_video
 
     video, _ = generate_video(
@@ -108,6 +118,7 @@ def run(sizes=(32_768, 65_536), ragged=(8, 256, 2_048)) -> list[str]:
     rows.extend(
         ragged_sweep(num_requests=ragged[0], p_min=ragged[1], p_max=ragged[2])
     )
+    rows.extend(fused_sweep(sizes=fused_sizes))
     return rows
 
 
@@ -419,6 +430,110 @@ def ragged_sweep(
     return rows
 
 
+def fused_sweep(
+    sizes=(8_192, 32_768),
+    policies=("fp32", "bf16", "fp16"),
+    bank: int = 8,
+    reps: int = 7,
+    gate: bool = False,
+) -> list[str]:
+    """Fused weight epilogue vs composed kernel chain, per policy x P.
+
+    Per cell: the per-frame *weight pipeline* of a B-row bank in
+    isolation -- exactly what the fusion optimizes (a full tracker step is
+    likelihood-dominated, which would bury the epilogue delta in timer
+    noise).  The composed variant runs the normalize kernel (with in-pass
+    ESS sums) then the cumsum + search resampling chain; the fused variant
+    runs the one-pass epilogue kernel (``repro.kernels.epilogue``).
+    Outputs are bitwise-identical with the same keys (tests/test_epilogue),
+    so the delta is pure execution cost: ~5 HBM traversals of the (B, P)
+    weight array composed, vs two log-weight reads + one weights write +
+    one ancestors write fused (CDF resident in VMEM).
+
+    ``gate=True`` (the CI smoke) raises SystemExit if fused is slower than
+    composed for *any* policy at the largest size.  BENCH_fused.json
+    carries ``us_per_step`` for both variants plus the speedup column.
+    """
+    from repro.kernels.epilogue import ops as epi_ops
+    from repro.kernels.logsumexp import ops as lse_ops
+    from repro.kernels.resample import ops as res_ops
+
+    @jax.jit
+    def composed_step(keys, log_w):
+        w, m, lse, sw, sw2 = lse_ops.normalize_weights_stats_batched(log_w)
+        ess = jnp.square(sw) / sw2
+        anc = res_ops.systematic_resample_batched(keys, w)
+        return w, anc, lse, m, ess
+
+    @jax.jit
+    def fused_step(keys, log_w):
+        w, anc, lse, m, sw, sw2 = epi_ops.fused_epilogue_batched(keys, log_w)
+        return w, anc, lse, m, jnp.square(sw) / sw2
+
+    rows, records = [], []
+    gate_min = None
+    for n in sizes:
+        for pname in policies:
+            pol = get_policy(pname)
+            keys = jax.random.split(jax.random.key(0), bank)
+            log_w = (
+                jax.random.normal(jax.random.key(1), (bank, n), jnp.float32)
+                * 30
+            ).astype(pol.compute_dtype)
+            us = {
+                "composed": time_fn(
+                    composed_step, keys, log_w, reps=reps, warmup=1
+                ),
+                "fused": time_fn(
+                    fused_step, keys, log_w, reps=reps, warmup=1
+                ),
+            }
+            speedup = us["composed"] / us["fused"]
+            if n == max(sizes):
+                gate_min = (
+                    speedup if gate_min is None else min(gate_min, speedup)
+                )
+            rows.append(
+                csv_row(
+                    f"fig5_throughput/fused_B{bank}_{n//1024}k_{pname}",
+                    us["fused"],
+                    f"composed_us={us['composed']:.1f};"
+                    f"speedup_fused_vs_composed={speedup:.2f}",
+                )
+            )
+            records.append(
+                {
+                    "bank": bank,
+                    "particles": n,
+                    "policy": pname,
+                    "us_per_step_fused": us["fused"],
+                    "us_per_step_composed": us["composed"],
+                    "particle_steps_per_s_fused": (
+                        bank * n / us["fused"] * 1e6
+                    ),
+                    "speedup_fused_vs_composed": speedup,
+                }
+            )
+    write_bench_json(
+        "fused",
+        records,
+        largest_size=max(sizes),
+        largest_size_min_speedup=gate_min,
+    )
+    if gate and gate_min is not None and gate_min < 1.0:
+        raise SystemExit(
+            f"fused epilogue slower than composed at P={max(sizes)}: "
+            f"min speedup={gate_min:.2f} < 1.0 (see BENCH_fused.json)"
+        )
+    return rows
+
+
+def fused_smoke() -> list[str]:
+    """CI entry: quick fused sweep that *gates* on fused >= composed
+    throughput (every policy) at the largest smoke size."""
+    return fused_sweep(sizes=(8_192, 32_768), reps=7, gate=True)
+
+
 if __name__ == "__main__":
     import sys
 
@@ -428,6 +543,8 @@ if __name__ == "__main__":
         "bank_sweep": bank_sweep,
         "mesh_bank_sweep": mesh_bank_sweep,
         "ragged_sweep": ragged_sweep,
+        "fused_sweep": fused_sweep,
+        "fused_smoke": fused_smoke,
     }
     print("name,us_per_call,derived")
     for row in fns[which]():

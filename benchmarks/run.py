@@ -40,7 +40,11 @@ def main() -> None:
     if enabled("fig5"):
         from benchmarks import fig5_throughput
 
-        kw = dict(sizes=(8192,), ragged=(4, 128, 512)) if args.quick else {}
+        kw = (
+            dict(sizes=(8192,), ragged=(4, 128, 512), fused_sizes=(8192,))
+            if args.quick
+            else {}
+        )
         failures += _emit(lambda: fig5_throughput.run(**kw))
     if enabled("fig6"):
         from benchmarks import fig6_kernels

@@ -70,6 +70,7 @@ from repro.core.precision import PrecisionPolicy
 __all__ = [
     "SCHEMES",
     "DistributedConfig",
+    "dist_lse_banked",
     "dist_normalize",
     "dist_normalize_banked",
     "dist_systematic_exact",
@@ -141,6 +142,18 @@ def _axis_size(axes: tuple[str, ...]) -> int:
     for a in axes:
         n *= compat.axis_size(a)
     return n
+
+
+def _local_u0(keys: jax.Array, d: jax.Array) -> jax.Array:
+    """Per-slot shard-local systematic offsets: ``uniform(fold_in(key, d))``
+    per row.  The ONE derivation — both the composed local resample and
+    the fused-finalize path draw from it, so their ancestors stay bitwise
+    interchangeable."""
+    return jax.vmap(
+        lambda k: jax.random.uniform(
+            jax.random.fold_in(k, d), (), jnp.float32
+        )
+    )(keys)
 
 
 def dist_normalize(log_w: jax.Array, axes: tuple[str, ...], accum_dtype):
@@ -276,7 +289,7 @@ def dist_systematic_local(
 # bank merges in one launch.
 
 
-def dist_normalize_banked(
+def dist_lse_banked(
     log_w: jax.Array,
     axes: tuple[str, ...],
     accum_dtype,
@@ -284,19 +297,19 @@ def dist_normalize_banked(
     local_stats_masked: Any = None,
     n_loc: jax.Array | None = None,
 ):
-    """Per-slot log-weights (B_loc, P_loc) -> (weights, lse (B_loc,), max).
+    """Per-slot log-weights (B_loc, P_loc) -> merged (lse (B_loc,), max).
 
-    Runs inside shard_map; collectives span only the particle ``axes``.
+    The one-``pmax``+``psum``-per-row online-LSE merge, split out of
+    :func:`dist_normalize_banked` so the fused shard-local finalize kernel
+    can consume the merged LSE without the separate weight pass.
     ``local_stats`` optionally supplies the shard-local reduction as a
     fused kernel — ``(log_w) -> (m_loc (B_loc,), lse_loc (B_loc,))`` in
-    fp32 (``repro.kernels.logsumexp.ops.online_logsumexp_batched``); the
-    per-shard online-LSE states then merge with the same one pmax + one
-    psum per row.  On a ragged bank ``n_loc`` gives each row's
-    *shard-local* active count and ``local_stats_masked`` the count-aware
-    kernel (``online_logsumexp_masked`` — lanes past the count pinned to
-    -inf in the carry); the caller still pre-masks ``log_w``, which the
-    pure-jnp and dense-kernel paths rely on and which keeps the weight
-    output exactly 0 past the count on every path.
+    fp32 (``repro.kernels.logsumexp.ops.online_logsumexp_batched``).  On a
+    ragged bank ``n_loc`` gives each row's *shard-local* active count and
+    ``local_stats_masked`` the count-aware kernel
+    (``online_logsumexp_masked`` — lanes past the count pinned to -inf in
+    the carry); the caller still pre-masks ``log_w``, which the pure-jnp
+    and dense-kernel paths rely on.
     """
     x = log_w.astype(accum_dtype)
     if local_stats_masked is not None and n_loc is not None:
@@ -319,6 +332,32 @@ def dist_normalize_banked(
         # global max (0 where the shard saw only -inf) — the online merge.
         s = jax.lax.psum(jnp.exp(lse_loc - m_safe), axes)
         lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
+    return lse, m
+
+
+def dist_normalize_banked(
+    log_w: jax.Array,
+    axes: tuple[str, ...],
+    accum_dtype,
+    local_stats: Any = None,
+    local_stats_masked: Any = None,
+    n_loc: jax.Array | None = None,
+):
+    """Per-slot log-weights (B_loc, P_loc) -> (weights, lse (B_loc,), max).
+
+    Runs inside shard_map; collectives span only the particle ``axes``
+    (see :func:`dist_lse_banked` for the merge and the ragged contract —
+    the weight output is exactly 0 past each row's count on every path).
+    """
+    lse, m = dist_lse_banked(
+        log_w,
+        axes,
+        accum_dtype,
+        local_stats=local_stats,
+        local_stats_masked=local_stats_masked,
+        n_loc=n_loc,
+    )
+    x = log_w.astype(accum_dtype)
     w = jnp.exp(x - jnp.where(jnp.isfinite(lse), lse, 0.0)[:, None])
     return w.astype(log_w.dtype), lse, m
 
@@ -417,8 +456,14 @@ def dist_systematic_local_banked(
     particle_axes: Any = None,
     n_active: jax.Array | None = None,
     local_resample_masked: Any = None,
+    anc: jax.Array | None = None,
 ) -> tuple[Any, jax.Array]:
     """Per-slot RNA local resampling with per-slot-gated ring exchange.
+
+    ``anc``: optional precomputed shard-local ancestors (B_loc, P_loc) —
+    the fused-finalize path draws them inside the epilogue kernel (same u0
+    derivation from the same keys), so this function skips its own
+    CDF/search and only applies the gather, RNA weights, and exchange.
 
     keys: (B_loc,) per-slot keys; weights: (B_loc, P_loc) globally
     normalized per row; step: (B_loc,) per-slot step counters.  The
@@ -447,14 +492,14 @@ def dist_systematic_local_banked(
     w32 = weights.astype(jnp.float32)
     local_sum = jnp.sum(w32, axis=-1)  # (B_loc,)
 
-    u0 = jax.vmap(
-        lambda k: jax.random.uniform(
-            jax.random.fold_in(k, d), (), jnp.float32
-        )
-    )(keys)
+    u0 = None
+    if anc is None:
+        u0 = _local_u0(keys, d)
     if n_active is None:
         n_loc = None
-        if local_resample is not None:
+        if anc is not None:
+            pass
+        elif local_resample is not None:
             anc = local_resample(u0, weights)
         else:
             cdf = jnp.cumsum(w32, axis=-1)
@@ -473,7 +518,9 @@ def dist_systematic_local_banked(
         )
     else:
         n_loc = jnp.clip(n_active - d * p_loc, 0, p_loc)  # (B_loc,)
-        if local_resample_masked is not None:
+        if anc is not None:
+            pass
+        elif local_resample_masked is not None:
             anc = local_resample_masked(u0, weights, n_loc)
         else:
             # Same unguarded division as the dense branch: a zero-mass
@@ -647,6 +694,8 @@ def make_dist_bank_step(
     local_stats_masked: Any = None,
     local_resample: Any = None,
     local_resample_masked: Any = None,
+    fused_finalize: Any = None,
+    fused_finalize_masked: Any = None,
 ):
     """Build a shard_map'd FilterBank step: mesh × bank composition.
 
@@ -675,6 +724,15 @@ def make_dist_bank_step(
     the local scheme resamples each shard's active sub-slice (mixing only
     full-width slots).  A full-width ragged bank is bit-identical to the
     dense step.
+
+    ``fused_finalize`` / ``fused_finalize_masked`` supply the backend's
+    shard-local fused epilogue tail for the ``local`` scheme:
+    ``(log_w, lse, u0[, n_loc]) -> (weights, ancestors)``.  The merged LSE
+    still comes from the one-``pmax``+``psum`` ``local_stats`` merge; the
+    finalize pass then computes the shard's weights and chains the
+    shard-local systematic inverse on its in-VMEM CDF, replacing the
+    separate exp + ``ancestors_from_u0`` launches (same u0 derivation,
+    bitwise the composed path).
     """
     if cfg.bank_axis is None:
         raise ValueError("make_dist_bank_step needs cfg.bank_axis set")
@@ -730,12 +788,33 @@ def make_dist_bank_step(
                 log_w + log_lik,
                 jnp.asarray(-jnp.inf, policy.compute_dtype),
             )
-        w, lse, max_lw = dist_normalize_banked(
-            log_w, axes, adt,
-            local_stats=local_stats,
-            local_stats_masked=local_stats_masked,
-            n_loc=n_loc,
+        finalize = fused_finalize_masked if n_active is not None else (
+            fused_finalize
         )
+        anc = None
+        if cfg.scheme == "local" and finalize is not None:
+            # Fused shard-local epilogue tail: merge the LSE stats, then
+            # one pass computes this shard's weights *and* the RNA
+            # scheme's shard-local systematic ancestors (same _local_u0
+            # derivation as dist_systematic_local_banked).
+            lse, max_lw = dist_lse_banked(
+                log_w, axes, adt,
+                local_stats=local_stats,
+                local_stats_masked=local_stats_masked,
+                n_loc=n_loc,
+            )
+            u0 = _local_u0(k_res, d)
+            if n_active is None:
+                w, anc = fused_finalize(log_w, lse, u0)
+            else:
+                w, anc = fused_finalize_masked(log_w, lse, u0, n_loc)
+        else:
+            w, lse, max_lw = dist_normalize_banked(
+                log_w, axes, adt,
+                local_stats=local_stats,
+                local_stats_masked=local_stats_masked,
+                n_loc=n_loc,
+            )
 
         w_acc = w.astype(adt)
         wsum = jax.lax.psum(jnp.sum(w_acc, axis=-1), axes)  # (B_loc,)
@@ -803,6 +882,7 @@ def make_dist_bank_step(
                 particle_axes=paxes,
                 n_active=n_active,
                 local_resample_masked=local_resample_masked,
+                anc=anc,
             )
         return new_particles, new_log_w, step + 1, estimate, ess, lse, max_lw
 

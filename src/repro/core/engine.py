@@ -116,6 +116,38 @@ class Backend:
                 ancestors``; names without an override fall back to the
                 registered pure-jnp resampler.
 
+    Stats forms (one-read ESS — the engine derives ``ESS = sum_w^2 /
+    sum_w2`` instead of re-reading the whole weight array):
+
+    normalize_stats[_banked,_masked]: as the matching normalize form but
+                returning ``(weights, log_z, max_log_w, sum_w, sum_w2)``
+                with the Kish sums accumulated in the normalize pass
+                itself; None falls back to the plain normalize plus jnp
+                sums over its output (same values, one extra traversal).
+
+    Fused-epilogue forms (the whole weight pipeline in one kernel pass —
+    normalize + ESS sums + CDF + resample, the CDF never materialized in
+    HBM; see ``repro.kernels.epilogue``), per-resampler-name maps
+    ``... -> (weights, ancestors, log_z, max_log_w, sum_w, sum_w2)``:
+
+    fused_epilogue:        (key, log_w (P,), policy) -> 6-tuple.
+    fused_epilogue_banked: (keys (B,), log_w (B, P), policy) -> 6-tuple.
+    fused_epilogue_masked: (keys, log_w, policy, n_active (B,)) -> 6-tuple
+                — ragged twin, active prefix bitwise the dense kernel on a
+                width-n row.
+    Dispatch: ``FilterConfig.fused_epilogue`` (None=auto) selects these
+    when the name is present; a backend without an entry runs the composed
+    stats chain (bitwise the same result, more HBM traffic).  The jnp
+    backend registers the pure-jnp references from
+    ``resampling.FUSED_EPILOGUES*`` for every resampler.
+
+    fused_finalize_banked / fused_finalize_masked: the *meshed* shard-local
+                tail ``(log_w, lse, u0[, n_loc]) -> (weights, ancestors)``:
+                given the globally merged LSE (one pmax + psum), one pass
+                computes the shard's weights and chains the RNA ``local``
+                scheme's shard-local systematic inverse on the in-VMEM CDF
+                (replacing the separate exp + ancestors_from_u0 launches).
+
     Banked forms (used by :class:`FilterBank`, leading bank axis B):
 
     normalize_banked:  (log_w (B, P), policy) -> (weights (B, P), log_z (B,),
@@ -189,6 +221,24 @@ class Backend:
     resamplers_masked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
+    normalize_stats: Callable | None = None
+    normalize_stats_banked: Callable | None = None
+    normalize_stats_masked: Callable | None = None
+    fused_epilogue: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_epilogue_banked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_epilogue_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_finalize_banked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_finalize_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
     local_stats_banked: Callable[[jax.Array], tuple] | None = None
     local_stats_masked: Callable | None = None
     ancestors_from_u0_banked: Mapping[str, Callable] = dataclasses.field(
@@ -217,11 +267,29 @@ def get_backend(name: str) -> Backend:
         ) from None
 
 
-def _jnp_normalize(log_w: jax.Array, policy: PrecisionPolicy):
-    m = jnp.max(log_w)
-    lse = stability.logsumexp(log_w.astype(policy.accum_dtype), axis=-1)
-    w = jnp.exp(log_w.astype(policy.accum_dtype) - lse).astype(log_w.dtype)
-    return w, lse, m
+# The single definition lives in resampling (the fused jnp references
+# compose it); aliasing it here keeps the jnp backend and the fused
+# references bitwise-identical structurally rather than by copy-paste.
+_jnp_normalize = resampling.reference_normalize
+
+
+def _kish_sums(w: jax.Array, accum_dtype):
+    """(sum w, sum w^2) in accum dtype — the two ESS reductions, in the
+    same order ``stability.effective_sample_size`` runs them."""
+    w_acc = w.astype(accum_dtype)
+    return jnp.sum(w_acc, axis=-1), jnp.sum(jnp.square(w_acc), axis=-1)
+
+
+def _jnp_normalize_stats(log_w: jax.Array, policy: PrecisionPolicy):
+    w, lse, m = _jnp_normalize(log_w, policy)
+    sum_w, sum_w2 = _kish_sums(w, policy.accum_dtype)
+    return w, lse, m, sum_w, sum_w2
+
+
+def _jnp_normalize_stats_banked(log_w: jax.Array, policy: PrecisionPolicy):
+    w, lse, m = jax.vmap(lambda row: _jnp_normalize(row, policy))(log_w)
+    sum_w, sum_w2 = _kish_sums(w, policy.accum_dtype)
+    return w, lse, m, sum_w, sum_w2
 
 
 def _pallas_normalize(log_w: jax.Array, policy: PrecisionPolicy):
@@ -305,7 +373,88 @@ def _pallas_intensity_loglik(patches: jax.Array, model, policy):
     return lik_ops.intensity_loglik(patches, model, policy)
 
 
-register_backend(Backend("jnp", _jnp_normalize))
+def _pallas_normalize_stats(log_w: jax.Array, policy: PrecisionPolicy):
+    del policy  # fp32 kernel carries; sums accumulated in the normalize phase
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse, sw, sw2 = lse_ops.normalize_weights_stats(log_w)
+    return w, lse, m, sw, sw2
+
+
+def _pallas_normalize_stats_banked(log_w: jax.Array, policy: PrecisionPolicy):
+    del policy
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse, sw, sw2 = lse_ops.normalize_weights_stats_batched(log_w)
+    return w, lse, m, sw, sw2
+
+
+def _pallas_normalize_stats_masked(
+    log_w: jax.Array, n_active: jax.Array, policy: PrecisionPolicy
+):
+    del policy
+    from repro.kernels.logsumexp import ops as lse_ops
+
+    w, m, lse, sw, sw2 = lse_ops.normalize_weights_stats_masked(
+        log_w, n_active
+    )
+    return w, lse, m, sw, sw2
+
+
+def _pallas_fused_epilogue(key: jax.Array, log_w: jax.Array, policy):
+    del policy
+    from repro.kernels.epilogue import ops as epi_ops
+
+    w, anc, lse, m, sw, sw2 = epi_ops.fused_epilogue(key, log_w)
+    return w, anc, lse, m, sw, sw2
+
+
+def _pallas_fused_epilogue_banked(keys: jax.Array, log_w: jax.Array, policy):
+    del policy
+    from repro.kernels.epilogue import ops as epi_ops
+
+    return epi_ops.fused_epilogue_batched(keys, log_w)
+
+
+def _pallas_fused_epilogue_masked(
+    keys: jax.Array, log_w: jax.Array, policy, n_active: jax.Array
+):
+    del policy
+    from repro.kernels.epilogue import ops as epi_ops
+
+    return epi_ops.fused_epilogue_masked(keys, log_w, n_active)
+
+
+def _pallas_fused_finalize_banked(
+    log_w: jax.Array, lse: jax.Array, u0: jax.Array
+):
+    from repro.kernels.epilogue import ops as epi_ops
+
+    return epi_ops.fused_finalize_from_u0_batched(u0, log_w, lse)
+
+
+def _pallas_fused_finalize_masked(
+    log_w: jax.Array, lse: jax.Array, u0: jax.Array, n_loc: jax.Array
+):
+    from repro.kernels.epilogue import ops as epi_ops
+
+    return epi_ops.fused_finalize_from_u0_masked(u0, log_w, lse, n_loc)
+
+
+register_backend(
+    Backend(
+        "jnp",
+        _jnp_normalize,
+        normalize_stats=_jnp_normalize_stats,
+        normalize_stats_banked=_jnp_normalize_stats_banked,
+        # Pure-jnp fused references (bitwise the composed chain) for every
+        # registered resampler — live mappings, so later register_resampler
+        # calls are picked up.
+        fused_epilogue=resampling.FUSED_EPILOGUES,
+        fused_epilogue_banked=resampling.FUSED_EPILOGUES_BANKED,
+        fused_epilogue_masked=resampling.FUSED_EPILOGUES_MASKED,
+    )
+)
 register_backend(
     Backend(
         "pallas",
@@ -315,6 +464,14 @@ register_backend(
         resamplers_banked={"systematic": _pallas_systematic_banked},
         normalize_masked=_pallas_normalize_masked,
         resamplers_masked={"systematic": _pallas_systematic_masked},
+        normalize_stats=_pallas_normalize_stats,
+        normalize_stats_banked=_pallas_normalize_stats_banked,
+        normalize_stats_masked=_pallas_normalize_stats_masked,
+        fused_epilogue={"systematic": _pallas_fused_epilogue},
+        fused_epilogue_banked={"systematic": _pallas_fused_epilogue_banked},
+        fused_epilogue_masked={"systematic": _pallas_fused_epilogue_masked},
+        fused_finalize_banked={"systematic": _pallas_fused_finalize_banked},
+        fused_finalize_masked={"systematic": _pallas_fused_finalize_masked},
         local_stats_banked=_pallas_local_stats_banked,
         local_stats_masked=_pallas_local_stats_masked,
         ancestors_from_u0_banked={
@@ -351,6 +508,19 @@ class FilterConfig:
     backend: str = "jnp"
     resampler: str = "systematic"
     ess_threshold: float = 1.0  # resample when ESS < threshold * P
+    # Fused weight epilogue (normalize + ESS + CDF + resample in one pass):
+    # None = auto (use it whenever the backend registers a fused form for
+    # the resampler — numerics are bitwise the composed chain, so auto is
+    # safe); False = always run the composed chain (the benchmark
+    # baseline); True = require a fused form: the banked kernel at
+    # construction, the masked kernel at ragged init, and — on a meshed
+    # bank — the local scheme's shard-local finalize (the exact scheme has
+    # no fused form, so meshed exact + True raises).  The single
+    # ParticleFilter applies it on the always-resample path
+    # (ess_threshold >= 1.0); banks apply it at any threshold (both
+    # branches are computed under the per-slot select anyway); naive
+    # (stable_weighting=False) policies never fuse.
+    fused_epilogue: bool | None = None
     # Distribution spec (None -> single placement).
     mesh: Any = None
     axis: str | tuple[str, ...] = "data"
@@ -406,6 +576,32 @@ class ParticleFilter:
         base_resampler = resampling.get_resampler(config.resampler)
         override = self.backend.resamplers.get(config.resampler)
         self._resample = override or base_resampler
+
+        # Fused weight-epilogue dispatch (one pass: normalize + ESS sums +
+        # CDF + resample).  Resolved at construction; numerics are bitwise
+        # the composed chain, so auto (None) enables it whenever the
+        # backend registers a form for this resampler.
+        self._fused = None
+        if config.fused_epilogue is not False and self.policy.stable_weighting:
+            self._fused = self.backend.fused_epilogue.get(config.resampler)
+        if config.fused_epilogue is True:
+            if config.mesh is not None:
+                # The meshed single filter runs make_dist_pf_step, which
+                # has no fused form — requiring fusion there would
+                # silently deliver the composed chain.
+                raise ValueError(
+                    "fused_epilogue=True is not available on a meshed "
+                    "ParticleFilter (the distributed single-filter step "
+                    "has no fused form); use a meshed FilterBank with "
+                    "scheme='local' for the shard-local fused finalize"
+                )
+            if self._fused is None:
+                raise ValueError(
+                    f"fused_epilogue=True but backend "
+                    f"{self.backend.name!r} registers no fused epilogue "
+                    f"for resampler {config.resampler!r} (or the policy's "
+                    "naive weighting path is active)"
+                )
 
         self._dist_step = None
         if config.mesh is not None:
@@ -506,6 +702,15 @@ class ParticleFilter:
         """The step function jit-compiled once per engine instance."""
         return jax.jit(self.step)
 
+    @functools.cached_property
+    def jit_step_donated(self):
+        """As :attr:`jit_step` with the input state's buffers donated: the
+        step reuses the particle/weight memory instead of allocating a
+        fresh copy.  For carried-state loops only — the passed-in state is
+        *consumed* (its arrays are invalidated the moment the call is
+        dispatched)."""
+        return jax.jit(self.step, donate_argnums=(0,))
+
     # -- internals ----------------------------------------------------------
 
     def _normalize(self, log_w: jax.Array):
@@ -515,9 +720,28 @@ class ParticleFilter:
             return w, log_z, jnp.max(log_w)
         return self.backend.normalize(log_w, self.policy)
 
+    def _normalize_stats(self, log_w: jax.Array):
+        """Normalize + Kish sums: (w, log_z, max, sum_w, sum_w2).
+
+        The stats backend accumulates the ESS sums in the normalize pass
+        itself (no second traversal of the weights); backends without one
+        fall back to the plain normalize plus jnp sums — same values.
+        """
+        if not self.policy.stable_weighting:
+            w, log_z, m = self._normalize(log_w)
+            sum_w, sum_w2 = _kish_sums(w, self.policy.accum_dtype)
+            return w, log_z, m, sum_w, sum_w2
+        impl = self.backend.normalize_stats
+        if impl is not None:
+            return impl(log_w, self.policy)
+        w, log_z, m = self.backend.normalize(log_w, self.policy)
+        sum_w, sum_w2 = _kish_sums(w, self.policy.accum_dtype)
+        return w, log_z, m, sum_w, sum_w2
+
     def _step_local(self, state, observation, key):
         spec, policy = self.spec, self.policy
         cdt = policy.compute_dtype
+        adt = policy.accum_dtype
         k_prop, k_res = jax.random.split(key)
         num_particles = state.log_weights.shape[0]
 
@@ -528,27 +752,44 @@ class ParticleFilter:
         log_lik = spec.loglik(particles, observation, state.step).astype(cdt)
         log_w = state.log_weights + log_lik
 
-        # 3-5. max-find + weighting + normalizing (kernels 3-5; fused on the
-        # pallas backend)
-        weights, log_z, max_lw = self._normalize(log_w)
+        # 3-6. the weight epilogue.  Fused path (always-resample): one
+        # kernel pass emits weights, ancestors, stats, and the ESS sums
+        # with the CDF never leaving VMEM.  Composed path: normalize (with
+        # in-pass ESS sums) now, resample under the cond below.
+        ancestors = None
+        use_fused = (
+            self._fused is not None and self.config.ess_threshold >= 1.0
+        )
+        if use_fused:
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = self._fused(
+                k_res, log_w, policy
+            )
+        else:
+            weights, log_z, max_lw, sum_w, sum_w2 = self._normalize_stats(
+                log_w
+            )
         prev_lse = stability.logsumexp(
-            state.log_weights.astype(policy.accum_dtype), axis=-1
+            state.log_weights.astype(adt), axis=-1
         )
         log_z_inc = log_z - prev_lse
-        w_accum = weights.astype(policy.accum_dtype)
-        ess = stability.effective_sample_size(w_accum)
+        w_accum = weights.astype(adt)
+        ess = jnp.square(sum_w.astype(adt)) / sum_w2.astype(adt)
 
         if spec.summary is not None:
             estimate = spec.summary(particles, w_accum)
         else:
-            estimate = _weighted_mean(particles, weights, policy.accum_dtype)
+            estimate = _weighted_mean(particles, weights, adt)
 
         # 6. resampling (kernel 6)
         gather = self.spec.gather or resampling.gather_ancestors
 
         def _resampled():
-            ancestors = self._resample(k_res, weights, policy)
-            new_particles = gather(particles, ancestors)
+            anc = (
+                ancestors
+                if ancestors is not None
+                else self._resample(k_res, weights, policy)
+            )
+            new_particles = gather(particles, anc)
             uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
             return new_particles, uniform
 
@@ -774,6 +1015,68 @@ class FilterBank:
             config.resampler
         ) or resampling.MASKED_RESAMPLERS.get(config.resampler)
 
+        # Stats forms (normalize + in-pass Kish sums).  Fallbacks wrap the
+        # plain normalize and sum its output — same values, one extra
+        # weight traversal.
+        stats_banked = self.backend.normalize_stats_banked
+        if stats_banked is None:
+            dense_norm_impl = self._normalize_banked_impl
+
+            def stats_banked(log_w, policy):
+                w, lse, m = dense_norm_impl(log_w, policy)
+                sum_w, sum_w2 = _kish_sums(w, policy.accum_dtype)
+                return w, lse, m, sum_w, sum_w2
+
+        self._normalize_stats_banked_impl = stats_banked
+
+        stats_masked = self.backend.normalize_stats_masked
+        if stats_masked is None:
+            dense_stats = self._normalize_stats_banked_impl
+
+            def stats_masked(log_w, n_active, policy):
+                del n_active  # log_w is pre-masked to -inf past the count
+                return dense_stats(log_w, policy)
+
+        self._normalize_stats_masked_impl = stats_masked
+
+        # Fused weight-epilogue dispatch (see FilterConfig.fused_epilogue).
+        self._fused_banked = None
+        self._fused_masked = None
+        if (
+            config.fused_epilogue is not False
+            and self.policy.stable_weighting
+        ):
+            self._fused_banked = self.backend.fused_epilogue_banked.get(
+                config.resampler
+            )
+            self._fused_masked = self.backend.fused_epilogue_masked.get(
+                config.resampler
+            )
+        if config.fused_epilogue is True:
+            if self._dist_cfg is not None:
+                # Meshed banks run the distributed step: the only fused
+                # form there is the local scheme's shard-local finalize.
+                if config.scheme != "local" or (
+                    self.backend.fused_finalize_banked.get(config.resampler)
+                    is None
+                    or not self.policy.stable_weighting
+                ):
+                    raise ValueError(
+                        "fused_epilogue=True on a meshed bank requires "
+                        "scheme='local' and a registered "
+                        "Backend.fused_finalize_banked for resampler "
+                        f"{config.resampler!r} (backend "
+                        f"{self.backend.name!r}); the exact scheme has no "
+                        "fused form (its CDF is all-gathered)"
+                    )
+            elif self._fused_banked is None:
+                raise ValueError(
+                    f"fused_epilogue=True but backend {self.backend.name!r} "
+                    f"registers no banked fused epilogue for resampler "
+                    f"{config.resampler!r} (or the policy's naive weighting "
+                    "path is active)"
+                )
+
         # Per-slot active-count default, set by factories (e.g. per-target
         # budgets in ``make_multi_tracker_filter``); ``init`` uses it when
         # no explicit ``n_active`` is passed.
@@ -868,13 +1171,45 @@ class FilterBank:
                 f"n_active must be shaped ({self.num_slots},) — one count "
                 f"per slot — got {n_active.shape}"
             )
-        if self._resample_masked is None and self._dist_cfg is None:
+        if (
+            self._resample_masked is None
+            and self._fused_masked is None
+            and self._dist_cfg is None
+        ):
             raise ValueError(
                 f"resampler {self.config.resampler!r} has no masked "
                 "(ragged) form — its dense grid would truncate the active "
-                "mass; register one via Backend.resamplers_masked or "
+                "mass; register one via Backend.resamplers_masked, "
+                "Backend.fused_epilogue_masked, or "
                 "resampling.MASKED_RESAMPLERS"
             )
+        if self.config.fused_epilogue is True:
+            # Raggedness is decided here (the state pytree is fixed at
+            # init), so this is the earliest the masked-form requirement
+            # can be enforced — unmeshed banks need the masked epilogue
+            # kernel, meshed local-scheme banks the masked finalize.
+            if self._dist_cfg is None and self._fused_masked is None:
+                raise ValueError(
+                    f"fused_epilogue=True but backend "
+                    f"{self.backend.name!r} registers no masked fused "
+                    f"epilogue for resampler {self.config.resampler!r} — "
+                    "a ragged bank would silently fall back to the "
+                    "composed chain"
+                )
+            if (
+                self._dist_cfg is not None
+                and self.backend.fused_finalize_masked.get(
+                    self.config.resampler
+                )
+                is None
+            ):
+                raise ValueError(
+                    f"fused_epilogue=True but backend "
+                    f"{self.backend.name!r} registers no masked fused "
+                    f"finalize for resampler {self.config.resampler!r} — "
+                    "a ragged meshed bank would silently fall back to "
+                    "the composed chain"
+                )
         self._check_count_range(n_active, num_particles)
         return n_active
 
@@ -1006,15 +1341,27 @@ class FilterBank:
         ).astype(cdt)
         log_w = state.log_weights + log_lik
 
-        # 3-5. banked max-find + weighting + normalizing (one launch on the
-        # pallas backend, per-row fp32 carries)
-        weights, log_z, max_lw = self._normalize_banked(log_w)
+        # 3-6. the weight epilogue.  Fused: one kernel pass per bank row
+        # emits weights, ancestors, stats, and the in-pass ESS sums (the
+        # CDF never leaves VMEM).  Composed: banked normalize with in-pass
+        # ESS sums, ancestors drawn by the separate resample chain below —
+        # bitwise the same results either way.
+        if self._fused_banked is not None:
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
+                self._fused_banked(k_res, log_w, policy)
+            )
+        else:
+            weights, log_z, max_lw, sum_w, sum_w2 = (
+                self._normalize_stats_banked(log_w)
+            )
+            ancestors = self._resample_banked(k_res, weights, policy)
         prev_lse = stability.logsumexp(
             state.log_weights.astype(policy.accum_dtype), axis=-1
         )
         log_z_inc = log_z - prev_lse
         w_accum = weights.astype(policy.accum_dtype)
-        ess = stability.effective_sample_size(w_accum)
+        adt = policy.accum_dtype
+        ess = jnp.square(sum_w.astype(adt)) / sum_w2.astype(adt)
 
         if spec.summary is not None:
             estimate = jax.vmap(spec.summary)(particles, w_accum)
@@ -1023,20 +1370,18 @@ class FilterBank:
                 lambda p, w: _weighted_mean(p, w, policy.accum_dtype)
             )(particles, weights)
 
-        # 6. resampling (kernel 6), per-slot trigger
+        # resampling gather, per-slot trigger
         gather = spec.gather or resampling.gather_ancestors
         uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
         if self.config.ess_threshold >= 1.0:
             do_resample = jnp.ones((nb,), bool)
-            ancestors = self._resample_banked(k_res, weights, policy)
             new_particles = jax.vmap(gather)(particles, ancestors)
             new_log_w = uniform
         else:
-            do_resample = ess < self.config.ess_threshold * num_particles
             # Slots select per-row between the resampled and kept branches;
             # both are computed (select semantics, as under any vmapped
             # cond) — values match ParticleFilter's cond branches exactly.
-            ancestors = self._resample_banked(k_res, weights, policy)
+            do_resample = ess < self.config.ess_threshold * num_particles
             res_particles = jax.vmap(gather)(particles, ancestors)
             kept_log_w = jnp.log(w_accum).astype(log_w.dtype)
             new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
@@ -1097,14 +1442,25 @@ class FilterBank:
         ).astype(cdt)
         log_w = jnp.where(active, state.log_weights + log_lik, neg_inf)
 
-        # 3-5. masked banked normalize (count-aware kernel on pallas)
-        weights, log_z, max_lw = self._normalize_masked(log_w, n_act)
+        # 3-6. the masked weight epilogue (count-aware fused kernel when
+        # registered, else masked normalize with in-pass ESS sums + the
+        # masked resample chain) — bitwise the same either way.
+        if self._fused_masked is not None:
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
+                self._fused_masked(k_res, log_w, policy, n_act)
+            )
+        else:
+            weights, log_z, max_lw, sum_w, sum_w2 = (
+                self._normalize_stats_masked(log_w, n_act)
+            )
+            ancestors = self._resample_masked(k_res, weights, policy, n_act)
         prev_lse = stability.logsumexp(
             state.log_weights.astype(policy.accum_dtype), axis=-1
         )
         log_z_inc = log_z - prev_lse
         w_accum = weights.astype(policy.accum_dtype)
-        ess = stability.effective_sample_size(w_accum)
+        adt = policy.accum_dtype
+        ess = jnp.square(sum_w.astype(adt)) / sum_w2.astype(adt)
 
         if spec.summary is not None:
             estimate = jax.vmap(spec.summary)(particles, w_accum)
@@ -1113,7 +1469,7 @@ class FilterBank:
                 lambda p, w: _weighted_mean(p, w, policy.accum_dtype)
             )(particles, weights)
 
-        # 6. resampling over the active prefix; the reset row reuses the
+        # resampling over the active prefix; the reset row reuses the
         # per-slot stored uniform value (see FilterState.log_uniform).
         gather = spec.gather or resampling.gather_ancestors
         uniform = jnp.where(
@@ -1125,7 +1481,6 @@ class FilterBank:
         )
         if self.config.ess_threshold >= 1.0:
             do_resample = jnp.ones((nb,), bool)
-            ancestors = self._resample_masked(k_res, weights, policy, n_act)
             new_particles = jax.vmap(gather)(particles, ancestors)
             new_log_w = uniform
         else:
@@ -1135,7 +1490,6 @@ class FilterBank:
             do_resample = ess < (
                 self.config.ess_threshold * n_act.astype(jnp.float32)
             ).astype(ess.dtype)
-            ancestors = self._resample_masked(k_res, weights, policy, n_act)
             res_particles = jax.vmap(gather)(particles, ancestors)
             kept_log_w = jnp.log(w_accum).astype(log_w.dtype)  # -inf at w=0
             new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
@@ -1210,6 +1564,36 @@ class FilterBank:
         """``init_slot`` jit-compiled once; slot index stays traced."""
         return jax.jit(self.init_slot)
 
+    # Donated variants: the input state's buffers are donated to the call,
+    # so a carried-state loop (the continuous-batching scheduler tick)
+    # reuses the bank's particle/weight/cache memory in place instead of
+    # copying it every step.  The passed-in state is *consumed* — its
+    # arrays are invalidated at dispatch — so only use these where the old
+    # state is never touched again (the scheduler's sync loop; NOT the
+    # async loop, which must read the pre-step state while the step runs).
+
+    @functools.cached_property
+    def jit_step_donated(self):
+        """:attr:`jit_step` with the state argument donated."""
+        return jax.jit(
+            functools.partial(self.step, shared_obs=False),
+            donate_argnums=(0,),
+        )
+
+    @functools.cached_property
+    def jit_step_shared_donated(self):
+        """:attr:`jit_step_shared` with the state argument donated."""
+        return jax.jit(
+            functools.partial(self.step, shared_obs=True),
+            donate_argnums=(0,),
+        )
+
+    @functools.cached_property
+    def jit_init_slot_donated(self):
+        """:attr:`jit_init_slot` with the state argument donated — a slot
+        admission rewrites one row in place instead of copying the bank."""
+        return jax.jit(self.init_slot, donate_argnums=(0,))
+
     # -- internals ----------------------------------------------------------
 
     def _normalize_banked(self, log_w: jax.Array):
@@ -1227,6 +1611,23 @@ class FilterBank:
             return w, log_z, jnp.max(log_w, axis=-1)
         return self._normalize_masked_impl(log_w, n_active, self.policy)
 
+    def _normalize_stats_banked(self, log_w: jax.Array):
+        """Banked normalize + in-pass Kish sums: (w, log_z, m, sw, sw2)."""
+        if not self.policy.stable_weighting:
+            w, log_z, m = self._normalize_banked(log_w)
+            sum_w, sum_w2 = _kish_sums(w, self.policy.accum_dtype)
+            return w, log_z, m, sum_w, sum_w2
+        return self._normalize_stats_banked_impl(log_w, self.policy)
+
+    def _normalize_stats_masked(self, log_w: jax.Array, n_active: jax.Array):
+        """Masked twin of :meth:`_normalize_stats_banked` (inactive lanes
+        contribute exactly 0 to both sums on every path)."""
+        if not self.policy.stable_weighting:
+            w, log_z, m = self._normalize_masked(log_w, n_active)
+            sum_w, sum_w2 = _kish_sums(w, self.policy.accum_dtype)
+            return w, log_z, m, sum_w, sum_w2
+        return self._normalize_stats_masked_impl(log_w, n_active, self.policy)
+
     def _dist_step(self, shared_obs: bool, ragged: bool = False):
         """The shard_map'd banked step, built once per (obs, ragged) mode."""
         fn = self._dist_steps.get((shared_obs, ragged))
@@ -1235,6 +1636,8 @@ class FilterBank:
 
             local_resample = None
             local_resample_masked = None
+            fused_finalize = None
+            fused_finalize_masked = None
             if self.config.scheme == "local":
                 local_resample = self.backend.ancestors_from_u0_banked.get(
                     self.config.resampler
@@ -1244,6 +1647,20 @@ class FilterBank:
                         self.config.resampler
                     )
                 )
+                if (
+                    self.config.fused_epilogue is not False
+                    and self.policy.stable_weighting
+                ):
+                    # Shard-local fused tail: weights + ancestors_from_u0
+                    # in one pass once the LSE merge lands.
+                    fused_finalize = self.backend.fused_finalize_banked.get(
+                        self.config.resampler
+                    )
+                    fused_finalize_masked = (
+                        self.backend.fused_finalize_masked.get(
+                            self.config.resampler
+                        )
+                    )
             fn = distributed.make_dist_bank_step(
                 self.spec,
                 self.policy,
@@ -1254,6 +1671,8 @@ class FilterBank:
                 local_stats_masked=self.backend.local_stats_masked,
                 local_resample=local_resample,
                 local_resample_masked=local_resample_masked,
+                fused_finalize=fused_finalize,
+                fused_finalize_masked=fused_finalize_masked,
             )
             self._dist_steps[(shared_obs, ragged)] = fn
         return fn

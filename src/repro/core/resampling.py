@@ -37,10 +37,12 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import stability
 from repro.core.precision import PrecisionPolicy
 
 __all__ = [
     "build_cdf",
+    "reference_normalize",
     "systematic",
     "systematic_masked_banked",
     "stratified",
@@ -50,6 +52,9 @@ __all__ = [
     "metropolis",
     "metropolis_masked_banked",
     "METROPOLIS_ITERS",
+    "FUSED_EPILOGUES",
+    "FUSED_EPILOGUES_BANKED",
+    "FUSED_EPILOGUES_MASKED",
     "MASKED_RESAMPLERS",
     "RESAMPLERS",
     "register_resampler",
@@ -287,16 +292,109 @@ MASKED_RESAMPLERS: dict[str, Resampler] = {}
 RESAMPLERS: dict[str, Resampler] = {}
 
 
+# ---------------------------------------------------------------------------
+# Fused weight-epilogue references: the whole per-frame weight pipeline
+# (normalize -> Kish-ESS sums -> resample) as ONE pure-jnp function per
+# registered resampler.  These are (a) the oracles the fused Pallas kernel
+# is tested against at the engine level and (b) the jnp backend's
+# registered ``Backend.fused_epilogue*`` forms — written to be *bitwise*
+# the composed unfused jnp chain (same normalize ops as the engine's
+# ``_jnp_normalize``, same sum order as ``stability.effective_sample_size``,
+# same resampler call), so dispatching through them changes no numbers.
+#
+# Return convention (the Backend fused-epilogue contract):
+#     (weights, ancestors, log_z, max_log_w, sum_w, sum_w2)
+# with ESS = sum_w^2 / sum_w2 derived by the engine.
+
+
+def reference_normalize(log_w: jax.Array, policy: PrecisionPolicy):
+    """The jnp backend's normalize: (weights, lse, max) over the trailing
+    axis, LSE in accum dtype.  This is the ONE definition — the engine's
+    jnp Backend aliases it and the fused references below compose it, so
+    the fused == composed bitwise contract on the jnp backend is
+    structural, not a copy-paste discipline."""
+    m = jnp.max(log_w)
+    lse = stability.logsumexp(log_w.astype(policy.accum_dtype), axis=-1)
+    w = jnp.exp(log_w.astype(policy.accum_dtype) - lse).astype(log_w.dtype)
+    return w, lse, m
+
+
+def make_fused_epilogue_reference(resampler: Resampler):
+    """Single-filter fused reference: (key, log_w (P,), policy) -> 6-tuple."""
+
+    def fused(key, log_w, policy):
+        w, lse, m = reference_normalize(log_w, policy)
+        w_acc = w.astype(policy.accum_dtype)
+        sum_w = jnp.sum(w_acc, axis=-1)
+        sum_w2 = jnp.sum(jnp.square(w_acc), axis=-1)
+        anc = resampler(key, w, policy)
+        return w, anc, lse, m, sum_w, sum_w2
+
+    return fused
+
+
+def make_fused_epilogue_banked_reference(resampler: Resampler):
+    """Banked fused reference: (keys (B,), log_w (B, P), policy) -> 6-tuple
+    with (B,) stats — the per-row vmap of the single reference, matching
+    the engine's banked jnp fallbacks row for row."""
+
+    def fused(keys, log_w, policy):
+        w, lse, m = jax.vmap(
+            lambda row: reference_normalize(row, policy)
+        )(log_w)
+        w_acc = w.astype(policy.accum_dtype)
+        sum_w = jnp.sum(w_acc, axis=-1)
+        sum_w2 = jnp.sum(jnp.square(w_acc), axis=-1)
+        anc = jax.vmap(lambda k, row: resampler(k, row, policy))(keys, w)
+        return w, anc, lse, m, sum_w, sum_w2
+
+    return fused
+
+
+def make_fused_epilogue_masked_reference(masked_resampler: Resampler):
+    """Ragged fused reference: (keys, log_w, policy, n_active) -> 6-tuple.
+
+    Normalization runs the dense banked ops on the engine's pre-masked
+    rows (inactive lanes already -inf, weight exactly 0 — zero
+    contribution to every sum), matching the engine's masked-normalize
+    fallback; resampling uses the count-aware masked reference.
+    """
+
+    def fused(keys, log_w, policy, n_active):
+        w, lse, m = jax.vmap(
+            lambda row: reference_normalize(row, policy)
+        )(log_w)
+        w_acc = w.astype(policy.accum_dtype)
+        sum_w = jnp.sum(w_acc, axis=-1)
+        sum_w2 = jnp.sum(jnp.square(w_acc), axis=-1)
+        anc = masked_resampler(keys, w, policy, n_active)
+        return w, anc, lse, m, sum_w, sum_w2
+
+    return fused
+
+
+# Keyed by resampler name; register_resampler keeps these in sync so every
+# registered resampler has a fused reference (the masked form additionally
+# needs a MASKED_RESAMPLERS entry).
+FUSED_EPILOGUES: dict[str, Callable] = {}
+FUSED_EPILOGUES_BANKED: dict[str, Callable] = {}
+FUSED_EPILOGUES_MASKED: dict[str, Callable] = {}
+
+
 def register_resampler(name: str, fn: Resampler | None = None):
     """Register ``fn`` under ``name`` (usable as a decorator).
 
     The registry is the extension point :class:`repro.core.engine.FilterConfig`
     dispatches on — mirroring ``precision.register_policy`` and
-    ``engine.register_backend``.
+    ``engine.register_backend``.  A fused-epilogue reference (the composed
+    normalize→ESS→resample chain as one function) is derived automatically,
+    so every registered resampler can serve the engine's fused dispatch.
     """
     if fn is None:
         return lambda f: register_resampler(name, f)
     RESAMPLERS[name] = fn
+    FUSED_EPILOGUES[name] = make_fused_epilogue_reference(fn)
+    FUSED_EPILOGUES_BANKED[name] = make_fused_epilogue_banked_reference(fn)
     return fn
 
 
@@ -310,6 +408,12 @@ MASKED_RESAMPLERS.update(
     stratified=stratified_masked_banked,
     multinomial=multinomial_masked_banked,
     metropolis=metropolis_masked_banked,
+)
+FUSED_EPILOGUES_MASKED.update(
+    {
+        name: make_fused_epilogue_masked_reference(fn)
+        for name, fn in MASKED_RESAMPLERS.items()
+    }
 )
 
 

@@ -3,9 +3,15 @@
 Three kernels, mirroring the paper's optimized CUDA kernels (section 4):
 
 - ``logsumexp``   — fused max-finding + weighting + normalizing (the paper's
-  kernels 3-5) as a single-pass online LSE with SMEM carry.
+  kernels 3-5) as a single-pass online LSE with SMEM carry; the ``_stats``
+  forms also accumulate the Kish-ESS sums in the normalize phase.
 - ``resample``    — CDF build (blockwise-carry inclusive cumsum) + systematic
   resampling search (vectorized binary search), the paper's kernel 6.
+- ``epilogue``    — the whole weight pipeline (kernels 3-6) in ONE pass:
+  normalize + ESS + CDF + systematic search, the CDF living only in VMEM;
+  bitwise-identical to the composed logsumexp→resample chain.  Includes the
+  shard-local ``finalize`` variant the meshed bank's RNA scheme chains onto
+  the one-pmax+psum LSE merge.
 - ``likelihood``  — stable scaled-square intensity likelihood with fused
   running max (the paper's kernels 2-3).
 

@@ -1,13 +1,84 @@
-"""Shared helpers for the Pallas kernels."""
+"""Shared helpers for the Pallas kernels.
+
+Besides the launch utilities, this module holds the *shared kernel
+bodies* — the blockwise-carry cumsum, the CDF bisection, and the flat
+block-position builders.  The fused epilogue kernel
+(``repro.kernels.epilogue``) is bitwise-identical to the composed
+logsumexp→resample chain precisely because both execute these same op
+sequences; keeping a single definition makes that invariant structural
+instead of a copy-paste discipline.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["should_interpret", "pad_to_multiple", "NEG_INF"]
+__all__ = [
+    "bisect_flat",
+    "cdf_block",
+    "flat_positions_f32",
+    "flat_positions_i32",
+    "should_interpret",
+    "pad_to_multiple",
+    "NEG_INF",
+]
 
 NEG_INF = float("-inf")
+
+
+def flat_positions_i32(block_index, rows: int, lanes: int) -> jax.Array:
+    """Flat int32 element positions of block ``block_index`` (mask tests)."""
+    base = block_index * (rows * lanes)
+    return (
+        base
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 0) * lanes
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1)
+    )
+
+
+def flat_positions_f32(block_index, rows: int, lanes: int) -> jax.Array:
+    """Flat fp32 element positions of block ``block_index`` — exact
+    integers below 2^24, so ``pos + u0`` rounds identically whatever the
+    launch blocking (the geometry-independence the fused epilogue's
+    different output block shape relies on)."""
+    base = block_index * (rows * lanes)
+    ramp = jax.lax.broadcasted_iota(jnp.float32, (rows, lanes), 0) * lanes
+    ramp = ramp + jax.lax.broadcasted_iota(jnp.float32, (rows, lanes), 1)
+    return ramp + jnp.float32(base)
+
+
+def cdf_block(x, carry_s):
+    """One block of the blockwise-carry inclusive cumsum: lane-cumsum
+    inside rows, exclusive row-total cumsum across rows, plus the running
+    fp32 SMEM carry (updated in place).  Returns the fp32 block."""
+    lane_cum = jnp.cumsum(x, axis=1)  # within-row inclusive
+    row_tot = lane_cum[:, -1:]  # (br, 1)
+    row_prefix = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
+    block = lane_cum + row_prefix + carry_s[0, 0]
+    carry_s[0, 0] = block[-1, -1]
+    return block
+
+
+def bisect_flat(u, cdf, *, n_cdf: int) -> jax.Array:
+    """Right-side searchsorted of ``u`` into the flat CDF vector by
+    bisection: index of first cdf entry > u == count of entries <= u."""
+    lo = jnp.zeros(u.shape, jnp.int32)  # lowest candidate
+    hi = jnp.full(u.shape, n_cdf, jnp.int32)  # exclusive upper bound
+    # answer lives in [lo, hi] — n_cdf+1 candidates — so bit_length(n_cdf)
+    # bisection steps are required (bit_length(n_cdf-1) leaves {lo, lo+1}
+    # unresolved and returns even-index answers only).
+    steps = max(1, n_cdf.bit_length() if isinstance(n_cdf, int) else 16)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        val = jnp.take(cdf, mid, axis=0)
+        gt = val <= u  # answer strictly right of mid
+        return jnp.where(gt, mid + 1, lo), jnp.where(gt, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return jnp.minimum(lo, n_cdf - 1)
 
 
 def should_interpret() -> bool:

@@ -1,0 +1,9 @@
+"""Fused weight-pipeline epilogue: normalize + ESS + CDF + resample, one pass.
+
+The composed chain traverses the (B, P) weight array ~5 times in HBM per
+frame (normalize read+write, ESS read, cumsum read+write, search read); the
+fused kernel here reads the log-weights twice (reduce + normalize phase),
+writes the weights once and the ancestors once, and keeps the CDF entirely
+in VMEM.  See ``repro.kernels.epilogue.epilogue`` for the kernel and
+``ops`` for the jit'd entry points.
+"""

@@ -1,0 +1,490 @@
+"""Pallas kernel: the fused weight-pipeline epilogue (bank-batched).
+
+One kernel pass per bank row takes log-weights and emits everything the
+engine's per-frame weight pipeline needs — normalized weights, ancestors,
+``(max, lse)`` stats and the Kish-ESS sums — with the inclusive CDF living
+only in VMEM scratch.  Phases per bank row (TPU grids are sequential per
+core with the last dimension innermost, so phases complete in order):
+
+phase 0  online-LSE reduce: running ``(max m, rescaled sum s)`` fp32 SMEM
+         carry over the row's blocks (identical to ``kernels/logsumexp``).
+phase 1  normalize + CDF: ``w = exp(x - lse)`` rounded to the compute
+         dtype and written out; the *rounded* weights re-read as fp32 feed
+         (a) the Kish sums ``sum_w`` / ``sum_w2`` (SMEM carries) and
+         (b) the blockwise-carry inclusive cumsum whose blocks land in a
+         VMEM scratch CDF — never HBM.  The final block divides the whole
+         scratch CDF by its total (the same elementwise IEEE division the
+         composed chain applies to its materialized CDF).
+phase 2  systematic search: the u-grid ``u_g = (g + u0) * (1/N)`` is built
+         from *flat* fp32 output positions (exact integers, so the grid is
+         independent of the launch blocking) and binary-searched against
+         the in-VMEM CDF — the same bisection as ``kernels/resample``.
+
+Bitwise contract: with the same key, the fused kernel reproduces the
+composed ``normalize → ESS → cumsum → search`` kernel chain exactly — same
+per-block reduction order, same rounded weights into the CDF, same
+division, same searches.  The ``masked`` variant adds a per-row active
+count with the PR-4 invariant: the active prefix is bitwise the unmasked
+kernel on a width-``n`` row whatever junk the inactive lanes hold, and
+full counts are bitwise the dense kernel.
+
+``fused_finalize_call`` is the shard-local variant for the meshed bank's
+``local`` RNA scheme: the global LSE arrives from the one-``pmax``+``psum``
+merge, and one pass computes the shard's weights and chains the
+shard-local systematic inverse (``ancestors_from_u0``) on the in-VMEM CDF.
+
+HBM traffic per row: read x twice, write w once, write ancestors once —
+the (B, P) weight array is materialized exactly once per step.
+VMEM: one (rows, 128) fp32 CDF scratch (256 KiB at 64k particles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (
+    bisect_flat,
+    cdf_block,
+    flat_positions_f32,
+    flat_positions_i32,
+)
+
+__all__ = [
+    "fused_epilogue_call",
+    "fused_epilogue_masked_call",
+    "fused_finalize_call",
+    "fused_finalize_masked_call",
+    "LANES",
+]
+
+LANES = 128
+
+
+def _bisect_scratch(u, cdf_s, anc_ref, *, n_cdf: int):
+    """Right-side searchsorted of ``u`` into the scratch CDF — the shared
+    ``bisect_flat`` body the composed search kernel also runs."""
+    anc_ref[0] = bisect_flat(u, cdf_s[:, :].reshape(-1), n_cdf=n_cdf)
+
+
+def _epilogue_body(
+    x,
+    inv,
+    phase,
+    i,
+    nb,
+    u0_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    *,
+    n_cdf: int,
+):
+    """Shared reduce / normalize+CDF / search phases over one fp32 block.
+
+    ``x`` is the (masked) fp32 log-weight block; ``inv`` the row's fp32
+    reciprocal grid spacing (1/N dense, 1/n_active masked).
+    """
+
+    @pl.when(jnp.logical_and(phase == 0, i == 0))
+    def _init():
+        m_s[0, 0] = jnp.float32(-jnp.inf)
+        s_s[0, 0] = jnp.float32(0.0)
+
+    @pl.when(phase == 0)
+    def _reduce():
+        m_old = m_s[0, 0]
+        m_new = jnp.maximum(m_old, jnp.max(x))
+        # exp(-inf - -inf) is guarded: when m_new is -inf every term is 0.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
+        s_s[0, 0] = s_s[0, 0] * jnp.exp(m_old - m_safe) + jnp.sum(
+            jnp.exp(x - m_safe)
+        )
+        m_s[0, 0] = m_new
+
+    @pl.when(jnp.logical_and(phase == 0, i == nb - 1))
+    def _stats():
+        m = m_s[0, 0]
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(s_s[0, 0]), m)
+        m_out[0, 0] = m
+        lse_out[0, 0] = lse
+        s_s[0, 0] = lse  # reuse scratch: phase 1 reads this row's final lse
+
+    @pl.when(phase == 1)
+    def _normalize_cdf():
+        @pl.when(i == 0)
+        def _init1():
+            sw_s[0, 0] = jnp.float32(0.0)
+            sw2_s[0, 0] = jnp.float32(0.0)
+            carry_s[0, 0] = jnp.float32(0.0)
+
+        lse = s_s[0, 0]
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
+        w = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+        w_ref[0] = w
+        # The *rounded* weights feed the Kish sums and the CDF — exactly
+        # what the composed chain re-reads from HBM.
+        w32 = w.astype(jnp.float32)
+        sw_s[0, 0] = sw_s[0, 0] + jnp.sum(w32)
+        sw2_s[0, 0] = sw2_s[0, 0] + jnp.sum(w32 * w32)
+        rows = w_ref.shape[1]
+        cdf_s[pl.ds(i * rows, rows), :] = cdf_block(w32, carry_s)
+
+    @pl.when(jnp.logical_and(phase == 1, i == nb - 1))
+    def _fin1():
+        sw_out[0, 0] = sw_s[0, 0]
+        sw2_out[0, 0] = sw2_s[0, 0]
+        # Normalize the whole in-VMEM CDF by its total: the same unguarded
+        # elementwise IEEE division the composed chain applies (zero-mass
+        # rows go NaN and clip deterministically in both).
+        cdf_s[:, :] = cdf_s[:, :] / carry_s[0, 0]
+
+    @pl.when(phase == 2)
+    def _search():
+        rows = anc_ref.shape[1]
+        pos = flat_positions_f32(i, rows, LANES)
+        u = (pos + u0_ref[0, 0]) * inv
+        _bisect_scratch(u, cdf_s, anc_ref, n_cdf=n_cdf)
+
+
+def _dense_kernel(
+    u0_ref,
+    x_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    *,
+    n_total: int,
+    n_cdf: int,
+):
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    x = x_ref[0].astype(jnp.float32)
+    # IEEE fp32 reciprocal — folds bit-identically to the masked kernel's
+    # runtime division (the PR-4 invariant).
+    inv = jnp.float32(1.0) / jnp.float32(n_total)
+    _epilogue_body(
+        x, inv, phase, i, nb, u0_ref, w_ref, anc_ref, m_out, lse_out,
+        sw_out, sw2_out, m_s, s_s, sw_s, sw2_s, carry_s, cdf_s, n_cdf=n_cdf,
+    )
+
+
+def _masked_kernel(
+    u0_ref,
+    n_ref,
+    x_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    *,
+    n_cdf: int,
+):
+    """As ``_dense_kernel`` with this row's active count from SMEM: lanes at
+    position >= n_active are pinned to -inf before any carry (weight and
+    Kish contribution exactly 0) and the u-grid spans the active count."""
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    rows = x_ref.shape[1]
+    x = jnp.where(
+        flat_positions_i32(i, rows, LANES) < n_ref[0, 0],
+        x_ref[0].astype(jnp.float32),
+        jnp.float32(-jnp.inf),
+    )
+    n_f = jnp.maximum(n_ref[0, 0], 1).astype(jnp.float32)
+    inv = jnp.float32(1.0) / n_f
+    _epilogue_body(
+        x, inv, phase, i, nb, u0_ref, w_ref, anc_ref, m_out, lse_out,
+        sw_out, sw2_out, m_s, s_s, sw_s, sw2_s, carry_s, cdf_s, n_cdf=n_cdf,
+    )
+
+
+def fused_epilogue_call(
+    x3d: jax.Array,
+    u0: jax.Array,
+    *,
+    n_total: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """x3d: (B, rows, 128) log-weights; u0: (B, 1) fp32 systematic offsets.
+
+    Returns (w (B, rows, 128) in x3d's dtype, ancestors (B, rows, 128)
+    int32, m (B, 1), lse (B, 1), sum_w (B, 1), sum_w2 (B, 1)).
+    """
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
+    assert u0.shape == (nbank, 1), u0.shape
+    nb = rows // block_rows
+    n_cdf = rows * LANES
+    kernel = functools.partial(_dense_kernel, n_total=n_total, n_cdf=n_cdf)
+    blk = pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda b, p, i: (b, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, 3, nb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1), lambda b, p, i: (b, 0), memory_space=pltpu.SMEM
+            ),
+            blk,
+        ],
+        out_specs=[blk, blk, scalar, scalar, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u0.astype(jnp.float32), x3d)
+
+
+def fused_epilogue_masked_call(
+    x3d: jax.Array,
+    u0: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int,
+    interpret: bool,
+):
+    """Masked form: adds (B, 1) int32 per-row active counts.
+
+    Output lanes at position >= n_active[b] hold weight 0 and clipped
+    ancestor draws the caller must mask (the engine pins their weights to
+    -inf) — same contract as the composed masked kernel chain.
+    """
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
+    assert u0.shape == (nbank, 1), u0.shape
+    assert n_active.shape == (nbank, 1), n_active.shape
+    nb = rows // block_rows
+    n_cdf = rows * LANES
+    kernel = functools.partial(_masked_kernel, n_cdf=n_cdf)
+    blk = pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda b, p, i: (b, 0))
+    smem = pl.BlockSpec(
+        (1, 1), lambda b, p, i: (b, 0), memory_space=pltpu.SMEM
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, 3, nb),
+        in_specs=[smem, smem, blk],
+        out_specs=[blk, blk, scalar, scalar, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u0.astype(jnp.float32), n_active.astype(jnp.int32), x3d)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local finalize: the meshed bank's fused epilogue tail.  The global
+# LSE is already merged (one pmax + psum across the particle axes); one
+# pass computes this shard's weights and chains the shard-local systematic
+# inverse on the in-VMEM CDF (the RNA ``local`` scheme's ancestors_from_u0).
+
+
+def _finalize_body(
+    x, inv, phase, i, nb, u0_ref, lse_ref, w_ref, anc_ref, carry_s, cdf_s,
+    *, n_cdf: int,
+):
+    @pl.when(phase == 0)
+    def _normalize_cdf():
+        @pl.when(i == 0)
+        def _init():
+            carry_s[0, 0] = jnp.float32(0.0)
+
+        lse = lse_ref[0, 0]
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
+        w = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+        w_ref[0] = w
+        w32 = w.astype(jnp.float32)
+        rows = w_ref.shape[1]
+        cdf_s[pl.ds(i * rows, rows), :] = cdf_block(w32, carry_s)
+
+    @pl.when(jnp.logical_and(phase == 0, i == nb - 1))
+    def _fin0():
+        cdf_s[:, :] = cdf_s[:, :] / carry_s[0, 0]
+
+    @pl.when(phase == 1)
+    def _search():
+        rows = anc_ref.shape[1]
+        pos = flat_positions_f32(i, rows, LANES)
+        u = (pos + u0_ref[0, 0]) * inv
+        _bisect_scratch(u, cdf_s, anc_ref, n_cdf=n_cdf)
+
+
+def _finalize_kernel(
+    u0_ref, lse_ref, x_ref, w_ref, anc_ref, carry_s, cdf_s,
+    *, n_total: int, n_cdf: int,
+):
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    x = x_ref[0].astype(jnp.float32)
+    inv = jnp.float32(1.0) / jnp.float32(n_total)
+    _finalize_body(
+        x, inv, phase, i, nb, u0_ref, lse_ref, w_ref, anc_ref, carry_s,
+        cdf_s, n_cdf=n_cdf,
+    )
+
+
+def _masked_finalize_kernel(
+    u0_ref, lse_ref, n_ref, x_ref, w_ref, anc_ref, carry_s, cdf_s,
+    *, n_cdf: int,
+):
+    """Ragged twin: the per-row count is this shard's *local* active count
+    (``clip(n_active - d*P_loc, 0, P_loc)``) — lanes past it are pinned to
+    -inf (weight exactly 0) and the u-grid spans the local count."""
+    phase = pl.program_id(1)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    rows = x_ref.shape[1]
+    x = jnp.where(
+        flat_positions_i32(i, rows, LANES) < n_ref[0, 0],
+        x_ref[0].astype(jnp.float32),
+        jnp.float32(-jnp.inf),
+    )
+    n_f = jnp.maximum(n_ref[0, 0], 1).astype(jnp.float32)
+    inv = jnp.float32(1.0) / n_f
+    _finalize_body(
+        x, inv, phase, i, nb, u0_ref, lse_ref, w_ref, anc_ref, carry_s,
+        cdf_s, n_cdf=n_cdf,
+    )
+
+
+def fused_finalize_call(
+    x3d: jax.Array,
+    lse: jax.Array,
+    u0: jax.Array,
+    *,
+    n_total: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """x3d: (B, rows, 128) log-weights; lse: (B, 1) fp32 *global* LSE;
+    u0: (B, 1) fp32 offsets.  Returns (w, ancestors) blocks."""
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
+    assert lse.shape == (nbank, 1) and u0.shape == (nbank, 1)
+    nb = rows // block_rows
+    n_cdf = rows * LANES
+    kernel = functools.partial(_finalize_kernel, n_total=n_total, n_cdf=n_cdf)
+    blk = pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0))
+    smem = pl.BlockSpec(
+        (1, 1), lambda b, p, i: (b, 0), memory_space=pltpu.SMEM
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, 2, nb),
+        in_specs=[smem, smem, blk],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u0.astype(jnp.float32), lse.astype(jnp.float32), x3d)
+
+
+def fused_finalize_masked_call(
+    x3d: jax.Array,
+    lse: jax.Array,
+    u0: jax.Array,
+    n_loc: jax.Array,
+    *,
+    block_rows: int,
+    interpret: bool,
+):
+    """Masked finalize: adds (B, 1) int32 *shard-local* active counts."""
+    nbank, rows, lanes = x3d.shape
+    assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
+    assert lse.shape == (nbank, 1) and u0.shape == (nbank, 1)
+    assert n_loc.shape == (nbank, 1), n_loc.shape
+    nb = rows // block_rows
+    n_cdf = rows * LANES
+    kernel = functools.partial(_masked_finalize_kernel, n_cdf=n_cdf)
+    blk = pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0))
+    smem = pl.BlockSpec(
+        (1, 1), lambda b, p, i: (b, 0), memory_space=pltpu.SMEM
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, 2, nb),
+        in_specs=[smem, smem, smem, blk],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        u0.astype(jnp.float32),
+        lse.astype(jnp.float32),
+        n_loc.astype(jnp.int32),
+        x3d,
+    )

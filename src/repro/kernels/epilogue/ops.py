@@ -1,0 +1,194 @@
+"""Public entry points for the fused weight-pipeline epilogue.
+
+``fused_epilogue`` handles one filter (1-D log-weights) and the
+``_batched`` / ``_masked`` forms a (ragged) bank — one kernel launch per
+call, per-row fp32 carries, systematic offsets drawn from the caller's
+keys exactly as the composed ``systematic_resample[_batched,_masked]``
+chain draws them, so fused == composed holds bit for bit with the same
+keys.
+
+Return convention (the :class:`repro.core.engine.Backend` fused-epilogue
+contract): ``(weights, ancestors, log_z, max_log_w, sum_w, sum_w2)`` —
+``log_z`` is the row LSE, ``sum_w``/``sum_w2`` the Kish-ESS sums of the
+rounded weights (``ESS = sum_w^2 / sum_w2``).
+
+``fused_finalize_from_u0[_batched,_masked]`` are the shard-local meshed
+forms: the *global* LSE (merged with one pmax + psum) comes in, and the
+pass returns this shard's weights plus the RNA ``local`` scheme's
+shard-local systematic ancestors (``ancestors_from_u0`` fused onto the
+normalize pass) — ``(weights, ancestors)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, should_interpret
+from repro.kernels.epilogue.epilogue import (
+    LANES,
+    fused_epilogue_call,
+    fused_epilogue_masked_call,
+    fused_finalize_call,
+    fused_finalize_masked_call,
+)
+
+__all__ = [
+    "fused_epilogue",
+    "fused_epilogue_batched",
+    "fused_epilogue_masked",
+    "fused_finalize_from_u0_batched",
+    "fused_finalize_from_u0_masked",
+]
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _as_blocks(log_w: jax.Array, block_rows: int) -> jax.Array:
+    x = pad_to_multiple(log_w, LANES * block_rows, axis=-1, value=-jnp.inf)
+    return x.reshape(x.shape[:-1] + (-1, LANES))
+
+
+def _epilogue_impl(u0, log_w, n_active, *, block_rows, interpret):
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    if n_active is None:
+        w3d, anc3d, m, lse, sw, sw2 = fused_epilogue_call(
+            x3d,
+            u0.reshape(nbank, 1),
+            n_total=n,
+            block_rows=block_rows,
+            interpret=interpret,
+        )
+    else:
+        w3d, anc3d, m, lse, sw, sw2 = fused_epilogue_masked_call(
+            x3d,
+            u0.reshape(nbank, 1),
+            n_active.reshape(nbank, 1),
+            block_rows=block_rows,
+            interpret=interpret,
+        )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    anc = jnp.minimum(anc3d.reshape(nbank, -1)[:, :n], n - 1)
+    return w, anc, lse[:, 0], m[:, 0], sw[:, 0], sw2[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_epilogue(
+    key: jax.Array,
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """One-pass (weights, ancestors, log_z, max, sum_w, sum_w2) for one
+    filter — bitwise the composed ``normalize_weights`` → ESS →
+    ``systematic_resample`` chain with the same key."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.random.uniform(key, (), jnp.float32).reshape(1)
+    w, anc, lse, m, sw, sw2 = _epilogue_impl(
+        u0, log_w[None], None, block_rows=block_rows, interpret=interpret
+    )
+    return w[0], anc[0], lse[0], m[0], sw[0], sw2[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_epilogue_batched(
+    keys: jax.Array,
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Per-row fused epilogue over a (B, P) bank: (B,) keys draw per-row
+    offsets; every row is bitwise ``fused_epilogue`` on that row alone."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _epilogue_impl(
+        u0, log_w, None, block_rows=block_rows, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_epilogue_masked(
+    keys: jax.Array,
+    log_w: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Ragged fused epilogue: (B,) per-row active counts.  The active
+    prefix is bitwise the unmasked kernel on a width-n row (junk-proof);
+    ancestors past the count clip to the CDF tail and must be masked by
+    the caller.  Full counts are bitwise ``fused_epilogue_batched``."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _epilogue_impl(
+        u0, log_w, n_active, block_rows=block_rows, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_finalize_from_u0_batched(
+    u0: jax.Array,
+    log_w: jax.Array,
+    lse: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Meshed shard-local epilogue tail: (B,) offsets + (B, P_loc) shard
+    log-weights + (B,) merged global LSE -> (weights (B, P_loc),
+    ancestors (B, P_loc)) — the weights of ``dist_normalize_banked``
+    chained into ``systematic_ancestors_batched`` in one pass."""
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, anc3d = fused_finalize_call(
+        x3d,
+        lse.reshape(nbank, 1),
+        u0.reshape(nbank, 1),
+        n_total=n,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    anc = jnp.minimum(anc3d.reshape(nbank, -1)[:, :n], n - 1)
+    return w, anc
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_finalize_from_u0_masked(
+    u0: jax.Array,
+    log_w: jax.Array,
+    lse: jax.Array,
+    n_loc: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+):
+    """Masked meshed finalize: (B,) *shard-local* active counts — each
+    shard resamples its active sub-slice; full counts are bitwise the
+    dense form."""
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, anc3d = fused_finalize_masked_call(
+        x3d,
+        lse.reshape(nbank, 1),
+        u0.reshape(nbank, 1),
+        n_loc.reshape(nbank, 1),
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    anc = jnp.minimum(anc3d.reshape(nbank, -1)[:, :n], n - 1)
+    return w, anc

@@ -43,12 +43,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import flat_positions_i32
+
 __all__ = ["fused_normalize_call", "fused_normalize_masked_call", "LANES"]
 
 LANES = 128
 
 
-def _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s):
+def _body(x, phase, i, nb, w_ref, m_out, lse_out, sw_out, sw2_out, m_s, s_s,
+          sw_s, sw2_s):
     """Shared reduce/normalize phases over one fp32 block ``x``."""
 
     @pl.when(phase == 0)
@@ -74,12 +77,29 @@ def _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s):
 
     @pl.when(phase == 1)
     def _normalize():
+        @pl.when(i == 0)
+        def _init_sums():
+            sw_s[0, 0] = jnp.float32(0.0)
+            sw2_s[0, 0] = jnp.float32(0.0)
+
         lse = s_s[0, 0]
         lse_safe = jnp.where(jnp.isfinite(lse), lse, jnp.float32(0.0))
-        w_ref[0] = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+        w = jnp.exp(x - lse_safe).astype(w_ref.dtype)
+        w_ref[0] = w
+        # Kish sums over the *rounded* weights (what the engine's ESS read
+        # used to re-load from HBM): same pass, zero extra traffic.
+        w32 = w.astype(jnp.float32)
+        sw_s[0, 0] = sw_s[0, 0] + jnp.sum(w32)
+        sw2_s[0, 0] = sw2_s[0, 0] + jnp.sum(w32 * w32)
+
+    @pl.when(jnp.logical_and(phase == 1, i == nb - 1))
+    def _sums():
+        sw_out[0, 0] = sw_s[0, 0]
+        sw2_out[0, 0] = sw2_s[0, 0]
 
 
-def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
+def _kernel(x_ref, w_ref, m_out, lse_out, sw_out, sw2_out, m_s, s_s, sw_s,
+            sw2_s):
     phase = pl.program_id(1)
     i = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -90,10 +110,12 @@ def _kernel(x_ref, w_ref, m_out, lse_out, m_s, s_s):
         s_s[0, 0] = jnp.float32(0.0)
 
     x = x_ref[0].astype(jnp.float32)
-    _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s)
+    _body(x, phase, i, nb, w_ref, m_out, lse_out, sw_out, sw2_out, m_s, s_s,
+          sw_s, sw2_s)
 
 
-def _masked_kernel(n_ref, x_ref, w_ref, m_out, lse_out, m_s, s_s):
+def _masked_kernel(n_ref, x_ref, w_ref, m_out, lse_out, sw_out, sw2_out, m_s,
+                   s_s, sw_s, sw2_s):
     """As ``_kernel``, with lanes at position >= this row's n_active pinned
     to -inf before they enter the carry (and thus 0 in the weight output)."""
     phase = pl.program_id(1)
@@ -106,31 +128,29 @@ def _masked_kernel(n_ref, x_ref, w_ref, m_out, lse_out, m_s, s_s):
         s_s[0, 0] = jnp.float32(0.0)
 
     rows = x_ref.shape[1]
-    base = i * (rows * LANES)
-    pos = (
-        base
-        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0) * LANES
-        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
-    )
     x = jnp.where(
-        pos < n_ref[0, 0],
+        flat_positions_i32(i, rows, LANES) < n_ref[0, 0],
         x_ref[0].astype(jnp.float32),
         jnp.float32(-jnp.inf),
     )
-    _body(x, phase, i, nb, w_ref, m_out, lse_out, m_s, s_s)
+    _body(x, phase, i, nb, w_ref, m_out, lse_out, sw_out, sw2_out, m_s, s_s,
+          sw_s, sw2_s)
 
 
 def fused_normalize_call(
     x3d: jax.Array, *, block_rows: int, interpret: bool
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """x3d: (B, rows, 128) log-weights, one bank row per filter.
 
-    Returns (w (B, rows, 128), m (B, 1), lse (B, 1)) with per-row stats.
+    Returns (w (B, rows, 128), m (B, 1), lse (B, 1), sum_w (B, 1),
+    sum_w2 (B, 1)) with per-row stats — sum_w/sum_w2 are the Kish-ESS sums
+    of the rounded weight output, accumulated in the normalize phase so the
+    caller never re-reads the weights to compute ESS.
     """
     nbank, rows, lanes = x3d.shape
     assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
     nb = rows // block_rows
-    w, m, lse = pl.pallas_call(
+    w, m, lse, sw, sw2 = pl.pallas_call(
         _kernel,
         grid=(nbank, 2, nb),
         in_specs=[
@@ -140,19 +160,25 @@ def fused_normalize_call(
             pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
             pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
             jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
             jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.SMEM((1, 1), jnp.float32),
             pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x3d)
-    return w, m, lse
+    return w, m, lse, sw, sw2
 
 
 def fused_normalize_masked_call(
@@ -161,17 +187,18 @@ def fused_normalize_masked_call(
     *,
     block_rows: int,
     interpret: bool,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Masked form: x3d (B, rows, 128), n_active (B, 1) int32 per-row counts.
 
     Lanes at flat position >= n_active[b] are treated as absent (-inf in the
-    carry, 0 in the weight output).  Returns (w, m (B, 1), lse (B, 1)).
+    carry, 0 in the weight output — and exactly 0 in the Kish sums).
+    Returns (w, m (B, 1), lse (B, 1), sum_w (B, 1), sum_w2 (B, 1)).
     """
     nbank, rows, lanes = x3d.shape
     assert lanes == LANES and rows % block_rows == 0, (x3d.shape, block_rows)
     assert n_active.shape == (nbank, 1), n_active.shape
     nb = rows // block_rows
-    w, m, lse = pl.pallas_call(
+    w, m, lse, sw, sw2 = pl.pallas_call(
         _masked_kernel,
         grid=(nbank, 2, nb),
         in_specs=[
@@ -184,16 +211,22 @@ def fused_normalize_masked_call(
             pl.BlockSpec((1, block_rows, LANES), lambda b, p, i: (b, i, 0)),
             pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, p, i: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((nbank, rows, LANES), x3d.dtype),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
             jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
             jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.SMEM((1, 1), jnp.float32),
             pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
     )(n_active.astype(jnp.int32), x3d)
-    return w, m, lse
+    return w, m, lse, sw, sw2

@@ -16,6 +16,12 @@ bank forms: a per-row active count pins lanes >= n_active[b] to -inf inside
 the kernel carry, so a masked row with ``n_active = n`` is bitwise the
 unmasked kernel on a width-``n`` row regardless of what the inactive lanes
 hold, and ``n_active = P`` everywhere is bitwise the dense batched kernel.
+
+The ``*_stats`` forms additionally return the Kish-ESS sums ``(sum_w,
+sum_w2)`` of the rounded weight output, accumulated *inside* the normalize
+phase — the engine derives ``ESS = sum_w^2 / sum_w2`` from them instead of
+re-reading the whole weight array from HBM (one full (B, P) traversal
+saved per step).  The plain forms run the same kernel and drop the sums.
 """
 
 from __future__ import annotations
@@ -36,6 +42,9 @@ __all__ = [
     "normalize_weights",
     "normalize_weights_batched",
     "normalize_weights_masked",
+    "normalize_weights_stats",
+    "normalize_weights_stats_batched",
+    "normalize_weights_stats_masked",
     "online_logsumexp",
     "online_logsumexp_batched",
     "online_logsumexp_masked",
@@ -50,26 +59,92 @@ def _as_blocks(log_w: jax.Array, block_rows: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights_stats(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """Fused (weights, max, lse, sum_w, sum_w2) over 1-D log-weights.
+
+    Padding uses -inf (contributes exp(-inf)=0 to every sum and never wins
+    the max); the padded tail of the weight output is sliced off.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n = log_w.shape[0]
+    x3d = _as_blocks(log_w, block_rows)[None]
+    w3d, m, lse, sw, sw2 = fused_normalize_call(
+        x3d, block_rows=block_rows, interpret=interpret
+    )
+    w = w3d.reshape(-1)[:n]
+    return w, m[0, 0], lse[0, 0], sw[0, 0], sw2[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights_stats_batched(
+    log_w: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """Per-row fused (w (B, P), m (B,), lse (B,), sum_w (B,), sum_w2 (B,)).
+
+    One kernel launch for the whole bank; each row reduces with its own
+    fp32 carries, so the result is bit-identical to running
+    ``normalize_weights_stats`` row by row.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, m, lse, sw, sw2 = fused_normalize_call(
+        x3d, block_rows=block_rows, interpret=interpret
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    return w, m[:, 0], lse[:, 0], sw[:, 0], sw2[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def normalize_weights_stats_masked(
+    log_w: jax.Array,
+    n_active: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, ...]:
+    """Masked fused stats: (B, P) log-weights + (B,) counts.
+
+    Inactive lanes carry weight exactly 0 through the Kish sums, so a
+    masked row's (sum_w, sum_w2) are bitwise the unmasked kernel on the
+    active prefix alone.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    nbank, n = log_w.shape
+    x3d = _as_blocks(log_w, block_rows)
+    w3d, m, lse, sw, sw2 = fused_normalize_masked_call(
+        x3d,
+        n_active.reshape(nbank, 1),
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    return w, m[:, 0], lse[:, 0], sw[:, 0], sw2[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def normalize_weights(
     log_w: jax.Array,
     *,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused (normalized weights, max, lse) over a 1-D log-weight vector.
-
-    Padding uses -inf (contributes exp(-inf)=0 to the sum and never wins the
-    max); the padded tail of the weight output is sliced off.
-    """
-    if interpret is None:
-        interpret = should_interpret()
-    n = log_w.shape[0]
-    x3d = _as_blocks(log_w, block_rows)[None]
-    w3d, m, lse = fused_normalize_call(
-        x3d, block_rows=block_rows, interpret=interpret
+    """Fused (normalized weights, max, lse) over a 1-D log-weight vector."""
+    w, m, lse, _, _ = normalize_weights_stats(
+        log_w, block_rows=block_rows, interpret=interpret
     )
-    w = w3d.reshape(-1)[:n]
-    return w, m[0, 0], lse[0, 0]
+    return w, m, lse
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -85,15 +160,10 @@ def normalize_weights_batched(
     lse (B,)).  Each row reduces with its own fp32 carry, so the result is
     bit-identical to running ``normalize_weights`` row by row.
     """
-    if interpret is None:
-        interpret = should_interpret()
-    nbank, n = log_w.shape
-    x3d = _as_blocks(log_w, block_rows)
-    w3d, m, lse = fused_normalize_call(
-        x3d, block_rows=block_rows, interpret=interpret
+    w, m, lse, _, _ = normalize_weights_stats_batched(
+        log_w, block_rows=block_rows, interpret=interpret
     )
-    w = w3d.reshape(nbank, -1)[:, :n]
-    return w, m[:, 0], lse[:, 0]
+    return w, m, lse
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -111,18 +181,10 @@ def normalize_weights_masked(
     ragged-bank contract: whatever junk an inactive lane holds, the active
     prefix is bitwise ``normalize_weights`` on that prefix alone.
     """
-    if interpret is None:
-        interpret = should_interpret()
-    nbank, n = log_w.shape
-    x3d = _as_blocks(log_w, block_rows)
-    w3d, m, lse = fused_normalize_masked_call(
-        x3d,
-        n_active.reshape(nbank, 1),
-        block_rows=block_rows,
-        interpret=interpret,
+    w, m, lse, _, _ = normalize_weights_stats_masked(
+        log_w, n_active, block_rows=block_rows, interpret=interpret
     )
-    w = w3d.reshape(nbank, -1)[:, :n]
-    return w, m[:, 0], lse[:, 0]
+    return w, m, lse
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -49,6 +49,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import (
+    bisect_flat,
+    cdf_block,
+    flat_positions_f32,
+    flat_positions_i32,
+)
+
 __all__ = [
     "cumsum_call",
     "masked_cumsum_call",
@@ -61,12 +68,7 @@ LANES = 128
 
 
 def _cumsum_body(x, out_ref, carry_s):
-    lane_cum = jnp.cumsum(x, axis=1)  # within-row inclusive
-    row_tot = lane_cum[:, -1:]  # (br, 1)
-    row_prefix = jnp.cumsum(row_tot, axis=0) - row_tot  # exclusive over rows
-    block = lane_cum + row_prefix + carry_s[0, 0]
-    out_ref[0] = block.astype(out_ref.dtype)
-    carry_s[0, 0] = block[-1, -1]
+    out_ref[0] = cdf_block(x, carry_s).astype(out_ref.dtype)
 
 
 def _cumsum_kernel(x_ref, out_ref, carry_s):
@@ -90,12 +92,7 @@ def _masked_cumsum_kernel(n_ref, x_ref, out_ref, carry_s):
         carry_s[0, 0] = jnp.float32(0.0)
 
     rows = x_ref.shape[1]
-    base = i * (rows * LANES)
-    pos = (
-        base
-        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 0) * LANES
-        + jax.lax.broadcasted_iota(jnp.int32, (rows, LANES), 1)
-    )
+    pos = flat_positions_i32(i, rows, LANES)
     x = jnp.where(
         pos < n_ref[0, 0], x_ref[0].astype(jnp.float32), jnp.float32(0.0)
     )
@@ -150,34 +147,9 @@ def masked_cumsum_call(
 
 
 def _bisect(u, cdf_ref, anc_ref, *, n_cdf: int):
-    """Right-side searchsorted of the u-grid block into this row's CDF."""
-    _, bo, lanes = anc_ref.shape
-    cdf = cdf_ref[0].reshape(-1)  # resident in VMEM/registers
-    lo = jnp.zeros((bo, lanes), jnp.int32)  # lowest candidate
-    hi = jnp.full((bo, lanes), n_cdf, jnp.int32)  # exclusive upper bound
-    # answer lives in [lo, hi] — n_cdf+1 candidates — so bit_length(n_cdf)
-    # bisection steps are required (bit_length(n_cdf-1) leaves {lo, lo+1}
-    # unresolved and returns even-index answers only).
-    steps = max(1, n_cdf.bit_length() if isinstance(n_cdf, int) else 16)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = (lo + hi) // 2
-        val = jnp.take(cdf, mid, axis=0)
-        gt = val <= u  # answer strictly right of mid
-        return jnp.where(gt, mid + 1, lo), jnp.where(gt, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    anc_ref[0] = jnp.minimum(lo, n_cdf - 1)
-
-
-def _u_ramp(o, anc_ref):
-    """Per-block fp32 systematic ramp (flat output positions)."""
-    _, bo, lanes = anc_ref.shape
-    base = o * (bo * lanes)
-    ramp = jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 0) * lanes
-    ramp = ramp + jax.lax.broadcasted_iota(jnp.float32, (bo, lanes), 1)
-    return ramp, base
+    """Right-side searchsorted of the u-grid block into this row's CDF
+    (the shared ``bisect_flat`` body; cdf resident in VMEM/registers)."""
+    anc_ref[0] = bisect_flat(u, cdf_ref[0].reshape(-1), n_cdf=n_cdf)
 
 
 def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
@@ -190,11 +162,12 @@ def _search_kernel(u0_ref, cdf_ref, anc_ref, *, n_total: int, n_cdf: int):
     searchsorted), computed by bisection on the flattened CDF.
     """
     o = pl.program_id(1)
-    ramp, base = _u_ramp(o, anc_ref)
+    _, bo, lanes = anc_ref.shape
+    pos = flat_positions_f32(o, bo, lanes)
     # IEEE fp32 reciprocal (folds bit-identically to the masked kernel's
     # runtime division — never the double-rounded Python 1.0 / n).
     inv = jnp.float32(1.0) / jnp.float32(n_total)
-    u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * inv
+    u = (pos + u0_ref[0, 0]) * inv
     _bisect(u, cdf_ref, anc_ref, n_cdf=n_cdf)
 
 
@@ -203,10 +176,11 @@ def _masked_search_kernel(u0_ref, n_ref, cdf_ref, anc_ref, *, n_cdf: int):
     u_g = (g + u0) / n_active.  Grid points g >= n_active probe past the
     CDF and clip to the last entry — the ragged caller masks those lanes."""
     o = pl.program_id(1)
-    ramp, base = _u_ramp(o, anc_ref)
+    _, bo, lanes = anc_ref.shape
+    pos = flat_positions_f32(o, bo, lanes)
     n_f = jnp.maximum(n_ref[0, 0], 1).astype(jnp.float32)
     inv = jnp.float32(1.0) / n_f
-    u = (ramp + (jnp.float32(base) + u0_ref[0, 0])) * inv
+    u = (pos + u0_ref[0, 0]) * inv
     _bisect(u, cdf_ref, anc_ref, n_cdf=n_cdf)
 
 

@@ -25,7 +25,14 @@ from typing import Any
 
 from repro.configs import SHAPES, get_config, list_archs
 
-__all__ = ["load_cell", "roofline_row", "build_table", "render_markdown"]
+__all__ = [
+    "load_cell",
+    "roofline_row",
+    "build_table",
+    "render_markdown",
+    "epilogue_rows",
+    "render_epilogue_markdown",
+]
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
@@ -152,12 +159,115 @@ def render_markdown(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# Weight-epilogue traffic model: HBM bytes per particle-step of the fig5
+# weight pipeline (normalize → ESS → CDF → search → ancestor read), before
+# and after fusion.  Particle-state gather traffic is identical across
+# variants and excluded.  Per particle, with c = compute-dtype bytes:
+#
+#   composed (pre-PR):  normalize reads log_w twice + writes w (3c), ESS
+#                       re-reads w (c), cumsum reads w + writes fp32 CDF
+#                       (c + 4), search reads CDF + writes int32 ancestors
+#                       (4 + 4), gather reads ancestors (4)   = 5c + 16
+#   composed (+stats):  ESS sums accumulate inside the normalize pass, the
+#                       separate w read disappears                = 4c + 16
+#   fused epilogue:     log_w read twice, w written once, ancestors
+#                       written + read back; CDF stays in VMEM    = 3c + 8
+#
+# The fused path materializes the (B, P) weight array exactly once.
+
+_EPILOGUE_DTYPE_BYTES = {"fp64": 8, "fp32": 4, "bf16": 2, "fp16": 2}
+
+
+def epilogue_rows(particles: int = 65_536) -> list[dict]:
+    """Per-policy epilogue traffic: bytes/particle-step and the projected
+    HBM-bound step time at ``particles``, composed vs fused.  Attaches the
+    measured speedup from BENCH_fused.json when one is present — at the
+    exact ``particles`` when the sweep recorded it, else at the largest
+    size the sweep did record (the smoke runs 8k/32k while the traffic
+    model defaults to the paper's 64k)."""
+    measured = {}
+    bench = _read(os.path.join(os.getcwd(), "BENCH_fused.json"))
+    if bench:
+        by_policy: dict[str, list[dict]] = {}
+        for r in bench.get("records", []):
+            by_policy.setdefault(r["policy"], []).append(r)
+        for pol, recs in by_policy.items():
+            exact = [r for r in recs if r["particles"] == particles]
+            pick = (
+                exact[0]
+                if exact
+                else max(recs, key=lambda r: r["particles"])
+            )
+            measured[pol] = pick["speedup_fused_vs_composed"]
+    rows = []
+    for policy, c in _EPILOGUE_DTYPE_BYTES.items():
+        composed_pre = 5 * c + 16
+        composed = 4 * c + 16
+        fused = 3 * c + 8
+        rows.append(
+            {
+                "policy": policy,
+                "bytes_per_particle_composed_pre": composed_pre,
+                "bytes_per_particle_composed": composed,
+                "bytes_per_particle_fused": fused,
+                "traffic_ratio_fused_vs_composed": composed / fused,
+                "hbm_s_composed": composed * particles / HBM_BW,
+                "hbm_s_fused": fused * particles / HBM_BW,
+                "measured_speedup": measured.get(policy),
+            }
+        )
+    return rows
+
+
+def render_epilogue_markdown(rows: list[dict]) -> str:
+    out = [
+        "| policy | B/particle composed(pre) | composed(+stats) | fused | "
+        "traffic ratio | HBM s/step composed | fused | measured speedup |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        meas = (
+            f"{r['measured_speedup']:.2f}x"
+            if r["measured_speedup"] is not None
+            else "—"
+        )
+        out.append(
+            "| {p} | {pre} | {c} | {f} | {ratio:.2f}x | {hc:.2e} | "
+            "{hf:.2e} | {meas} |".format(
+                p=r["policy"],
+                pre=r["bytes_per_particle_composed_pre"],
+                c=r["bytes_per_particle_composed"],
+                f=r["bytes_per_particle_fused"],
+                ratio=r["traffic_ratio_fused_vs_composed"],
+                hc=r["hbm_s_composed"],
+                hf=r["hbm_s_fused"],
+                meas=meas,
+            )
+        )
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--art", default=ART)
     ap.add_argument("--tag", default="")
     ap.add_argument("--json", default=None)
+    ap.add_argument(
+        "--epilogue",
+        action="store_true",
+        help="print the weight-epilogue HBM traffic table (bytes per "
+        "particle-step, composed vs fused) instead of the arch table",
+    )
+    ap.add_argument("--particles", type=int, default=65_536)
     args = ap.parse_args()
+    if args.epilogue:
+        rows = epilogue_rows(args.particles)
+        print(render_epilogue_markdown(rows))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1)
+        return
     rows = build_table(args.art, args.tag)
     print(render_markdown(rows))
     if args.json:

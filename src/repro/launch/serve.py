@@ -283,8 +283,18 @@ def run_continuous_batching(
     else:
         state = bank.init(k_state, p_max)
     obs = jnp.zeros((nb,), jnp.int32)  # the decode spec ignores observations
-    step = bank.jit_step
-    reset = bank.jit_init_slot
+    # Synchronous ticks donate the bank state: step and admission reuse the
+    # particle/weight/cache buffers in place instead of copying them every
+    # tick (the pre-step state is never read after the call).  The async
+    # path must NOT donate its step input — retire reads the *pre-step*
+    # state while the step runs on device, so aliasing those buffers would
+    # hand retire reclaimed memory.
+    if async_admit:
+        step = bank.jit_step
+        reset = bank.jit_init_slot_donated
+    else:
+        step = bank.jit_step_donated
+        reset = bank.jit_init_slot_donated
     active: dict[int, dict] = {}
     free = list(range(nb))[::-1]
     results, tick, busy_slot_ticks = [], 0, 0
@@ -336,7 +346,13 @@ def run_continuous_batching(
                     "id": req["id"],
                     "steps": req["steps"],
                     "particles": req["particles"],
-                    "tokens": seqs[slot, best, : req["steps"]],
+                    # A real copy, not a view: np.asarray above is
+                    # zero-copy into the jax buffer, and a live external
+                    # view would block the donated step/reset from
+                    # aliasing the bank state on every later tick (and
+                    # pin the whole (nb, P, steps) seq array per retired
+                    # request until the run ends).
+                    "tokens": np.array(seqs[slot, best, : req["steps"]]),
                     "admitted_tick": req["admitted_tick"],
                     "finished_tick": ex_tick,
                 }
