@@ -32,6 +32,12 @@ ESS + CDF + resample kernel) against the composed kernel chain on the
 isolated weight pipeline, per policy; ``fused_smoke`` is the CI gate
 (fused must be no slower at the largest smoke size).
 
+``elastic_sweep`` benches the ESS-driven budget controller
+(``repro.core.elastic``) on a mixed-difficulty workload against static
+padded-to-max, static blind size classes, and a difficulty oracle —
+useful (difficulty-needed) particle-steps/s under measured per-width
+costs; ``elastic_smoke`` is the CI gate (elastic must beat padded).
+
 Every sweep also emits a machine-readable ``BENCH_<sweep>.json``
 (aggregate particle-steps/s per config) via
 ``benchmarks.common.write_bench_json``.
@@ -59,11 +65,13 @@ def run(
     sizes=(32_768, 65_536),
     ragged=(8, 256, 2_048),
     fused_sizes=(8_192, 32_768),
+    elastic=(8, 128, 2_048, 40),
 ) -> list[str]:
-    """Paper grid + bank/mesh/ragged/fused sweeps.  ``ragged`` is the
-    (num_requests, p_min, p_max) shape of the ragged sweep and
-    ``fused_sizes`` the particle counts of the fused-epilogue sweep, so
-    quick runs can shrink them alongside ``sizes``."""
+    """Paper grid + bank/mesh/ragged/fused/elastic sweeps.  ``ragged`` is
+    the (num_requests, p_min, p_max) shape of the ragged sweep,
+    ``fused_sizes`` the particle counts of the fused-epilogue sweep, and
+    ``elastic`` the (num_slots, p_min, p_max, ticks) shape of the elastic
+    controller sweep, so quick runs can shrink them alongside ``sizes``."""
     from repro.data.synthetic_video import VideoConfig, generate_video
 
     video, _ = generate_video(
@@ -119,6 +127,14 @@ def run(
         ragged_sweep(num_requests=ragged[0], p_min=ragged[1], p_max=ragged[2])
     )
     rows.extend(fused_sweep(sizes=fused_sizes))
+    rows.extend(
+        elastic_sweep(
+            num_slots=elastic[0],
+            p_min=elastic[1],
+            p_max=elastic[2],
+            ticks=elastic[3],
+        )
+    )
     return rows
 
 
@@ -430,6 +446,238 @@ def ragged_sweep(
     return rows
 
 
+def elastic_sweep(
+    num_slots: int = 8,
+    p_min: int = 128,
+    p_max: int = 2_048,
+    ticks: int = 40,
+    policy_name: str = "bf16",
+    seed: int = 0,
+    gate: bool = False,
+) -> list[str]:
+    """Elastic budgets vs static padded / static ragged / difficulty oracle.
+
+    Workload: ``num_slots`` concurrent requests of *mixed difficulty* — a
+    toy SMC model whose log-likelihood is ``scale * N(0, 1)`` per particle,
+    so weights are lognormal and the per-step ESS of an n-particle slot is
+    ~``n * exp(-scale^2)``: difficulty (scale) directly sets how many
+    particles a slot needs for a target effective sample size.  Slot
+    difficulties are spread so the *oracle* budgets cover the whole
+    power-of-two ladder [p_min, p_max].
+
+    Four allocation policies for the same workload:
+
+    - **padded**:  every slot at p_max (the pre-ragged configuration);
+    - **ragged_static**: admission-time size classes drawn blind (the
+      key-derived draw serving uses when nothing measures difficulty);
+    - **oracle**:  each slot at the smallest ladder class whose expected
+      ESS meets the target — knows ``scale`` a priori;
+    - **elastic**: starts from the same blind classes as ragged_static,
+      then the real :class:`~repro.core.elastic.BudgetController` watches
+      the real per-step ESS of a live ragged FilterBank and rewrites
+      budgets via ``resize_slot`` (grow_below = p_min/2, shrink_above =
+      2x that — the minimal deadband, which makes exactly one ladder
+      class stable per slot: the oracle's).
+
+    Scoring: *useful* particle-steps are ``min(budget, need)`` summed over
+    slot-ticks (lanes beyond what the difficulty needs are waste; lanes
+    below it are all useful but the slot under-delivers), and wall time
+    charges each slot its ladder-class width using per-width slot costs
+    measured on tracker banks (the packed-per-class execution model of
+    ``ragged_sweep``; resize costs are excluded — they are O(events), not
+    O(ticks)).  ``gate=True`` raises SystemExit unless elastic useful
+    throughput >= static padded.  BENCH_elastic.json records the gains
+    (acceptance: elastic >= 1.2x padded, >= 0.75x oracle) plus the full
+    budget trajectories.
+    """
+    import numpy as np
+
+    from repro.core import FilterBank
+    from repro.core.elastic import BudgetController, ElasticConfig
+    from repro.core.filter import SMCSpec
+    from repro.data.synthetic_video import VideoConfig, generate_video
+    from repro.launch.serve import particle_size_classes
+
+    ladder = particle_size_classes(p_min, p_max)
+    ess_target = p_min / 2.0  # grow floor E: serve's --elastic default
+    # Per-slot difficulty, spread over the ladder: scale s_i chosen so the
+    # expected ESS at the slot's intended class c_i sits mid-deadband
+    # (sqrt(2) * E): exp(s^2) = c / (sqrt(2) * E).  With shrink_above =
+    # 2E, the intended class is then the *unique* stable one — one class
+    # down grows (ESS ~ 0.7E < E), one class up shrinks (ESS ~ 2.8E > 2E).
+    intended = [ladder[i % len(ladder)] for i in range(num_slots)]
+    scales = np.sqrt(
+        np.log(np.asarray(intended) / (np.sqrt(2.0) * ess_target))
+    )
+    need = ess_target * np.exp(scales**2)  # particles for ESS == E
+    oracle = np.asarray(
+        [min([c for c in ladder if c >= n] or [p_max]) for n in need]
+    )
+    blind = np.asarray(ladder)[
+        np.asarray(
+            jax.random.randint(
+                jax.random.key(seed), (num_slots,), 0, len(ladder)
+            )
+        )
+    ]
+
+    def toy_init(key, n):
+        return {"x": jax.random.normal(key, (n,), jnp.float32)}
+
+    def toy_transition(key, p, step):
+        del step
+        return {"x": jax.random.normal(key, p["x"].shape, jnp.float32)}
+
+    def toy_loglik(p, obs, step):
+        del step
+        return obs * p["x"]
+
+    bank = FilterBank(
+        SMCSpec(toy_init, toy_transition, toy_loglik),
+        FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+        num_slots=num_slots,
+    )
+    ctrl = BudgetController(
+        ElasticConfig(
+            grow_below=ess_target,
+            shrink_above=2.0 * ess_target,
+            min_particles=p_min,
+            max_particles=p_max,
+            cooldown=2,
+        ),
+        num_slots,
+    )
+    state = bank.init(
+        jax.random.key(seed + 1), p_max,
+        n_active=jnp.asarray(blind, jnp.int32),
+    )
+    obs = jnp.asarray(scales, jnp.float32)
+    budgets = blind.copy()
+    busy = np.ones(num_slots, bool)
+    traj, n_events = [], 0
+    for t in range(ticks):
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.key(seed + 2), t), num_slots
+        )
+        state, out = bank.jit_step(state, obs, keys)
+        for d in ctrl.observe(np.asarray(out.ess, np.float64), budgets, busy):
+            if d.granted:
+                n_events += 1
+                state = bank.jit_resize_slot(
+                    state,
+                    jnp.int32(d.slot),
+                    jax.random.fold_in(jax.random.key(seed + 3), n_events),
+                    jnp.int32(d.new),
+                )
+                budgets[d.slot] = d.new
+        traj.append(budgets.copy())
+
+    # Measured per-slot step cost at each ladder width (tracker banks —
+    # the packed-per-class execution model of ragged_sweep).
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=2, height=256, width=256)
+    )
+    frame = video[0].astype(jnp.float32)
+    pol = get_policy(policy_name)
+    cost_bank = 4
+    us_slot = {}
+    for w in ladder:
+        cfg = TrackerConfig(num_particles=w, height=256, width=256)
+        starts = 128.0 + 8.0 * jnp.stack(
+            [jnp.arange(cost_bank, dtype=jnp.float32)] * 2, -1
+        )
+        tb = make_multi_tracker_filter(cfg, pol, starts)
+        tstate = tb.init(jax.random.key(1), w)
+        tkeys = jax.random.split(jax.random.key(2), cost_bank)
+        step = tb.jit_step_shared
+        us_slot[w] = time_fn(
+            lambda st, f, ks: step(st, f, ks),
+            tstate, frame, tkeys, reps=3, warmup=1,
+        ) / cost_bank
+
+    def score(budget_rows):
+        """(useful particle-steps, wall us) over the slot-tick grid."""
+        useful = sum(
+            float(np.minimum(row, need).sum()) for row in budget_rows
+        )
+        wall = sum(
+            sum(us_slot[int(b)] for b in row) for row in budget_rows
+        )
+        return useful, wall
+
+    static = {
+        "padded": [np.full(num_slots, p_max)] * ticks,
+        "ragged_static": [blind] * ticks,
+        "oracle": [oracle] * ticks,
+    }
+    rows, records, thpt = [], [], {}
+    for name, budget_rows in {**static, "elastic": traj}.items():
+        useful, wall = score(budget_rows)
+        thpt[name] = useful / wall * 1e6
+        rows.append(
+            csv_row(
+                f"fig5_throughput/elastic_{name}_B{num_slots}"
+                f"_{p_min}_{p_max}",
+                wall / ticks,
+                f"useful_particle_steps_per_s={thpt[name]:.3e}",
+            )
+        )
+        records.append(
+            {
+                "config": name,
+                "slots": num_slots,
+                "p_min": p_min,
+                "p_max": p_max,
+                "ticks": ticks,
+                "useful_particles": useful,
+                "wall_us": wall,
+                "useful_particle_steps_per_s": thpt[name],
+            }
+        )
+    gain_vs_padded = thpt["elastic"] / thpt["padded"]
+    gain_vs_ragged = thpt["elastic"] / thpt["ragged_static"]
+    vs_oracle = thpt["elastic"] / thpt["oracle"]
+    rows.append(
+        csv_row(
+            f"fig5_throughput/elastic_gains_B{num_slots}",
+            0.0,
+            f"vs_padded={gain_vs_padded:.2f};"
+            f"vs_ragged_static={gain_vs_ragged:.2f};"
+            f"vs_oracle={vs_oracle:.2f}",
+        )
+    )
+    write_bench_json(
+        "elastic",
+        records,
+        ladder=[int(c) for c in ladder],
+        ess_target=ess_target,
+        scales=[round(float(s), 4) for s in scales],
+        need=[round(float(n), 1) for n in need],
+        oracle_budgets=[int(x) for x in oracle],
+        blind_budgets=[int(x) for x in blind],
+        final_budgets=[int(x) for x in traj[-1]],
+        resize_events=n_events,
+        controller_stats=ctrl.stats,
+        gain_vs_padded=gain_vs_padded,
+        gain_vs_ragged_static=gain_vs_ragged,
+        vs_oracle=vs_oracle,
+    )
+    if gate and gain_vs_padded < 1.0:
+        raise SystemExit(
+            f"elastic useful throughput below static padded: "
+            f"{gain_vs_padded:.2f} < 1.0 (see BENCH_elastic.json)"
+        )
+    return rows
+
+
+def elastic_smoke() -> list[str]:
+    """CI entry: reduced elastic sweep that *gates* on elastic >= padded
+    useful particle-steps/s."""
+    return elastic_sweep(
+        num_slots=6, p_min=64, p_max=512, ticks=24, gate=True
+    )
+
+
 def fused_sweep(
     sizes=(8_192, 32_768),
     policies=("fp32", "bf16", "fp16"),
@@ -545,6 +793,8 @@ if __name__ == "__main__":
         "ragged_sweep": ragged_sweep,
         "fused_sweep": fused_sweep,
         "fused_smoke": fused_smoke,
+        "elastic_sweep": elastic_sweep,
+        "elastic_smoke": elastic_smoke,
     }
     print("name,us_per_call,derived")
     for row in fns[which]():

@@ -41,7 +41,12 @@ def main() -> None:
         from benchmarks import fig5_throughput
 
         kw = (
-            dict(sizes=(8192,), ragged=(4, 128, 512), fused_sizes=(8192,))
+            dict(
+                sizes=(8192,),
+                ragged=(4, 128, 512),
+                fused_sizes=(8192,),
+                elastic=(4, 64, 512, 16),
+            )
             if args.quick
             else {}
         )

@@ -11,10 +11,15 @@ The codebase is written against the current jax surface —
 env).  Each symbol below resolves to the native implementation when the
 installed jax has one and to a behavior-equivalent fallback otherwise.
 
-:func:`install` (run on ``import repro``) additionally patches the missing
-attributes onto ``jax`` itself so code that cannot import this module —
-the subprocess snippets in ``tests/`` — runs unchanged.  On a recent jax
-every shim resolves to the native symbol and ``install`` is a no-op.
+Which fallbacks are live is recorded per symbol at import time (before
+anything can patch ``jax``) in the :func:`active_shims` set — the
+version gate.  :func:`install` (run on ``import repro``) patches *only*
+the symbols in that set onto ``jax`` itself, so code that cannot import
+this module — the subprocess snippets in ``tests/`` — runs unchanged;
+on a jax that provides a symbol natively the corresponding shim is
+skipped entirely.  As jax upgrades, ``active_shims()`` can only shrink
+(tests/test_compat.py holds it to the known 0.4.x full set), and on a
+fully current jax it is empty and ``install`` is a no-op.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ from jax.experimental import enable_x64 as _experimental_enable_x64
 
 __all__ = [
     "AxisType",
+    "active_shims",
     "axis_size",
     "cost_analysis",
     "enable_x64",
@@ -38,14 +44,34 @@ __all__ = [
     "shard_map",
 ]
 
+# Symbol -> "the running jax provides this natively", probed at module
+# import (i.e. before install() can patch jax — the probes below and
+# install() live in the same module, so the body always runs first).
+# Modules with deprecation __getattr__ raise for removed names, so
+# hasattr is the correct "native symbol present" probe.
+_NATIVE: dict[str, bool] = {}
 
-if hasattr(jax, "enable_x64"):
+
+def active_shims() -> frozenset[str]:
+    """Names of the 0.4.x fallbacks live in this process.
+
+    Empty on a fully current jax; the full 0.4.x set on this container's
+    jax.  A symbol in the set resolves to a fallback defined here (and
+    ``install`` patches it onto ``jax``); a symbol not in the set
+    resolves to — and is never patched over — the native jax one.
+    """
+    return frozenset(n for n, native in _NATIVE.items() if not native)
+
+
+_NATIVE["enable_x64"] = hasattr(jax, "enable_x64")
+if _NATIVE["enable_x64"]:
     enable_x64 = jax.enable_x64
 else:
     enable_x64 = _experimental_enable_x64
 
 
-if hasattr(jax.sharding, "AxisType"):
+_NATIVE["AxisType"] = hasattr(jax.sharding, "AxisType")
+if _NATIVE["AxisType"]:
     AxisType = jax.sharding.AxisType
 else:
 
@@ -66,7 +92,8 @@ def _make_mesh_supports_axis_types() -> bool:
 
 _native_make_mesh = jax.make_mesh
 
-if _make_mesh_supports_axis_types():
+_NATIVE["make_mesh_axis_types"] = _make_mesh_supports_axis_types()
+if _NATIVE["make_mesh_axis_types"]:
     make_mesh = _native_make_mesh
 else:
 
@@ -76,7 +103,11 @@ else:
         return _native_make_mesh(axis_shapes, axis_names, **kw)
 
 
-if hasattr(jax, "set_mesh"):
+_NATIVE["set_mesh"] = hasattr(jax, "set_mesh")
+_NATIVE["get_abstract_mesh"] = _NATIVE["set_mesh"] and hasattr(
+    jax.sharding, "get_abstract_mesh"
+)
+if _NATIVE["set_mesh"]:
     set_mesh = jax.set_mesh
     get_abstract_mesh = jax.sharding.get_abstract_mesh
 else:
@@ -100,7 +131,8 @@ else:
         return None
 
 
-if hasattr(jax, "shard_map"):
+_NATIVE["shard_map"] = hasattr(jax, "shard_map")
+if _NATIVE["shard_map"]:
     shard_map = jax.shard_map
 else:
     from jax.experimental.shard_map import shard_map as _legacy_shard_map
@@ -128,7 +160,8 @@ def cost_analysis(compiled) -> dict:
     return dict(ca)
 
 
-if hasattr(jax.lax, "axis_size"):
+_NATIVE["axis_size"] = hasattr(jax.lax, "axis_size")
+if _NATIVE["axis_size"]:
     axis_size = jax.lax.axis_size
 else:
 
@@ -142,19 +175,31 @@ else:
 
 
 def install() -> None:
-    """Patch the shims onto ``jax`` where the native symbols are missing."""
-    for mod, name, value in [
-        (jax, "enable_x64", enable_x64),
-        (jax, "set_mesh", set_mesh),
-        (jax, "shard_map", shard_map),
-        (jax, "make_mesh", make_mesh),
-        (jax.lax, "axis_size", axis_size),
-        (jax.sharding, "AxisType", AxisType),
-        (jax.sharding, "get_abstract_mesh", get_abstract_mesh),
-    ]:
-        # Modules with deprecation __getattr__ raise for removed names, so
-        # hasattr is the correct "native symbol present" probe.
-        if not hasattr(mod, name):
-            setattr(mod, name, value)
-    if jax.make_mesh is not make_mesh:
+    """Patch the fallbacks onto ``jax`` — only for the active shim set.
+
+    Symbols the running jax provides natively are skipped entirely (the
+    version gate): nothing native is ever patched over, and on a fully
+    current jax this is a no-op.  Idempotent — re-running never
+    re-patches or clobbers.
+    """
+    targets = {
+        "enable_x64": (jax, "enable_x64", enable_x64),
+        "set_mesh": (jax, "set_mesh", set_mesh),
+        "shard_map": (jax, "shard_map", shard_map),
+        "axis_size": (jax.lax, "axis_size", axis_size),
+        "AxisType": (jax.sharding, "AxisType", AxisType),
+        "get_abstract_mesh": (
+            jax.sharding,
+            "get_abstract_mesh",
+            get_abstract_mesh,
+        ),
+    }
+    shims = active_shims()
+    for name, (mod, attr, value) in targets.items():
+        if name in shims and not hasattr(mod, attr):
+            setattr(mod, attr, value)
+    # make_mesh exists natively on every supported jax; what 0.4.x lacks
+    # is its axis_types parameter, so this one replaces rather than fills
+    # a hole — gated on the same import-time probe.
+    if "make_mesh_axis_types" in shims and jax.make_mesh is not make_mesh:
         jax.make_mesh = make_mesh

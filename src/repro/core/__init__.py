@@ -9,11 +9,18 @@ Layers:
 - ``engine``      — the ParticleFilter engine: FilterConfig-dispatched
   backends (jnp / pallas), resamplers, and mesh distribution behind one
   ``init`` / ``step`` / ``run`` / ``stream`` API
+- ``elastic``     — ESS-driven particle-budget autoscaling for FilterBanks
+  (BudgetController + the engine's ``resize_slot`` budget switch)
 - ``tracking``    — the paper's object-tracking application
 - ``distributed`` — shard_map multi-device step (exact / local-RNA schemes),
   reached via ``FilterConfig(mesh=...)``
 """
 
+from repro.core.elastic import (  # noqa: F401
+    BudgetController,
+    BudgetDecision,
+    ElasticConfig,
+)
 from repro.core.engine import (  # noqa: F401
     BACKENDS,
     Backend,

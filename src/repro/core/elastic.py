@@ -1,0 +1,293 @@
+"""Elastic particle budgets: ESS-driven autoscaling inside a FilterBank.
+
+Ragged banks (``FilterBank.init(..., n_active=...)``) made per-slot
+particle counts a runtime value; this module *changes* a live slot's
+budget.  The production econ story on top of the paper's
+fixed-cost-per-particle win is spending particles where the posterior is
+hard: resampling (and every other per-particle stage) costs linearly in
+the count (Murray, arXiv:1202.6163), so at serving scale the right
+allocation grows a slot whose ESS collapses — hard tracking — and shrinks
+one whose ESS is comfortably above target — easy tracking.
+
+The split of responsibilities:
+
+- :class:`BudgetController` (here) is a small *host-side* control loop.
+  Once per scheduler tick it reads each slot's effective sample size —
+  already produced for free by the fused weight epilogue's
+  ``sum_w``/``sum_w2`` stats (``FilterOutput.ess``) — and proposes
+  power-of-two budget changes with hysteresis and a per-slot cooldown so
+  noisy ESS estimates cannot make a slot oscillate.  When a fixed global
+  particle budget is configured and total demand exceeds it, a bank-level
+  arbiter grants grows in order of ESS *deficit* (the slots furthest
+  below target first) and denies the rest.
+- The budget switch itself is a device-side primitive:
+  ``FilterBank.resize_slot(state, slot, key, n)`` draws a count-aware
+  systematic sample of the new count from the slot's current posterior
+  (resample-down = the in-VMEM CDF draw truncated to ``k`` lanes;
+  resample-up = a re-draw at ``k`` with the stored ``log_uniform``
+  reset), reusing the masked resample kernels unchanged.  Slot index and
+  count are both traced, so budget transitions never recompile — the same
+  contract ragged admission already relies on.
+
+Thresholds are *absolute* ESS values, not fractions of the current count:
+for the weight profiles a filter produces, ESS scales roughly linearly
+with the particle count at fixed tracking difficulty (iid weights give
+``ESS ~ n / E[w^2]/E[w]^2``), so "keep at least E effective particles"
+is the controllable target — growing a slot raises its ESS toward the
+band, shrinking lowers it — whereas the ESS *fraction* is roughly
+count-invariant and would bang-bang every slot to the min or max budget.
+
+Deadband: ``shrink_above >= 2 * grow_below`` is enforced.  A granted grow
+doubles the count and therefore roughly doubles the ESS; a granted shrink
+halves both.  With the factor-2 step inside a >= factor-2 band, one
+granted change can never land the slot directly in the opposite trigger
+region, and the cooldown absorbs the noise on top of that model.
+
+Typical wiring (the continuous-batching scheduler in
+``repro.launch.serve`` does exactly this under ``--elastic``)::
+
+    ctrl = BudgetController(ElasticConfig(grow_below=64.0,
+                                          min_particles=256,
+                                          max_particles=4096), nb)
+    ...
+    state, out = bank.jit_step(state, obs, keys)        # one tick
+    for d in ctrl.observe(np.asarray(out.ess), budgets, busy):
+        if d.granted:
+            state = bank.jit_resize_slot(
+                state, jnp.int32(d.slot), key, jnp.int32(d.new)
+            )
+            budgets[d.slot] = d.new
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "BudgetController",
+    "BudgetDecision",
+    "ElasticConfig",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs of the ESS-driven budget controller.
+
+    grow_below:    absolute ESS floor — a busy slot whose ESS falls below
+                   it doubles its budget (hard tracking).
+    shrink_above:  absolute ESS ceiling — a busy slot whose ESS exceeds it
+                   halves its budget (easy tracking).  Defaults to
+                   ``4 * grow_below``; must be >= ``2 * grow_below`` (the
+                   deadband that keeps one factor-2 step from landing in
+                   the opposite trigger region).
+    cooldown:      ticks a slot is ineligible for another change after a
+                   granted one — the oscillation damper for noisy ESS
+                   estimates.
+    min_particles / max_particles: budget clamp; steps are powers of two
+                   from the current count, so admission-class budgets stay
+                   on their ladder and every transition is the traced
+                   recompile-free ``resize_slot`` path.
+    global_budget: optional cap on the *total* active particles across
+                   busy slots.  When total demand exceeds it, the arbiter
+                   grants grows by ESS deficit (furthest below
+                   ``grow_below`` first) and denies the rest; shrinks are
+                   always granted (they free budget).  None = uncapped.
+    """
+
+    grow_below: float
+    min_particles: int
+    max_particles: int
+    shrink_above: float | None = None
+    cooldown: int = 2
+    global_budget: int | None = None
+
+    def __post_init__(self) -> None:
+        if not self.grow_below > 0:
+            raise ValueError(
+                f"grow_below must be > 0, got {self.grow_below}"
+            )
+        if self.shrink_above is None:
+            object.__setattr__(
+                self, "shrink_above", 4.0 * self.grow_below
+            )
+        if self.shrink_above < 2.0 * self.grow_below:
+            raise ValueError(
+                f"shrink_above={self.shrink_above} must be >= "
+                f"2 * grow_below={2.0 * self.grow_below}: a factor-2 "
+                "budget step roughly doubles/halves the ESS, so a "
+                "narrower band lets one granted change land in the "
+                "opposite trigger region (oscillation)"
+            )
+        if self.cooldown < 0:
+            raise ValueError(f"cooldown must be >= 0, got {self.cooldown}")
+        if not 1 <= self.min_particles <= self.max_particles:
+            raise ValueError(
+                f"need 1 <= min_particles <= max_particles, got "
+                f"{self.min_particles}:{self.max_particles}"
+            )
+        if (
+            self.global_budget is not None
+            and self.global_budget < self.min_particles
+        ):
+            raise ValueError(
+                f"global_budget={self.global_budget} cannot admit even "
+                f"one slot at min_particles={self.min_particles}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetDecision:
+    """One proposed budget change for one slot on one tick.
+
+    ``granted=False`` marks a grow the global-budget arbiter denied (the
+    slot stays at ``old``; it retries on later ticks while the trigger
+    holds).  ``deficit`` is the ESS shortfall the arbiter ranked by.
+    """
+
+    slot: int
+    old: int
+    new: int
+    ess: float
+    kind: str  # "grow" | "shrink"
+    granted: bool = True
+    deficit: float = 0.0
+
+
+class BudgetController:
+    """Per-tick ESS watcher proposing budget switches for a FilterBank.
+
+    Host-side and stateless about the budgets themselves (the scheduler
+    owns those); the controller keeps only per-slot cooldown counters and
+    event counters.  Call :meth:`observe` once per bank step with that
+    tick's per-slot ESS (``FilterOutput.ess``), the current per-slot
+    budgets, and the busy mask; apply the granted decisions via
+    ``FilterBank.resize_slot``.  Call :meth:`slot_admitted` when a request
+    enters a slot so a fresh request gets ``cooldown`` ticks of grace
+    before its first (still noisy) ESS reading can resize it.
+    """
+
+    def __init__(self, config: ElasticConfig, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.config = config
+        self.num_slots = num_slots
+        self._cooldown = np.zeros(num_slots, np.int64)
+        self.grows = 0
+        self.shrinks = 0
+        self.denied = 0
+
+    def slot_admitted(self, slot: int) -> None:
+        """A request just entered ``slot``: start it on a full cooldown."""
+        self._cooldown[slot] = self.config.cooldown
+
+    def observe(
+        self,
+        ess: np.ndarray,
+        n_active: np.ndarray,
+        busy: np.ndarray,
+    ) -> list[BudgetDecision]:
+        """One tick: propose and arbitrate budget changes.
+
+        ess:      (B,) per-slot effective sample sizes (NaN — a fully
+                  collapsed slot — counts as 0, i.e. a grow trigger).
+        n_active: (B,) current per-slot budgets.
+        busy:     (B,) bool — slots holding a live request; idle slots are
+                  never resized (their lanes are junk anyway).
+
+        Returns every decision made this tick, granted or denied, in
+        application order.  Only entries with ``granted=True`` change a
+        budget; the caller applies them via ``resize_slot`` and updates
+        its own budget array.
+        """
+        cfg = self.config
+        ess = np.nan_to_num(
+            np.asarray(ess, np.float64), nan=0.0, neginf=0.0
+        )
+        n = np.asarray(n_active, np.int64)
+        busy = np.asarray(busy, bool)
+        if ess.shape != (self.num_slots,) or n.shape != (self.num_slots,):
+            raise ValueError(
+                f"ess/n_active must be shaped ({self.num_slots},), got "
+                f"{ess.shape} / {n.shape}"
+            )
+
+        # Cooldowns tick down first; slots at zero are eligible.
+        np.maximum(self._cooldown - 1, 0, out=self._cooldown)
+        eligible = busy & (self._cooldown == 0)
+
+        shrink = eligible & (ess > cfg.shrink_above) & (n > cfg.min_particles)
+        grow = eligible & (ess < cfg.grow_below) & (n < cfg.max_particles)
+
+        decisions: list[BudgetDecision] = []
+        # Shrinks first — always granted, and under a global budget they
+        # free lanes the grow pass below can hand out.
+        total = int(n[busy].sum())
+        for slot in np.flatnonzero(shrink):
+            new = max(int(n[slot]) // 2, cfg.min_particles)
+            total += new - int(n[slot])
+            decisions.append(
+                BudgetDecision(
+                    slot=int(slot),
+                    old=int(n[slot]),
+                    new=new,
+                    ess=float(ess[slot]),
+                    kind="shrink",
+                )
+            )
+            self._cooldown[slot] = cfg.cooldown
+            self.shrinks += 1
+
+        # Grows by ESS deficit: the slots furthest below target first, so
+        # a constrained global budget goes where the posterior is hardest.
+        order = sorted(
+            np.flatnonzero(grow),
+            key=lambda s: (-(cfg.grow_below - ess[s]), s),
+        )
+        for slot in order:
+            new = min(int(n[slot]) * 2, cfg.max_particles)
+            extra = new - int(n[slot])
+            deficit = float(cfg.grow_below - ess[slot])
+            if (
+                cfg.global_budget is not None
+                and total + extra > cfg.global_budget
+            ):
+                # Denied: no cooldown charge — the slot retries as soon
+                # as a shrink or a retire frees lanes.
+                decisions.append(
+                    BudgetDecision(
+                        slot=int(slot),
+                        old=int(n[slot]),
+                        new=int(n[slot]),
+                        ess=float(ess[slot]),
+                        kind="grow",
+                        granted=False,
+                        deficit=deficit,
+                    )
+                )
+                self.denied += 1
+                continue
+            total += extra
+            decisions.append(
+                BudgetDecision(
+                    slot=int(slot),
+                    old=int(n[slot]),
+                    new=new,
+                    ess=float(ess[slot]),
+                    kind="grow",
+                    deficit=deficit,
+                )
+            )
+            self._cooldown[slot] = cfg.cooldown
+            self.grows += 1
+        return decisions
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "grows": self.grows,
+            "shrinks": self.shrinks,
+            "denied_grows": self.denied,
+        }

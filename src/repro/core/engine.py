@@ -76,6 +76,13 @@ num_slots=B)`` shards slots over the "data" axis and each slot's particles
 over "model", with per-slot collectives confined to the particle axes (see
 ``repro.core.distributed.make_dist_bank_step``) — the multi-device serving
 configuration.
+
+Ragged budgets are also *elastic*: ``resize_slot(state, slot, key, n)``
+switches a live slot's budget mid-flight with a count-aware systematic
+draw at the new count over its current posterior (slot and count traced —
+no recompile), and ``repro.core.elastic.BudgetController`` closes the loop
+by watching per-slot ESS and growing/shrinking budgets with hysteresis, a
+cooldown, and an ESS-deficit arbiter under a global particle budget.
 """
 
 from __future__ import annotations
@@ -1015,6 +1022,20 @@ class FilterBank:
             config.resampler
         ) or resampling.MASKED_RESAMPLERS.get(config.resampler)
 
+        # Budget-switch primitive (see resize_slot / repro.core.elastic):
+        # the count-aware draw over one slot's current posterior.  Unmeshed
+        # banks reuse the same masked resample form the ragged step
+        # dispatches (backend kernel when registered); meshed banks use the
+        # pure-jnp masked reference — the backend kernels are shard-local,
+        # and a resize is a rare bank-global event on the row view, not a
+        # per-step collective.
+        if config.mesh is not None:
+            self._resize_resampler = resampling.MASKED_RESAMPLERS.get(
+                config.resampler
+            )
+        else:
+            self._resize_resampler = self._resample_masked
+
         # Stats forms (normalize + in-pass Kish sums).  Fallbacks wrap the
         # plain normalize and sum its output — same values, one extra
         # weight traversal.
@@ -1299,6 +1320,88 @@ class FilterBank:
 
     # A reset is a re-init: same fresh-cloud semantics, serving-loop name.
     reset_slot = init_slot
+
+    def resize_slot(
+        self,
+        state: FilterState,
+        slot,
+        key: jax.Array,
+        n_active,
+    ) -> FilterState:
+        """Switch one live slot's particle budget mid-flight.
+
+        The budget switch is a *count-aware systematic draw at the new
+        count* over the slot's current posterior: the u-grid spans
+        ``n_active`` points against the CDF of the slot's present
+        (old-count) weights, so resample-down to ``k`` is the in-VMEM CDF
+        draw truncated to ``k`` lanes and resample-up is a re-draw at
+        ``k`` (ancestors duplicate), both through the masked resample
+        form the ragged step already dispatches.  The slot's weights
+        reset to uniform over the new count (``log_uniform`` stored, as
+        everywhere on the ragged path) and its *step counter is kept* —
+        the request stays mid-flight; only its budget changed.  Every
+        other slot is untouched bit for bit.
+
+        ``slot`` and ``n_active`` may both be traced: budget transitions
+        never recompile — the contract the elastic controller
+        (``repro.core.elastic``) relies on, same as ragged admission.
+        Dense banks raise (the state pytree cannot grow count fields
+        under jit; init the bank ragged to make budgets dynamic).
+        """
+        if state.n_active is None:
+            raise ValueError(
+                "resize_slot needs a ragged bank; this state is dense — "
+                "init the bank with n_active to make per-slot budgets a "
+                "runtime value (the state pytree cannot change shape "
+                "under jit)"
+            )
+        if self._resize_resampler is None:
+            raise ValueError(
+                f"resampler {self.config.resampler!r} has no masked "
+                "(count-aware) form, so a budget switch cannot draw the "
+                "new count; register one via Backend.resamplers_masked "
+                "or resampling.MASKED_RESAMPLERS"
+            )
+        num_particles = state.log_weights.shape[-1]
+        slot = jnp.asarray(slot, jnp.int32)
+        n = jnp.asarray(n_active, jnp.int32)
+        self._check_count_range(n, num_particles)
+        policy = self.policy
+
+        # The slot's current normalized weights (active lanes only carry
+        # mass; padding lanes are -inf -> weight exactly 0), then the
+        # count-aware draw: grid over the NEW count, CDF over the current
+        # posterior.  Lanes >= n probe u >= 1 and clip to the CDF tail —
+        # junk the uniform reset below masks to -inf.
+        log_w_row = state.log_weights[slot]
+        w_row, _, _ = resampling.reference_normalize(log_w_row, policy)
+        ancestors = self._resize_resampler(
+            key[None], w_row[None], policy, n[None]
+        )[0]
+
+        gather = self.spec.gather or resampling.gather_ancestors
+        row_particles = jax.tree.map(lambda x: x[slot], state.particles)
+        new_row = gather(row_particles, ancestors)
+        particles = jax.tree.map(
+            lambda s, f: s.at[slot].set(f), state.particles, new_row
+        )
+        log_u = _neg_log_count(n, state.log_weights.dtype)
+        lane = jnp.arange(num_particles)
+        row = jnp.where(
+            lane < n,
+            log_u,
+            jnp.asarray(-jnp.inf, state.log_weights.dtype),
+        )
+        state = FilterState(
+            particles,
+            state.log_weights.at[slot].set(row),
+            state.step,  # mid-flight: the request keeps its progress
+            n_active=state.n_active.at[slot].set(n),
+            log_uniform=state.log_uniform.at[slot].set(log_u),
+        )
+        if self._dist_cfg is not None:
+            state = self._shard_state(state)
+        return state
 
     def step(
         self,
@@ -1593,6 +1696,18 @@ class FilterBank:
         """:attr:`jit_init_slot` with the state argument donated — a slot
         admission rewrites one row in place instead of copying the bank."""
         return jax.jit(self.init_slot, donate_argnums=(0,))
+
+    @functools.cached_property
+    def jit_resize_slot(self):
+        """``resize_slot`` jit-compiled once; slot and count stay traced,
+        so budget transitions never recompile."""
+        return jax.jit(self.resize_slot)
+
+    @functools.cached_property
+    def jit_resize_slot_donated(self):
+        """:attr:`jit_resize_slot` with the state argument donated — a
+        budget switch rewrites the slot's rows in place."""
+        return jax.jit(self.resize_slot, donate_argnums=(0,))
 
     # -- internals ----------------------------------------------------------
 

@@ -27,6 +27,14 @@ The scheduler reports the padding this removes from the quality ledger
 ``--particles N`` (or the legacy ``--particles-per-slot``) keeps the dense
 bank and its mask-free fast path.
 
+``--elastic`` makes those budgets *starting points*: an ESS-driven
+``BudgetController`` (``repro.core.elastic``) grows a slot whose ESS
+collapses and shrinks one whose ESS is comfortably high, via the bank's
+traced ``resize_slot`` budget switch (no recompiles), optionally under a
+global particle budget arbitrated by ESS deficit (``--elastic-budget``).
+Per-tick decisions are reported, and all padding/particle-tick accounting
+follows the *current* budgets rather than admission-time ones.
+
 The bank composes with a device mesh (``--mesh DxM``): slots shard over
 the "data" axis and each slot's particles over "model" (the engine's
 mesh × bank composition — ``repro.core.distributed.make_dist_bank_step``),
@@ -209,6 +217,7 @@ def run_continuous_batching(
     arrival_every: int = 1,
     min_steps: int | None = None,
     async_admit: bool = False,
+    elastic=None,
 ) -> dict:
     """Admit → step → retire loop over a FilterBank of decode slots.
 
@@ -243,6 +252,23 @@ def run_continuous_batching(
     request queues for a freed slot its admission lags by one tick — the
     price of never stalling the device on a host decision.  Returns
     per-request results plus occupancy/latency stats.
+
+    ``elastic`` (an :class:`repro.core.elastic.ElasticConfig`, ragged banks
+    only) turns admission budgets into *starting* budgets: a
+    ``BudgetController`` watches each busy slot's per-step ESS (free from
+    the fused epilogue's stats) and rewrites its active count in flight via
+    ``bank.resize_slot`` — grow on ESS collapse, shrink when healthy, with
+    deadband + cooldown and an optional global particle budget arbitrated
+    by ESS deficit.  Synchronous ticks resize from the tick's own ESS;
+    async ticks apply the *previous* tick's already-materialized ESS so
+    the in-flight step is never waited on (one tick of controller lag, the
+    same lag the scheduler already accepts for retires).  All particle-tick
+    accounting (``active``/``padded``/``padding_waste``) and the retire
+    read of the best particle use the slot's *current* budget from a host
+    mirror updated at admit and at every granted resize, so the ledger
+    stays truthful as budgets move mid-flight.  Decisions are returned in
+    ``stats["elastic"]`` (per-event tick/slot/kind/ess/deficit plus
+    grow/shrink/denied counters).
     """
     nb = bank.num_slots
     if min_steps is None:
@@ -257,7 +283,23 @@ def run_continuous_batching(
     else:
         p_min = p_max = particles
     ragged = p_min < p_max
-    k_state, k_admit, k_run, k_sched = jax.random.split(key, 4)
+    ctrl = None
+    if elastic is not None:
+        from repro.core.elastic import BudgetController
+
+        if not ragged:
+            raise ValueError(
+                "elastic budgets need a ragged bank: pass "
+                "particles=(MIN, MAX) with MIN < MAX so per-slot counts "
+                "are runtime values"
+            )
+        if elastic.max_particles > p_max:
+            raise ValueError(
+                f"elastic.max_particles={elastic.max_particles} exceeds "
+                f"the bank's lane width {p_max}"
+            )
+        ctrl = BudgetController(elastic, nb)
+    k_state, k_admit, k_run, k_sched, k_elastic = jax.random.split(key, 5)
     lengths = _request_budgets(k_sched, num_requests, min_steps, max_steps)
     if ragged:
         budgets = _request_particles(
@@ -299,6 +341,12 @@ def run_continuous_batching(
     free = list(range(nb))[::-1]
     results, tick, busy_slot_ticks = [], 0, 0
     active_particle_ticks, padded_particle_ticks = 0, 0
+    # Host mirror of each slot's *current* particle budget.  Admission
+    # seeds it; every granted elastic resize updates it; all particle-tick
+    # accounting and retire reads go through it instead of the
+    # admission-time ``req["particles"]`` (stale once budgets move).
+    slot_budget = np.zeros(nb, np.int64)
+    events: list[dict] = []
 
     def admit(state, tick):
         while free and pending and pending[0]["arrival"] <= tick:
@@ -319,6 +367,11 @@ def run_continuous_batching(
                 )
             req["admitted_tick"] = tick
             active[slot] = req
+            slot_budget[slot] = req["particles"]
+            if ctrl is not None:
+                # Grace period: a fresh request's first ESS readings are
+                # noise; hold resizes for one full cooldown window.
+                ctrl.slot_admitted(slot)
         return state
 
     def retire(ex_state, ex_tick):
@@ -338,14 +391,17 @@ def run_continuous_batching(
         seqs = np.asarray(ex_state.particles["seq"])
         for slot in done:
             req = active.pop(slot)
-            # Best particle over the request's *active* lanes only —
-            # inactive lanes hold junk that must never win the argmax.
-            best = int(np.argmax(cum[slot, : req["particles"]]))
+            # Best particle over the slot's *currently active* lanes only —
+            # lanes beyond the current budget hold junk (a shrunk slot's
+            # old lanes included) that must never win the argmax.
+            n_now = int(slot_budget[slot])
+            best = int(np.argmax(cum[slot, :n_now]))
             results.append(
                 {
                     "id": req["id"],
                     "steps": req["steps"],
                     "particles": req["particles"],
+                    "final_particles": n_now,
                     # A real copy, not a view: np.asarray above is
                     # zero-copy into the jax buffer, and a live external
                     # view would block the donated step/reset from
@@ -359,28 +415,77 @@ def run_continuous_batching(
             )
             free.append(slot)
 
+    def apply_elastic(state, ess, tick):
+        """Run one controller tick and apply granted resizes to ``state``.
+
+        ``state`` here is always the freshest bank state (post-step) and
+        nothing else reads it afterward, so the donated resize is safe.
+        """
+        busy_mask = np.zeros(nb, bool)
+        for s in active:
+            busy_mask[s] = True
+        for d in ctrl.observe(ess, slot_budget, busy_mask):
+            events.append(
+                {
+                    "tick": tick,
+                    "slot": d.slot,
+                    "old": d.old,
+                    "new": d.new,
+                    "ess": d.ess,
+                    "kind": d.kind,
+                    "granted": d.granted,
+                    "deficit": d.deficit,
+                }
+            )
+            if d.granted:
+                state = bank.jit_resize_slot_donated(
+                    state,
+                    jnp.int32(d.slot),
+                    jax.random.fold_in(k_elastic, len(events)),
+                    jnp.int32(d.new),
+                )
+                slot_budget[d.slot] = d.new
+        return state
+
+    prev_ess = None
     while pending or active:
         state = admit(state, tick)
         keys = jax.random.split(jax.random.fold_in(k_run, tick), nb)
-        busy = [active[s]["particles"] for s in active]
+        # Per-tick particle accounting from the *current* budgets (the
+        # host mirror), not admission-time ones: under elastic resizes the
+        # admission budget is only where a request started.
+        busy = [int(slot_budget[s]) for s in active]
         if async_admit:
             # Dispatch first, decide later: the retire pass below blocks
             # only on the *pre-step* state (already materialized), while
             # this tick's step runs on device.
-            new_state, _ = step(state, obs, keys)
+            new_state, out = step(state, obs, keys)
             busy_slot_ticks += len(busy)
             active_particle_ticks += sum(busy)
             padded_particle_ticks += len(busy) * p_max
             retire(state, tick)
+            if ctrl is not None and prev_ess is not None:
+                # One tick of lag: resize from the previous step's ESS
+                # (already materialized) so the in-flight step is never
+                # waited on; the resize applies to its output.
+                new_state = apply_elastic(
+                    new_state, np.asarray(prev_ess, np.float64), tick
+                )
+            if ctrl is not None:
+                prev_ess = out.ess
             state = new_state
             tick += 1
         else:
-            state, _ = step(state, obs, keys)
+            state, out = step(state, obs, keys)
             tick += 1
             busy_slot_ticks += len(busy)
             active_particle_ticks += sum(busy)
             padded_particle_ticks += len(busy) * p_max
             retire(state, tick)
+            if ctrl is not None:
+                state = apply_elastic(
+                    state, np.asarray(out.ess, np.float64), tick
+                )
     results.sort(key=lambda r: r["id"])
     return {
         "results": results,
@@ -393,6 +498,9 @@ def run_continuous_batching(
             1.0 - active_particle_ticks / padded_particle_ticks
             if padded_particle_ticks
             else 0.0
+        ),
+        "elastic": (
+            {"events": events, **ctrl.stats} if ctrl is not None else None
         ),
     }
 
@@ -421,6 +529,22 @@ def main() -> None:
                          "[MIN, MAX]); overrides --particles-per-slot")
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="--smc: ticks between request arrivals")
+    ap.add_argument("--elastic", action="store_true",
+                    help="--smc ragged banks: ESS-driven per-slot particle "
+                         "budget autoscaling — grow a slot on ESS collapse, "
+                         "shrink when ESS is healthy (see --elastic-*)")
+    ap.add_argument("--elastic-grow", type=float, default=None,
+                    help="absolute ESS floor that doubles a busy slot's "
+                         "budget (default: MIN/2 from --particles)")
+    ap.add_argument("--elastic-shrink", type=float, default=None,
+                    help="absolute ESS ceiling that halves a busy slot's "
+                         "budget (default: 4x the grow floor)")
+    ap.add_argument("--elastic-cooldown", type=int, default=2,
+                    help="ticks a slot is frozen after a granted resize")
+    ap.add_argument("--elastic-budget", type=int, default=None,
+                    help="global cap on total active particles across "
+                         "busy slots; grows beyond it are denied in "
+                         "ESS-deficit order (default: uncapped)")
     ap.add_argument("--ess-frac", type=float, default=0.5)
     ap.add_argument("--mesh", default="",
                     help="--smc: DxM device mesh, e.g. 2x2 — slots shard "
@@ -485,6 +609,28 @@ def main() -> None:
             num_slots=args.slots,
         )
         particles = _parse_particles(args)
+        elastic = None
+        if args.elastic:
+            from repro.core.elastic import ElasticConfig
+
+            if not isinstance(particles, tuple):
+                raise SystemExit(
+                    "--elastic needs a ragged bank: pass --particles "
+                    "MIN:MAX with MIN < MAX"
+                )
+            grow = (
+                args.elastic_grow
+                if args.elastic_grow is not None
+                else particles[0] / 2
+            )
+            elastic = ElasticConfig(
+                grow_below=grow,
+                shrink_above=args.elastic_shrink,
+                cooldown=args.elastic_cooldown,
+                min_particles=particles[0],
+                max_particles=particles[1],
+                global_budget=args.elastic_budget,
+            )
         stats = run_continuous_batching(
             bank,
             num_requests=args.requests,
@@ -493,6 +639,7 @@ def main() -> None:
             key=jax.random.key(args.seed),
             arrival_every=args.arrival_every,
             async_admit=args.async_admit,
+            elastic=elastic,
         )
         dt = time.perf_counter() - t0
         n_steps = sum(r["steps"] for r in stats["results"])
@@ -507,16 +654,41 @@ def main() -> None:
             f"requests={args.requests} particles/slot={pdesc}"
             + (f" mesh={args.mesh} scheme={args.scheme}" if mesh else "")
             + (" async" if args.async_admit else "")
+            + (" elastic" if elastic is not None else "")
             + f" ticks={stats['ticks']} "
             f"occupancy={stats['occupancy']:.0%} "
             f"padding_waste={stats['padding_waste']:.0%} "
             f"({dt / ticks * 1e3:.1f} ms/tick incl. compile, "
             f"{n_steps / dt:.1f} request-steps/s)"
         )
+        el = stats["elastic"]
+        if el is not None:
+            print(
+                f"  elastic: grows={el['grows']} shrinks={el['shrinks']} "
+                f"denied_grows={el['denied_grows']} "
+                f"global_budget={args.elastic_budget or 'uncapped'}"
+            )
+            for e in el["events"][:8]:
+                print(
+                    f"    tick {e['tick']:>3} slot {e['slot']}: "
+                    f"{e['kind']} {e['old']}->{e['new']} "
+                    f"ess={e['ess']:.1f}"
+                    + (
+                        f" deficit={e['deficit']:.1f}"
+                        if e["kind"] == "grow"
+                        else ""
+                    )
+                    + ("" if e["granted"] else " DENIED")
+                )
+            if len(el["events"]) > 8:
+                print(f"    ... {len(el['events']) - 8} more events")
         for r in stats["results"][:4]:
+            pdesc2 = str(r["particles"])
+            if r["final_particles"] != r["particles"]:
+                pdesc2 += f"->{r['final_particles']}"
             print(
                 f"  req[{r['id']}] steps={r['steps']} "
-                f"particles={r['particles']} "
+                f"particles={pdesc2} "
                 f"latency={r['finished_tick'] - r['admitted_tick']} ticks: "
                 f"{r['tokens'][:12].tolist()}..."
             )

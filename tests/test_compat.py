@@ -1,0 +1,89 @@
+"""The compat shim layer's version gate: fallbacks install only where the
+running jax lacks the native symbol, and the set of live shims can only
+shrink as jax upgrades."""
+
+import jax
+
+from repro import compat
+
+# Every shim the jax 0.4.x line needs — the frozen high-water mark.  A
+# jax upgrade may only *remove* entries from the active set (the symbol
+# went native); a new entry appearing here means a new shim was added to
+# compat.py and must be registered consciously, with its import-time
+# native probe.
+FULL_04X_SHIM_SET = frozenset(
+    {
+        "enable_x64",
+        "set_mesh",
+        "get_abstract_mesh",
+        "shard_map",
+        "make_mesh_axis_types",
+        "AxisType",
+        "axis_size",
+    }
+)
+
+
+def test_shim_set_only_shrinks():
+    """active_shims() never exceeds the known 0.4.x full set."""
+    active = compat.active_shims()
+    assert active <= FULL_04X_SHIM_SET, (
+        f"unregistered shims {sorted(active - FULL_04X_SHIM_SET)}: new "
+        "compat fallbacks must be added to FULL_04X_SHIM_SET explicitly"
+    )
+
+
+def test_registry_covers_every_probe():
+    """Every probed symbol has a recorded native/fallback verdict."""
+    assert set(compat._NATIVE) == FULL_04X_SHIM_SET
+
+
+def test_04x_line_needs_every_shim():
+    """On the 0.4.x line (this container) the full set is active; on a
+    newer jax the assertion flips to requiring the set to have shrunk —
+    the regression this file exists for."""
+    if jax.__version__.startswith("0.4."):
+        assert compat.active_shims() == FULL_04X_SHIM_SET
+    else:
+        assert compat.active_shims() < FULL_04X_SHIM_SET
+
+
+def test_native_make_mesh_not_wrapped_when_axis_types_supported():
+    """The make_mesh wrapper exists iff the native one lacks axis_types
+    (the one shim that *replaces* a native symbol instead of filling a
+    hole — the sharpest place for the version gate to regress)."""
+    is_native = compat.make_mesh is compat._native_make_mesh
+    assert is_native == ("make_mesh_axis_types" not in compat.active_shims())
+
+
+def test_install_is_idempotent():
+    """A second install() neither re-patches nor clobbers anything."""
+    before = {
+        "enable_x64": jax.enable_x64,
+        "set_mesh": jax.set_mesh,
+        "shard_map": jax.shard_map,
+        "make_mesh": jax.make_mesh,
+        "axis_size": jax.lax.axis_size,
+        "AxisType": jax.sharding.AxisType,
+        "get_abstract_mesh": jax.sharding.get_abstract_mesh,
+    }
+    compat.install()
+    for name, obj in before.items():
+        mod = {
+            "axis_size": jax.lax,
+            "AxisType": jax.sharding,
+            "get_abstract_mesh": jax.sharding,
+        }.get(name, jax)
+        assert getattr(mod, name) is obj, f"install() moved jax.{name}"
+
+
+def test_patched_jax_surface_matches_compat():
+    """Post-install, the jax attributes the codebase uses resolve to the
+    same objects compat exports — native or fallback alike."""
+    assert jax.enable_x64 is compat.enable_x64
+    assert jax.set_mesh is compat.set_mesh
+    assert jax.shard_map is compat.shard_map
+    assert jax.make_mesh is compat.make_mesh
+    assert jax.lax.axis_size is compat.axis_size
+    assert jax.sharding.AxisType is compat.AxisType
+    assert jax.sharding.get_abstract_mesh is compat.get_abstract_mesh
