@@ -1,11 +1,24 @@
-"""Paper Fig. 6: normalizing + resampling kernel breakdown, naive vs fused.
+"""Paper Fig. 6: per-kernel breakdown — naive vs fused, chain vs one pass.
 
-naive   = the paper's pre-optimization chain: separate max-find, weighting
-          (exp), sum, divide, then CDF build + search, each its own jit
-          (kernel-launch analogue).
-fused   = the optimized chain: one fused LSE-normalize + one fused
-          cumsum+search call (the Pallas kernels; timed via their jnp oracle
-          semantics under one jit so CPU timing reflects the fusion).
+Two sweeps:
+
+``run``        the paper's normalizing + resampling kernel breakdown:
+               naive = separate max/exp/sum/divide/cumsum/search jits
+               (kernel-launch analogue), fused = the one-pass LSE-normalize
+               + cumsum-search Pallas chain.
+
+``step_sweep`` the full-step fusion on top of that: the composed
+               likelihood kernel → weight add → fused-epilogue chain
+               (the engine's best pre-fusion path) vs the single
+               streaming fused-step kernel (``repro.kernels.step``) that
+               scores patches, folds the uniform prior, and runs the
+               whole weight epilogue without materializing the (B, P)
+               log-weight array.  Outputs are bitwise-identical with the
+               same keys (tests/test_step.py), so the delta is pure
+               execution cost.  Emits ``BENCH_fig6.json``
+               (``us_per_step`` both variants + speedup per record);
+               ``step_smoke`` is the CI gate — fused must be no slower
+               than composed for every policy at the largest smoke size.
 """
 
 from __future__ import annotations
@@ -13,7 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, time_fn
+from benchmarks.common import csv_row, time_fn, write_bench_json
+from repro.core.likelihood import IntensityModel
 from repro.core.precision import get_policy
 from repro.kernels.logsumexp import ops as lse_ops
 from repro.kernels.resample import ops as res_ops
@@ -61,4 +75,128 @@ def run(n: int = 8192) -> list[str]:
                 f"n={n};kernels=2;speedup={us_naive/us_fused:.2f}",
             )
         )
+    rows.extend(step_sweep())
     return rows
+
+
+def step_sweep(
+    sizes=(8_192, 32_768),
+    policies=("fp32", "bf16", "fp16"),
+    bank: int = 4,
+    reps: int = 7,
+    gate: bool = False,
+) -> list[str]:
+    """Fused full-step kernel vs the composed chain, per policy x P.
+
+    Per cell: the per-frame likelihood → weights → resample pipeline of a
+    B-row bank on pre-gathered (B, P, J) patches — the patch gather is
+    identical either way and excluded.  The composed variant runs the
+    Pallas likelihood kernel, the XLA weight add (constant uniform prior),
+    and the one-pass fused epilogue — the engine's best pre-fusion path;
+    the fused variant runs the single streaming step kernel.  Same keys ⇒
+    bitwise-identical outputs (tests/test_step.py), so the delta is the
+    composed chain's extra HBM round-trips of the (B, P) log-likelihood
+    and log-weight arrays (see ``roofline --step`` for the traffic model).
+
+    ``gate=True`` (the CI smoke) raises SystemExit if fused is slower
+    than composed for *any* policy at the largest size.
+    """
+    import numpy as np
+
+    from repro.kernels.epilogue import ops as epi_ops
+    from repro.kernels.likelihood import ops as lik_ops
+    from repro.kernels.step import ops as step_ops
+
+    model = IntensityModel(radius=4)
+    j = model.num_points
+    rows, records = [], []
+    gate_min = None
+    for n in sizes:
+        for pname in policies:
+            pol = get_policy(pname)
+            cdt = pol.compute_dtype
+            keys = jax.random.split(jax.random.key(0), bank)
+            patches = jax.random.uniform(
+                jax.random.key(1), (bank, n, j), jnp.float32, 60.0, 250.0
+            )
+            prior = jnp.full(
+                (bank,), -float(np.log(n)), cdt
+            )
+
+            @jax.jit
+            def composed_step(keys, patches, prior):
+                ll = jax.vmap(
+                    lambda p: lik_ops.intensity_loglik(p, model, pol)
+                )(patches).astype(cdt)
+                log_w = prior[:, None] + ll
+                return epi_ops.fused_epilogue_batched(keys, log_w)
+
+            @jax.jit
+            def fused_step(keys, patches, prior):
+                return step_ops.fused_step_batched(
+                    keys, patches, model, prior, pol
+                )
+
+            us = {
+                "composed": time_fn(
+                    composed_step, keys, patches, prior, reps=reps, warmup=1
+                ),
+                "fused": time_fn(
+                    fused_step, keys, patches, prior, reps=reps, warmup=1
+                ),
+            }
+            speedup = us["composed"] / us["fused"]
+            if n == max(sizes):
+                gate_min = (
+                    speedup if gate_min is None else min(gate_min, speedup)
+                )
+            rows.append(
+                csv_row(
+                    f"fig6_kernels/step_B{bank}_{n//1024}k_{pname}",
+                    us["fused"],
+                    f"composed_us={us['composed']:.1f};"
+                    f"speedup_fused_vs_composed={speedup:.2f}",
+                )
+            )
+            records.append(
+                {
+                    "bank": bank,
+                    "particles": n,
+                    "policy": pname,
+                    "disk_points": j,
+                    "us_per_step_fused": us["fused"],
+                    "us_per_step_composed": us["composed"],
+                    "particle_steps_per_s_fused": (
+                        bank * n / us["fused"] * 1e6
+                    ),
+                    "speedup_fused_vs_composed": speedup,
+                }
+            )
+    write_bench_json(
+        "fig6",
+        records,
+        largest_size=max(sizes),
+        largest_size_min_speedup=gate_min,
+    )
+    if gate and gate_min is not None and gate_min < 1.0:
+        raise SystemExit(
+            f"fused step slower than composed chain at P={max(sizes)}: "
+            f"min speedup={gate_min:.2f} < 1.0 (see BENCH_fig6.json)"
+        )
+    return rows
+
+
+def step_smoke() -> list[str]:
+    """CI entry: quick step sweep that *gates* on fused >= composed
+    throughput (every policy) at the largest smoke size."""
+    return step_sweep(sizes=(8_192, 32_768), reps=7, gate=True)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "run"
+    fns = {"run": run, "step_sweep": step_sweep, "step_smoke": step_smoke}
+    print("name,us_per_call,derived")
+    for row in fns[which]():
+        print(row)

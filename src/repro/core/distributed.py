@@ -71,6 +71,7 @@ __all__ = [
     "SCHEMES",
     "DistributedConfig",
     "dist_lse_banked",
+    "dist_lse_merge",
     "dist_normalize",
     "dist_normalize_banked",
     "dist_systematic_exact",
@@ -289,6 +290,30 @@ def dist_systematic_local(
 # bank merges in one launch.
 
 
+def dist_lse_merge(
+    m_loc: jax.Array,
+    lse_loc: jax.Array,
+    axes: tuple[str, ...],
+    accum_dtype,
+):
+    """Merge per-shard online-LSE states: (m_loc, lse_loc) (B_loc,) each ->
+    (lse, m) with one ``pmax`` + one ``psum`` per row.
+
+    The ONE merge — :func:`dist_lse_banked`'s kernel branch and the fused
+    full-step head (``fused_step_stats`` in :func:`make_dist_bank_step`)
+    both fold their shard states through it, so the two paths stay bitwise
+    interchangeable.  ``exp(lse_loc - m_safe)`` is the shard's exp-sum
+    rebased to the global max (0 where the shard saw only -inf).
+    """
+    m_loc = m_loc.astype(accum_dtype)
+    lse_loc = lse_loc.astype(accum_dtype)
+    m = jax.lax.pmax(m_loc, axes)
+    m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    s = jax.lax.psum(jnp.exp(lse_loc - m_safe), axes)
+    lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
+    return lse, m
+
+
 def dist_lse_banked(
     log_w: jax.Array,
     axes: tuple[str, ...],
@@ -324,14 +349,7 @@ def dist_lse_banked(
         lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
     else:
         m_loc, lse_loc = local_stats(log_w)
-        m_loc = m_loc.astype(accum_dtype)
-        lse_loc = lse_loc.astype(accum_dtype)
-        m = jax.lax.pmax(m_loc, axes)
-        m_safe = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
-        # exp(lse_loc - m_safe) is the shard's exp-sum rebased to the
-        # global max (0 where the shard saw only -inf) — the online merge.
-        s = jax.lax.psum(jnp.exp(lse_loc - m_safe), axes)
-        lse = jnp.where(jnp.isfinite(m), m_safe + jnp.log(s), m)
+        lse, m = dist_lse_merge(m_loc, lse_loc, axes, accum_dtype)
     return lse, m
 
 
@@ -696,6 +714,8 @@ def make_dist_bank_step(
     local_resample_masked: Any = None,
     fused_finalize: Any = None,
     fused_finalize_masked: Any = None,
+    fused_step_stats: Any = None,
+    fused_step_stats_masked: Any = None,
 ):
     """Build a shard_map'd FilterBank step: mesh × bank composition.
 
@@ -733,6 +753,19 @@ def make_dist_bank_step(
     shard-local systematic inverse on its in-VMEM CDF, replacing the
     separate exp + ``ancestors_from_u0`` launches (same u0 derivation,
     bitwise the composed path).
+
+    ``fused_step_stats`` / ``fused_step_stats_masked`` supply the matching
+    shard-local fused *head* — ``(log_w, patches, model, policy[, n_loc])
+    -> (log_w', m (B,), lse (B,))``: likelihood, prior add, and the
+    online-LSE stats of ``local_stats`` in one pass over this shard's
+    gathered patches (``spec.step_fusion`` describes the gather and
+    model).  The head's per-shard states fold through the same
+    :func:`dist_lse_merge` as the ``local_stats`` branch and its
+    log-weights feed the ``fused_finalize`` tail, so the shard's weight
+    array streams from patches to ancestors with one merge in between —
+    bitwise the composed likelihood → stats → finalize chain.  Only used
+    when the matching ``fused_finalize`` form is also present (the caller
+    gates on it).
     """
     if cfg.bank_axis is None:
         raise ValueError("make_dist_bank_step needs cfg.bank_axis set")
@@ -768,13 +801,9 @@ def make_dist_bank_step(
         d = _axis_index(axes)
         prop_keys = jax.vmap(lambda k: jax.random.fold_in(k, d))(k_prop)
         particles = jax.vmap(spec.transition)(prop_keys, particles, step)
-        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
-            particles, obs, step
-        ).astype(policy.compute_dtype)
         if n_active is None:
             active = None
             n_loc = None
-            log_w = log_w + log_lik
         else:
             # This shard owns global lanes [d*P_loc, (d+1)*P_loc); mask its
             # slice of every slot to the slot's active prefix (which is a
@@ -783,38 +812,76 @@ def make_dist_bank_step(
             gpos = d * p_loc_ + jnp.arange(p_loc_)
             active = gpos[None, :] < n_active[:, None]
             n_loc = jnp.clip(n_active - d * p_loc_, 0, p_loc_)
-            log_w = jnp.where(
-                active,
-                log_w + log_lik,
-                jnp.asarray(-jnp.inf, policy.compute_dtype),
-            )
         finalize = fused_finalize_masked if n_active is not None else (
             fused_finalize
         )
+        head = fused_step_stats_masked if n_active is not None else (
+            fused_step_stats
+        )
         anc = None
-        if cfg.scheme == "local" and finalize is not None:
-            # Fused shard-local epilogue tail: merge the LSE stats, then
-            # one pass computes this shard's weights *and* the RNA
+        if cfg.scheme == "local" and finalize is not None and head is not None:
+            # Fused shard-local head + tail: one pass scores this shard's
+            # gathered patches, adds the carried log-weights, and emits the
+            # online-LSE stats; dist_lse_merge folds the shard states with
+            # the same pmax+psum as the composed local_stats branch; the
+            # finalize pass then computes the shard's weights and the RNA
             # scheme's shard-local systematic ancestors (same _local_u0
-            # derivation as dist_systematic_local_banked).
-            lse, max_lw = dist_lse_banked(
-                log_w, axes, adt,
-                local_stats=local_stats,
-                local_stats_masked=local_stats_masked,
-                n_loc=n_loc,
+            # derivation as dist_systematic_local_banked).  The shard's
+            # log-weight array never makes a separate likelihood round
+            # trip — bitwise the composed chain below.
+            fstep = spec.step_fusion
+            patches = jax.vmap(fstep.gather, in_axes=(0, obs_ax, 0))(
+                particles, obs, step
             )
+            if n_active is None:
+                log_w, m_loc, lse_loc = head(
+                    log_w, patches, fstep.model, policy
+                )
+            else:
+                log_w, m_loc, lse_loc = head(
+                    log_w, patches, fstep.model, policy, n_loc
+                )
+            lse, max_lw = dist_lse_merge(m_loc, lse_loc, axes, adt)
             u0 = _local_u0(k_res, d)
             if n_active is None:
                 w, anc = fused_finalize(log_w, lse, u0)
             else:
                 w, anc = fused_finalize_masked(log_w, lse, u0, n_loc)
         else:
-            w, lse, max_lw = dist_normalize_banked(
-                log_w, axes, adt,
-                local_stats=local_stats,
-                local_stats_masked=local_stats_masked,
-                n_loc=n_loc,
-            )
+            log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+                particles, obs, step
+            ).astype(policy.compute_dtype)
+            if n_active is None:
+                log_w = log_w + log_lik
+            else:
+                log_w = jnp.where(
+                    active,
+                    log_w + log_lik,
+                    jnp.asarray(-jnp.inf, policy.compute_dtype),
+                )
+            if cfg.scheme == "local" and finalize is not None:
+                # Fused shard-local epilogue tail: merge the LSE stats,
+                # then one pass computes this shard's weights *and* the
+                # RNA scheme's shard-local systematic ancestors (same
+                # _local_u0 derivation as dist_systematic_local_banked).
+                lse, max_lw = dist_lse_banked(
+                    log_w, axes, adt,
+                    local_stats=local_stats,
+                    local_stats_masked=local_stats_masked,
+                    n_loc=n_loc,
+                )
+                u0 = _local_u0(k_res, d)
+                if n_active is None:
+                    w, anc = fused_finalize(log_w, lse, u0)
+                else:
+                    w, anc = fused_finalize_masked(log_w, lse, u0, n_loc)
+            else:
+                w, lse, max_lw = dist_normalize_banked(
+                    log_w, axes, adt,
+                    local_stats=local_stats,
+                    local_stats_masked=local_stats_masked,
+                    n_loc=n_loc,
+                )
 
         w_acc = w.astype(adt)
         wsum = jax.lax.psum(jnp.sum(w_acc, axis=-1), axes)  # (B_loc,)

@@ -155,6 +155,33 @@ class Backend:
                 scheme's shard-local systematic inverse on the in-VMEM CDF
                 (replacing the separate exp + ancestors_from_u0 launches).
 
+    Fused full-step forms (likelihood → weights → resample in ONE streaming
+    pass — the epilogue with the intensity likelihood fused in front, the
+    (B, P) log-weight array never materialized in HBM; see
+    ``repro.kernels.step``), per-resampler-name maps with the same 6-tuple
+    return as the fused epilogue:
+
+    fused_step:        (key, patches (P, J), model, prior scalar, policy)
+                -> 6-tuple.  ``prior`` is the carried uniform log-weight
+                (always-resample path only, where the carry is constant).
+    fused_step_banked: (keys (B,), patches (B, P, J), model, prior (B,),
+                policy) -> 6-tuple with (B,) stats.
+    fused_step_masked: (keys, patches, model, prior (B,), policy,
+                n_active (B,)) -> 6-tuple — ragged twin; ``prior`` is the
+                per-slot stored ``log_uniform`` and lanes past the count
+                come out -inf/0 whatever junk their patch lanes hold.
+    Dispatch: ``FilterConfig.fused_step`` (None=auto) selects these when
+    the spec opts in via ``SMCSpec.step_fusion``; numerics are bitwise the
+    composed ``loglik`` + fused-epilogue chain.  The jnp backend registers
+    the pure-jnp references from ``resampling.FUSED_STEPS*``.
+
+    fused_step_finalize_banked / fused_step_finalize_masked: the *meshed*
+                shard-local head ``(log_w, patches, model, policy[, n_loc])
+                -> (log_w', m (B,), lse (B,))``: likelihood + prior add +
+                shard-local online-LSE stats in one pass; the engine merges
+                the stats with one pmax + psum and chains the existing
+                ``fused_finalize`` tail (RNA ``local`` scheme only).
+
     Banked forms (used by :class:`FilterBank`, leading bank axis B):
 
     normalize_banked:  (log_w (B, P), policy) -> (weights (B, P), log_z (B,),
@@ -244,6 +271,21 @@ class Backend:
         default_factory=dict
     )
     fused_finalize_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_step: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_step_banked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_step_masked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_step_finalize_banked: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict
+    )
+    fused_step_finalize_masked: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict
     )
     local_stats_banked: Callable[[jax.Array], tuple] | None = None
@@ -448,6 +490,55 @@ def _pallas_fused_finalize_masked(
     return epi_ops.fused_finalize_from_u0_masked(u0, log_w, lse, n_loc)
 
 
+def _pallas_fused_step(
+    key: jax.Array, patches: jax.Array, model, prior: jax.Array, policy
+):
+    from repro.kernels.step import ops as step_ops
+
+    return step_ops.fused_step(key, patches, model, prior, policy)
+
+
+def _pallas_fused_step_banked(
+    keys: jax.Array, patches: jax.Array, model, prior: jax.Array, policy
+):
+    from repro.kernels.step import ops as step_ops
+
+    return step_ops.fused_step_batched(keys, patches, model, prior, policy)
+
+
+def _pallas_fused_step_masked(
+    keys: jax.Array,
+    patches: jax.Array,
+    model,
+    prior: jax.Array,
+    policy,
+    n_active: jax.Array,
+):
+    from repro.kernels.step import ops as step_ops
+
+    return step_ops.fused_step_masked(
+        keys, patches, model, prior, policy, n_active
+    )
+
+
+def _pallas_fused_step_finalize_banked(
+    log_w: jax.Array, patches: jax.Array, model, policy
+):
+    from repro.kernels.step import ops as step_ops
+
+    return step_ops.fused_step_stats_batched(patches, log_w, model, policy)
+
+
+def _pallas_fused_step_finalize_masked(
+    log_w: jax.Array, patches: jax.Array, model, policy, n_loc: jax.Array
+):
+    from repro.kernels.step import ops as step_ops
+
+    return step_ops.fused_step_stats_masked(
+        patches, log_w, model, policy, n_loc
+    )
+
+
 register_backend(
     Backend(
         "jnp",
@@ -460,6 +551,9 @@ register_backend(
         fused_epilogue=resampling.FUSED_EPILOGUES,
         fused_epilogue_banked=resampling.FUSED_EPILOGUES_BANKED,
         fused_epilogue_masked=resampling.FUSED_EPILOGUES_MASKED,
+        fused_step=resampling.FUSED_STEPS,
+        fused_step_banked=resampling.FUSED_STEPS_BANKED,
+        fused_step_masked=resampling.FUSED_STEPS_MASKED,
     )
 )
 register_backend(
@@ -479,6 +573,15 @@ register_backend(
         fused_epilogue_masked={"systematic": _pallas_fused_epilogue_masked},
         fused_finalize_banked={"systematic": _pallas_fused_finalize_banked},
         fused_finalize_masked={"systematic": _pallas_fused_finalize_masked},
+        fused_step={"systematic": _pallas_fused_step},
+        fused_step_banked={"systematic": _pallas_fused_step_banked},
+        fused_step_masked={"systematic": _pallas_fused_step_masked},
+        fused_step_finalize_banked={
+            "systematic": _pallas_fused_step_finalize_banked
+        },
+        fused_step_finalize_masked={
+            "systematic": _pallas_fused_step_finalize_masked
+        },
         local_stats_banked=_pallas_local_stats_banked,
         local_stats_masked=_pallas_local_stats_masked,
         ancestors_from_u0_banked={
@@ -528,6 +631,19 @@ class FilterConfig:
     # branches are computed under the per-slot select anyway); naive
     # (stable_weighting=False) policies never fuse.
     fused_epilogue: bool | None = None
+    # Fused full step (likelihood → weights → resample in one streaming
+    # pass — the epilogue with the intensity likelihood fused in front;
+    # the log-weight array never touches HBM).  Needs the spec to opt in
+    # via ``SMCSpec.step_fusion``.  None = auto (fuse whenever the spec
+    # opts in, the backend registers a fused-step form for the resampler
+    # — respecting ``StepFusion.backend`` — and the path qualifies:
+    # stable weighting, always-resample (the fused step consumes the
+    # constant uniform carry), unmeshed or meshed-local-with-finalize);
+    # False = always run the composed likelihood + epilogue chain; True =
+    # require the fused form and raise wherever it cannot apply.  Like
+    # fused_epilogue, numerics are bitwise the composed chain, so auto is
+    # safe; naive policies never fuse.
+    fused_step: bool | None = None
     # Distribution spec (None -> single placement).
     mesh: Any = None
     axis: str | tuple[str, ...] = "data"
@@ -608,6 +724,51 @@ class ParticleFilter:
                     f"{self.backend.name!r} registers no fused epilogue "
                     f"for resampler {config.resampler!r} (or the policy's "
                     "naive weighting path is active)"
+                )
+
+        # Fused full-step dispatch (likelihood → weights → resample in one
+        # pass, see FilterConfig.fused_step).  The fused step consumes the
+        # *constant uniform* prior carry, so it only applies on the static
+        # always-resample path; every other gate mirrors fused_epilogue.
+        self._fused_step = None
+        fstep = spec.step_fusion
+        if (
+            config.fused_step is not False
+            and fstep is not None
+            and self.policy.stable_weighting
+            and (fstep.backend is None or fstep.backend == config.backend)
+            and config.ess_threshold >= 1.0
+            and config.mesh is None
+        ):
+            self._fused_step = self.backend.fused_step.get(config.resampler)
+        if config.fused_step is True:
+            if fstep is None:
+                raise ValueError(
+                    "fused_step=True needs the spec to opt in via "
+                    "SMCSpec.step_fusion (the engine cannot split an "
+                    "opaque loglik into gather + intensity model)"
+                )
+            if config.mesh is not None:
+                raise ValueError(
+                    "fused_step=True is not available on a meshed "
+                    "ParticleFilter (the distributed single-filter step "
+                    "has no fused form); use a meshed FilterBank with "
+                    "scheme='local' for the shard-local fused-step head"
+                )
+            if config.ess_threshold < 1.0:
+                raise ValueError(
+                    "fused_step=True requires ess_threshold >= 1.0: the "
+                    "fused step folds the constant uniform prior into its "
+                    "likelihood pass, which only matches the composed "
+                    "chain when every frame resamples"
+                )
+            if self._fused_step is None:
+                raise ValueError(
+                    f"fused_step=True but backend {self.backend.name!r} "
+                    f"registers no fused step for resampler "
+                    f"{config.resampler!r}, the policy's naive weighting "
+                    "path is active, or StepFusion.backend names a "
+                    "different backend"
                 )
 
         self._dist_step = None
@@ -755,23 +916,37 @@ class ParticleFilter:
         # 1. propagation (paper kernel 1)
         particles = spec.transition(k_prop, state.particles, state.step)
 
-        # 2. likelihood (kernel 2)
-        log_lik = spec.loglik(particles, observation, state.step).astype(cdt)
-        log_w = state.log_weights + log_lik
-
-        # 3-6. the weight epilogue.  Fused path (always-resample): one
-        # kernel pass emits weights, ancestors, stats, and the ESS sums
-        # with the CDF never leaving VMEM.  Composed path: normalize (with
-        # in-pass ESS sums) now, resample under the cond below.
+        # 2-6. likelihood (kernel 2) + the weight epilogue.  Full-step
+        # fusion: one streaming pass scores the gathered patches, adds the
+        # constant uniform prior (the always-resample carry), and runs the
+        # whole epilogue — the log-weight array never touches HBM.  Fused
+        # epilogue (always-resample): likelihood first, then one kernel
+        # pass for weights + ancestors + stats.  Composed path: normalize
+        # (with in-pass ESS sums) now, resample under the cond below.
         ancestors = None
         use_fused = (
             self._fused is not None and self.config.ess_threshold >= 1.0
         )
-        if use_fused:
+        if self._fused_step is not None:
+            fstep = spec.step_fusion
+            patches = fstep.gather(particles, observation, state.step)
+            prior = _neg_log_count(num_particles, cdt)
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
+                self._fused_step(k_res, patches, fstep.model, prior, policy)
+            )
+        elif use_fused:
+            log_lik = spec.loglik(
+                particles, observation, state.step
+            ).astype(cdt)
+            log_w = state.log_weights + log_lik
             weights, ancestors, log_z, max_lw, sum_w, sum_w2 = self._fused(
                 k_res, log_w, policy
             )
         else:
+            log_lik = spec.loglik(
+                particles, observation, state.step
+            ).astype(cdt)
+            log_w = state.log_weights + log_lik
             weights, log_z, max_lw, sum_w, sum_w2 = self._normalize_stats(
                 log_w
             )
@@ -797,13 +972,17 @@ class ParticleFilter:
                 else self._resample(k_res, weights, policy)
             )
             new_particles = gather(particles, anc)
-            uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
+            # Sized off the carried weights: log_w never materializes on
+            # the fused-step path.
+            uniform = jnp.full_like(
+                state.log_weights, -jnp.log(float(num_particles))
+            )
             return new_particles, uniform
 
         def _kept():
             return particles, jnp.log(
                 weights.astype(policy.accum_dtype)
-            ).astype(log_w.dtype)
+            ).astype(state.log_weights.dtype)
 
         # threshold >= 1.0 means "always resample" (ESS can never exceed P),
         # gated statically; sub-1.0 thresholds compare *exactly* — a fudge
@@ -1098,6 +1277,67 @@ class FilterBank:
                     "path is active)"
                 )
 
+        # Fused full-step dispatch (see FilterConfig.fused_step).  Same
+        # always-resample constraint as the single filter — the fused step
+        # folds the uniform prior carry into its likelihood pass — already
+        # validated by the inner ParticleFilter above for fused_step=True.
+        self._fused_step_banked = None
+        self._fused_step_masked = None
+        fstep = spec.step_fusion
+        if (
+            config.fused_step is not False
+            and fstep is not None
+            and self.policy.stable_weighting
+            and (fstep.backend is None or fstep.backend == config.backend)
+            and config.ess_threshold >= 1.0
+            and self._dist_cfg is None
+        ):
+            self._fused_step_banked = self.backend.fused_step_banked.get(
+                config.resampler
+            )
+            self._fused_step_masked = self.backend.fused_step_masked.get(
+                config.resampler
+            )
+        if config.fused_step is True:
+            if self._dist_cfg is not None:
+                # Meshed banks run the distributed step: the only fused
+                # head there is the local scheme's shard-local stats pass
+                # chained into the fused finalize tail.
+                if config.scheme != "local" or (
+                    self.backend.fused_step_finalize_banked.get(
+                        config.resampler
+                    )
+                    is None
+                    or self.backend.fused_finalize_banked.get(
+                        config.resampler
+                    )
+                    is None
+                    or not self.policy.stable_weighting
+                ):
+                    raise ValueError(
+                        "fused_step=True on a meshed bank requires "
+                        "scheme='local' and registered "
+                        "Backend.fused_step_finalize_banked + "
+                        "fused_finalize_banked for resampler "
+                        f"{config.resampler!r} (backend "
+                        f"{self.backend.name!r}); the exact scheme has no "
+                        "fused form (its CDF is all-gathered)"
+                    )
+                if config.fused_epilogue is False:
+                    raise ValueError(
+                        "fused_step=True with fused_epilogue=False is "
+                        "contradictory on a meshed bank: the fused-step "
+                        "head feeds the fused finalize tail, which "
+                        "fused_epilogue=False disables"
+                    )
+            elif self._fused_step_banked is None:
+                raise ValueError(
+                    f"fused_step=True but backend {self.backend.name!r} "
+                    f"registers no banked fused step for resampler "
+                    f"{config.resampler!r} (or the policy's naive "
+                    "weighting path is active)"
+                )
+
         # Per-slot active-count default, set by factories (e.g. per-target
         # budgets in ``make_multi_tracker_filter``); ``init`` uses it when
         # no explicit ``n_active`` is passed.
@@ -1230,6 +1470,31 @@ class FilterBank:
                     f"finalize for resampler {self.config.resampler!r} — "
                     "a ragged meshed bank would silently fall back to "
                     "the composed chain"
+                )
+        if self.config.fused_step is True:
+            # Same earliest-enforcement point as fused_epilogue above:
+            # ragged dispatch needs the count-aware fused-step forms.
+            if self._dist_cfg is None and self._fused_step_masked is None:
+                raise ValueError(
+                    f"fused_step=True but backend "
+                    f"{self.backend.name!r} registers no masked fused "
+                    f"step for resampler {self.config.resampler!r} — a "
+                    "ragged bank would silently fall back to the "
+                    "composed chain"
+                )
+            if (
+                self._dist_cfg is not None
+                and self.backend.fused_step_finalize_masked.get(
+                    self.config.resampler
+                )
+                is None
+            ):
+                raise ValueError(
+                    f"fused_step=True but backend "
+                    f"{self.backend.name!r} registers no masked "
+                    f"fused-step head for resampler "
+                    f"{self.config.resampler!r} — a ragged meshed bank "
+                    "would silently fall back to the composed chain"
                 )
         self._check_count_range(n_active, num_particles)
         return n_active
@@ -1438,22 +1703,40 @@ class FilterBank:
             k_prop, state.particles, state.step
         )
 
-        # 2. likelihood (kernel 2)
-        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
-            particles, observations, state.step
-        ).astype(cdt)
-        log_w = state.log_weights + log_lik
-
-        # 3-6. the weight epilogue.  Fused: one kernel pass per bank row
-        # emits weights, ancestors, stats, and the in-pass ESS sums (the
-        # CDF never leaves VMEM).  Composed: banked normalize with in-pass
-        # ESS sums, ancestors drawn by the separate resample chain below —
-        # bitwise the same results either way.
-        if self._fused_banked is not None:
+        # 2-6. likelihood (kernel 2) + the weight epilogue.  Full-step
+        # fusion: one streaming pass per bank row scores the gathered
+        # patches, adds the uniform prior, and runs the whole epilogue —
+        # the (B, P) log-weight array never touches HBM.  Fused epilogue:
+        # likelihood first, then one kernel pass per row for weights +
+        # ancestors + stats (the CDF never leaves VMEM).  Composed: banked
+        # normalize with in-pass ESS sums, ancestors drawn by the separate
+        # resample chain below — bitwise the same results on every path.
+        if self._fused_step_banked is not None:
+            fstep = spec.step_fusion
+            patches = jax.vmap(fstep.gather, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            )
+            prior = jnp.broadcast_to(
+                _neg_log_count(num_particles, cdt), (nb,)
+            )
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
+                self._fused_step_banked(
+                    k_res, patches, fstep.model, prior, policy
+                )
+            )
+        elif self._fused_banked is not None:
+            log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            ).astype(cdt)
+            log_w = state.log_weights + log_lik
             weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
                 self._fused_banked(k_res, log_w, policy)
             )
         else:
+            log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            ).astype(cdt)
+            log_w = state.log_weights + log_lik
             weights, log_z, max_lw, sum_w, sum_w2 = (
                 self._normalize_stats_banked(log_w)
             )
@@ -1473,9 +1756,13 @@ class FilterBank:
                 lambda p, w: _weighted_mean(p, w, policy.accum_dtype)
             )(particles, weights)
 
-        # resampling gather, per-slot trigger
+        # resampling gather, per-slot trigger.  Uniform reset rows size off
+        # the carried weights: log_w never materializes on the fused-step
+        # path.
         gather = spec.gather or resampling.gather_ancestors
-        uniform = jnp.full_like(log_w, -jnp.log(float(num_particles)))
+        uniform = jnp.full_like(
+            state.log_weights, -jnp.log(float(num_particles))
+        )
         if self.config.ess_threshold >= 1.0:
             do_resample = jnp.ones((nb,), bool)
             new_particles = jax.vmap(gather)(particles, ancestors)
@@ -1486,7 +1773,7 @@ class FilterBank:
             # cond) — values match ParticleFilter's cond branches exactly.
             do_resample = ess < self.config.ess_threshold * num_particles
             res_particles = jax.vmap(gather)(particles, ancestors)
-            kept_log_w = jnp.log(w_accum).astype(log_w.dtype)
+            kept_log_w = jnp.log(w_accum).astype(cdt)
             new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
             new_particles = jax.tree.map(
                 lambda r, k: jnp.where(
@@ -1538,21 +1825,39 @@ class FilterBank:
             k_prop, state.particles, state.step
         )
 
-        # 2. likelihood, then pin inactive lanes to -inf (a junk lane's
-        # -inf carry plus a +inf log-lik would otherwise produce nan).
-        log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
-            particles, observations, state.step
-        ).astype(cdt)
-        log_w = jnp.where(active, state.log_weights + log_lik, neg_inf)
-
-        # 3-6. the masked weight epilogue (count-aware fused kernel when
-        # registered, else masked normalize with in-pass ESS sums + the
-        # masked resample chain) — bitwise the same either way.
-        if self._fused_masked is not None:
+        # 2-6. likelihood, then the masked weight epilogue, with inactive
+        # lanes pinned to -inf before they reach any statistic (a junk
+        # lane's -inf carry plus a +inf log-lik would otherwise produce
+        # nan).  Full-step fusion: the count-aware streaming kernel takes
+        # each slot's stored ``log_uniform`` prior and masks by position
+        # inside the pass — junk patch lanes never matter.  Fused
+        # epilogue: likelihood + pre-mask first, then the count-aware
+        # fused kernel.  Composed: masked normalize with in-pass ESS sums
+        # + the masked resample chain.  Bitwise the same on every path.
+        if self._fused_step_masked is not None:
+            fstep = spec.step_fusion
+            patches = jax.vmap(fstep.gather, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            )
+            weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
+                self._fused_step_masked(
+                    k_res, patches, fstep.model,
+                    state.log_uniform, policy, n_act,
+                )
+            )
+        elif self._fused_masked is not None:
+            log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            ).astype(cdt)
+            log_w = jnp.where(active, state.log_weights + log_lik, neg_inf)
             weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
                 self._fused_masked(k_res, log_w, policy, n_act)
             )
         else:
+            log_lik = jax.vmap(spec.loglik, in_axes=(0, obs_ax, 0))(
+                particles, observations, state.step
+            ).astype(cdt)
+            log_w = jnp.where(active, state.log_weights + log_lik, neg_inf)
             weights, log_z, max_lw, sum_w, sum_w2 = (
                 self._normalize_stats_masked(log_w, n_act)
             )
@@ -1594,7 +1899,7 @@ class FilterBank:
                 self.config.ess_threshold * n_act.astype(jnp.float32)
             ).astype(ess.dtype)
             res_particles = jax.vmap(gather)(particles, ancestors)
-            kept_log_w = jnp.log(w_accum).astype(log_w.dtype)  # -inf at w=0
+            kept_log_w = jnp.log(w_accum).astype(cdt)  # -inf at w=0
             new_log_w = jnp.where(do_resample[:, None], uniform, kept_log_w)
             new_particles = jax.tree.map(
                 lambda r, k: jnp.where(
@@ -1753,6 +2058,8 @@ class FilterBank:
             local_resample_masked = None
             fused_finalize = None
             fused_finalize_masked = None
+            fused_step_stats = None
+            fused_step_stats_masked = None
             if self.config.scheme == "local":
                 local_resample = self.backend.ancestors_from_u0_banked.get(
                     self.config.resampler
@@ -1776,6 +2083,34 @@ class FilterBank:
                             self.config.resampler
                         )
                     )
+                fstep = self.spec.step_fusion
+                if (
+                    self.config.fused_step is not False
+                    and fstep is not None
+                    and self.policy.stable_weighting
+                    and (
+                        fstep.backend is None
+                        or fstep.backend == self.config.backend
+                    )
+                    and fused_finalize is not None
+                ):
+                    # Shard-local fused head: likelihood + prior add +
+                    # online-LSE stats in one pass; the merged LSE then
+                    # feeds the fused finalize tail, so the shard's
+                    # log-weights stream straight from patches to
+                    # ancestors.  Only worthwhile (and only bitwise-
+                    # plumbed) in front of the finalize tail, hence the
+                    # gate on it.
+                    fused_step_stats = (
+                        self.backend.fused_step_finalize_banked.get(
+                            self.config.resampler
+                        )
+                    )
+                    fused_step_stats_masked = (
+                        self.backend.fused_step_finalize_masked.get(
+                            self.config.resampler
+                        )
+                    )
             fn = distributed.make_dist_bank_step(
                 self.spec,
                 self.policy,
@@ -1788,6 +2123,8 @@ class FilterBank:
                 local_resample_masked=local_resample_masked,
                 fused_finalize=fused_finalize,
                 fused_finalize_masked=fused_finalize_masked,
+                fused_step_stats=fused_step_stats,
+                fused_step_stats_masked=fused_step_stats_masked,
             )
             self._dist_steps[(shared_obs, ragged)] = fn
         return fn

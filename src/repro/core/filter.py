@@ -30,9 +30,38 @@ import jax
 
 __all__ = [
     "SMCSpec",
+    "StepFusion",
     "FilterState",
     "FilterOutput",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepFusion:
+    """Opt-in description of a fusable likelihood for the full-step kernel.
+
+    A spec whose ``loglik`` is "gather observation patches, score them with
+    the intensity model" can expose that structure here, letting the engine
+    fuse likelihood → weights → resample into one streaming pass
+    (``Backend.fused_step``) instead of materializing the (B, P) log-weight
+    array between kernels.
+
+    gather:  (particles, observation, step) -> (P, J) patches — the
+             observation-gather half of ``loglik``.  The engine calls it in
+             place of ``loglik`` on the fused path; ``loglik`` itself must
+             equal "score ``gather``'s patches with ``model``" for the
+             fused and composed paths to agree.
+    model:   the intensity model (``repro.core.likelihood.IntensityModel``)
+             the backend's fused step kernel scores patches with.
+    backend: optional backend-name gate — fuse only when
+             ``FilterConfig.backend`` matches (the tracker sets this so a
+             jnp-configured filter keeps its composed jnp chain).  None
+             fuses on any backend that registers a ``fused_step`` form.
+    """
+
+    gather: Callable[..., Any]
+    model: Any
+    backend: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +93,12 @@ class SMCSpec:
                 the right dimension; None means axis 0 everywhere.  Specs
                 setting it should also set ``gather`` (same layout
                 knowledge) and, under a meshed bank, ``summary``.
+    step_fusion: optional :class:`StepFusion` splitting ``loglik`` into
+                gather + intensity model so the engine can run the fused
+                full-step kernel (likelihood → weights → resample in one
+                pass, gated by ``FilterConfig.fused_step``).  ``loglik``
+                stays authoritative: it is what every composed path runs,
+                and the fused path must be bitwise equal to it.
     """
 
     init: Callable[..., Any]
@@ -73,6 +108,7 @@ class SMCSpec:
     summary: Callable[..., Any] | None = None
     slot_init: Callable[..., Any] | None = None
     particle_axes: Any = None
+    step_fusion: Any = None
 
 
 class FilterState(NamedTuple):

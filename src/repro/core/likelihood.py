@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionPolicy
+from repro.kernels.common import pairwise_sum
 
 __all__ = [
     "IntensityModel",
@@ -111,7 +112,11 @@ def intensity_loglik(
         db = (x - bg) * isq
         df = (x - fg) * isq
         terms = db * db - df * df
-        return jnp.sum(terms.astype(adt), axis=-1).astype(cdt)
+        # Canonical reduction order (fixed pairwise tree, shared with the
+        # Pallas likelihood/step kernels): ``jnp.sum`` would let XLA pick
+        # a per-context order, so jnp and pallas backends could round the
+        # same patches apart; one tree keeps them bitwise-comparable.
+        return pairwise_sum(terms.astype(adt)).astype(cdt)
     # Eq. 3 — divide only after summing the raw squared differences, exactly
     # the fp16-overflowing form (sum reaches ~1.6e6 for a 69-point disk on
     # foreground pixels; fp16 max is 65504).  Kept for the failure-mode tests.

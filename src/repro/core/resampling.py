@@ -55,6 +55,9 @@ __all__ = [
     "FUSED_EPILOGUES",
     "FUSED_EPILOGUES_BANKED",
     "FUSED_EPILOGUES_MASKED",
+    "FUSED_STEPS",
+    "FUSED_STEPS_BANKED",
+    "FUSED_STEPS_MASKED",
     "MASKED_RESAMPLERS",
     "RESAMPLERS",
     "register_resampler",
@@ -373,12 +376,82 @@ def make_fused_epilogue_masked_reference(masked_resampler: Resampler):
     return fused
 
 
+# ---------------------------------------------------------------------------
+# Fused full-step references: the fused epilogue with the intensity
+# likelihood composed in front — the pure-jnp oracles for the streaming
+# ``repro.kernels.step`` kernel and the jnp backend's registered
+# ``Backend.fused_step*`` forms.  Each is literally "score the gathered
+# patches, add the prior log-weight, run the fused epilogue reference", so
+# fused-step == composed is structural on the jnp backend too.
+#
+# Return convention (the Backend fused-step contract): the fused-epilogue
+# 6-tuple ``(weights, ancestors, log_z, max_log_w, sum_w, sum_w2)``.
+
+
+def make_fused_step_reference(fused_epilogue):
+    """Single-filter fused-step reference:
+    (key, patches (P, J), model, prior scalar, policy) -> 6-tuple."""
+
+    def fused_step(key, patches, model, prior, policy):
+        from repro.core import likelihood
+
+        cdt = policy.compute_dtype
+        ll = likelihood.intensity_loglik(patches, model, policy).astype(cdt)
+        log_w = prior.astype(cdt) + ll
+        return fused_epilogue(key, log_w, policy)
+
+    return fused_step
+
+
+def make_fused_step_banked_reference(fused_epilogue_banked):
+    """Banked fused-step reference: (keys (B,), patches (B, P, J), model,
+    prior (B,), policy) -> 6-tuple with (B,) stats."""
+
+    def fused_step(keys, patches, model, prior, policy):
+        from repro.core import likelihood
+
+        cdt = policy.compute_dtype
+        ll = jax.vmap(
+            lambda p: likelihood.intensity_loglik(p, model, policy)
+        )(patches).astype(cdt)
+        log_w = prior.astype(cdt)[:, None] + ll
+        return fused_epilogue_banked(keys, log_w, policy)
+
+    return fused_step
+
+
+def make_fused_step_masked_reference(fused_epilogue_masked):
+    """Ragged fused-step reference: ``prior`` is the (B,) per-slot
+    ``log_uniform`` and lanes >= n_active[b] enter the epilogue at -inf
+    (weight exactly 0) no matter what junk their patch lanes hold."""
+
+    def fused_step(keys, patches, model, prior, policy, n_active):
+        from repro.core import likelihood
+
+        cdt = policy.compute_dtype
+        ll = jax.vmap(
+            lambda p: likelihood.intensity_loglik(p, model, policy)
+        )(patches).astype(cdt)
+        lane = jnp.arange(ll.shape[-1])
+        log_w = jnp.where(
+            lane[None, :] < n_active[:, None],
+            prior.astype(cdt)[:, None] + ll,
+            jnp.asarray(-jnp.inf, cdt),
+        )
+        return fused_epilogue_masked(keys, log_w, policy, n_active)
+
+    return fused_step
+
+
 # Keyed by resampler name; register_resampler keeps these in sync so every
 # registered resampler has a fused reference (the masked form additionally
 # needs a MASKED_RESAMPLERS entry).
 FUSED_EPILOGUES: dict[str, Callable] = {}
 FUSED_EPILOGUES_BANKED: dict[str, Callable] = {}
 FUSED_EPILOGUES_MASKED: dict[str, Callable] = {}
+FUSED_STEPS: dict[str, Callable] = {}
+FUSED_STEPS_BANKED: dict[str, Callable] = {}
+FUSED_STEPS_MASKED: dict[str, Callable] = {}
 
 
 def register_resampler(name: str, fn: Resampler | None = None):
@@ -395,6 +468,10 @@ def register_resampler(name: str, fn: Resampler | None = None):
     RESAMPLERS[name] = fn
     FUSED_EPILOGUES[name] = make_fused_epilogue_reference(fn)
     FUSED_EPILOGUES_BANKED[name] = make_fused_epilogue_banked_reference(fn)
+    FUSED_STEPS[name] = make_fused_step_reference(FUSED_EPILOGUES[name])
+    FUSED_STEPS_BANKED[name] = make_fused_step_banked_reference(
+        FUSED_EPILOGUES_BANKED[name]
+    )
     return fn
 
 
@@ -413,6 +490,12 @@ FUSED_EPILOGUES_MASKED.update(
     {
         name: make_fused_epilogue_masked_reference(fn)
         for name, fn in MASKED_RESAMPLERS.items()
+    }
+)
+FUSED_STEPS_MASKED.update(
+    {
+        name: make_fused_step_masked_reference(fn)
+        for name, fn in FUSED_EPILOGUES_MASKED.items()
     }
 )
 

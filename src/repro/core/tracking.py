@@ -23,7 +23,7 @@ from repro.core.engine import (
     ParticleFilter,
     get_backend,
 )
-from repro.core.filter import SMCSpec
+from repro.core.filter import SMCSpec, StepFusion
 from repro.core.precision import PrecisionPolicy
 
 __all__ = [
@@ -127,8 +127,23 @@ def make_tracker_spec(
             return backend_loglik(patches, model, policy)
         return lik.intensity_loglik(patches, model, policy)
 
+    # The fusable structure of ``loglik`` (gather + intensity model),
+    # letting the engine stream likelihood → weights → resample in one
+    # pass (``FilterConfig.fused_step``).  Gated to this config's backend:
+    # the fused path must score patches with the same kernel the composed
+    # ``loglik`` dispatches, or the bitwise contract breaks.
+    def gather_obs(particles, frame, step):
+        del step
+        return lik.gather_patches(frame, particles["pos"], offsets)
+
     return SMCSpec(
-        init=init, transition=transition, loglik=loglik, slot_init=slot_init
+        init=init,
+        transition=transition,
+        loglik=loglik,
+        slot_init=slot_init,
+        step_fusion=StepFusion(
+            gather=gather_obs, model=model, backend=cfg.backend
+        ),
     )
 
 

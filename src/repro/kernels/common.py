@@ -1,12 +1,13 @@
 """Shared helpers for the Pallas kernels.
 
 Besides the launch utilities, this module holds the *shared kernel
-bodies* — the blockwise-carry cumsum, the CDF bisection, and the flat
-block-position builders.  The fused epilogue kernel
-(``repro.kernels.epilogue``) is bitwise-identical to the composed
-logsumexp→resample chain precisely because both execute these same op
-sequences; keeping a single definition makes that invariant structural
-instead of a copy-paste discipline.
+bodies* — the intensity-likelihood row sum, the online-logsumexp carry
+fold, the blockwise-carry cumsum, the CDF bisection, and the flat
+block-position builders.  The fused kernels (``repro.kernels.epilogue``,
+``repro.kernels.step``) are bitwise-identical to the composed
+likelihood→logsumexp→resample chain precisely because both sides execute
+these same op sequences; keeping a single definition makes that
+invariant structural instead of a copy-paste discipline.
 """
 
 from __future__ import annotations
@@ -19,12 +20,115 @@ __all__ = [
     "cdf_block",
     "flat_positions_f32",
     "flat_positions_i32",
+    "loglik_rows",
+    "online_lse_block",
+    "pairwise_sum",
+    "round_f32_to",
     "should_interpret",
     "pad_to_multiple",
     "NEG_INF",
 ]
 
 NEG_INF = float("-inf")
+
+
+def pairwise_sum(t: jax.Array) -> jax.Array:
+    """Sum over the last axis with a *fixed* pairwise tree of explicit
+    adds.  ``jnp.sum`` lets XLA pick the reduction order per shape and
+    fusion context — two programs summing identical rows can round
+    differently at 16-bit (or by fp32 ulps) — whereas an explicit op
+    chain is never reassociated, so this sum is bitwise independent of
+    launch blocking and backend.  It is the canonical reduction order for
+    the intensity likelihood: the jnp core path
+    (``repro.core.likelihood``), the standalone likelihood kernel, and
+    the fused step kernel all fold through it, which is what makes their
+    outputs bitwise-comparable.  Trailing exact-zero padding lanes are
+    free: a tail zero folds as ``x + 0`` at every level, so the padded
+    tree equals the unpadded tree bit for bit."""
+    while t.shape[-1] > 1:
+        n = t.shape[-1]
+        even = n - (n % 2)
+        folded = t[..., 0:even:2] + t[..., 1:even:2]
+        if n % 2:
+            folded = jnp.concatenate([folded, t[..., -1:]], axis=-1)
+        t = folded
+    return t[..., 0]
+
+
+def round_f32_to(x: jax.Array, dtype) -> jax.Array:
+    """Round an fp32 array onto ``dtype``'s value grid (round-to-nearest-
+    even), returning fp32.
+
+    Why this exists: XLA's CPU backend computes 16-bit arithmetic in fp32
+    and only rounds when a value materializes into a 16-bit buffer.  The
+    composed likelihood→epilogue chain materializes its log-likelihoods
+    and log-weights to HBM — two rounding points the fused step kernel
+    deliberately removes.  Re-creating those rounds with integer bit ops
+    (which the compiler cannot elide) keeps the fused kernel bitwise equal
+    to the composed chain; on hardware whose 16-bit ops truly round, the
+    incoming values are already on the grid and this is an exact no-op.
+    fp32 and wider are returned unchanged.  Since fp32 carries at least
+    2·p+2 significand bits for both half formats, the fp32-add-then-round
+    composition equals a native 16-bit add (no double-rounding error).
+    bf16 inputs below the fp32 normal floor (|x| < 2^-126) would need the
+    coarser bf16-subnormal grid; log-weight magnitudes never reach it.
+    """
+    dt = jnp.dtype(dtype)
+    if dt.itemsize >= 4:
+        return x
+    if dt == jnp.dtype(jnp.bfloat16):
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        bias = jnp.uint32(0x7FFF) + ((bits >> 16) & jnp.uint32(1))
+        rounded = jax.lax.bitcast_convert_type(
+            (bits + bias) & jnp.uint32(0xFFFF0000), jnp.float32
+        )
+        return jnp.where(jnp.isnan(x), x, rounded)
+    if dt == jnp.dtype(jnp.float16):
+        ax = jnp.abs(x)
+        # Subnormal range: the fp16 grid is uniform (2^-24); adding 0.5
+        # aligns ax so fp32's own RNE lands on it exactly.
+        half = jnp.float32(0.5)
+        sub = (ax + half) - half
+        # Normal range: Veltkamp split to 24-13 = 11 significand bits.
+        c = ax * jnp.float32((1 << 13) + 1)
+        norm = c - (c - ax)
+        y = jnp.where(ax < jnp.float32(2.0**-14), sub, norm)
+        # 65520 is the RNE overflow threshold (rounds to 2^16 -> inf).
+        y = jnp.where(ax >= jnp.float32(65520.0), jnp.float32(jnp.inf), y)
+        y = jnp.where(jnp.isnan(x), x, jnp.copysign(y, x))
+        return y
+    raise NotImplementedError(f"round_f32_to: unsupported dtype {dt}")
+
+
+def loglik_rows(x, *, bg, fg, isq, accum16: bool) -> jax.Array:
+    """Stable intensity log-likelihood of each row of a (rows, J) patch
+    block (paper Eq. 4): sum_j [((I_j-BG)*isq)^2 - ((I_j-FG)*isq)^2],
+    accumulated in the compute dtype when ``accum16`` else fp32.  Returns
+    the (rows,) sums *in the accumulation dtype* — callers cast.  Shared
+    by the standalone likelihood kernel and the fused step kernel so the
+    likelihood→weights fusion is bitwise by construction: the pairwise
+    tree keeps the per-row sum independent of the launch blocking."""
+    cdt = x.dtype
+    db = (x - jnp.asarray(bg, cdt)) * jnp.asarray(isq, cdt)
+    df = (x - jnp.asarray(fg, cdt)) * jnp.asarray(isq, cdt)
+    terms = db * db - df * df
+    adt = cdt if accum16 else jnp.float32
+    return pairwise_sum(terms.astype(adt))
+
+
+def online_lse_block(x, m_s, s_s) -> None:
+    """Fold one fp32 block into the online-logsumexp SMEM carry
+    ``(m_s, s_s)``: new running max, rescale the running sum, add the
+    block's exp-sum.  All-(-inf) streams keep ``s == 0`` under a neutral
+    rescale so the caller's finalize can emit ``m`` itself.  Shared by the
+    logsumexp, epilogue, and step kernels — the fused forms are bitwise
+    the composed chain because every consumer folds identical (64, 128)
+    fp32 blocks through this exact op sequence."""
+    m_old = m_s[0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(x))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
+    s_s[0, 0] = s_s[0, 0] * jnp.exp(m_old - m_safe) + jnp.sum(jnp.exp(x - m_safe))
+    m_s[0, 0] = m_new
 
 
 def flat_positions_i32(block_index, rows: int, lanes: int) -> jax.Array:

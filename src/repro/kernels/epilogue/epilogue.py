@@ -52,6 +52,7 @@ from repro.kernels.common import (
     cdf_block,
     flat_positions_f32,
     flat_positions_i32,
+    online_lse_block,
 )
 
 __all__ = [
@@ -106,14 +107,7 @@ def _epilogue_body(
 
     @pl.when(phase == 0)
     def _reduce():
-        m_old = m_s[0, 0]
-        m_new = jnp.maximum(m_old, jnp.max(x))
-        # exp(-inf - -inf) is guarded: when m_new is -inf every term is 0.
-        m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
-        s_s[0, 0] = s_s[0, 0] * jnp.exp(m_old - m_safe) + jnp.sum(
-            jnp.exp(x - m_safe)
-        )
-        m_s[0, 0] = m_new
+        online_lse_block(x, m_s, s_s)
 
     @pl.when(jnp.logical_and(phase == 0, i == nb - 1))
     def _stats():

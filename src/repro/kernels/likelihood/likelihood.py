@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import loglik_rows
+
 __all__ = ["loglik_call", "LANES"]
 
 LANES = 128
@@ -43,12 +45,7 @@ def _kernel(x_ref, out_ref, max_ref, m_s, *, bg, fg, isq, accum16):
         m_s[0, 0] = jnp.float32(-jnp.inf)
 
     x = x_ref[...]
-    cdt = x.dtype
-    db = (x - jnp.asarray(bg, cdt)) * jnp.asarray(isq, cdt)
-    df = (x - jnp.asarray(fg, cdt)) * jnp.asarray(isq, cdt)
-    terms = db * db - df * df
-    adt = cdt if accum16 else jnp.float32
-    ll = jnp.sum(terms.astype(adt), axis=1)  # (block_p,)
+    ll = loglik_rows(x, bg=bg, fg=fg, isq=isq, accum16=accum16)  # (block_p,)
     out_ref[...] = ll.astype(out_ref.dtype)[:, None]
     m_s[0, 0] = jnp.maximum(m_s[0, 0], jnp.max(ll.astype(jnp.float32)))
 

@@ -29,13 +29,17 @@ def intensity_loglik_with_max(
     """((P,) log-likelihoods, running max fp32) from gathered patches.
 
     ``model``: IntensityModel (hashable dataclass — static under jit);
-    ``policy``: PrecisionPolicy.  Padding along J uses the BG/FG midpoint
-    (term exactly 0); padding along P replicates the midpoint row, and the
-    padded rows are sliced off (they would contribute max=0 only when all
-    real logliks are negative — so the P axis is padded with a -inf-like
-    sentinel row instead: midpoint intensities give loglik 0, safe because
-    the fused max is only consumed relative to real rows via slicing... we
-    simply exclude pad rows from the fused max by masking in fp32).
+    ``policy``: PrecisionPolicy.
+
+    Padding: the J axis pads with the BG/FG midpoint, whose per-point term
+    is exactly 0, so padded lanes never perturb a row's log-likelihood.
+    The P axis also pads with midpoint rows — each scores exactly 0, which
+    is NOT a safe max sentinel (real rows are typically all negative).  The
+    kernel's fused running max is therefore only trusted when the P axis
+    needed no padding; whenever ``p_pad > 0`` it is discarded and the max
+    is recomputed as ``jnp.max`` in fp32 over the sliced real rows.  Either
+    way the returned max is over real rows only; the log-likelihood output
+    is always sliced to the first ``p`` rows.
     """
     if interpret is None:
         interpret = should_interpret()

@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import pairwise_sum
+
 __all__ = ["intensity_loglik_ref"]
 
 
@@ -25,5 +27,6 @@ def intensity_loglik_ref(
     df = (patches - jnp.asarray(fg, cdt)) * jnp.asarray(isq, cdt)
     terms = db * db - df * df
     adt = cdt if accum16 else jnp.float32
-    ll = jnp.sum(terms.astype(adt), axis=-1).astype(cdt)
+    # Same fixed-tree reduction order as the kernels and the core path.
+    ll = pairwise_sum(terms.astype(adt)).astype(cdt)
     return ll, jnp.max(ll.astype(jnp.float32))

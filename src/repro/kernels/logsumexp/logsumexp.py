@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import flat_positions_i32
+from repro.kernels.common import flat_positions_i32, online_lse_block
 
 __all__ = ["fused_normalize_call", "fused_normalize_masked_call", "LANES"]
 
@@ -56,14 +56,7 @@ def _body(x, phase, i, nb, w_ref, m_out, lse_out, sw_out, sw2_out, m_s, s_s,
 
     @pl.when(phase == 0)
     def _reduce():
-        m_old = m_s[0, 0]
-        m_new = jnp.maximum(m_old, jnp.max(x))
-        # exp(-inf - -inf) is guarded: when m_new is -inf every term is 0.
-        m_safe = jnp.where(jnp.isfinite(m_new), m_new, jnp.float32(0.0))
-        s_s[0, 0] = s_s[0, 0] * jnp.exp(m_old - m_safe) + jnp.sum(
-            jnp.exp(x - m_safe)
-        )
-        m_s[0, 0] = m_new
+        online_lse_block(x, m_s, s_s)
 
     @pl.when(jnp.logical_and(phase == 0, i == nb - 1))
     def _stats():

@@ -1,0 +1,23 @@
+"""Fused step kernel: likelihood → weights in one streaming Pallas pass.
+
+One kernel per bank row streams gathered observation patches through VMEM,
+scores them with the stable intensity likelihood, and runs the full weight
+pipeline (online-LSE → normalize → Kish sums → in-VMEM CDF → systematic
+search) without ever materializing the (B, P) log-weight array in HBM.
+"""
+
+from repro.kernels.step.step import (
+    LANES,
+    fused_step_call,
+    fused_step_masked_call,
+    fused_step_stats_call,
+    fused_step_stats_masked_call,
+)
+
+__all__ = [
+    "LANES",
+    "fused_step_call",
+    "fused_step_masked_call",
+    "fused_step_stats_call",
+    "fused_step_stats_masked_call",
+]

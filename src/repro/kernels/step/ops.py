@@ -1,0 +1,321 @@
+"""Public entry points for the fused step kernel (likelihood → weights).
+
+``fused_step`` handles one filter and the ``_batched`` / ``_masked`` forms
+a (ragged) bank — one kernel launch per call that scores gathered patches
+with the stable intensity likelihood, adds the prior log-weight, and runs
+the full fused weight epilogue without materializing the (B, P) log-weight
+array in HBM.  Systematic offsets are drawn from the caller's keys exactly
+as the composed chain draws them, so with the same keys the fused step is
+bitwise the composed ``intensity_loglik → fused_epilogue`` chain.
+
+Return convention (the :class:`repro.core.engine.Backend` fused-step
+contract): ``(weights, ancestors, log_z, max_log_w, sum_w, sum_w2)`` —
+identical to the fused-epilogue contract, since the step kernel *is* that
+epilogue with the likelihood fused in front.
+
+``fused_step_stats_batched`` / ``_masked`` are the meshed shard-local
+heads: likelihood + per-lane prior add + online-LSE stats in one pass,
+returning ``(log_w, m, lse)`` for the engine's one-pmax+psum merge and the
+existing ``fused_finalize`` tail.
+
+Chunking knobs: ``block_p`` is the particle-chunk height of the streamed
+likelihood segment (rows per VMEM-resident patch block); ``block_rows``
+is the weight-pipeline block height.  ``block_rows`` must stay at the
+epilogue's default for the bitwise contract — the online-LSE carry is
+grouping-dependent — but ``block_p`` is a pure performance knob: the
+per-row likelihood sum folds through the fixed ``pairwise_sum`` tree, so
+any chunk height (a multiple of 128 dividing ``128 * block_rows``) gives
+bit-identical results at every policy (see ``DEFAULT_BLOCK_P``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to_multiple, should_interpret
+from repro.kernels.step.step import (
+    LANES,
+    fused_step_call,
+    fused_step_masked_call,
+    fused_step_stats_call,
+    fused_step_stats_masked_call,
+)
+
+__all__ = [
+    "fused_step",
+    "fused_step_batched",
+    "fused_step_masked",
+    "fused_step_stats_batched",
+    "fused_step_stats_masked",
+]
+
+DEFAULT_BLOCK_ROWS = 64  # weight-pipeline blocks: must match the epilogue
+# Particles per streamed likelihood chunk.  The per-row sum folds through
+# the fixed ``pairwise_sum`` tree — an explicit op chain that is never
+# reassociated — so it is bitwise independent of the chunk height at every
+# policy, and ``block_p`` is a pure performance knob: any multiple of 128
+# that divides 128*block_rows is bitwise the composed chain.  2048 streams
+# a 1 MiB fp32 patch chunk per grid step (16x fewer likelihood-segment
+# launches than the composed kernel's 128-row blocks) while staying far
+# under VMEM even double-buffered.
+DEFAULT_BLOCK_P = 2048
+
+
+def _prep_patches(patches, model, policy, block_rows, block_p):
+    """Cast to the compute dtype and pad: J to the 128-lane boundary and P
+    to the weight-pipeline block multiple, both with the BG/FG midpoint
+    (stable term exactly 0).  Pad rows are masked to -inf by position
+    inside the kernel before they can reach any carry."""
+    j = patches.shape[-1]
+    isq = (model.scale * j) ** -0.5
+    mid = 0.5 * (model.background + model.foreground)
+    x = patches.astype(policy.compute_dtype)
+    x = pad_to_multiple(x, LANES, axis=-1, value=mid)
+    x = pad_to_multiple(x, LANES * block_rows, axis=-2, value=mid)
+    accum16 = jnp.dtype(policy.accum_dtype).itemsize == 2
+    return x, isq, accum16
+
+
+def _step_impl(
+    u0, patches, prior, n_active, *, model, policy, block_rows, block_p,
+    interpret,
+):
+    nbank, n, _ = patches.shape
+    x3d, isq, accum16 = _prep_patches(
+        patches, model, policy, block_rows, block_p
+    )
+    common = dict(
+        bg=model.background,
+        fg=model.foreground,
+        isq=isq,
+        accum16=accum16,
+        block_p=block_p,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    if n_active is None:
+        w3d, anc3d, m, lse, sw, sw2 = fused_step_call(
+            x3d,
+            u0.reshape(nbank, 1),
+            prior.reshape(nbank, 1),
+            n_total=n,
+            **common,
+        )
+    else:
+        w3d, anc3d, m, lse, sw, sw2 = fused_step_masked_call(
+            x3d,
+            u0.reshape(nbank, 1),
+            prior.reshape(nbank, 1),
+            n_active.reshape(nbank, 1),
+            **common,
+        )
+    w = w3d.reshape(nbank, -1)[:, :n]
+    anc = jnp.minimum(anc3d.reshape(nbank, -1)[:, :n], n - 1)
+    return w, anc, lse[:, 0], m[:, 0], sw[:, 0], sw2[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "policy", "block_rows", "block_p", "interpret"),
+)
+def fused_step(
+    key: jax.Array,
+    patches: jax.Array,
+    model,
+    prior: jax.Array,
+    policy,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    """One-pass (weights, ancestors, log_z, max, sum_w, sum_w2) for one
+    filter from its (P, J) gathered patches and scalar uniform prior
+    log-weight — bitwise the composed ``intensity_loglik`` →
+    ``fused_epilogue`` chain with the same key."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.random.uniform(key, (), jnp.float32).reshape(1)
+    w, anc, lse, m, sw, sw2 = _step_impl(
+        u0,
+        patches[None],
+        prior.reshape(1),
+        None,
+        model=model,
+        policy=policy,
+        block_rows=block_rows,
+        block_p=block_p,
+        interpret=interpret,
+    )
+    return w[0], anc[0], lse[0], m[0], sw[0], sw2[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "policy", "block_rows", "block_p", "interpret"),
+)
+def fused_step_batched(
+    keys: jax.Array,
+    patches: jax.Array,
+    model,
+    prior: jax.Array,
+    policy,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    """Per-row fused step over a (B, P, J) patch bank: (B,) keys draw
+    per-row offsets, ``prior`` is the (B,) per-row uniform prior
+    log-weight; every row is bitwise ``fused_step`` on that row alone."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _step_impl(
+        u0,
+        patches,
+        prior,
+        None,
+        model=model,
+        policy=policy,
+        block_rows=block_rows,
+        block_p=block_p,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "policy", "block_rows", "block_p", "interpret"),
+)
+def fused_step_masked(
+    keys: jax.Array,
+    patches: jax.Array,
+    model,
+    prior: jax.Array,
+    policy,
+    n_active: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    """Ragged fused step: (B,) per-row active counts, ``prior`` the (B,)
+    per-row ``log_uniform``.  The active prefix is bitwise the unmasked
+    kernel on a width-n row whatever the inactive patch lanes hold;
+    ancestors past the count clip and must be masked by the caller."""
+    if interpret is None:
+        interpret = should_interpret()
+    u0 = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(keys)
+    return _step_impl(
+        u0,
+        patches,
+        prior,
+        n_active,
+        model=model,
+        policy=policy,
+        block_rows=block_rows,
+        block_p=block_p,
+        interpret=interpret,
+    )
+
+
+def _stats_impl(
+    patches, log_w, n_loc, *, model, policy, block_rows, block_p, interpret
+):
+    nbank, n = log_w.shape
+    x3d, isq, accum16 = _prep_patches(
+        patches, model, policy, block_rows, block_p
+    )
+    prior3d = pad_to_multiple(
+        log_w.astype(policy.compute_dtype),
+        LANES * block_rows,
+        axis=-1,
+        value=-jnp.inf,
+    ).reshape(nbank, -1, LANES)
+    common = dict(
+        bg=model.background,
+        fg=model.foreground,
+        isq=isq,
+        accum16=accum16,
+        block_p=block_p,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    if n_loc is None:
+        lw3d, m, lse = fused_step_stats_call(
+            x3d, prior3d, n_total=n, **common
+        )
+    else:
+        lw3d, m, lse = fused_step_stats_masked_call(
+            x3d, prior3d, n_loc.reshape(nbank, 1), **common
+        )
+    lw = lw3d.reshape(nbank, -1)[:, :n]
+    return lw, m[:, 0], lse[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "policy", "block_rows", "block_p", "interpret"),
+)
+def fused_step_stats_batched(
+    patches: jax.Array,
+    log_w: jax.Array,
+    model,
+    policy,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    """Meshed shard-local head: (B, P_loc, J) patches + (B, P_loc) carried
+    prior log-weights -> (new log_w (B, P_loc), m (B,), lse (B,)) — the
+    likelihood, prior add, and shard-local online-LSE stats of the
+    composed chain in one pass."""
+    if interpret is None:
+        interpret = should_interpret()
+    return _stats_impl(
+        patches,
+        log_w,
+        None,
+        model=model,
+        policy=policy,
+        block_rows=block_rows,
+        block_p=block_p,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("model", "policy", "block_rows", "block_p", "interpret"),
+)
+def fused_step_stats_masked(
+    patches: jax.Array,
+    log_w: jax.Array,
+    model,
+    policy,
+    n_loc: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_p: int = DEFAULT_BLOCK_P,
+    interpret: bool | None = None,
+):
+    """Masked meshed head: (B,) *shard-local* active counts — lanes past
+    the local count leave the kernel as -inf log-weights and contribute
+    exactly 0 to the stats, the ragged-bank invariant."""
+    if interpret is None:
+        interpret = should_interpret()
+    return _stats_impl(
+        patches,
+        log_w,
+        n_loc,
+        model=model,
+        policy=policy,
+        block_rows=block_rows,
+        block_p=block_p,
+        interpret=interpret,
+    )

@@ -1,0 +1,577 @@
+"""Pallas kernel: the fused tracker step — likelihood → weights, one pass.
+
+The fused epilogue (``repro.kernels.epilogue``) removed the HBM round trips
+*inside* the weight pipeline, but a full tracker step is
+likelihood-dominated: the composed chain still writes the per-particle
+log-likelihoods to HBM, re-reads them to add the prior, and hands the
+resulting (B, P) log-weight array to the epilogue, which reads it twice
+more.  This kernel deletes all of that traffic.  Per bank row the grid is
+one flat sequential segment chain (TPU grids run sequentially per core,
+last dimension innermost):
+
+segment L  (``nbp`` steps) likelihood: stream one (block_p, Jpad) patch
+           chunk from HBM, score it with the shared ``loglik_rows`` body
+           (paper Eq. 4), add the prior log-weight, mask positions past the
+           row's particle count to -inf, and park the fp32 chunk in a VMEM
+           log-weight scratch.  The (B, P) log-weight array never exists in
+           HBM.
+segments 0/1/2  (``3 * nw`` steps) the epilogue: the *same*
+           ``_epilogue_body`` the fused epilogue kernel runs — online-LSE
+           reduce, normalize + Kish sums + in-VMEM CDF, systematic search —
+           reading its (block_rows, 128) fp32 blocks out of the scratch
+           instead of HBM.
+
+Bitwise contract: the per-row likelihood sum is independent of how rows are
+grouped into chunks, the prior add is the same compute-dtype addition the
+engine's ``log_weights + log_lik`` performs, and the scratch holds exactly
+the fp32 values ``_as_blocks`` + ``astype(fp32)`` would have produced — so
+every downstream phase folds identical blocks through identical op
+sequences and the fused step reproduces the composed
+``intensity_loglik → fused_epilogue`` chain bit for bit, dense, banked, and
+masked (ragged ``n_active``), at fp32/bf16/fp16.
+
+``fused_step_stats_call`` is the shard-local head for the meshed bank's
+``local`` RNA scheme: the same likelihood segment, but the prior is a full
+per-lane log-weight block (RNA weights are not uniform after a ring
+exchange) and the tail is only the online-LSE stats reduce — the engine
+merges ``(m, lse)`` across shards with the existing one-pmax+psum merge and
+chains the existing ``fused_finalize`` kernels.  The shard's new cdt
+log-weights are written once (they are carried state), but the fp32 stats
+stream never touches HBM.
+
+HBM traffic per row and step: read patches once, write weights and
+ancestors once.  VMEM: the (rows, 128) fp32 log-weight scratch plus the
+epilogue's (rows, 128) fp32 CDF scratch (512 KiB total at 64k particles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (
+    flat_positions_i32,
+    loglik_rows,
+    online_lse_block,
+    round_f32_to,
+)
+from repro.kernels.epilogue.epilogue import _epilogue_body
+
+__all__ = [
+    "fused_step_call",
+    "fused_step_masked_call",
+    "fused_step_stats_call",
+    "fused_step_stats_masked_call",
+    "LANES",
+]
+
+LANES = 128
+
+
+def _loglik_chunk(x_ref, *, bg, fg, isq, accum16):
+    """Score one (block_p, Jpad) patch chunk; return the (bpr, 128) fp32
+    view of the log-likelihoods, rounded onto the compute-dtype grid
+    (bpr = block_p / 128).  The explicit round stands in for the composed
+    likelihood kernel's HBM write — the materialization point where that
+    chain's values snap to the compute dtype."""
+    x = x_ref[0]
+    ll = loglik_rows(x, bg=bg, fg=fg, isq=isq, accum16=accum16)
+    bpr = x.shape[0] // LANES
+    ll32 = round_f32_to(ll.astype(jnp.float32), x.dtype)
+    return ll32.reshape(bpr, LANES)
+
+
+def _store_log_w(logw_s, t, lw32, n):
+    """Park one fp32 log-weight chunk (already on the compute-dtype grid)
+    in the scratch, pinning positions >= n to -inf — exactly the values
+    ``_as_blocks`` padding plus the masked epilogue's position test would
+    have produced."""
+    bpr = lw32.shape[0]
+    x32 = jnp.where(
+        flat_positions_i32(t, bpr, LANES) < n,
+        lw32,
+        jnp.float32(-jnp.inf),
+    )
+    logw_s[pl.ds(t * bpr, bpr), :] = x32
+
+
+def _step_kernel_body(
+    t,
+    n,
+    inv,
+    prior_ref,
+    x_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    logw_s,
+    u0_ref,
+    *,
+    bg,
+    fg,
+    isq,
+    accum16,
+    nbp,
+    block_rows,
+    n_cdf,
+):
+    """Shared dense/masked body: likelihood segment then epilogue phases."""
+
+    @pl.when(t < nbp)
+    def _loglik():
+        ll32 = _loglik_chunk(x_ref, bg=bg, fg=fg, isq=isq, accum16=accum16)
+        # fp32 add of on-grid values + round == the engine's compute-dtype
+        # ``log_weights + log_lik`` (fp32 has >= 2p+2 significand bits for
+        # both half formats, so there is no double-rounding error).
+        lw32 = round_f32_to(prior_ref[0, 0] + ll32, x_ref.dtype)
+        _store_log_w(logw_s, t, lw32, n)
+
+    nw = logw_s.shape[0] // block_rows
+    e = t - nbp
+    # jnp floor division: e < 0 during the likelihood segment gives a
+    # negative phase, so none of the epilogue's pl.when guards fire there.
+    phase = e // nw
+    i = e % nw
+    x = logw_s[pl.ds(i * block_rows, block_rows), :]
+    _epilogue_body(
+        x, inv, phase, i, nw, u0_ref, w_ref, anc_ref, m_out, lse_out,
+        sw_out, sw2_out, m_s, s_s, sw_s, sw2_s, carry_s, cdf_s, n_cdf=n_cdf,
+    )
+
+
+def _dense_kernel(
+    u0_ref,
+    prior_ref,
+    x_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    logw_s,
+    *,
+    bg,
+    fg,
+    isq,
+    accum16,
+    n_total,
+    nbp,
+    block_rows,
+    n_cdf,
+):
+    t = pl.program_id(1)
+    inv = jnp.float32(1.0) / jnp.float32(n_total)
+    _step_kernel_body(
+        t, n_total, inv, prior_ref, x_ref, w_ref, anc_ref, m_out, lse_out,
+        sw_out, sw2_out, m_s, s_s, sw_s, sw2_s, carry_s, cdf_s, logw_s,
+        u0_ref, bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows, n_cdf=n_cdf,
+    )
+
+
+def _masked_kernel(
+    u0_ref,
+    prior_ref,
+    n_ref,
+    x_ref,
+    w_ref,
+    anc_ref,
+    m_out,
+    lse_out,
+    sw_out,
+    sw2_out,
+    m_s,
+    s_s,
+    sw_s,
+    sw2_s,
+    carry_s,
+    cdf_s,
+    logw_s,
+    *,
+    bg,
+    fg,
+    isq,
+    accum16,
+    nbp,
+    block_rows,
+    n_cdf,
+):
+    """As ``_dense_kernel`` with this row's active count from SMEM: lanes at
+    position >= n_active never reach the scratch finite and the u-grid
+    spans the active count — the ragged-bank invariant."""
+    t = pl.program_id(1)
+    n = n_ref[0, 0]
+    n_f = jnp.maximum(n, 1).astype(jnp.float32)
+    inv = jnp.float32(1.0) / n_f
+    _step_kernel_body(
+        t, n, inv, prior_ref, x_ref, w_ref, anc_ref, m_out, lse_out,
+        sw_out, sw2_out, m_s, s_s, sw_s, sw2_s, carry_s, cdf_s, logw_s,
+        u0_ref, bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows, n_cdf=n_cdf,
+    )
+
+
+def _step_call(
+    masked: bool,
+    patches3d: jax.Array,
+    u0: jax.Array,
+    prior: jax.Array,
+    n_active: jax.Array | None,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    n_total: int,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    nbank, p_pad, jpad = patches3d.shape
+    assert jpad % LANES == 0, patches3d.shape
+    assert p_pad % (block_rows * LANES) == 0, (p_pad, block_rows)
+    assert block_p % LANES == 0 and (block_rows * LANES) % block_p == 0, (
+        block_p,
+        block_rows,
+    )
+    assert u0.shape == (nbank, 1) and prior.shape == (nbank, 1)
+    rows = p_pad // LANES
+    nbp = p_pad // block_p
+    nw = rows // block_rows
+    n_cdf = rows * LANES
+    kernel = functools.partial(
+        _masked_kernel if masked else _dense_kernel,
+        bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows, n_cdf=n_cdf,
+        **({} if masked else {"n_total": n_total}),
+    )
+    # Clamped index maps: each operand streams only during its own segment
+    # and its current block is flushed right after the step that wrote it.
+    patch_blk = pl.BlockSpec(
+        (1, block_p, jpad), lambda b, t: (b, jnp.minimum(t, nbp - 1), 0)
+    )
+    w_blk = pl.BlockSpec(
+        (1, block_rows, LANES),
+        lambda b, t: (b, jnp.clip(t - nbp - nw, 0, nw - 1), 0),
+    )
+    anc_blk = pl.BlockSpec(
+        (1, block_rows, LANES),
+        lambda b, t: (b, jnp.clip(t - nbp - 2 * nw, 0, nw - 1), 0),
+    )
+    scalar = pl.BlockSpec((1, 1), lambda b, t: (b, 0))
+    smem = pl.BlockSpec((1, 1), lambda b, t: (b, 0), memory_space=pltpu.SMEM)
+    in_specs = [smem, smem] + ([smem] if masked else []) + [patch_blk]
+    args = [u0.astype(jnp.float32), prior.astype(jnp.float32)]
+    if masked:
+        args.append(n_active.astype(jnp.int32))
+    args.append(patches3d)
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, nbp + 3 * nw),
+        in_specs=in_specs,
+        out_specs=[w_blk, anc_blk, scalar, scalar, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), patches3d.dtype),
+            jax.ShapeDtypeStruct((nbank, rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+def fused_step_call(
+    patches3d: jax.Array,
+    u0: jax.Array,
+    prior: jax.Array,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    n_total: int,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """patches3d: (B, P_pad, Jpad) compute-dtype patches (P padded to a
+    multiple of ``block_rows * 128``); u0 / prior: (B, 1) fp32 systematic
+    offsets and per-row uniform prior log-weights.
+
+    Returns (w (B, rows, 128) in the patch dtype, ancestors (B, rows, 128)
+    int32, m (B, 1), lse (B, 1), sum_w (B, 1), sum_w2 (B, 1)).
+    """
+    return _step_call(
+        False, patches3d, u0, prior, None, bg=bg, fg=fg, isq=isq,
+        accum16=accum16, n_total=n_total, block_p=block_p,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+def fused_step_masked_call(
+    patches3d: jax.Array,
+    u0: jax.Array,
+    prior: jax.Array,
+    n_active: jax.Array,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """Masked form: adds (B, 1) int32 per-row active counts; ``prior`` is
+    each row's ``log_uniform``.  Same output contract as the masked fused
+    epilogue (inactive weight lanes 0, clipped ancestors)."""
+    return _step_call(
+        True, patches3d, u0, prior, n_active, bg=bg, fg=fg, isq=isq,
+        accum16=accum16, n_total=0, block_p=block_p, block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shard-local head for the meshed bank's ``local`` RNA scheme: likelihood +
+# prior add + online-LSE stats in one pass.  The prior here is a full
+# per-lane log-weight block (RNA weights are not uniform after a ring
+# exchange); the shard's new cdt log-weights are written once — they are
+# carried state — and the engine merges the (m, lse) stats across shards
+# before chaining the existing ``fused_finalize`` kernels.
+
+
+def _head_body(
+    t,
+    n,
+    prior_ref,
+    x_ref,
+    lw_ref,
+    m_out,
+    lse_out,
+    m_s,
+    s_s,
+    logw_s,
+    *,
+    bg,
+    fg,
+    isq,
+    accum16,
+    nbp,
+    block_rows,
+):
+    @pl.when(t < nbp)
+    def _loglik():
+        ll32 = _loglik_chunk(x_ref, bg=bg, fg=fg, isq=isq, accum16=accum16)
+        bpr = ll32.shape[0]
+        lw32 = round_f32_to(
+            prior_ref[0].astype(jnp.float32) + ll32, x_ref.dtype
+        )
+        masked32 = jnp.where(
+            flat_positions_i32(t, bpr, LANES) < n,
+            lw32,
+            jnp.float32(-jnp.inf),
+        )
+        logw_s[pl.ds(t * bpr, bpr), :] = masked32
+
+    nw = logw_s.shape[0] // block_rows
+    e = t - nbp
+
+    @pl.when(e == 0)
+    def _init():
+        m_s[0, 0] = jnp.float32(-jnp.inf)
+        s_s[0, 0] = jnp.float32(0.0)
+
+    i = jnp.clip(e, 0, nw - 1)
+    x = logw_s[pl.ds(i * block_rows, block_rows), :]
+
+    @pl.when(e >= 0)
+    def _reduce():
+        # The cdt write-back of the carried log-weight state happens here,
+        # from the scratch, not in the likelihood segment: the scratch holds
+        # fp32 values already on the cdt grid (inactive lanes -inf — the
+        # engine's ``where(active, log_w + log_lik, -inf)``) so the downcast
+        # is exact, and keeping the likelihood block's only consumer the
+        # scratch store keeps its lowering — LLVM contracts a multiply
+        # feeding a subtract into an FMA per fusion context — identical to
+        # the composed likelihood kernel's.
+        lw_ref[0] = x.astype(lw_ref.dtype)
+        online_lse_block(x, m_s, s_s)
+
+    @pl.when(e == nw - 1)
+    def _stats():
+        m = m_s[0, 0]
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(s_s[0, 0]), m)
+        m_out[0, 0] = m
+        lse_out[0, 0] = lse
+
+
+def _head_dense_kernel(
+    prior_ref, x_ref, lw_ref, m_out, lse_out, m_s, s_s, logw_s,
+    *, bg, fg, isq, accum16, n_total, nbp, block_rows,
+):
+    t = pl.program_id(1)
+    _head_body(
+        t, n_total, prior_ref, x_ref, lw_ref, m_out, lse_out, m_s, s_s,
+        logw_s, bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows,
+    )
+
+
+def _head_masked_kernel(
+    n_ref, prior_ref, x_ref, lw_ref, m_out, lse_out, m_s, s_s, logw_s,
+    *, bg, fg, isq, accum16, nbp, block_rows,
+):
+    """Ragged twin: the per-row count is this shard's *local* active count."""
+    t = pl.program_id(1)
+    _head_body(
+        t, n_ref[0, 0], prior_ref, x_ref, lw_ref, m_out, lse_out, m_s, s_s,
+        logw_s, bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows,
+    )
+
+
+def _head_call(
+    masked: bool,
+    patches3d: jax.Array,
+    prior3d: jax.Array,
+    n_loc: jax.Array | None,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    n_total: int,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    nbank, p_pad, jpad = patches3d.shape
+    assert jpad % LANES == 0, patches3d.shape
+    assert p_pad % (block_rows * LANES) == 0, (p_pad, block_rows)
+    assert block_p % LANES == 0 and (block_rows * LANES) % block_p == 0, (
+        block_p,
+        block_rows,
+    )
+    rows = p_pad // LANES
+    bpr = block_p // LANES
+    assert prior3d.shape == (nbank, rows, LANES), prior3d.shape
+    nbp = p_pad // block_p
+    nw = rows // block_rows
+    kernel = functools.partial(
+        _head_masked_kernel if masked else _head_dense_kernel,
+        bg=bg, fg=fg, isq=isq, accum16=accum16, nbp=nbp,
+        block_rows=block_rows,
+        **({} if masked else {"n_total": n_total}),
+    )
+    patch_blk = pl.BlockSpec(
+        (1, block_p, jpad), lambda b, t: (b, jnp.minimum(t, nbp - 1), 0)
+    )
+    prior_blk = pl.BlockSpec(
+        (1, bpr, LANES), lambda b, t: (b, jnp.minimum(t, nbp - 1), 0)
+    )
+    # The cdt log-weight output streams out during the *stats* segment (one
+    # block_rows-high block per step, read back from the fp32 scratch).
+    lw_blk = pl.BlockSpec(
+        (1, block_rows, LANES),
+        lambda b, t: (b, jnp.clip(t - nbp, 0, nw - 1), 0),
+    )
+    scalar = pl.BlockSpec((1, 1), lambda b, t: (b, 0))
+    smem = pl.BlockSpec((1, 1), lambda b, t: (b, 0), memory_space=pltpu.SMEM)
+    in_specs = ([smem] if masked else []) + [prior_blk, patch_blk]
+    args = ([n_loc.astype(jnp.int32)] if masked else []) + [
+        prior3d,
+        patches3d,
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=(nbank, nbp + nw),
+        in_specs=in_specs,
+        out_specs=[lw_blk, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbank, rows, LANES), patches3d.dtype),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbank, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+def fused_step_stats_call(
+    patches3d: jax.Array,
+    prior3d: jax.Array,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    n_total: int,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """patches3d: (B, P_pad, Jpad); prior3d: (B, rows, 128) compute-dtype
+    prior log-weights.  Returns (log_w (B, rows, 128) cdt, m (B, 1),
+    lse (B, 1)) with fp32 shard-local online-LSE stats."""
+    return _head_call(
+        False, patches3d, prior3d, None, bg=bg, fg=fg, isq=isq,
+        accum16=accum16, n_total=n_total, block_p=block_p,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+def fused_step_stats_masked_call(
+    patches3d: jax.Array,
+    prior3d: jax.Array,
+    n_loc: jax.Array,
+    *,
+    bg: float,
+    fg: float,
+    isq: float,
+    accum16: bool,
+    block_p: int,
+    block_rows: int,
+    interpret: bool,
+):
+    """Masked head: adds (B, 1) int32 shard-local active counts."""
+    return _head_call(
+        True, patches3d, prior3d, n_loc, bg=bg, fg=fg, isq=isq,
+        accum16=accum16, n_total=0, block_p=block_p, block_rows=block_rows,
+        interpret=interpret,
+    )

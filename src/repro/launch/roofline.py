@@ -32,6 +32,8 @@ __all__ = [
     "render_markdown",
     "epilogue_rows",
     "render_epilogue_markdown",
+    "step_rows",
+    "render_step_markdown",
 ]
 
 PEAK_FLOPS = 197e12  # bf16 / chip
@@ -248,6 +250,101 @@ def render_epilogue_markdown(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# Full-step traffic model: HBM bytes per particle-step of the whole
+# likelihood → weights → resample chain (the fig6 kernel sequence),
+# composed vs the fused step kernel.  The XLA patch gather *writes* J·c
+# bytes of patches in every variant (identical, excluded, like particle
+# state); what differs is everything after the patch matrix exists.  Per
+# particle, with c = compute-dtype bytes and J = disk points:
+#
+#   composed (pre-PR):   likelihood reads patches + writes log-lik
+#                        (J·c + c), the weight add re-reads it and writes
+#                        log_w (2c), then the pre-fusion normalize chain
+#                        (4c + 16 — see the epilogue model)  = J·c + 7c + 16
+#   composed (+fused     likelihood (J·c + c) + weight add (2c) + the
+#    epilogue):          fused epilogue (3c + 8)             = J·c + 6c + 8
+#   fused step:          one pass reads patches (J·c), writes w (c), and
+#                        writes + reads back ancestors (8); the log-lik
+#                        and log-weight arrays never touch HBM = J·c + c + 8
+#
+# The fused saving is exactly the 5c of intermediate log-lik/log-weight
+# traffic the composed chain round-trips between kernels.
+
+_DEFAULT_DISK_POINTS = 69  # radius-4 disk, the paper's template
+
+
+def step_rows(particles: int = 65_536, points: int = _DEFAULT_DISK_POINTS) -> list[dict]:
+    """Per-policy full-step traffic: bytes/particle-step and the projected
+    HBM-bound step time at ``particles``, composed chain vs the fused step
+    kernel.  Attaches the measured speedup from BENCH_fig6.json when one is
+    present (exact ``particles`` when recorded, else the largest size the
+    sweep recorded), mirroring the ``--epilogue`` wiring."""
+    measured = {}
+    bench = _read(os.path.join(os.getcwd(), "BENCH_fig6.json"))
+    if bench:
+        by_policy: dict[str, list[dict]] = {}
+        for r in bench.get("records", []):
+            by_policy.setdefault(r["policy"], []).append(r)
+        for pol, recs in by_policy.items():
+            exact = [r for r in recs if r["particles"] == particles]
+            pick = (
+                exact[0]
+                if exact
+                else max(recs, key=lambda r: r["particles"])
+            )
+            measured[pol] = pick["speedup_fused_vs_composed"]
+    rows = []
+    for policy, c in _EPILOGUE_DTYPE_BYTES.items():
+        patch = points * c
+        composed_pre = patch + 7 * c + 16
+        composed = patch + 6 * c + 8
+        fused = patch + c + 8
+        rows.append(
+            {
+                "policy": policy,
+                "disk_points": points,
+                "bytes_per_particle_composed_pre": composed_pre,
+                "bytes_per_particle_composed": composed,
+                "bytes_per_particle_fused": fused,
+                "traffic_ratio_fused_vs_composed": composed / fused,
+                "hbm_s_composed": composed * particles / HBM_BW,
+                "hbm_s_fused": fused * particles / HBM_BW,
+                "measured_speedup": measured.get(policy),
+            }
+        )
+    return rows
+
+
+def render_step_markdown(rows: list[dict]) -> str:
+    out = [
+        "| policy | B/particle composed(pre) | composed(+epilogue) | fused "
+        "step | traffic ratio | HBM s/step composed | fused | measured "
+        "speedup |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        meas = (
+            f"{r['measured_speedup']:.2f}x"
+            if r["measured_speedup"] is not None
+            else "—"
+        )
+        out.append(
+            "| {p} | {pre} | {c} | {f} | {ratio:.2f}x | {hc:.2e} | "
+            "{hf:.2e} | {meas} |".format(
+                p=r["policy"],
+                pre=r["bytes_per_particle_composed_pre"],
+                c=r["bytes_per_particle_composed"],
+                f=r["bytes_per_particle_fused"],
+                ratio=r["traffic_ratio_fused_vs_composed"],
+                hc=r["hbm_s_composed"],
+                hf=r["hbm_s_fused"],
+                meas=meas,
+            )
+        )
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--art", default=ART)
@@ -259,11 +356,31 @@ def main() -> None:
         help="print the weight-epilogue HBM traffic table (bytes per "
         "particle-step, composed vs fused) instead of the arch table",
     )
+    ap.add_argument(
+        "--step",
+        action="store_true",
+        help="print the full-step HBM traffic table (patch reads + "
+        "likelihood + weights per particle-step, composed chain vs the "
+        "fused step kernel) instead of the arch table",
+    )
     ap.add_argument("--particles", type=int, default=65_536)
+    ap.add_argument(
+        "--points",
+        type=int,
+        default=_DEFAULT_DISK_POINTS,
+        help="disk points J per patch for --step (radius-4 default)",
+    )
     args = ap.parse_args()
     if args.epilogue:
         rows = epilogue_rows(args.particles)
         print(render_epilogue_markdown(rows))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1)
+        return
+    if args.step:
+        rows = step_rows(args.particles, args.points)
+        print(render_step_markdown(rows))
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(rows, f, indent=1)

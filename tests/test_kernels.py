@@ -123,6 +123,32 @@ def test_likelihood_kernel_sweep(p, j, pname):
     np.testing.assert_allclose(float(m), float(mr), rtol=1e-3, atol=0.5 + ulp)
 
 
+@pytest.mark.parametrize("p", [5, 100, 128, 129, 1000])
+@pytest.mark.parametrize("pname", ["fp16", "bf16", "fp32", "fp16_mixed"])
+def test_likelihood_pad_rows_never_win_the_max(p, pname):
+    """P-axis pad rows score exactly 0 — a poisoned sentinel when every
+    real row is negative (the common case).  The returned max must be the
+    max over *real* rows at any precision, never the pad rows' 0."""
+    pol = get_policy(pname)
+    model = IntensityModel(radius=4)
+    # Patches far from the foreground intensity: every real row's
+    # log-likelihood is strongly negative, so any pad-row leak (score 0)
+    # would win the running max outright.
+    patches = jax.random.uniform(
+        jax.random.key(p), (p, model.num_points), jnp.float32, 10.0, 30.0
+    )
+    ll, m = lik_ops.intensity_loglik_with_max(patches, model, pol)
+    assert ll.shape == (p,)
+    true_max = float(jnp.max(ll.astype(jnp.float32)))
+    assert true_max < -0.5, "test needs all-negative real rows"
+    # A pad leak would pull the max all the way up to 0; the legitimate
+    # slack is one compute-dtype ulp (the fused max carries pre-rounding
+    # fp32 values when the P axis needed no padding).
+    assert float(m) < -0.5
+    ulp = float(jnp.finfo(pol.compute_dtype).eps) * abs(true_max)
+    np.testing.assert_allclose(float(m), true_max, atol=ulp, rtol=0)
+
+
 def test_likelihood_kernel_matches_core_stable_path():
     """Kernel == core.likelihood (the jnp reference path used in filter)."""
     from repro.core import likelihood as core_lik

@@ -1,0 +1,505 @@
+"""Fused full-step equivalence: likelihood → weights in one pass.
+
+The acceptance spine of the fused step kernel: with the same keys, the
+single streaming pass (intensity likelihood → prior add → weight
+epilogue, log-weights living only in VMEM) must reproduce the composed
+``intensity_loglik → fused_epilogue`` chain bit for bit — per float
+policy, dense / banked / ragged (including NaN/Inf-poisoned inactive
+patch lanes), at any likelihood-chunk height, at the kernel level and
+through the engine on both backends, plus the meshed local-scheme
+shard-local head.  ``roofline --step``'s traffic model rides along.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests need the dev extra; the rest run everywhere
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    given = None
+
+from repro.core import FilterBank, FilterConfig, ParticleFilter, get_policy
+from repro.core.likelihood import IntensityModel
+from repro.core.tracking import TrackerConfig, make_tracker_spec
+from repro.kernels.epilogue import ops as epi_ops
+from repro.kernels.likelihood import ops as lik_ops
+from repro.kernels.step import ops as step_ops
+
+POLICIES = ["fp32", "bf16", "fp16", "fp16_mixed"]
+FRAMES, H, W, P = 8, 64, 64, 256
+MODEL = IntensityModel(radius=4)
+OUT_NAMES = ["w", "anc", "lse", "m", "sw", "sw2"]
+
+
+def _patches(key, nbank, p, lo=90.0, hi=240.0):
+    return jax.random.uniform(
+        key, (nbank, p, MODEL.num_points), jnp.float32, lo, hi
+    )
+
+
+def _composed(keys, patches, prior, pol):
+    """The engine's best pre-fusion path: likelihood kernel → prior add →
+    fused epilogue (the chain the step kernel claims to reproduce)."""
+    cdt = pol.compute_dtype
+    ll = jax.vmap(lambda p: lik_ops.intensity_loglik(p, MODEL, pol))(patches)
+    log_w = prior[:, None] + ll.astype(cdt)
+    return epi_ops.fused_epilogue_batched(keys, log_w)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level
+
+
+@pytest.mark.parametrize("pname", POLICIES)
+@pytest.mark.parametrize("nbank,n", [(1, 1000), (3, 517)])
+def test_fused_step_matches_composed_chain_bitwise(pname, nbank, n):
+    """Fused step kernel == likelihood kernel + prior add + fused epilogue,
+    every output, bit for bit, with the same keys."""
+    pol = get_policy(pname)
+    cdt = pol.compute_dtype
+    keys = jax.random.split(jax.random.key(nbank * n), nbank)
+    patches = _patches(jax.random.key(7), nbank, n)
+    prior = jnp.full((nbank,), -float(np.log(n)), cdt)
+    ref = _composed(keys, patches, prior, pol)
+    got = step_ops.fused_step_batched(keys, patches, MODEL, prior, pol)
+    assert got[0].dtype == cdt and got[1].dtype == jnp.int32
+    for name, a, b in zip(OUT_NAMES, got, ref):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float64),
+            np.asarray(b, np.float64),
+            err_msg=f"{pname}: {name}",
+        )
+
+
+def test_fused_step_single_matches_batched_row():
+    patches = _patches(jax.random.key(3), 3, 700)
+    keys = jax.random.split(jax.random.key(1), 3)
+    pol = get_policy("fp32")
+    prior = jnp.full((3,), -float(np.log(700)), jnp.float32)
+    batched = step_ops.fused_step_batched(keys, patches, MODEL, prior, pol)
+    for i in range(3):
+        single = step_ops.fused_step(keys[i], patches[i], MODEL, prior[i], pol)
+        for name, b, s in zip(OUT_NAMES, batched, single):
+            np.testing.assert_array_equal(
+                np.asarray(b[i], np.float64),
+                np.asarray(s, np.float64),
+                err_msg=f"row {i}: {name}",
+            )
+
+
+@pytest.mark.parametrize("pname", ["fp32", "bf16"])
+def test_fused_step_block_p_invariance(pname):
+    """``block_p`` is a pure performance knob: the per-row likelihood sum
+    folds through the fixed ``pairwise_sum`` tree, so every legal chunk
+    height gives bit-identical outputs — including at 16-bit accumulation
+    (the regression guard for raising ``DEFAULT_BLOCK_P``)."""
+    pol = get_policy(pname)
+    keys = jax.random.split(jax.random.key(11), 2)
+    patches = _patches(jax.random.key(13), 2, 900)
+    prior = jnp.full((2,), -float(np.log(900)), pol.compute_dtype)
+    base = step_ops.fused_step_batched(
+        keys, patches, MODEL, prior, pol, block_p=step_ops.DEFAULT_BLOCK_P
+    )
+    for block_p in (128, 512, 8192):
+        got = step_ops.fused_step_batched(
+            keys, patches, MODEL, prior, pol, block_p=block_p
+        )
+        for name, a, b in zip(OUT_NAMES, got, base):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float64),
+                np.asarray(b, np.float64),
+                err_msg=f"{pname} block_p={block_p}: {name}",
+            )
+
+
+def _junk_tails(patches, counts):
+    """Poison inactive rows with NaN/Inf/huge patch values."""
+    x = np.array(patches)
+    junk = [3e4, float("nan"), float("inf"), float("-inf")]
+    for i, n in enumerate(counts):
+        for j in range(n, x.shape[1]):
+            x[i, j, :] = junk[(i + j) % len(junk)]
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("pname", POLICIES)
+def test_fused_step_masked_matches_unmasked_prefix_bitwise(pname):
+    """Masked fused step (junk inactive patch rows, incl. NaN/Inf) == the
+    unmasked kernel on the width-n prefix; inactive weights exactly 0."""
+    pol = get_policy(pname)
+    cdt = pol.compute_dtype
+    counts = [700, 400, 1]
+    keys = jax.random.split(jax.random.key(5), len(counts))
+    patches = _junk_tails(_patches(jax.random.key(6), len(counts), 700), counts)
+    n_act = jnp.asarray(counts, jnp.int32)
+    log_uni = (-jnp.log(n_act.astype(jnp.float32))).astype(cdt)
+    wm, ancm, lsem, mm, swm, sw2m = step_ops.fused_step_masked(
+        keys, patches, MODEL, log_uni, pol, n_act
+    )
+    for i, n in enumerate(counts):
+        wi, anci, lsei, mi, swi, sw2i = step_ops.fused_step(
+            keys[i], patches[i, :n], MODEL, log_uni[i], pol
+        )
+        np.testing.assert_array_equal(
+            np.asarray(wm[i, :n], np.float32),
+            np.asarray(wi, np.float32),
+            err_msg=f"{pname} n={n}: w",
+        )
+        np.testing.assert_array_equal(np.asarray(ancm[i, :n]), np.asarray(anci))
+        assert (np.asarray(ancm[i, :n]) < n).all()
+        np.testing.assert_array_equal(float(lsem[i]), float(lsei))
+        np.testing.assert_array_equal(float(mm[i]), float(mi))
+        np.testing.assert_array_equal(float(swm[i]), float(swi))
+        np.testing.assert_array_equal(float(sw2m[i]), float(sw2i))
+        assert (np.asarray(wm[i, n:], np.float32) == 0.0).all()
+
+
+def test_fused_step_masked_full_width_bitwise_dense():
+    keys = jax.random.split(jax.random.key(9), 2)
+    patches = _patches(jax.random.key(10), 2, 600)
+    pol = get_policy("fp32")
+    prior = jnp.full((2,), -float(np.log(600)), jnp.float32)
+    full = jnp.full((2,), 600, jnp.int32)
+    a = step_ops.fused_step_masked(keys, patches, MODEL, prior, pol, full)
+    b = step_ops.fused_step_batched(keys, patches, MODEL, prior, pol)
+    for name, u, v in zip(OUT_NAMES, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(u), np.asarray(v), err_msg=name
+        )
+
+
+def test_fused_step_masked_counts_are_traced():
+    """Changing the active counts must hit the jit cache — ragged banks
+    resize every admission and cannot afford a retrace per count."""
+    keys = jax.random.split(jax.random.key(15), 2)
+    patches = _patches(jax.random.key(16), 2, 333)
+    pol = get_policy("fp32")
+    prior = jnp.full((2,), -float(np.log(333)), jnp.float32)
+    step_ops.fused_step_masked(
+        keys, patches, MODEL, prior, pol, jnp.asarray([333, 100], jnp.int32)
+    )
+    mid = step_ops.fused_step_masked._cache_size()
+    step_ops.fused_step_masked(
+        keys, patches, MODEL, prior, pol, jnp.asarray([17, 333], jnp.int32)
+    )
+    assert step_ops.fused_step_masked._cache_size() == mid
+
+
+if given is not None:
+
+    @given(st.integers(1, 1500), st.sampled_from(POLICIES))
+    @settings(max_examples=20, deadline=None)
+    def test_fused_step_prefix_property(n, pname):
+        """∀ n: the masked fused step's active prefix (junk tail) ≡ the
+        unmasked width-n fused step, bitwise, at every policy."""
+        pol = get_policy(pname)
+        cdt = pol.compute_dtype
+        patches = _junk_tails(_patches(jax.random.key(n), 1, 1500), [n])
+        n_act = jnp.asarray([n], jnp.int32)
+        log_uni = (-jnp.log(n_act.astype(jnp.float32))).astype(cdt)
+        keys = jax.random.key(n + 1)[None]
+        masked = step_ops.fused_step_masked(
+            keys, patches, MODEL, log_uni, pol, n_act
+        )
+        single = step_ops.fused_step(
+            keys[0], patches[0, :n], MODEL, log_uni[0], pol
+        )
+        np.testing.assert_array_equal(
+            np.asarray(masked[0][0, :n], np.float32),
+            np.asarray(single[0], np.float32),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(masked[1][0, :n]), np.asarray(single[1])
+        )
+        for name, a, b in zip(OUT_NAMES[2:], masked[2:], single[2:]):
+            np.testing.assert_array_equal(
+                float(a[0]), float(b), err_msg=f"n={n} {pname}: {name}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+
+
+@pytest.fixture(scope="module")
+def video():
+    return jax.random.uniform(
+        jax.random.key(0), (FRAMES, H, W), jnp.float32, 90.0, 240.0
+    )
+
+
+def _tracker(policy, backend, fused_step, thr=1.0, slots=None, **cfg_kw):
+    cfg = TrackerConfig(num_particles=P, height=H, width=W, backend=backend)
+    fc = FilterConfig(
+        policy=policy,
+        backend=backend,
+        ess_threshold=thr,
+        fused_step=fused_step,
+        **cfg_kw,
+    )
+    if slots is None:
+        return ParticleFilter(make_tracker_spec(cfg, policy), fc)
+    starts = jnp.asarray([[16.0, 16.0], [48.0, 48.0], [32.0, 32.0]])[:slots]
+    spec = make_tracker_spec(cfg, policy, starts=starts)
+    return FilterBank(spec, fc, num_slots=slots)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("pname", ["fp32", "fp16"])
+def test_engine_fused_step_matches_composed_bitwise(video, pname, backend):
+    """ParticleFilter with fused_step=True == the forced composed chain,
+    every output and the carried state, bit for bit."""
+    pol = get_policy(pname)
+    flt = _tracker(pol, backend, True)
+    assert flt._fused_step is not None
+    ff, of = jax.jit(lambda k, v: flt.run(k, v, P))(jax.random.key(1), video)
+    fc, oc = jax.jit(
+        lambda k, v: _tracker(pol, backend, False).run(k, v, P)
+    )(jax.random.key(1), video)
+    for attr in ("ess", "log_z_inc"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(of, attr), np.float64),
+            np.asarray(getattr(oc, attr), np.float64),
+            err_msg=attr,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(of.estimate["pos"], np.float64),
+        np.asarray(oc.estimate["pos"], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ff.particles["pos"], np.float64),
+        np.asarray(fc.particles["pos"], np.float64),
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bank_fused_step_matches_composed_bitwise(video, backend):
+    pol = get_policy("bf16")
+    bank = _tracker(pol, backend, True, slots=3)
+    assert bank._fused_step_banked is not None
+    ff, of = bank.run(jax.random.key(1), video, P)
+    fc, oc = _tracker(pol, backend, False, slots=3).run(
+        jax.random.key(1), video, P
+    )
+    np.testing.assert_array_equal(
+        np.asarray(of.estimate["pos"], np.float64),
+        np.asarray(oc.estimate["pos"], np.float64),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ff.log_weights, np.float64),
+        np.asarray(fc.log_weights, np.float64),
+    )
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ragged_bank_fused_step_matches_composed_bitwise(video, backend):
+    pol = get_policy("fp32")
+    budgets = jnp.asarray([P, 64, 16], jnp.int32)
+    bank = _tracker(pol, backend, True, slots=3)
+    assert bank._fused_step_masked is not None
+    ff, of = bank.run(jax.random.key(1), video, P, n_active=budgets)
+    fc, oc = _tracker(pol, backend, False, slots=3).run(
+        jax.random.key(1), video, P, n_active=budgets
+    )
+    np.testing.assert_array_equal(
+        np.asarray(of.estimate["pos"]), np.asarray(oc.estimate["pos"])
+    )
+    np.testing.assert_array_equal(np.asarray(of.ess), np.asarray(oc.ess))
+    np.testing.assert_array_equal(
+        np.asarray(ff.log_weights), np.asarray(fc.log_weights)
+    )
+    lw = np.asarray(ff.log_weights)
+    assert np.isneginf(lw[1, 64:]).all() and np.isneginf(lw[2, 16:]).all()
+
+
+def test_fused_step_auto_gates(video):
+    """Auto (None) only engages on the static always-resample path with a
+    stable-weighting policy and a spec opt-in."""
+    pol = get_policy("fp32")
+    assert _tracker(pol, "pallas", None)._fused_step is not None
+    # adaptive resampling: the prior carry is no longer constant-uniform
+    assert _tracker(pol, "pallas", None, thr=0.5)._fused_step is None
+    # naive weighting never fuses
+    naive = get_policy("fp16_naive")
+    assert _tracker(naive, "jnp", None)._fused_step is None
+    assert _tracker(naive, "jnp", None, slots=2)._fused_step_banked is None
+
+
+def test_fused_step_true_validation():
+    """fused_step=True raises wherever the fused form cannot apply instead
+    of silently running composed."""
+    import dataclasses
+
+    pol = get_policy("fp32")
+    cfg = TrackerConfig(num_particles=P, height=H, width=W, backend="pallas")
+    spec = make_tracker_spec(cfg, pol)
+
+    # the spec must opt in (an opaque loglik cannot be fused)
+    bare = dataclasses.replace(spec, step_fusion=None)
+    with pytest.raises(ValueError, match="opt in"):
+        ParticleFilter(
+            bare, FilterConfig(policy=pol, backend="pallas", fused_step=True)
+        )
+
+    # adaptive resampling contradicts the constant-uniform prior fold
+    with pytest.raises(ValueError, match="ess_threshold"):
+        ParticleFilter(
+            spec,
+            FilterConfig(
+                policy=pol, backend="pallas", ess_threshold=0.5,
+                fused_step=True,
+            ),
+        )
+
+    # pallas registers a fused step for systematic only
+    with pytest.raises(ValueError, match="no fused step"):
+        ParticleFilter(
+            spec,
+            FilterConfig(
+                policy=pol, backend="pallas", resampler="stratified",
+                fused_step=True,
+            ),
+        )
+
+    # the meshed single filter has no fused form at all
+    with pytest.raises(ValueError, match="meshed"):
+        ParticleFilter(
+            spec,
+            FilterConfig(
+                policy=pol, backend="pallas",
+                mesh=jax.make_mesh((1,), ("data",)), fused_step=True,
+            ),
+        )
+
+    # meshed bank: only the local scheme has a fused head...
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="scheme='local'"):
+        FilterBank(
+            spec,
+            FilterConfig(
+                policy=pol, backend="pallas", mesh=mesh, scheme="exact",
+                fused_step=True,
+            ),
+            num_slots=1,
+        )
+    # ...and disabling its fused-finalize tail is contradictory
+    with pytest.raises(ValueError, match="contradictory"):
+        FilterBank(
+            spec,
+            FilterConfig(
+                policy=pol, backend="pallas", mesh=mesh, scheme="local",
+                fused_step=True, fused_epilogue=False,
+            ),
+            num_slots=1,
+        )
+    # the happy meshed path constructs
+    FilterBank(
+        spec,
+        FilterConfig(
+            policy=pol, backend="pallas", mesh=mesh, scheme="local",
+            fused_step=True,
+        ),
+        num_slots=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Meshed: the shard-local fused-step head (local RNA scheme)
+
+from tests._mp import run_with_devices  # noqa: E402
+
+MESHED_STEP = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import FilterBank, FilterConfig, get_policy
+from repro.core.tracking import TrackerConfig, make_tracker_spec
+
+video = jax.random.uniform(jax.random.key(0), (4, 64, 64), jnp.float32,
+                           90.0, 240.0)
+pol = get_policy("fp32")
+spec = make_tracker_spec(
+    TrackerConfig(num_particles=512, height=64, width=64,
+                  backend="pallas"), pol,
+    starts=jnp.asarray([[16.0, 16.0], [48.0, 48.0]]))
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+def run(fused, n_active=None):
+    bank = FilterBank(spec, FilterConfig(policy=pol, backend="pallas",
+                                         mesh=mesh, scheme="local",
+                                         fused_step=fused), num_slots=2)
+    return bank.run(jax.random.key(7), video, 512, n_active=n_active)
+
+sf, of = run(True)
+sc, oc = run(False)
+np.testing.assert_array_equal(np.asarray(of.estimate["pos"]),
+                              np.asarray(oc.estimate["pos"]))
+np.testing.assert_array_equal(np.asarray(of.ess), np.asarray(oc.ess))
+np.testing.assert_array_equal(np.asarray(sf.log_weights),
+                              np.asarray(sc.log_weights))
+np.testing.assert_array_equal(np.asarray(sf.particles["pos"]),
+                              np.asarray(sc.particles["pos"]))
+
+n_act = jnp.asarray([512, 256], jnp.int32)
+srf, orf = run(True, n_active=n_act)
+src, orc = run(False, n_active=n_act)
+np.testing.assert_array_equal(np.asarray(orf.estimate["pos"]),
+                              np.asarray(orc.estimate["pos"]))
+np.testing.assert_array_equal(np.asarray(orf.ess), np.asarray(orc.ess))
+np.testing.assert_array_equal(np.asarray(srf.log_weights),
+                              np.asarray(src.log_weights))
+print("meshed fused step ok")
+"""
+
+
+def test_meshed_local_fused_step_matches_composed():
+    """The meshed local-RNA fused-step head (likelihood + prior add +
+    shard-local LSE stats in one pass, chained into the fused finalize)
+    == the composed shard-local chain on 4 forced devices, dense and
+    ragged, bitwise."""
+    out = run_with_devices(MESHED_STEP, devices=4, timeout=600)
+    assert "meshed fused step ok" in out
+
+
+# ---------------------------------------------------------------------------
+# Roofline traffic model
+
+
+def test_roofline_step_traffic(tmp_path, monkeypatch):
+    """``roofline --step``: the fused step strictly lowers bytes per
+    particle-step for every policy, and measured speedups attach from
+    BENCH_fig6.json when present."""
+    from repro.launch import roofline
+
+    monkeypatch.chdir(tmp_path)
+    rows = roofline.step_rows()
+    assert rows
+    for r in rows:
+        assert (
+            r["bytes_per_particle_fused"] < r["bytes_per_particle_composed"]
+        ), r["policy"]
+        assert r["bytes_per_particle_composed"] < (
+            r["bytes_per_particle_composed_pre"]
+        ), r["policy"]
+        assert r["measured_speedup"] is None
+    with open("BENCH_fig6.json", "w") as f:
+        json.dump(
+            {
+                "records": [
+                    {
+                        "policy": "fp32",
+                        "particles": 1024,
+                        "speedup_fused_vs_composed": 7.5,
+                    }
+                ]
+            },
+            f,
+        )
+    rows = roofline.step_rows(particles=1024)
+    by = {r["policy"]: r for r in rows}
+    assert by["fp32"]["measured_speedup"] == 7.5
+    md = roofline.render_step_markdown(rows)
+    assert "fp32" in md and "7.50x" in md
