@@ -48,6 +48,20 @@ def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
 
 
+def _analysis_finding_count():
+    """New (non-baselined) precision-contract lint findings at bench time,
+    stamped into every BENCH_*.json — a nonzero count flags numbers
+    measured on a tree that violates the audited numerics contracts.
+    None when the analyzer can't run (e.g. a vendored benchmarks/ copy)."""
+    try:
+        from repro.analysis import load_baseline, run_lint, split_baseline
+
+        new, _ = split_baseline(run_lint(), load_baseline())
+        return len(new)
+    except Exception:
+        return None
+
+
 def write_bench_json(name: str, records: list[dict], **meta) -> str:
     """Write a machine-readable ``BENCH_<name>.json`` next to the cwd.
 
@@ -61,6 +75,7 @@ def write_bench_json(name: str, records: list[dict], **meta) -> str:
         "git_sha": git_sha(),
         "device_count": jax.device_count(),
         "backend": jax.default_backend(),
+        "analysis_findings": _analysis_finding_count(),
         **meta,
         "records": records,
     }

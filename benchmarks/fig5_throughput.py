@@ -507,6 +507,8 @@ def elastic_sweep(
     # down grows (ESS ~ 0.7E < E), one class up shrinks (ESS ~ 2.8E > 2E).
     intended = [ladder[i % len(ladder)] for i in range(num_slots)]
     scales = np.sqrt(
+        # analysis: allow(host-log): workload-difficulty algebra on ESS
+        # targets — not a particle-count log-weight constant
         np.log(np.asarray(intended) / (np.sqrt(2.0) * ess_target))
     )
     need = ess_target * np.exp(scales**2)  # particles for ESS == E

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn, write_bench_json
+from repro.core.engine import neg_log_count
 from repro.core.likelihood import IntensityModel
 from repro.core.precision import get_policy
 from repro.kernels.logsumexp import ops as lse_ops
@@ -119,9 +120,7 @@ def step_sweep(
             patches = jax.random.uniform(
                 jax.random.key(1), (bank, n, j), jnp.float32, 60.0, 250.0
             )
-            prior = jnp.full(
-                (bank,), -float(np.log(n)), cdt
-            )
+            prior = jnp.full((bank,), neg_log_count(n, cdt))
 
             @jax.jit
             def composed_step(keys, patches, prior):

@@ -1,0 +1,36 @@
+"""Precision-contract analyzer for the half-precision filter stack.
+
+Two engines, one CLI (``python -m repro.analysis``):
+
+- :mod:`repro.analysis.lint` — AST rules over ``src/repro`` +
+  ``benchmarks``, each seeded by a historical bug class (shared kernel
+  bodies, masked grids, donation-safe schedulers, the blessed host-log
+  path, dtype-literal containment, registry completeness).
+- :mod:`repro.analysis.jaxpr_audit` — traces the real jitted entry points
+  under each precision policy and checks the jaxprs/compiled artifacts:
+  fp32 accumulation, stability-mediated transcendentals, donation
+  aliasing, recompile-free budget transitions.
+
+Known-and-accepted findings live in ``baseline.json`` (content-fingerprint
+suppression); per-line opt-outs use ``# analysis: allow(<rule>): why``.
+"""
+
+from repro.analysis.findings import (
+    Finding,
+    baseline_path,
+    load_baseline,
+    split_baseline,
+    write_baseline,
+)
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "baseline_path",
+    "load_baseline",
+    "run_lint",
+    "split_baseline",
+    "write_baseline",
+]

@@ -1,0 +1,107 @@
+"""CLI: ``python -m repro.analysis [--check] [--no-jaxpr] ...``.
+
+Default run prints every finding (baseline-suppressed ones marked).  With
+``--check``, exits 1 iff there are findings *not* in the baseline — the CI
+gate: new violations fail, the audited-and-accepted set doesn't.
+``--write-baseline`` refreshes ``baseline.json`` from the current tree
+(review the diff — a growing baseline is a smell).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.findings import (
+    baseline_path,
+    load_baseline,
+    split_baseline,
+    write_baseline,
+)
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="precision-contract analyzer (AST lint + jaxpr audit)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit 1 on findings not in the baseline (the CI gate)",
+    )
+    ap.add_argument(
+        "--no-jaxpr",
+        action="store_true",
+        help="AST lint only — skip the (slower) jaxpr/compiled audit",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="accept the current tree: rewrite baseline.json",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        metavar="PATH",
+        help=f"baseline file (default: {baseline_path()})",
+    )
+    ap.add_argument(
+        "--rules",
+        action="store_true",
+        help="list registered AST rules and exit",
+    )
+    ap.add_argument(
+        "-q", "--quiet", action="store_true", help="counts only"
+    )
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for name, rule in sorted(RULES.items()):
+            print(f"{name:24s} {rule.motivation}")
+        return 0
+
+    findings = run_lint()
+    log: list[str] = []
+    if not args.no_jaxpr:
+        from repro.analysis.jaxpr_audit import run_audit
+
+        audit_findings, log = run_audit()
+        findings.extend(audit_findings)
+
+    bpath = args.baseline or baseline_path()
+    if args.write_baseline:
+        write_baseline(findings, bpath)
+        print(f"wrote {len(findings)} finding(s) to {bpath}")
+        return 0
+
+    baseline = load_baseline(bpath)
+    new, suppressed = split_baseline(findings, baseline)
+
+    if not args.quiet:
+        for line in log:
+            print(f"# {line}")
+        for f in new:
+            print(f.format())
+        for f in suppressed:
+            print(f"{f.format()}  [baseline]")
+    print(
+        f"{len(new)} new finding(s), {len(suppressed)} baseline-suppressed, "
+        f"{len(RULES)} rules"
+        + ("" if args.no_jaxpr else f", {len(log)} audit log line(s)")
+    )
+    if args.check and new:
+        print(
+            "FAIL: new findings — fix them, pragma with justification "
+            "(# analysis: allow(<rule>): why), or --write-baseline after "
+            "review",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,168 @@
+"""Finding / pragma / baseline plumbing shared by both analysis engines.
+
+A :class:`Finding` is one contract violation.  Its *fingerprint* hashes the
+rule name, the repo-relative path, and the normalized source line (or
+message, for non-source findings like registry or jaxpr audits) — NOT the
+line number — so a finding survives unrelated edits above it and the
+baseline does not churn on every diff.
+
+Two suppression channels:
+
+- **Pragma** — an inline ``# analysis: allow(<rule>): <why>`` comment on the
+  flagged line (or the line directly above it).  For violations that are
+  *intentional and local* (a pure-jnp oracle that must stay independent of
+  the kernel bodies, a documented dtype choice).  The justification text is
+  required: a bare ``allow`` with no reason is itself reported.
+- **Baseline** — ``analysis/baseline.json``, a list of fingerprints for
+  known findings the pass was landed green against.  CI gates on *new*
+  findings only; ``--write-baseline`` refreshes the file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+
+__all__ = [
+    "Finding",
+    "PRAGMA_RE",
+    "baseline_path",
+    "load_baseline",
+    "write_baseline",
+    "parse_pragmas",
+    "apply_pragmas",
+    "split_baseline",
+]
+
+PRAGMA_RE = re.compile(
+    r"#\s*analysis:\s*allow\(([a-z0-9_-]+)\)\s*:?\s*(.*)$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation from either engine."""
+
+    rule: str
+    path: str  # repo-relative source path, or a "<jaxpr:...>" pseudo-path
+    line: int  # 1-based; 0 for non-source findings
+    message: str
+    snippet: str = ""  # the flagged source line, stripped
+
+    @property
+    def fingerprint(self) -> str:
+        basis = "|".join(
+            (self.rule, self.path, self.snippet or self.message)
+        )
+        return hashlib.sha1(basis.encode()).hexdigest()[:16]
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+def baseline_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_baseline(path: str | None = None) -> set[str]:
+    path = path or baseline_path()
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        data = json.load(f)
+    return {entry["fingerprint"] for entry in data.get("findings", [])}
+
+
+def write_baseline(findings: list[Finding], path: str | None = None) -> str:
+    path = path or baseline_path()
+    payload = {
+        "version": 1,
+        "note": (
+            "Known findings the analysis pass was landed green against; "
+            "`python -m repro.analysis --check` fails only on findings NOT "
+            "listed here.  Refresh with --write-baseline; prefer fixing or "
+            "pragma-ing findings over baselining them."
+        ),
+        "findings": [
+            {
+                "fingerprint": f.fingerprint,
+                "rule": f.rule,
+                "path": f.path,
+                "message": f.message,
+            }
+            for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def parse_pragmas(source: str) -> tuple[dict[int, set[str]], list[int]]:
+    """Map line number -> set of allowed rule names, plus the line numbers
+    of malformed pragmas (no justification text)."""
+    allowed: dict[int, set[str]] = {}
+    bare: list[int] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rule, why = m.group(1), m.group(2).strip()
+        if not why:
+            bare.append(i)
+            continue
+        allowed.setdefault(i, set()).add(rule)
+    return allowed, bare
+
+
+def apply_pragmas(
+    findings: list[Finding], source: str, path: str
+) -> list[Finding]:
+    """Drop findings covered by a pragma on their own line or anywhere in
+    the contiguous comment block directly above it (pragma justifications
+    routinely wrap to two comment lines); report malformed
+    (justification-free) pragmas as findings themselves."""
+    allowed, bare = parse_pragmas(source)
+    lines = source.splitlines()
+
+    def covering(line: int) -> set[str]:
+        rules = set(allowed.get(line, set()))
+        i = line - 1
+        while 1 <= i <= len(lines) and lines[i - 1].lstrip().startswith("#"):
+            rules |= allowed.get(i, set())
+            i -= 1
+        return rules
+
+    out = []
+    for f in findings:
+        if f.rule in covering(f.line):
+            continue
+        out.append(f)
+    for ln in bare:
+        out.append(
+            Finding(
+                rule="pragma",
+                path=path,
+                line=ln,
+                message=(
+                    "analysis pragma without a justification — write "
+                    "`# analysis: allow(<rule>): <one-line reason>`"
+                ),
+                snippet=lines[ln - 1].strip() if ln <= len(lines) else "",
+            )
+        )
+    return out
+
+
+def split_baseline(
+    findings: list[Finding], baseline: set[str]
+) -> tuple[list[Finding], list[Finding]]:
+    """(new, suppressed) partition against the baseline fingerprints."""
+    new = [f for f in findings if f.fingerprint not in baseline]
+    old = [f for f in findings if f.fingerprint in baseline]
+    return new, old

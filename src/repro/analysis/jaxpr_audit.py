@@ -1,0 +1,484 @@
+"""Engine 2: the jaxpr / compiled-artifact auditor.
+
+The AST rules read source; this engine checks what the compiler actually
+sees.  It traces the real jitted entry points — ``ParticleFilter.step``, the
+``FilterBank`` fused step (dense and ragged/masked), ``resize_slot`` — under
+each precision policy and walks the jaxprs (including the inner jaxprs of
+every ``pallas_call``) to enforce the numerics contract structurally:
+
+- **half-accum**: no reduction/contraction primitive (``reduce_sum``,
+  ``cumsum``, ``dot_general``, ...) produces a 16-bit result, and no
+  ``scan`` carries a 16-bit float — accumulation happens in fp32 even when
+  inputs are fp16/bf16.  Enforced everywhere for fp32-accum policies
+  (``fp32``/``bf16_mixed``/``fp16_mixed``/``bf16_w8``) and inside Pallas
+  kernel bodies for *pure* half policies (the kernels' blockwise carries are
+  fp32 by the shared-body contract even when the engine-level story is
+  16-bit).
+- **half-explog**: no ``exp``/``log`` family primitive runs at 16 bits
+  unless it is *stability-mediated* — reachable (backwards through the
+  dataflow) from a max-subtraction, i.e. the ``log∘sum∘exp(x - max)``
+  shapes that ``core/stability.py`` emits.  A naive ``exp(log_w)`` has no
+  ``sub``/``reduce_max`` upstream and is flagged.
+- **donation**: every donated entry point's compiled executable aliases
+  >= 0.9x the state bytes input->output (``memory_analysis``), and the
+  undonated twin aliases nothing.
+- **recompile**: ragged budget transitions (``resize_slot`` across distinct
+  (slot, count) pairs) hit one compile-cache entry — counts stay traced.
+
+Pure half policies on the ``jnp`` backend are *skipped by design*: the
+paper-faithful reference deliberately accumulates in ``accum_dtype`` (the
+16-bit CDF build is the artifact under study, not a bug).  The ``*_naive``
+policies are likewise exempt — they exist to reproduce the failure mode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "audit_closed_jaxpr",
+    "audit_dtypes",
+    "audit_donation",
+    "audit_recompile",
+    "run_audit",
+    "STRICT_POLICIES",
+    "KERNEL_ONLY_POLICIES",
+]
+
+# Policies whose accum dtype is fp32: the contract is strict everywhere.
+STRICT_POLICIES = ("fp32", "bf16_mixed", "fp16_mixed", "bf16_w8")
+# Pure half policies: strict inside pallas kernel bodies, mediation-checked
+# exp/log at the engine level; jnp backend skipped (paper-faithful).
+KERNEL_ONLY_POLICIES = ("fp16", "bf16")
+
+_HALF_NAMES = ("float16", "bfloat16")
+_ACCUM_PRIMS = {
+    "reduce_sum",
+    "cumsum",
+    "cumprod",
+    "reduce_prod",
+    "dot_general",
+    "add_any",
+}
+_EXPLOG_PRIMS = {"exp", "log", "exp2", "log2", "log1p", "expm1", "logistic"}
+_MEDIATORS = {"reduce_max", "max", "cummax"}
+
+# Tiny tracker spec: tracing only needs shapes, so keep compiles cheap.
+_P, _H, _W = 64, 32, 32
+
+
+def _is_half(aval: Any) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and getattr(dt, "name", "") in _HALF_NAMES
+
+
+def _sub_jaxprs(value: Any):
+    """Inner jaxprs hiding in an eqn's params (pallas_call / scan / cond
+    bodies), whatever container they sit in."""
+    if hasattr(value, "eqns"):  # Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr"):  # ClosedJaxpr
+        yield value.jaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _sub_jaxprs(v)
+
+
+def _walk(jaxpr: Any, visit: Callable, in_kernel: bool = False) -> None:
+    for eqn in jaxpr.eqns:
+        visit(eqn, jaxpr, in_kernel)
+        inner_kernel = in_kernel or "pallas" in eqn.primitive.name
+        for sub in _sub_jaxprs(eqn.params):
+            _walk(sub, visit, inner_kernel)
+
+
+def _reachable_prims(eqn: Any, defs: dict, depth: int = 24) -> set[str]:
+    """Primitive names reachable backwards from ``eqn``'s inputs within the
+    same jaxpr level (bounded breadth-first walk over defining eqns)."""
+    seen_vars: set[int] = set()
+    prims: set[str] = set()
+    frontier = list(eqn.invars)
+    for _ in range(depth):
+        if not frontier:
+            break
+        next_frontier = []
+        for v in frontier:
+            vid = id(v)
+            if vid in seen_vars:
+                continue
+            seen_vars.add(vid)
+            src = defs.get(vid)
+            if src is None:
+                continue
+            prims.add(src.primitive.name)
+            next_frontier.extend(src.invars)
+        frontier = next_frontier
+    return prims
+
+
+def _defs_map(jaxpr: Any) -> dict:
+    defs: dict = {}
+    for eqn in jaxpr.eqns:
+        for out in eqn.outvars:
+            defs[id(out)] = eqn
+    return defs
+
+
+def audit_closed_jaxpr(
+    closed: Any,
+    label: str,
+    *,
+    strict: bool = True,
+) -> list[Finding]:
+    """Walk one traced entry point; return contract violations.
+
+    ``strict=True``: flag every 16-bit accumulation / scan carry / exp-log,
+    at any level.  ``strict=False`` (pure half policies): kernel interiors
+    stay strict; engine-level 16-bit exp/log passes only when
+    stability-mediated (max-subtraction reachable upstream).
+    """
+    findings: list[Finding] = []
+    path = f"<jaxpr:{label}>"
+    defs_cache: dict[int, dict] = {}
+
+    def add(rule: str, message: str) -> None:
+        findings.append(Finding(rule=rule, path=path, line=0, message=message))
+
+    def visit(eqn: Any, jaxpr: Any, in_kernel: bool) -> None:
+        name = eqn.primitive.name
+        where = "pallas kernel body" if in_kernel else "engine level"
+        if name in _ACCUM_PRIMS:
+            half_out = [o.aval for o in eqn.outvars if _is_half(o.aval)]
+            if half_out and (strict or in_kernel):
+                add(
+                    "jaxpr-half-accum",
+                    f"{name} accumulates at {half_out[0].dtype.name} "
+                    f"({where}) — reductions must carry fp32 under this "
+                    "policy",
+                )
+        elif name == "scan":
+            nc = eqn.params.get("num_consts", 0)
+            ncar = eqn.params.get("num_carry", 0)
+            for v in eqn.invars[nc : nc + ncar]:
+                if _is_half(v.aval) and (strict or in_kernel):
+                    add(
+                        "jaxpr-half-accum",
+                        f"scan carry of dtype {v.aval.dtype.name} ({where}) "
+                        "— loop carries must accumulate fp32 under this "
+                        "policy",
+                    )
+        elif name in _EXPLOG_PRIMS:
+            half = any(_is_half(v.aval) for v in eqn.invars) or any(
+                _is_half(o.aval) for o in eqn.outvars
+            )
+            if not half:
+                return
+            if strict or in_kernel:
+                add(
+                    "jaxpr-half-explog",
+                    f"16-bit {name} ({where}) — transcendentals must run "
+                    "fp32 under this policy",
+                )
+                return
+            jid = id(jaxpr)
+            if jid not in defs_cache:
+                defs_cache[jid] = _defs_map(jaxpr)
+            reach = _reachable_prims(eqn, defs_cache[jid])
+            if "sub" not in reach or not (reach & _MEDIATORS):
+                add(
+                    "jaxpr-half-explog",
+                    f"unmediated 16-bit {name} ({where}) — no "
+                    "max-subtraction upstream; route through "
+                    "repro.core.stability (logsumexp / stable weighting)",
+                )
+
+    _walk(closed.jaxpr, visit)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry-point tracing
+
+
+def _tracker_parts(policy_name: str, backend: str):
+    from repro.core.precision import get_policy
+    from repro.core.tracking import TrackerConfig, make_tracker_spec
+
+    pol = get_policy(policy_name)
+    cfg = TrackerConfig(
+        num_particles=_P, height=_H, width=_W, backend=backend
+    )
+    return pol, cfg, make_tracker_spec
+
+
+def _frame():
+    return jnp.zeros((_H, _W), jnp.float32)
+
+
+def trace_step(policy_name: str, backend: str):
+    from repro.core.engine import FilterConfig, ParticleFilter
+
+    pol, cfg, make_spec = _tracker_parts(policy_name, backend)
+    flt = ParticleFilter(
+        make_spec(cfg, pol),
+        FilterConfig(policy=pol, backend=backend),
+    )
+    state = flt.init(jax.random.key(0), _P)
+    return jax.make_jaxpr(flt.step)(state, _frame(), jax.random.key(1))
+
+
+def _bank(policy_name: str, backend: str, slots: int = 2):
+    from repro.core.engine import FilterBank, FilterConfig
+
+    pol, cfg, make_spec = _tracker_parts(policy_name, backend)
+    starts = jnp.asarray([[8.0, 8.0], [24.0, 24.0]][:slots])
+    spec = make_spec(cfg, pol, starts=starts)
+    return FilterBank(
+        spec, FilterConfig(policy=pol, backend=backend), num_slots=slots
+    )
+
+
+def trace_bank_step(policy_name: str, backend: str, ragged: bool):
+    bank = _bank(policy_name, backend)
+    n_active = (
+        jnp.asarray([_P, _P // 2], jnp.int32) if ragged else None
+    )
+    state = bank.init(jax.random.key(0), _P, n_active=n_active)
+    keys = jax.random.split(jax.random.key(1), bank.num_slots)
+
+    def step(s, obs, ks):
+        return bank.step(s, obs, ks, shared_obs=True)
+
+    return jax.make_jaxpr(step)(state, _frame(), keys)
+
+
+def trace_resize_slot(policy_name: str, backend: str):
+    bank = _bank(policy_name, backend)
+    state = bank.init(
+        jax.random.key(0), _P, n_active=jnp.asarray([_P, _P], jnp.int32)
+    )
+    return jax.make_jaxpr(bank.resize_slot)(
+        state, jnp.int32(0), jax.random.key(1), jnp.int32(_P // 4)
+    )
+
+
+_ENTRY_POINTS = {
+    "step": lambda p, b: trace_step(p, b),
+    "bank_step": lambda p, b: trace_bank_step(p, b, ragged=False),
+    "bank_step_masked": lambda p, b: trace_bank_step(p, b, ragged=True),
+    "resize_slot": lambda p, b: trace_resize_slot(p, b),
+}
+
+
+def audit_dtypes(
+    backends=("jnp", "pallas"),
+    strict_policies=STRICT_POLICIES,
+    kernel_only_policies=KERNEL_ONLY_POLICIES,
+) -> tuple[list[Finding], list[str]]:
+    """Trace every (entry point, backend, policy) cell; return findings plus
+    a human log of what was audited or skipped."""
+    findings: list[Finding] = []
+    log: list[str] = []
+    plan = [(p, True) for p in strict_policies] + [
+        (p, False) for p in kernel_only_policies
+    ]
+    for backend in backends:
+        for policy_name, strict in plan:
+            if not strict and backend == "jnp":
+                log.append(
+                    f"skip {backend}/{policy_name}: pure half on the "
+                    "reference backend accumulates in accum_dtype by "
+                    "design (paper-faithful)"
+                )
+                continue
+            for entry, tracer in _ENTRY_POINTS.items():
+                label = f"{entry}:{backend}:{policy_name}"
+                try:
+                    closed = tracer(policy_name, backend)
+                except Exception as e:  # surface, don't crash the audit
+                    findings.append(
+                        Finding(
+                            rule="jaxpr-trace-error",
+                            path=f"<jaxpr:{label}>",
+                            line=0,
+                            message=f"tracing failed: {type(e).__name__}: "
+                            f"{e}",
+                        )
+                    )
+                    continue
+                got = audit_closed_jaxpr(closed, label, strict=strict)
+                findings.extend(got)
+                mode = "strict" if strict else "kernel-strict/mediated"
+                log.append(f"audit {label} [{mode}]: {len(got)} finding(s)")
+    return findings, log
+
+
+# ---------------------------------------------------------------------------
+# compiled-artifact checks
+
+
+def _state_bytes(state) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(state)
+        if hasattr(x, "dtype")
+    )
+
+
+def audit_donation() -> tuple[list[Finding], list[str]]:
+    """Compile-level proof that donated entry points alias state in place."""
+    findings: list[Finding] = []
+    log: list[str] = []
+    bank = _bank("fp32", "jnp")
+    keys = jax.random.split(jax.random.key(1), bank.num_slots)
+    state = bank.init(jax.random.key(0), _P)
+    sb = _state_bytes(state)
+
+    def check(label, plain_alias, donated_alias):
+        log.append(
+            f"donation {label}: plain={plain_alias}B "
+            f"donated={donated_alias}B state={sb}B"
+        )
+        if plain_alias != 0:
+            findings.append(
+                Finding(
+                    rule="jaxpr-donation",
+                    path=f"<compile:{label}>",
+                    line=0,
+                    message=f"undonated entry aliases {plain_alias} bytes "
+                    "— buffer reuse without donate_argnums is a jit "
+                    "contract change",
+                )
+            )
+        if donated_alias < 0.9 * sb:
+            findings.append(
+                Finding(
+                    rule="jaxpr-donation",
+                    path=f"<compile:{label}>",
+                    line=0,
+                    message=f"donated entry aliases only {donated_alias} "
+                    f"of {sb} state bytes (<90%) — something is pinning "
+                    "the state buffers (PR-5 class: an escaped view or a "
+                    "copy inserted before the donated call)",
+                )
+            )
+
+    try:
+        plain = bank.jit_step_shared.lower(state, _frame(), keys).compile()
+        donated = bank.jit_step_shared_donated.lower(
+            state, _frame(), keys
+        ).compile()
+        check(
+            "bank.step_shared",
+            plain.memory_analysis().alias_size_in_bytes,
+            donated.memory_analysis().alias_size_in_bytes,
+        )
+    except Exception as e:
+        findings.append(
+            Finding(
+                rule="jaxpr-trace-error",
+                path="<compile:bank.step_shared>",
+                line=0,
+                message=f"donation audit failed: {type(e).__name__}: {e}",
+            )
+        )
+
+    try:
+        rbank = _bank("fp32", "jnp")
+        rstate = rbank.init(
+            jax.random.key(0), _P, n_active=jnp.asarray([_P, _P], jnp.int32)
+        )
+        rsb = _state_bytes(rstate)
+        args = (rstate, jnp.int32(0), jax.random.key(1), jnp.int32(16))
+        rdon = rbank.jit_resize_slot_donated.lower(*args).compile()
+        alias = rdon.memory_analysis().alias_size_in_bytes
+        log.append(f"donation bank.resize_slot: donated={alias}B state={rsb}B")
+        if alias < 0.9 * rsb:
+            findings.append(
+                Finding(
+                    rule="jaxpr-donation",
+                    path="<compile:bank.resize_slot>",
+                    line=0,
+                    message=f"donated resize_slot aliases only {alias} of "
+                    f"{rsb} state bytes (<90%)",
+                )
+            )
+    except Exception as e:
+        findings.append(
+            Finding(
+                rule="jaxpr-trace-error",
+                path="<compile:bank.resize_slot>",
+                line=0,
+                message=f"donation audit failed: {type(e).__name__}: {e}",
+            )
+        )
+    return findings, log
+
+
+def audit_recompile() -> tuple[list[Finding], list[str]]:
+    """Budget transitions must stay traced: N distinct (slot, count) pairs,
+    one cache entry."""
+    findings: list[Finding] = []
+    log: list[str] = []
+    try:
+        bank = _bank("fp32", "jnp")
+        state = bank.init(
+            jax.random.key(0), _P, n_active=jnp.asarray([_P, _P], jnp.int32)
+        )
+        transitions = [(0, 16), (1, 8), (0, _P), (1, 32)]
+        for i, (slot, k) in enumerate(transitions):
+            state = bank.jit_resize_slot(
+                state,
+                jnp.int32(slot),
+                jax.random.fold_in(jax.random.key(7), i),
+                jnp.int32(k),
+            )
+            n = bank.jit_resize_slot._cache_size()
+            if n != 1:
+                findings.append(
+                    Finding(
+                        rule="jaxpr-recompile",
+                        path="<compile:bank.resize_slot>",
+                        line=0,
+                        message=f"budget transition {(slot, k)} recompiled "
+                        f"(cache size {n}) — slot/count must stay traced "
+                        "(the elastic controller's no-recompile contract)",
+                    )
+                )
+                break
+        else:
+            log.append(
+                f"recompile bank.resize_slot: {len(transitions)} "
+                "transitions, 1 cache entry"
+            )
+    except Exception as e:
+        findings.append(
+            Finding(
+                rule="jaxpr-trace-error",
+                path="<compile:bank.resize_slot>",
+                line=0,
+                message=f"recompile probe failed: {type(e).__name__}: {e}",
+            )
+        )
+    return findings, log
+
+
+def run_audit(
+    backends=("jnp", "pallas"),
+) -> tuple[list[Finding], list[str]]:
+    """The full Engine-2 pass: dtype contracts, donation, recompile."""
+    findings, log = audit_dtypes(backends=backends)
+    for part in (audit_donation, audit_recompile):
+        f, l = part()
+        findings.extend(f)
+        log.extend(l)
+    return findings, log

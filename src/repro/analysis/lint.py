@@ -1,0 +1,90 @@
+"""Engine 1: the AST lint pass.
+
+Walks the repo's Python sources (``src/repro`` + ``benchmarks``), parses
+each file once, and runs every registered rule whose scope matches.  Pragma
+suppression (``# analysis: allow(<rule>): why``) is applied per file;
+repo-level rules (live-registry audits) run once at the end.  Findings come
+back un-baselined — the CLI owns baseline semantics.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding, apply_pragmas
+from repro.analysis.rules import RULES
+
+__all__ = ["repo_root", "iter_source_files", "lint_file", "run_lint"]
+
+_DEFAULT_ROOTS = ("src/repro", "benchmarks")
+
+
+def repo_root() -> str:
+    """The checkout root (three levels above this package)."""
+    here = os.path.dirname(os.path.abspath(__file__))  # src/repro/analysis
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def iter_source_files(root: str, subdirs=_DEFAULT_ROOTS):
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(
+                d for d in dirnames if d != "__pycache__"
+            )
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_file(
+    path: str, rel_path: str, rules=None, source: str | None = None
+) -> list[Finding]:
+    """All findings for one file, pragma-filtered, in line order."""
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule="parse",
+                path=rel_path,
+                line=e.lineno or 0,
+                message=f"syntax error: {e.msg}",
+            )
+        ]
+    findings: list[Finding] = []
+    for rule in (rules if rules is not None else RULES.values()):
+        if rule.matches(rel_path):
+            findings.extend(rule.check_file(rel_path, tree, source))
+    findings = apply_pragmas(findings, source, rel_path)
+    # A container inside an .append() can legitimately match two escape
+    # patterns — report each violation site once.
+    seen, unique = set(), []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return sorted(unique, key=lambda f: (f.line, f.rule))
+
+
+def run_lint(
+    root: str | None = None, rules=None, with_repo_rules: bool = True
+) -> list[Finding]:
+    """Lint the whole tree; repo rules (live-registry audits) run once."""
+    root = root or repo_root()
+    rule_list = list(rules if rules is not None else RULES.values())
+    findings: list[Finding] = []
+    for path in iter_source_files(root):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        findings.extend(lint_file(path, rel, rules=rule_list))
+    if with_repo_rules:
+        for rule in rule_list:
+            findings.extend(rule.check_repo())
+    return findings

@@ -1,0 +1,105 @@
+"""Pluggable lint rules — one module per historical bug class.
+
+A rule is an object with
+
+- ``name``       — kebab-case id, the pragma / baseline key,
+- ``motivation`` — the PR/bug that made the invariant worth machine-checking
+  (rendered by the CLI rule table and the README),
+- and either ``check_file(rel_path, tree, source) -> [Finding]`` (AST rules,
+  run per matching file) with a ``matches(rel_path) -> bool`` scope, or
+  ``check_repo() -> [Finding]`` (registry rules, run once against the live
+  imported registries).
+
+Register with :func:`register_rule`; the lint engine iterates ``RULES``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "LintRule",
+    "RULES",
+    "register_rule",
+    "dotted_name",
+    "line_finding",
+    "walk_calls",
+]
+
+RULES: dict[str, "LintRule"] = {}
+
+
+class LintRule:
+    """Base class: scope + one of the two check hooks."""
+
+    name: str = ""
+    motivation: str = ""
+
+    def matches(self, rel_path: str) -> bool:
+        return True
+
+    def check_file(
+        self, rel_path: str, tree: ast.AST, source: str
+    ) -> list[Finding]:
+        return []
+
+    def check_repo(self) -> list[Finding]:
+        return []
+
+
+def register_rule(rule: LintRule) -> LintRule:
+    if not rule.name:
+        raise ValueError("rule needs a name")
+    RULES[rule.name] = rule
+    return rule
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jnp.cumsum' for Attribute/Name chains, '' for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def walk_calls(tree: ast.AST):
+    """Yield (call_node, dotted callee name) for every Call in the tree."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node, dotted_name(node.func)
+
+
+def line_finding(
+    rule: "LintRule",
+    rel_path: str,
+    source: str,
+    node: ast.AST,
+    message: str,
+) -> Finding:
+    lines = source.splitlines()
+    line = getattr(node, "lineno", 0)
+    snippet = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    return Finding(
+        rule=rule.name,
+        path=rel_path,
+        line=line,
+        message=message,
+        snippet=snippet,
+    )
+
+
+# Import order = report order; each module registers its rule(s) on import.
+from repro.analysis.rules import (  # noqa: E402,F401
+    shared_body,
+    masked_grid,
+    donation_safety,
+    host_log,
+    dtype_literals,
+    registry_completeness,
+)

@@ -1,0 +1,109 @@
+"""donation-safety: zero-copy views must not escape scheduler code.
+
+Motivation (PR 5, the retire pin): ``np.asarray(jax_array)`` on CPU is a
+*zero-copy view* into the jax buffer.  A scheduler that stores such a view
+in a result dict / list (or returns it) keeps the underlying bank buffer
+alive for the rest of the run — which silently blocks every later donated
+step/reset from aliasing the bank state in place, and pins the whole
+``(slots, P, steps)`` array per retired request.  Local temporaries that die
+with the function frame are fine; what this rule flags is a view *escaping*:
+``np.asarray(...)`` (or ``x.view(...)``) appearing directly inside a
+container literal, as an ``append``/``extend``/``insert`` argument, or in a
+``return`` whose function is scheduler code.  The fix is an explicit copy —
+``np.array(...)`` — at the escape point.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (
+    LintRule,
+    dotted_name,
+    line_finding,
+    register_rule,
+)
+
+_VIEW_CALLEES = {"np.asarray", "numpy.asarray", "onp.asarray"}
+_SINK_METHODS = {"append", "extend", "insert"}
+
+
+def _is_view_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted_name(node.func)
+    if name in _VIEW_CALLEES:
+        return True
+    # method-style zero-copy reinterpret: x.view(...)
+    return (
+        isinstance(node.func, ast.Attribute) and node.func.attr == "view"
+    )
+
+
+def _direct_view_elements(node: ast.AST):
+    """View calls sitting directly in a container literal (any nesting of
+    literals, but not through arbitrary calls)."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if _is_view_call(n):
+            yield n
+        elif isinstance(n, (ast.List, ast.Tuple, ast.Set)):
+            stack.extend(n.elts)
+        elif isinstance(n, ast.Dict):
+            stack.extend(v for v in n.values if v is not None)
+
+
+class DonationSafetyRule(LintRule):
+    name = "donation-safety"
+    motivation = (
+        "PR-5: np.asarray is a zero-copy view into the jax buffer; a view "
+        "escaping the scheduler pins bank state and blocks donation"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        return rel_path.startswith("src/repro/launch/")
+
+    def check_file(self, rel_path, tree, source):
+        findings = []
+
+        def flag(node, how):
+            findings.append(
+                line_finding(
+                    self,
+                    rel_path,
+                    source,
+                    node,
+                    f"zero-copy view escapes the scheduler ({how}) — it "
+                    "pins the donated bank buffers for the rest of the "
+                    "run; copy with np.array(...) at the escape point",
+                )
+            )
+
+        for node in ast.walk(tree):
+            # {..: np.asarray(x)} / [np.asarray(x), ...] anywhere
+            if isinstance(node, (ast.List, ast.Tuple, ast.Set, ast.Dict)):
+                for v in _direct_view_elements(node):
+                    flag(v, "stored in a container literal")
+            # results.append(np.asarray(x)) and friends
+            elif isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute
+            ):
+                if node.func.attr in _SINK_METHODS:
+                    for arg in node.args:
+                        if _is_view_call(arg):
+                            flag(arg, f"passed to .{node.func.attr}()")
+                        else:
+                            for v in _direct_view_elements(arg):
+                                flag(v, f"passed to .{node.func.attr}()")
+            # return np.asarray(x)
+            elif isinstance(node, ast.Return) and node.value is not None:
+                if _is_view_call(node.value):
+                    flag(node.value, "returned")
+                else:
+                    for v in _direct_view_elements(node.value):
+                        flag(v, "returned")
+        return findings
+
+
+register_rule(DonationSafetyRule())

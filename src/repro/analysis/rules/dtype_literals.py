@@ -1,0 +1,71 @@
+"""dtype-literal: bare 16-bit dtype literals only in the precision modules.
+
+Motivation (the paper's whole premise): which arrays live in fp16/bf16 is a
+*policy* decision — ``PrecisionPolicy`` threads param/compute/accum dtypes
+through every layer precisely so precision can be swept, tested, and audited
+in one place.  A bare ``jnp.float16`` / ``jnp.bfloat16`` literal elsewhere
+is a precision decision the policy cannot see, sweep, or override — the
+exact erosion channel Murray's Metropolis analysis warns about.  Blessed
+homes: ``core/precision.py`` (the policy definitions) and
+``core/stability.py`` (the mitigation toolbox).  Anything else is either a
+bug or a documented, pragma'd design choice.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (
+    LintRule,
+    dotted_name,
+    line_finding,
+    register_rule,
+)
+
+_HALF_ATTRS = {"float16", "bfloat16", "half"}
+_BLESSED = {
+    "src/repro/core/precision.py",
+    "src/repro/core/stability.py",
+}
+
+
+class DtypeLiteralRule(LintRule):
+    name = "dtype-literal"
+    motivation = (
+        "paper core: 16-bit placement is PrecisionPolicy's decision; a "
+        "bare half literal is a precision choice no policy can sweep or "
+        "audit"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        return (
+            rel_path.startswith("src/repro/") and rel_path not in _BLESSED
+        )
+
+    def check_file(self, rel_path, tree, source):
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            if node.attr not in _HALF_ATTRS:
+                continue
+            name = dotted_name(node)
+            base = name.rpartition(".")[0]
+            if base not in ("jnp", "np", "jax.numpy", "numpy"):
+                continue
+            findings.append(
+                line_finding(
+                    self,
+                    rel_path,
+                    source,
+                    node,
+                    f"bare `{name}` dtype literal outside "
+                    "core/precision.py|core/stability.py — thread the "
+                    "dtype through PrecisionPolicy (param/compute/accum) "
+                    "or pragma the documented design choice",
+                )
+            )
+        return findings
+
+
+register_rule(DtypeLiteralRule())

@@ -1,0 +1,104 @@
+"""host-log: log-of-count folding outside the blessed host-double path.
+
+Motivation (PR 4, the 1-ulp constant-folded log): XLA's constant-folded
+``log`` and its runtime vectorized ``log`` differ by 1 ulp for some particle
+counts, and Python-host ``math.log``/``np.log`` add a third rounding path.
+The repo's uniform log-weight ``-log(n)`` must be bit-stable across every
+call site in a slot's lifetime, which is why the ONE blessed spelling lives
+in ``repro/core/engine.py`` (``_neg_log_count``: host-double log for
+concrete counts — exactly the bits of the dense ``-jnp.log(float(P))``
+constant — runtime fp32 log for traced counts, and the result *stored* per
+slot rather than recomputed).  This rule flags, outside ``core/engine.py``:
+
+- host ``math.log`` / ``np.log`` calls (any argument — host folding is the
+  hazard, whatever is being logged), and
+- ``jnp.log`` of a Python constant (``jnp.log(float(...))``, ``jnp.log(8)``)
+  — a compile-time fold that need not match the runtime log of the same
+  count.
+
+Sites that *deliberately* reproduce the dense constant's bits (the meshed
+uniform resets in ``core/distributed.py``) carry pragmas saying so.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (
+    LintRule,
+    dotted_name,
+    line_finding,
+    register_rule,
+    walk_calls,
+)
+
+_HOST_LOGS = {"math.log", "math.log2", "np.log", "np.log2", "numpy.log"}
+_JNP_LOGS = {"jnp.log", "jax.numpy.log"}
+
+
+def _is_constanty(node: ast.AST) -> bool:
+    """A compile-time-foldable scalar: literal, float()/int() cast, or
+    unary/binary arithmetic over such."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float))
+    if isinstance(node, ast.UnaryOp):
+        return _is_constanty(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_constanty(node.left) and _is_constanty(node.right)
+    if isinstance(node, ast.Call) and dotted_name(node.func) in (
+        "float",
+        "int",
+    ):
+        return True
+    return False
+
+
+class HostLogRule(LintRule):
+    name = "host-log"
+    motivation = (
+        "PR-4: folded, runtime, and host logs of the same count differ by "
+        "1 ulp — -log(n) must come from the one blessed path in core/engine"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        if rel_path == "src/repro/core/engine.py":  # the blessed path
+            return False
+        return rel_path.startswith(
+            ("src/repro/core/", "src/repro/kernels/", "src/repro/launch/")
+        ) or rel_path.startswith("benchmarks/")
+
+    def check_file(self, rel_path, tree, source):
+        findings = []
+        for call, callee in walk_calls(tree):
+            if callee in _HOST_LOGS:
+                findings.append(
+                    line_finding(
+                        self,
+                        rel_path,
+                        source,
+                        call,
+                        f"host `{callee}` — a third rounding of log(n) "
+                        "beside XLA's folded and runtime logs; route "
+                        "particle-count logs through "
+                        "repro.core.engine.neg_log_count",
+                    )
+                )
+            elif callee in _JNP_LOGS and call.args and _is_constanty(
+                call.args[0]
+            ):
+                findings.append(
+                    line_finding(
+                        self,
+                        rel_path,
+                        source,
+                        call,
+                        "constant-folded `jnp.log(<const>)` — XLA's folded "
+                        "log differs from its runtime log by 1 ulp for "
+                        "some counts; use repro.core.engine.neg_log_count "
+                        "(or pragma why these exact bits are intended)",
+                    )
+                )
+        return findings
+
+
+register_rule(HostLogRule())

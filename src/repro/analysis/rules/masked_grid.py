@@ -1,0 +1,118 @@
+"""masked-grid: count-aware resampling grids in ragged code paths.
+
+Motivation (PR 4): a ragged bank's resampler must build its u-grid over the
+*active* count — ``u = (g + u0) / n_active`` — because inactive lanes carry
+exactly-zero weight and the CDF is flat past the active prefix.  A dense
+``1/P`` grid truncated by the mask never probes the top of the active CDF:
+only draws below ``n_active/P`` survive, silently biasing resampling toward
+the low-CDF prefix (the bug class ``resampling.MASKED_RESAMPLERS`` exists to
+prevent; see its registry-completeness twin).  This rule flags any function
+that receives an active-count argument yet divides an ``arange``/``iota``
+grid by something *not* derived from that count.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (
+    LintRule,
+    dotted_name,
+    line_finding,
+    register_rule,
+)
+
+_COUNT_ARGS = {"n_active", "n_loc", "n_act"}
+_ROW_COUNT_ARGS = {"n", "k", "count", "cnt"}
+_GRID_FNS = {"arange", "iota", "broadcasted_iota"}
+
+
+def _mentions(node: ast.AST, names: set[str]) -> bool:
+    return any(
+        isinstance(n, ast.Name) and n.id in names for n in ast.walk(node)
+    )
+
+
+def _has_grid_call(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Call)
+        and dotted_name(n.func).rpartition(".")[2] in _GRID_FNS
+        for n in ast.walk(node)
+    )
+
+
+class MaskedGridRule(LintRule):
+    name = "masked-grid"
+    motivation = (
+        "PR-4: a dense 1/P u-grid under a lane mask never samples the top "
+        "of the active CDF — grids must span n_active"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        return rel_path.startswith("src/repro/")
+
+    def check_file(self, rel_path, tree, source):
+        findings = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = {
+                a.arg
+                for a in (
+                    fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs
+                )
+            }
+            counts = args & _COUNT_ARGS
+            if not counts:
+                continue
+            # Count-derived names: the count args plus anything assigned
+            # from an expression mentioning one (one level of dataflow is
+            # enough for the grid-idiom bodies this repo writes).
+            derived = set(counts)
+            # vmapped per-row closures rebind the count under a short name
+            # (`def row(key, w, n)`): count-ish params of nested defs count.
+            for node in ast.walk(fn):
+                if (
+                    isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node is not fn
+                ):
+                    for a in node.args.args:
+                        if a.arg in _ROW_COUNT_ARGS:
+                            derived.add(a.arg)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and _mentions(
+                    node.value, derived
+                ):
+                    for tgt in node.targets:
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                derived.add(n.id)
+            for node in ast.walk(fn):
+                if not (
+                    isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.Div)
+                ):
+                    continue
+                if not _has_grid_call(node.left):
+                    continue
+                if _mentions(node.right, derived) or _has_grid_call(
+                    node.right
+                ):
+                    continue
+                findings.append(
+                    line_finding(
+                        self,
+                        rel_path,
+                        source,
+                        node,
+                        f"function takes {sorted(counts)} but divides its "
+                        "u-grid by a count-independent width — a dense 1/P "
+                        "grid under a mask never samples the top of the "
+                        "active CDF (use the MASKED_RESAMPLERS idiom: "
+                        "grid / n_active)",
+                    )
+                )
+        return findings
+
+
+register_rule(MaskedGridRule())

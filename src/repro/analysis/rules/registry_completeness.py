@@ -1,0 +1,151 @@
+"""registry-completeness: the live registries must be closed under the
+engine's dispatch rules.
+
+Motivation (PR 4/6/7 init-time raises, promoted to lint time): the engine
+*runtime*-raises when a ragged bank meets a resampler with no masked form,
+or a meshed fused step meets a backend without its finalize twin — but only
+on the first request that hits that path.  This rule audits the imported
+registries themselves so the gap is a CI failure, not a 3 a.m. serve crash:
+
+- every ``register_resampler`` name has a count-aware
+  ``MASKED_RESAMPLERS`` entry or an explicit ``MASKED_OPT_OUTS`` opt-out
+  (dense grids under a mask bias resampling — the PR-4 class);
+- every registered resampler has the auto-derived fused references
+  (``FUSED_EPILOGUES*`` / ``FUSED_STEPS*`` — poking ``RESAMPLERS`` directly
+  instead of calling ``register_resampler`` skips them);
+- every registered :class:`~repro.core.engine.Backend` implements a
+  *consistent hook matrix*: within each fused family (epilogue, step,
+  finalize, step-finalize) the per-resampler key sets of the
+  base/banked/masked variants must match — a name with a banked form but no
+  masked twin silently de-fuses ragged banks (or raises at ragged init);
+  likewise ``resamplers`` vs ``resamplers_masked`` and the
+  normalize/normalize_masked pairing.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import LintRule, register_rule
+
+_RESAMPLING = "src/repro/core/resampling.py"
+_ENGINE = "src/repro/core/engine.py"
+
+
+class RegistryCompletenessRule(LintRule):
+    name = "registry-completeness"
+    motivation = (
+        "PR-4/6/7: registry gaps (no masked form, missing fused twin) "
+        "surface today as init/serve-time raises — catch them at lint time"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        return False  # repo rule: runs once, not per file
+
+    def check_repo(self) -> list[Finding]:
+        from repro.core import engine, resampling
+
+        findings: list[Finding] = []
+
+        def add(path, msg):
+            findings.append(
+                Finding(rule=self.name, path=path, line=0, message=msg)
+            )
+
+        opt_outs = getattr(resampling, "MASKED_OPT_OUTS", set())
+        for name in sorted(resampling.RESAMPLERS):
+            if (
+                name not in resampling.MASKED_RESAMPLERS
+                and name not in opt_outs
+            ):
+                add(
+                    _RESAMPLING,
+                    f"resampler {name!r} has no MASKED_RESAMPLERS entry "
+                    "and no MASKED_OPT_OUTS opt-out — it cannot run "
+                    "ragged, and a dense grid under a mask would bias "
+                    "resampling (PR-4)",
+                )
+            for reg, label in (
+                (resampling.FUSED_EPILOGUES, "FUSED_EPILOGUES"),
+                (resampling.FUSED_EPILOGUES_BANKED, "FUSED_EPILOGUES_BANKED"),
+                (resampling.FUSED_STEPS, "FUSED_STEPS"),
+                (resampling.FUSED_STEPS_BANKED, "FUSED_STEPS_BANKED"),
+            ):
+                if name not in reg:
+                    add(
+                        _RESAMPLING,
+                        f"resampler {name!r} missing from {label} — was it "
+                        "registered by poking RESAMPLERS directly instead "
+                        "of register_resampler()?",
+                    )
+            if name in resampling.MASKED_RESAMPLERS:
+                for reg, label in (
+                    (resampling.FUSED_EPILOGUES_MASKED,
+                     "FUSED_EPILOGUES_MASKED"),
+                    (resampling.FUSED_STEPS_MASKED, "FUSED_STEPS_MASKED"),
+                ):
+                    if name not in reg:
+                        add(
+                            _RESAMPLING,
+                            f"resampler {name!r} has a masked form but no "
+                            f"{label} reference — ragged banks de-fuse "
+                            "silently",
+                        )
+
+        for bname, backend in sorted(engine.BACKENDS.items()):
+            loc = f"backend {bname!r}"
+            families = {
+                "fused_epilogue": (
+                    backend.fused_epilogue,
+                    backend.fused_epilogue_banked,
+                    backend.fused_epilogue_masked,
+                ),
+                "fused_step": (
+                    backend.fused_step,
+                    backend.fused_step_banked,
+                    backend.fused_step_masked,
+                ),
+                "fused_finalize": (
+                    backend.fused_finalize_banked,
+                    backend.fused_finalize_masked,
+                ),
+                "fused_step_finalize": (
+                    backend.fused_step_finalize_banked,
+                    backend.fused_step_finalize_masked,
+                ),
+                "resamplers": (
+                    backend.resamplers,
+                    backend.resamplers_banked,
+                    backend.resamplers_masked,
+                ),
+            }
+            for fam, variants in families.items():
+                keysets = [set(v or {}) for v in variants]
+                union = set().union(*keysets)
+                for i, ks in enumerate(keysets):
+                    missing = union - ks
+                    if missing:
+                        add(
+                            _ENGINE,
+                            f"{loc}: {fam} hook matrix is ragged — "
+                            f"variant {i} lacks {sorted(missing)} (a name "
+                            "with a banked form but no masked twin "
+                            "de-fuses ragged banks or raises at init)",
+                        )
+            # normalize family: a backend with masked plain-normalize but
+            # no masked stats form silently re-reads (B, P) weights for ESS.
+            if (
+                backend.normalize_masked is not None
+                and backend.normalize_stats_banked is not None
+                and backend.normalize_stats_masked is None
+            ):
+                add(
+                    _ENGINE,
+                    f"{loc}: has normalize_masked and "
+                    "normalize_stats_banked but no normalize_stats_masked "
+                    "— ragged banks fall back to a second (B, P) weight "
+                    "traversal for ESS",
+                )
+        return findings
+
+
+register_rule(RegistryCompletenessRule())

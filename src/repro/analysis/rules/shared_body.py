@@ -1,0 +1,103 @@
+"""shared-body: kernel files must reduce/scan/bisect through the shared
+bodies in ``repro/kernels/common.py``.
+
+Motivation (PR 5 / PR 7): the fused kernels are bitwise-identical to the
+composed likelihood→logsumexp→resample chain *only because* both sides
+execute the same op sequences — ``pairwise_sum``, ``cdf_block``,
+``bisect_flat``, ``online_lse_block``, ``loglik_rows``.  A kernel file that
+re-derives a prefix sum with raw ``jnp.cumsum``, inverts a CDF with
+``searchsorted``, or hand-rolls a max-subtracted logsumexp forks that
+contract: XLA is free to reassociate its reduction differently per shape and
+fusion context, and the fork only surfaces as a 1-ulp cross-backend
+mismatch months later.  The pure-jnp oracles (``ref.py``) are *intentionally*
+independent implementations — they carry pragmas, not exemptions, so the
+independence stays a documented decision.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import (
+    LintRule,
+    dotted_name,
+    line_finding,
+    register_rule,
+    walk_calls,
+)
+
+# Raw calls that fork a shared body, and the body they should go through.
+_FORKS = {
+    "cumsum": "kernels.common.cdf_block (blockwise-carry inclusive cumsum)",
+    "searchsorted": "kernels.common.bisect_flat (flat-CDF bisection)",
+}
+_NAMESPACES = ("jnp", "np", "jax.numpy", "numpy", "jax.lax", "lax")
+
+
+class SharedBodyRule(LintRule):
+    name = "shared-body"
+    motivation = (
+        "PR-5/7: fused == composed is bitwise only because every kernel "
+        "folds through the one reduction/scan/bisect body in "
+        "kernels/common.py"
+    )
+
+    def matches(self, rel_path: str) -> bool:
+        return (
+            rel_path.startswith("src/repro/kernels/")
+            and rel_path != "src/repro/kernels/common.py"
+        )
+
+    def check_file(self, rel_path, tree, source):
+        findings = []
+        for call, callee in walk_calls(tree):
+            base, _, attr = callee.rpartition(".")
+            if attr in _FORKS and base in _NAMESPACES:
+                findings.append(
+                    line_finding(
+                        self,
+                        rel_path,
+                        source,
+                        call,
+                        f"raw `{callee}` in a kernel file forks the bitwise "
+                        f"contract — fold through {_FORKS[attr]} instead",
+                    )
+                )
+        findings += self._manual_lse(rel_path, tree, source)
+        return findings
+
+    def _manual_lse(self, rel_path, tree, source):
+        """Flag hand-rolled log(sum(exp(...))) chains — the online-LSE body
+        (`kernels.common.online_lse_block`) or `stability.logsumexp` are the
+        two blessed spellings."""
+        out = []
+        for call, callee in walk_calls(tree):
+            if callee.rpartition(".")[2] != "log":
+                continue
+            sums = [
+                inner
+                for inner, iname in walk_calls(call)
+                if iname.rpartition(".")[2] == "sum" and inner is not call
+            ]
+            for s in sums:
+                if any(
+                    iname.rpartition(".")[2] == "exp"
+                    for inner, iname in walk_calls(s)
+                    if inner is not s
+                ):
+                    out.append(
+                        line_finding(
+                            self,
+                            rel_path,
+                            source,
+                            call,
+                            "hand-rolled log(sum(exp(...))) logsumexp in a "
+                            "kernel file — use kernels.common."
+                            "online_lse_block or stability.logsumexp",
+                        )
+                    )
+                    break
+        return out
+
+
+register_rule(SharedBodyRule())

@@ -672,6 +672,8 @@ def make_dist_pf_step(
             )
             new_log_w = jnp.full(
                 (p_loc,),
+                # analysis: allow(host-log): must fold to the exact bits of
+                # the dense engine's -jnp.log(float(P)) constant
                 -jnp.log(float(p_loc * cfg.num_shards)),
                 policy.compute_dtype,
             )
@@ -922,6 +924,8 @@ def make_dist_bank_step(
             )
             if n_active is None:
                 new_log_w = jnp.full_like(
+                    # analysis: allow(host-log): must fold to the exact bits
+                    # of the dense engine's -jnp.log(float(P)) constant
                     log_w, -jnp.log(float(p_loc * cfg.num_shards))
                 )
             else:

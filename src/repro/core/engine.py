@@ -105,6 +105,7 @@ __all__ = [
     "FilterConfig",
     "ParticleFilter",
     "get_backend",
+    "neg_log_count",
     "register_backend",
 ]
 
@@ -656,7 +657,7 @@ class FilterConfig:
         return dataclasses.replace(self, **kw)
 
 
-def _neg_log_count(n, dtype):
+def neg_log_count(n, dtype):
     """``-log(n)`` for a particle count, bit-stable across call sites.
 
     Concrete counts go through host double log then one rounding to
@@ -930,7 +931,7 @@ class ParticleFilter:
         if self._fused_step is not None:
             fstep = spec.step_fusion
             patches = fstep.gather(particles, observation, state.step)
-            prior = _neg_log_count(num_particles, cdt)
+            prior = neg_log_count(num_particles, cdt)
             weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
                 self._fused_step(k_res, patches, fstep.model, prior, policy)
             )
@@ -1405,7 +1406,7 @@ class FilterBank:
         else:
             n_active = self._check_n_active(n_active, num_particles)
             cdt = self.policy.compute_dtype
-            log_uniform = _neg_log_count(n_active, cdt)
+            log_uniform = neg_log_count(n_active, cdt)
             lane = jnp.arange(num_particles)
             log_w = jnp.where(
                 lane[None, :] < n_active[:, None],
@@ -1562,7 +1563,7 @@ class FilterBank:
             else:
                 n = jnp.asarray(n_active, jnp.int32)
                 self._check_count_range(n, num_particles)
-            log_u = _neg_log_count(n, state.log_weights.dtype)
+            log_u = neg_log_count(n, state.log_weights.dtype)
             lane = jnp.arange(num_particles)
             row = jnp.where(
                 lane < n,
@@ -1650,7 +1651,7 @@ class FilterBank:
         particles = jax.tree.map(
             lambda s, f: s.at[slot].set(f), state.particles, new_row
         )
-        log_u = _neg_log_count(n, state.log_weights.dtype)
+        log_u = neg_log_count(n, state.log_weights.dtype)
         lane = jnp.arange(num_particles)
         row = jnp.where(
             lane < n,
@@ -1717,7 +1718,7 @@ class FilterBank:
                 particles, observations, state.step
             )
             prior = jnp.broadcast_to(
-                _neg_log_count(num_particles, cdt), (nb,)
+                neg_log_count(num_particles, cdt), (nb,)
             )
             weights, ancestors, log_z, max_lw, sum_w, sum_w2 = (
                 self._fused_step_banked(

@@ -58,6 +58,7 @@ __all__ = [
     "FUSED_STEPS",
     "FUSED_STEPS_BANKED",
     "FUSED_STEPS_MASKED",
+    "MASKED_OPT_OUTS",
     "MASKED_RESAMPLERS",
     "RESAMPLERS",
     "register_resampler",
@@ -290,6 +291,11 @@ def metropolis_masked_banked(
 # cannot run ragged unless its backend supplies a masked form: the dense
 # grids silently truncate the active mass, so the engine raises instead.
 MASKED_RESAMPLERS: dict[str, Resampler] = {}
+
+# Resamplers that *deliberately* ship no masked form (none today).  An entry
+# here tells the registry-completeness analysis rule the gap is a decision,
+# not an oversight; the engine still raises if a ragged bank requests one.
+MASKED_OPT_OUTS: set[str] = set()
 
 
 RESAMPLERS: dict[str, Resampler] = {}

@@ -76,6 +76,8 @@ def round_f32_to(x: jax.Array, dtype) -> jax.Array:
     dt = jnp.dtype(dtype)
     if dt.itemsize >= 4:
         return x
+    # analysis: allow(dtype-literal): round_f32_to *implements* the policy
+    # grids — it branches on the target dtype, it does not choose one
     if dt == jnp.dtype(jnp.bfloat16):
         bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
         bias = jnp.uint32(0x7FFF) + ((bits >> 16) & jnp.uint32(1))
@@ -83,6 +85,8 @@ def round_f32_to(x: jax.Array, dtype) -> jax.Array:
             (bits + bias) & jnp.uint32(0xFFFF0000), jnp.float32
         )
         return jnp.where(jnp.isnan(x), x, rounded)
+    # analysis: allow(dtype-literal): same — the fp16-grid branch of the
+    # shared rounding helper, dtype chosen by the caller's policy
     if dt == jnp.dtype(jnp.float16):
         ax = jnp.abs(x)
         # Subnormal range: the fp16 grid is uniform (2^-24); adding 0.5

@@ -13,6 +13,8 @@ def online_logsumexp_ref(log_w: jax.Array) -> tuple[jax.Array, jax.Array]:
     x = log_w.astype(jnp.float32)
     m = jnp.max(x)
     m_safe = jnp.where(jnp.isfinite(m), m, jnp.float32(0.0))
+    # analysis: allow(shared-body): the two-pass textbook LSE is the oracle
+    # the online kernel is checked against — it must not share its body
     lse = m_safe + jnp.log(jnp.sum(jnp.exp(x - m_safe)))
     lse = jnp.where(jnp.isfinite(m), lse, m)
     return m, lse

@@ -9,6 +9,8 @@ __all__ = ["inclusive_cumsum_ref", "systematic_resample_ref"]
 
 
 def inclusive_cumsum_ref(w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    # analysis: allow(shared-body): the oracle must stay independent of the
+    # kernel bodies it checks — XLA cumsum IS the reference
     return jnp.cumsum(w.astype(jnp.float32)).astype(out_dtype)
 
 
@@ -17,6 +19,7 @@ def systematic_resample_ref(
 ) -> jax.Array:
     """searchsorted-based systematic resampling with fp32 CDF."""
     n_out = num_out or weights.shape[0]
+    # analysis: allow(shared-body): oracle independence (see above)
     cdf = jnp.cumsum(weights.astype(jnp.float32))
     cdf = cdf / cdf[-1]
     # Multiply by the precomputed fp32 reciprocal — same arithmetic as the
@@ -25,5 +28,6 @@ def systematic_resample_ref(
     u = (jnp.arange(n_out, dtype=jnp.float32) + u0.astype(jnp.float32)) * (
         jnp.float32(1.0 / n_out)
     )
+    # analysis: allow(shared-body): oracle independence (see above)
     idx = jnp.searchsorted(cdf, u, side="right")
     return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)

@@ -170,7 +170,7 @@ def _request_budgets(
     ``np.random.default_rng(0)`` made every ``--seed`` serve the same
     traffic).
     """
-    return np.asarray(
+    return np.array(
         jax.random.randint(key, (num_requests,), min_steps, max_steps + 1)
     )
 

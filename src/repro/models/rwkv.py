@@ -173,6 +173,8 @@ def rwkv_time_forward(
         if getattr(cfg, "rwkv_intra_bf16", False):
             # decays are in [0,1] — bf16 storage halves the dominant HBM
             # traffic of the chunked form (§Perf, rwkv prefill cell)
+            # analysis: allow(dtype-literal): config-gated (rwkv_intra_bf16)
+            # storage choice, documented above — not a policy bypass
             dec = dec.astype(jnp.bfloat16)
         att = jnp.einsum("bihp,bjhp,bijhp->bhij", rq, kq, dec)
         y = jnp.einsum("bhij,bjhp->bihp", att, vq)

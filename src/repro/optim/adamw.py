@@ -28,6 +28,8 @@ class OptConfig:
     eps: float = 1e-8
     weight_decay: float = 0.1
     clip_norm: float = 1.0
+    # analysis: allow(dtype-literal): documented default for first-moment
+    # storage; overridable per config, outside the filter policy's scope
     m_dtype: Any = jnp.bfloat16
     v_dtype: Any = jnp.float32
 

@@ -1,0 +1,330 @@
+"""The precision-contract analyzer, tested against its own history.
+
+Each AST rule gets a minimal fixture reproducing the historical bug class it
+was seeded by — the rule must fire on the fixture and stay silent on the
+real tree (modulo baseline).  The jaxpr auditor must prove fp32 accumulation
+on the real fused step under the half-precision policies, and must *fail*
+when a violating fixture is traced through it.
+"""
+
+from __future__ import annotations
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import RULES, load_baseline, run_lint, split_baseline
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_audit import audit_closed_jaxpr, trace_step
+from repro.analysis.lint import lint_file
+
+
+def _lint(rel_path: str, code: str, rule_names=None):
+    rules = (
+        [RULES[n] for n in rule_names]
+        if rule_names is not None
+        else list(RULES.values())
+    )
+    return lint_file(
+        rel_path, rel_path, rules=rules, source=textwrap.dedent(code)
+    )
+
+
+def _rules_fired(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# rule fixtures: one historical bug each
+
+
+def test_shared_body_fires_on_forked_cumsum():
+    """PR-5/7 class: a kernel file re-rolling the CDF instead of sharing
+    kernels.common.cdf_block forks the bitwise contract."""
+    findings = _lint(
+        "src/repro/kernels/resample/newkernel.py",
+        """
+        import jax.numpy as jnp
+
+        def my_cdf(w):
+            return jnp.cumsum(w)
+
+        def my_pick(cdf, u):
+            return jnp.searchsorted(cdf, u)
+        """,
+    )
+    assert _rules_fired(findings) == {"shared-body"}
+    assert len(findings) == 2
+
+
+def test_shared_body_fires_on_hand_rolled_lse():
+    findings = _lint(
+        "src/repro/kernels/logsumexp/newkernel.py",
+        """
+        import jax.numpy as jnp
+
+        def my_lse(x):
+            m = jnp.max(x)
+            return m + jnp.log(jnp.sum(jnp.exp(x - m)))
+        """,
+    )
+    assert _rules_fired(findings) == {"shared-body"}
+
+
+def test_shared_body_silent_outside_kernels():
+    findings = _lint(
+        "src/repro/core/somewhere.py",
+        "import jax.numpy as jnp\n\ndef f(w):\n    return jnp.cumsum(w)\n",
+        rule_names=["shared-body"],
+    )
+    assert findings == []
+
+
+def test_masked_grid_fires_on_dense_grid():
+    """PR-4 class: a dense 1/P u-grid under a lane mask never samples the
+    top of the active CDF."""
+    findings = _lint(
+        "src/repro/core/newresampler.py",
+        """
+        import jax.numpy as jnp
+
+        def bad_masked(key, w, n_active):
+            p = w.shape[-1]
+            u = (jnp.arange(p) + 0.5) / p
+            return u
+        """,
+        rule_names=["masked-grid"],
+    )
+    assert _rules_fired(findings) == {"masked-grid"}
+
+
+def test_masked_grid_silent_on_count_aware_grid():
+    findings = _lint(
+        "src/repro/core/newresampler.py",
+        """
+        import jax.numpy as jnp
+
+        def good_masked(key, w, n_active):
+            p = w.shape[-1]
+            u = (jnp.arange(p) + 0.5) / jnp.maximum(n_active, 1)
+            return u
+        """,
+        rule_names=["masked-grid"],
+    )
+    assert findings == []
+
+
+def test_masked_grid_sees_vmapped_row_closure():
+    """The repo's own idiom: the count rebinds to a short name inside the
+    per-row closure — that division is count-aware, not dense."""
+    findings = _lint(
+        "src/repro/core/newresampler.py",
+        """
+        import jax.numpy as jnp
+
+        def banked(keys, w, n_active):
+            p = w.shape[-1]
+
+            def row(key, wr, n):
+                return (jnp.arange(p) + 0.5) / jnp.maximum(n, 1)
+
+            return row
+        """,
+        rule_names=["masked-grid"],
+    )
+    assert findings == []
+
+
+def test_donation_safety_fires_on_escaping_view():
+    """PR-5 retire pin: np.asarray views escaping the scheduler keep the
+    donated bank buffers alive."""
+    findings = _lint(
+        "src/repro/launch/newsched.py",
+        """
+        import numpy as np
+
+        def retire(results, x, y):
+            results.append(np.asarray(x))
+            return {"traj": np.asarray(y)}
+        """,
+        rule_names=["donation-safety"],
+    )
+    assert _rules_fired(findings) == {"donation-safety"}
+    assert len({f.line for f in findings}) == 2  # both escape sites
+
+
+def test_donation_safety_silent_on_local_view_and_copy():
+    findings = _lint(
+        "src/repro/launch/newsched.py",
+        """
+        import numpy as np
+
+        def tick(results, x, buf, tok, i):
+            done = np.asarray(x) > 0          # local temporary: fine
+            buf[:, i] = np.asarray(tok)       # numpy subscript-store copies
+            results.append(np.array(x))       # explicit copy at escape
+            return int(done.sum())
+        """,
+        rule_names=["donation-safety"],
+    )
+    assert findings == []
+
+
+def test_host_log_fires_on_host_and_folded_log():
+    """PR-4 class: host math.log / folded jnp.log(<const>) are extra
+    roundings of -log(n) beside the blessed engine path."""
+    findings = _lint(
+        "src/repro/core/newmod.py",
+        """
+        import math
+        import jax.numpy as jnp
+
+        def f(p):
+            a = math.log(64)
+            b = jnp.log(float(64))
+            c = jnp.log(p)  # runtime log of a traced value: fine
+            return a, b, c
+        """,
+        rule_names=["host-log"],
+    )
+    assert len(findings) == 2
+    assert _rules_fired(findings) == {"host-log"}
+
+
+def test_dtype_literal_fires_outside_blessed_modules():
+    bad = _lint(
+        "src/repro/core/newmod.py",
+        "import jax.numpy as jnp\nX = jnp.float16\n",
+        rule_names=["dtype-literal"],
+    )
+    blessed = _lint(
+        "src/repro/core/precision.py",
+        "import jax.numpy as jnp\nX = jnp.float16\n",
+        rule_names=["dtype-literal"],
+    )
+    assert _rules_fired(bad) == {"dtype-literal"}
+    assert blessed == []
+
+
+def test_pragma_suppresses_with_justification_only():
+    code = """
+    import jax.numpy as jnp
+
+    # analysis: allow(dtype-literal): fixture says so
+    X = jnp.float16
+    Y = jnp.bfloat16  # analysis: allow(dtype-literal)
+    """
+    findings = _lint(
+        "src/repro/core/newmod.py", code, rule_names=["dtype-literal"]
+    )
+    # X is suppressed; Y's pragma has no justification, so the dtype
+    # finding survives AND the bare pragma is itself reported.
+    assert _rules_fired(findings) == {"dtype-literal", "pragma"}
+    assert all("X = " not in f.snippet for f in findings)  # X suppressed
+
+
+def test_registry_completeness_fires_on_orphan_resampler():
+    """PR-4/6/7 class: a resampler poked into RESAMPLERS without masked or
+    fused twins is a lint failure, not a 3 a.m. serve crash."""
+    from repro.core import resampling
+
+    rule = RULES["registry-completeness"]
+    assert rule.check_repo() == []  # live registries are closed
+    resampling.RESAMPLERS["_fixture_orphan"] = lambda k, w, p: None
+    try:
+        findings = rule.check_repo()
+    finally:
+        del resampling.RESAMPLERS["_fixture_orphan"]
+    assert findings
+    assert all("_fixture_orphan" in f.message for f in findings)
+    assert {"MASKED_RESAMPLERS", "FUSED_EPILOGUES", "FUSED_STEPS"} <= {
+        m for f in findings for m in f.message.split() if m.isupper()
+    }
+
+
+def test_fingerprint_survives_line_drift():
+    a = Finding(rule="r", path="p.py", line=10, message="m", snippet="x = 1")
+    b = Finding(rule="r", path="p.py", line=99, message="m", snippet="x = 1")
+    assert a.fingerprint == b.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean (modulo baseline)
+
+
+def test_real_tree_lint_clean_modulo_baseline():
+    new, _ = split_baseline(run_lint(), load_baseline())
+    assert new == [], "\n".join(f.format() for f in new)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr auditor
+
+
+def _fixture_jaxpr(fn, *avals):
+    return jax.make_jaxpr(fn)(*avals)
+
+
+def test_auditor_flags_half_accumulation_fixture():
+    j = _fixture_jaxpr(jnp.cumsum, jnp.ones((8,), jnp.float16))
+    findings = audit_closed_jaxpr(j, "fixture", strict=True)
+    assert _rules_fired(findings) == {"jaxpr-half-accum"}
+
+
+def test_auditor_flags_half_scan_carry_fixture():
+    def body(x):
+        def step(c, xi):
+            return (c + xi).astype(jnp.float16), c
+
+        return jax.lax.scan(step, jnp.float16(0), x)
+
+    j = _fixture_jaxpr(body, jnp.ones((8,), jnp.float16))
+    findings = audit_closed_jaxpr(j, "fixture", strict=True)
+    assert "jaxpr-half-accum" in _rules_fired(findings)
+    assert any("scan carry" in f.message for f in findings)
+
+
+def test_auditor_flags_unmediated_but_passes_mediated_explog():
+    def naive(x):
+        return jnp.exp(x) / jnp.sum(jnp.exp(x).astype(jnp.float32))
+
+    def mediated(x):
+        m = jnp.max(x)
+        return jnp.exp(x - m)
+
+    x = jnp.ones((8,), jnp.float16)
+    bad = audit_closed_jaxpr(_fixture_jaxpr(naive, x), "f", strict=False)
+    good = audit_closed_jaxpr(_fixture_jaxpr(mediated, x), "f", strict=False)
+    assert "jaxpr-half-explog" in _rules_fired(bad)
+    assert good == []
+
+
+@pytest.mark.parametrize("pname", ["fp16_mixed", "bf16_mixed"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_step_accumulates_fp32_under_half_policies(pname, backend):
+    """The acceptance criterion: under the half-precision policies, every
+    reduction and scan carry in the real (fused, on pallas) step runs fp32
+    — proven on the jaxpr, not inferred from tolerances."""
+    closed = trace_step(pname, backend)
+    findings = audit_closed_jaxpr(closed, f"step:{backend}:{pname}")
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_pure_half_pallas_kernels_stay_fp32_inside():
+    """Pure fp16/bf16 on pallas: kernel interiors strict, engine-level
+    transcendentals must be stability-mediated."""
+    for pname in ("fp16", "bf16"):
+        closed = trace_step(pname, "pallas")
+        findings = audit_closed_jaxpr(
+            closed, f"step:pallas:{pname}", strict=False
+        )
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_check_passes_on_shipped_tree():
+    from repro.analysis.__main__ import main
+
+    assert main(["--no-jaxpr", "--check", "-q"]) == 0
+    assert main(["--rules"]) == 0
