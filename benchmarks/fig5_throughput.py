@@ -38,6 +38,16 @@ padded-to-max, static blind size classes, and a difficulty oracle —
 useful (difficulty-needed) particle-steps/s under measured per-width
 costs; ``elastic_smoke`` is the CI gate (elastic must beat padded).
 
+``packed_sweep`` benches the multi-bank packing engine's execution model
+(``repro.launch.serve --packed``): one serve-style ladder workload run
+(a) padded to one dense max-width bank, (b) as serve's pre-packing
+single *ragged* bank — masked at lane width MAX, so compute still scales
+with the widest request — and (c) as size-class packed banks, each class
+at its own width.  Scored as useful particle-steps/s; a small real
+``run_continuous_batching`` packed run stamps scheduler latency
+percentiles and packing stats into BENCH_packed.json.  ``packed_smoke``
+is the CI gate (packed must beat the single ragged bank).
+
 Every sweep also emits a machine-readable ``BENCH_<sweep>.json``
 (aggregate particle-steps/s per config) via
 ``benchmarks.common.write_bench_json``.
@@ -66,12 +76,15 @@ def run(
     ragged=(8, 256, 2_048),
     fused_sizes=(8_192, 32_768),
     elastic=(8, 128, 2_048, 40),
+    packed=(8, 256, 2_048),
 ) -> list[str]:
-    """Paper grid + bank/mesh/ragged/fused/elastic sweeps.  ``ragged`` is
-    the (num_requests, p_min, p_max) shape of the ragged sweep,
-    ``fused_sizes`` the particle counts of the fused-epilogue sweep, and
-    ``elastic`` the (num_slots, p_min, p_max, ticks) shape of the elastic
-    controller sweep, so quick runs can shrink them alongside ``sizes``."""
+    """Paper grid + bank/mesh/ragged/fused/elastic/packed sweeps.
+    ``ragged`` is the (num_requests, p_min, p_max) shape of the ragged
+    sweep, ``fused_sizes`` the particle counts of the fused-epilogue
+    sweep, ``elastic`` the (num_slots, p_min, p_max, ticks) shape of the
+    elastic controller sweep, and ``packed`` the (num_slots, p_min,
+    p_max) shape of the multi-bank packing sweep, so quick runs can
+    shrink them alongside ``sizes``."""
     from repro.data.synthetic_video import VideoConfig, generate_video
 
     video, _ = generate_video(
@@ -134,6 +147,9 @@ def run(
             p_max=elastic[2],
             ticks=elastic[3],
         )
+    )
+    rows.extend(
+        packed_sweep(num_slots=packed[0], p_min=packed[1], p_max=packed[2])
     )
     return rows
 
@@ -680,6 +696,247 @@ def elastic_smoke() -> list[str]:
     )
 
 
+def packed_sweep(
+    num_slots: int = 8,
+    p_min: int = 256,
+    p_max: int = 2_048,
+    policy_name: str = "bf16",
+    seed: int = 0,
+    serve_steps: int = 8,
+    gate: bool = False,
+) -> list[str]:
+    """Size-class packed banks vs the single ragged bank vs pad-to-max.
+
+    Workload: ``num_slots`` concurrent requests with key-derived particle
+    budgets from the power-of-two ladder [p_min, p_max] — the serving
+    mix ``run_continuous_batching`` admits.  Three execution models for
+    the same frame over all of them:
+
+    - **padded**: one dense bank at lane width p_max (pre-ragged serving);
+    - **single_ragged**: one *ragged* bank at lane width p_max with
+      ``n_active`` = the true budgets — what ``serve --smc`` without
+      ``--packed`` runs today.  Masking recovers resampling cost but the
+      dense kernels still traverse p_max lanes per slot, so compute
+      scales with the widest request in the bank;
+    - **packed**: one bank per size class at the *class* width
+      (``serve --packed`` / ``make_packed_banks``) — each request's
+      kernels traverse only its class's lanes.
+
+    Scored as useful (budgeted) particle-steps per second over the
+    summed wall time.  A small real packed ``run_continuous_batching``
+    run (toy SMC spec, async + pipelined uploads) then stamps scheduler
+    latency percentiles, spillover, and occupancy into BENCH_packed.json
+    — the end-to-end packing engine, not just the kernel model.
+    ``gate=True`` raises SystemExit unless packed useful throughput >=
+    the single ragged bank's.
+    """
+    import numpy as np
+
+    from repro.core.filter import SMCSpec
+    from repro.data.synthetic_video import VideoConfig, generate_video
+    from repro.launch.serve import (
+        make_packed_banks,
+        particle_size_classes,
+        run_continuous_batching,
+    )
+
+    ladder = particle_size_classes(p_min, p_max)
+    budgets = np.asarray(ladder)[
+        np.asarray(
+            jax.random.randint(
+                jax.random.key(seed), (num_slots,), 0, len(ladder)
+            )
+        )
+    ]
+    useful = int(budgets.sum())
+    video, _ = generate_video(
+        jax.random.key(0), VideoConfig(num_frames=2, height=256, width=256)
+    )
+    frame = video[0].astype(jnp.float32)
+    pol = get_policy(policy_name)
+    rows, records = [], []
+
+    def bank_timer(width, n_active, ragged):
+        b = len(n_active)
+        cfg = TrackerConfig(num_particles=width, height=256, width=256)
+        starts = 128.0 + 8.0 * jnp.stack(
+            [jnp.arange(b, dtype=jnp.float32)] * 2, -1
+        )
+        bank = make_multi_tracker_filter(
+            cfg, pol, starts,
+            budgets=jnp.asarray(n_active) if ragged else None,
+        )
+        state = bank.init(jax.random.key(1), width)
+        keys = jax.random.split(jax.random.key(2), b)
+        step = bank.jit_step_shared
+        return lambda: time_fn(
+            lambda st, f, ks: step(st, f, ks),
+            state, frame, keys, reps=3, warmup=1,
+        )
+
+    # Timers built once, then timed in interleaved rounds with a
+    # min-of-rounds reduction per config: a transient load spike hits one
+    # round of every config instead of one whole config, so the
+    # packed/single ratio the gate checks survives a noisy host.
+    timers = {
+        "padded": bank_timer(p_max, [p_max] * num_slots, ragged=False),
+        "single_ragged": bank_timer(
+            p_max, [int(b) for b in budgets], ragged=True
+        ),
+    }
+    # Serve's packed lanes are ragged (spillover/migration need runtime
+    # counts) — time them as such, at the class width.
+    class_members = {
+        c: [int(b) for b in budgets if b == c]
+        for c in ladder
+        if any(b == c for b in budgets)
+    }
+    class_timers = {
+        c: bank_timer(c, members, ragged=True)
+        for c, members in class_members.items()
+    }
+    us = {name: float("inf") for name in timers}
+    us_class = {c: float("inf") for c in class_timers}
+    for _ in range(3):
+        for name, timer in timers.items():
+            us[name] = min(us[name], timer())
+        for c, timer in class_timers.items():
+            us_class[c] = min(us_class[c], timer())
+
+    us_packed = 0.0
+    for c, members in class_members.items():
+        us_c = us_class[c]
+        us_packed += us_c
+        rows.append(
+            csv_row(
+                f"fig5_throughput/packed_class{c}_B{len(members)}"
+                f"_{policy_name}",
+                us_c,
+                f"useful_particle_steps_per_s="
+                f"{sum(members) / us_c * 1e6:.3e}",
+            )
+        )
+        records.append(
+            {
+                "config": f"class_{c}",
+                "bank": len(members),
+                "width": c,
+                "useful_particles": sum(members),
+                "us_per_step": us_c,
+                "useful_particle_steps_per_s": sum(members) / us_c * 1e6,
+            }
+        )
+    us["packed"] = us_packed
+    thpt = {name: useful / u * 1e6 for name, u in us.items()}
+    for name in ("padded", "single_ragged", "packed"):
+        rows.append(
+            csv_row(
+                f"fig5_throughput/packed_{name}_B{num_slots}_P{p_max}"
+                f"_{policy_name}",
+                us[name],
+                f"useful_particle_steps_per_s={thpt[name]:.3e}",
+            )
+        )
+        records.append(
+            {
+                "config": name,
+                "slots": num_slots,
+                "p_min": p_min,
+                "p_max": p_max,
+                "useful_particles": useful,
+                "us_per_step": us[name],
+                "useful_particle_steps_per_s": thpt[name],
+            }
+        )
+    gain_vs_padded = thpt["packed"] / thpt["padded"]
+    gain_vs_single = thpt["packed"] / thpt["single_ragged"]
+    rows.append(
+        csv_row(
+            f"fig5_throughput/packed_gains_B{num_slots}",
+            0.0,
+            f"vs_padded={gain_vs_padded:.2f};"
+            f"vs_single_ragged={gain_vs_single:.2f}",
+        )
+    )
+
+    # End-to-end scheduler pass: a real packed run_continuous_batching
+    # run (toy SMC decode stand-in) for latency percentiles and packing
+    # stats — cheap, and it exercises admission/spillover/retire rather
+    # than just the kernel cost model.
+    def toy_init(key, n):
+        return {
+            "x": jax.random.normal(key, (n,), jnp.float32),
+            "cum_reward": jnp.zeros((n,), jnp.float32),
+            "seq": jnp.zeros((n, serve_steps), jnp.int32),
+        }
+
+    def toy_transition(key, p, step):
+        x = jax.random.normal(key, p["x"].shape, jnp.float32)
+        tok = (jnp.abs(x) * 100).astype(jnp.int32)
+        seq = jax.lax.dynamic_update_slice(
+            p["seq"], tok[:, None], (jnp.int32(0), step.astype(jnp.int32))
+        )
+        return {"x": x, "cum_reward": p["cum_reward"] + x, "seq": seq}
+
+    def toy_loglik(p, obs, step):
+        del obs, step
+        return p["x"]
+
+    banks = make_packed_banks(
+        SMCSpec(toy_init, toy_transition, toy_loglik),
+        FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+        num_slots=num_slots,
+        p_min=p_min,
+        p_max=p_max,
+    )
+    stats = run_continuous_batching(
+        banks,
+        num_requests=2 * num_slots,
+        max_steps=serve_steps,
+        particles=(p_min, p_max),
+        key=jax.random.key(seed + 7),
+        async_admit=True,
+        pipelined_uploads=True,
+    )
+    lat = stats["latency"]
+    pk = stats["packed"]
+    rows.append(
+        csv_row(
+            f"fig5_throughput/packed_serve_B{num_slots}",
+            lat["p50_ms"] * 1e3,
+            f"p95_ms={lat['p95_ms']:.2f};"
+            f"spillover={pk['spillover_admissions']};"
+            f"occupancy={stats['occupancy']:.2f}",
+        )
+    )
+    write_bench_json(
+        "packed",
+        records,
+        ladder=[int(c) for c in ladder],
+        budgets=[int(x) for x in budgets],
+        gain_vs_padded=gain_vs_padded,
+        gain_vs_single_ragged=gain_vs_single,
+        serve_ticks=stats["ticks"],
+        serve_occupancy=stats["occupancy"],
+        serve_latency_p50_ms=lat["p50_ms"],
+        serve_latency_p95_ms=lat["p95_ms"],
+        serve_spillover_admissions=pk["spillover_admissions"],
+        serve_classes={str(w): n for w, n in pk["classes"].items()},
+    )
+    if gate and gain_vs_single < 1.0:
+        raise SystemExit(
+            f"packed useful throughput below the single ragged bank: "
+            f"{gain_vs_single:.2f} < 1.0 (see BENCH_packed.json)"
+        )
+    return rows
+
+
+def packed_smoke() -> list[str]:
+    """CI entry: reduced packed sweep that *gates* on packed >= the
+    single-ragged bank's useful particle-steps/s."""
+    return packed_sweep(num_slots=6, p_min=64, p_max=512, gate=True)
+
+
 def fused_sweep(
     sizes=(8_192, 32_768),
     policies=("fp32", "bf16", "fp16"),
@@ -797,6 +1054,8 @@ if __name__ == "__main__":
         "fused_smoke": fused_smoke,
         "elastic_sweep": elastic_sweep,
         "elastic_smoke": elastic_smoke,
+        "packed_sweep": packed_sweep,
+        "packed_smoke": packed_smoke,
     }
     print("name,us_per_call,derived")
     for row in fns[which]():

@@ -46,6 +46,7 @@ def main() -> None:
                 ragged=(4, 128, 512),
                 fused_sizes=(8192,),
                 elastic=(4, 64, 512, 16),
+                packed=(4, 64, 512),
             )
             if args.quick
             else {}

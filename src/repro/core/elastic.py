@@ -95,6 +95,14 @@ class ElasticConfig:
                    grants grows by ESS deficit (furthest below
                    ``grow_below`` first) and denies the rest; shrinks are
                    always granted (they free budget).  None = uncapped.
+    reseed_after:  failure-recovery escalation.  A busy slot already at
+                   ``max_particles`` whose ESS stays below ``grow_below``
+                   has nothing left to grow — once the collapse persists
+                   for this many consecutive ticks the controller emits a
+                   ``kind="reseed"`` decision (apply via
+                   ``FilterBank.reseed_slot``: a fresh diffuse-prior cloud
+                   at MAX, step counter kept — the request stays
+                   mid-flight).  None (default) disables the escalation.
     """
 
     grow_below: float
@@ -103,6 +111,7 @@ class ElasticConfig:
     shrink_above: float | None = None
     cooldown: int = 2
     global_budget: int | None = None
+    reseed_after: int | None = None
 
     def __post_init__(self) -> None:
         if not self.grow_below > 0:
@@ -136,6 +145,11 @@ class ElasticConfig:
                 f"global_budget={self.global_budget} cannot admit even "
                 f"one slot at min_particles={self.min_particles}"
             )
+        if self.reseed_after is not None and self.reseed_after < 1:
+            raise ValueError(
+                f"reseed_after must be >= 1 ticks of persistent collapse "
+                f"(or None to disable), got {self.reseed_after}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,15 +159,27 @@ class BudgetDecision:
     ``granted=False`` marks a grow the global-budget arbiter denied (the
     slot stays at ``old``; it retries on later ticks while the trigger
     holds).  ``deficit`` is the ESS shortfall the arbiter ranked by.
+
+    ``migrate=True`` marks a granted grow whose new budget exceeds the
+    slot's current *lane width* (only possible when the caller passed
+    ``observe(..., lane_width=...)`` — the multi-bank packer): the resize
+    cannot happen in-bank; the caller must move the slot to a wider bank
+    (``FilterBank.export_slot`` → ``import_slot``) or report the move
+    blocked (``BudgetController.migration_blocked``).
+
+    ``kind="reseed"`` is the failure-recovery escalation (``old == new``:
+    no budget change — the slot's cloud is re-drawn from the prior at its
+    current budget via ``FilterBank.reseed_slot``).
     """
 
     slot: int
     old: int
     new: int
     ess: float
-    kind: str  # "grow" | "shrink"
+    kind: str  # "grow" | "shrink" | "reseed"
     granted: bool = True
     deficit: float = 0.0
+    migrate: bool = False
 
 
 class BudgetController:
@@ -175,19 +201,42 @@ class BudgetController:
         self.config = config
         self.num_slots = num_slots
         self._cooldown = np.zeros(num_slots, np.int64)
+        # Consecutive ticks each slot has sat collapsed (ESS < grow_below)
+        # at max_particles — the reseed_after escalation trigger.
+        self._collapse = np.zeros(num_slots, np.int64)
         self.grows = 0
         self.shrinks = 0
         self.denied = 0
+        self.reseeds = 0
 
     def slot_admitted(self, slot: int) -> None:
         """A request just entered ``slot``: start it on a full cooldown."""
         self._cooldown[slot] = self.config.cooldown
+        self._collapse[slot] = 0
+
+    def slot_moved(self, src: int, dst: int) -> None:
+        """The scheduler migrated the request in ``src`` to ``dst`` (a
+        cross-bank move in the packed scheduler): its cooldown and
+        collapse history travel with it; the vacated slot resets."""
+        self._cooldown[dst] = self._cooldown[src]
+        self._collapse[dst] = self._collapse[src]
+        self._cooldown[src] = 0
+        self._collapse[src] = 0
+
+    def migration_blocked(self, slot: int) -> None:
+        """A ``migrate=True`` grow could not be placed (no free slot in
+        any wide-enough bank): reclassify it as denied.  The cooldown
+        stays charged — backoff before retrying a placement that just
+        failed."""
+        self.grows -= 1
+        self.denied += 1
 
     def observe(
         self,
         ess: np.ndarray,
         n_active: np.ndarray,
         busy: np.ndarray,
+        lane_width: np.ndarray | None = None,
     ) -> list[BudgetDecision]:
         """One tick: propose and arbitrate budget changes.
 
@@ -196,11 +245,18 @@ class BudgetController:
         n_active: (B,) current per-slot budgets.
         busy:     (B,) bool — slots holding a live request; idle slots are
                   never resized (their lanes are junk anyway).
+        lane_width: optional (B,) static lane width of each slot's bank —
+                  the multi-bank packer, where slot budgets are capped by
+                  the bank they currently sit in.  A granted grow whose
+                  new budget exceeds its slot's width is flagged
+                  ``migrate=True``: the caller must move the slot to a
+                  wider bank (or call :meth:`migration_blocked`).  None
+                  (single-bank scheduler): all resizes are in-bank.
 
         Returns every decision made this tick, granted or denied, in
         application order.  Only entries with ``granted=True`` change a
-        budget; the caller applies them via ``resize_slot`` and updates
-        its own budget array.
+        budget; the caller applies them via ``resize_slot`` (or the
+        export/import migration pair) and updates its own budget array.
         """
         cfg = self.config
         ess = np.nan_to_num(
@@ -213,6 +269,13 @@ class BudgetController:
                 f"ess/n_active must be shaped ({self.num_slots},), got "
                 f"{ess.shape} / {n.shape}"
             )
+        if lane_width is not None:
+            lane_width = np.asarray(lane_width, np.int64)
+            if lane_width.shape != (self.num_slots,):
+                raise ValueError(
+                    f"lane_width must be shaped ({self.num_slots},), got "
+                    f"{lane_width.shape}"
+                )
 
         # Cooldowns tick down first; slots at zero are eligible.
         np.maximum(self._cooldown - 1, 0, out=self._cooldown)
@@ -220,6 +283,13 @@ class BudgetController:
 
         shrink = eligible & (ess > cfg.shrink_above) & (n > cfg.min_particles)
         grow = eligible & (ess < cfg.grow_below) & (n < cfg.max_particles)
+
+        # Failure-recovery escalation: collapse persistence is tracked on
+        # the raw trigger (independent of cooldown) so a reseed cannot be
+        # starved by its own cooldown charges.
+        collapsed = busy & (ess < cfg.grow_below) & (n >= cfg.max_particles)
+        self._collapse[collapsed] += 1
+        self._collapse[~collapsed] = 0
 
         decisions: list[BudgetDecision] = []
         # Shrinks first — always granted, and under a global budget they
@@ -278,10 +348,36 @@ class BudgetController:
                     ess=float(ess[slot]),
                     kind="grow",
                     deficit=deficit,
+                    migrate=(
+                        lane_width is not None
+                        and new > int(lane_width[slot])
+                    ),
                 )
             )
             self._cooldown[slot] = cfg.cooldown
             self.grows += 1
+
+        # Reseed escalation: a slot with nothing left to grow whose
+        # collapse has persisted long enough.  No particle-count change,
+        # so the global-budget arbiter is not involved.
+        if cfg.reseed_after is not None:
+            for slot in np.flatnonzero(
+                eligible
+                & collapsed
+                & (self._collapse >= cfg.reseed_after)
+            ):
+                decisions.append(
+                    BudgetDecision(
+                        slot=int(slot),
+                        old=int(n[slot]),
+                        new=int(n[slot]),
+                        ess=float(ess[slot]),
+                        kind="reseed",
+                    )
+                )
+                self._cooldown[slot] = cfg.cooldown
+                self._collapse[slot] = 0
+                self.reseeds += 1
         return decisions
 
     @property
@@ -290,4 +386,5 @@ class BudgetController:
             "grows": self.grows,
             "shrinks": self.shrinks,
             "denied_grows": self.denied,
+            "reseeds": self.reseeds,
         }

@@ -1344,6 +1344,52 @@ class FilterBank:
         # no explicit ``n_active`` is passed.
         self.default_n_active = None
 
+    # Jitted entry points shared across sibling banks (see :meth:`sibling`).
+    # Every one of these reads its geometry — slot count, lane width — from
+    # the *state argument's* shapes, never from ``self.num_slots``, so one
+    # trace cache serves the whole family: N size-class banks cost one
+    # compile per distinct state geometry, not N.
+    _SHARED_ENTRY_POINTS = (
+        "jit_step",
+        "jit_step_shared",
+        "jit_init_slot",
+        "jit_step_donated",
+        "jit_step_shared_donated",
+        "jit_init_slot_donated",
+        "jit_resize_slot",
+        "jit_resize_slot_donated",
+        "jit_reseed_slot",
+        "jit_reseed_slot_donated",
+        "jit_export_slot",
+        "jit_import_slot",
+        "jit_import_slot_donated",
+    )
+
+    def sibling(self, num_slots: int | None = None) -> "FilterBank":
+        """A new bank sharing this bank's spec, config, and compiled code.
+
+        The multi-bank packer (``repro.launch.serve``) builds one bank per
+        particle size class; constructed independently, each would jit its
+        own step/init_slot/resize_slot and N banks would N× compile.  The
+        sibling re-runs registry resolution and validation (a fresh
+        ``FilterBank``), then adopts this bank's jitted entry points —
+        legal because every entry point is geometry-polymorphic (see
+        ``_SHARED_ENTRY_POINTS``), so banks of any slot count and lane
+        width share one trace cache and same-geometry states hit the same
+        executable.
+        """
+        twin = FilterBank(
+            self.spec,
+            self.config,
+            num_slots=self.num_slots if num_slots is None else num_slots,
+        )
+        for name in self._SHARED_ENTRY_POINTS:
+            # cached_property: instance __dict__ entries shadow the
+            # descriptor, so the donor's callables (materialized here if
+            # not yet) become the sibling's.
+            twin.__dict__[name] = getattr(self, name)
+        return twin
+
     # -- lifecycle ----------------------------------------------------------
 
     def _init_slot_particles(self, key, num_particles: int, slot):
@@ -1522,6 +1568,7 @@ class FilterBank:
         slot,
         key: jax.Array,
         n_active: Any = None,
+        particles: Any = None,
     ) -> FilterState:
         """(Re)start one slot in place; ``slot`` may be traced (no recompile).
 
@@ -1534,10 +1581,24 @@ class FilterBank:
         budget without recompiling.  Omitted, the slot restarts at full
         width.  Passing a count on a dense bank raises: raggedness changes
         the state pytree, which must be decided at ``init``.
+
+        ``particles`` optionally supplies the slot's initial cloud directly
+        (a pytree of per-slot rows at this bank's lane width) instead of
+        drawing ``spec.init`` — the admission path for state prepared
+        outside the bank, e.g. a prompt cache filled by a batched prefill
+        pass and broadcast over the slot's lanes.  ``key`` is unused then.
         """
         num_particles = state.log_weights.shape[-1]
         slot = jnp.asarray(slot, jnp.int32)
-        fresh = self._init_slot_particles(key, num_particles, slot)
+        if particles is None:
+            fresh = self._init_slot_particles(key, num_particles, slot)
+        else:
+            fresh = jax.tree.map(
+                lambda x: x.astype(self.policy.compute_dtype)
+                if jnp.issubdtype(x.dtype, jnp.inexact)
+                else x,
+                particles,
+            )
         particles = jax.tree.map(
             lambda s, f: s.at[slot].set(f), state.particles, fresh
         )
@@ -1662,6 +1723,181 @@ class FilterBank:
             particles,
             state.log_weights.at[slot].set(row),
             state.step,  # mid-flight: the request keeps its progress
+            n_active=state.n_active.at[slot].set(n),
+            log_uniform=state.log_uniform.at[slot].set(log_u),
+        )
+        if self._dist_cfg is not None:
+            state = self._shard_state(state)
+        return state
+
+    def reseed_slot(
+        self,
+        state: FilterState,
+        slot,
+        key: jax.Array,
+        n_active: Any = None,
+    ) -> FilterState:
+        """Re-seed one live slot from the prior, keeping its progress.
+
+        The elastic failure-recovery escalation (``repro.core.elastic``):
+        a slot whose ESS stays pinned at collapse even at its maximum
+        budget has lost the target — more lanes of the same degenerate
+        posterior cannot recover it.  The re-seed draws a fresh
+        (diffuse-prior) cloud with uniform weights — exactly admission —
+        but *keeps the step counter*: the request stays mid-flight at its
+        current position instead of restarting from step 0.
+
+        On ragged banks ``n_active`` (traced ok) sets the re-seeded
+        count; omitted, the slot keeps its current budget (unlike
+        ``init_slot``, which defaults to full width — a re-seed is a
+        recovery action, not a budget change).
+        """
+        num_particles = state.log_weights.shape[-1]
+        slot = jnp.asarray(slot, jnp.int32)
+        fresh = self._init_slot_particles(key, num_particles, slot)
+        particles = jax.tree.map(
+            lambda s, f: s.at[slot].set(f), state.particles, fresh
+        )
+        if state.n_active is None:
+            if n_active is not None:
+                raise ValueError(
+                    "reseed_slot(n_active=...) needs a ragged bank; this "
+                    "state is dense (the state pytree cannot change shape "
+                    "under jit)"
+                )
+            log_w = state.log_weights.at[slot].set(
+                jnp.full(
+                    (num_particles,),
+                    -jnp.log(float(num_particles)),
+                    state.log_weights.dtype,
+                )
+            )
+            state = FilterState(particles, log_w, state.step)
+        else:
+            if n_active is None:
+                n = state.n_active[slot]
+            else:
+                n = jnp.asarray(n_active, jnp.int32)
+                self._check_count_range(n, num_particles)
+            log_u = neg_log_count(n, state.log_weights.dtype)
+            lane = jnp.arange(num_particles)
+            row = jnp.where(
+                lane < n,
+                log_u,
+                jnp.asarray(-jnp.inf, state.log_weights.dtype),
+            )
+            state = FilterState(
+                particles,
+                state.log_weights.at[slot].set(row),
+                state.step,  # mid-flight: only the cloud was replaced
+                n_active=state.n_active.at[slot].set(n),
+                log_uniform=state.log_uniform.at[slot].set(log_u),
+            )
+        if self._dist_cfg is not None:
+            state = self._shard_state(state)
+        return state
+
+    def export_slot(self, state: FilterState, slot):
+        """One slot's rows for cross-bank migration.
+
+        Returns ``(particles_row, log_w_row, step)`` — the slot's particle
+        pytree (lane-width rows), unnormalized log-weight row, and step
+        counter — the exact inputs :meth:`import_slot` admits into another
+        (possibly different-width) bank.  ``slot`` may be traced; the read
+        is non-destructive (do not donate the state into it).
+        """
+        slot = jnp.asarray(slot, jnp.int32)
+        rows = jax.tree.map(lambda x: x[slot], state.particles)
+        return rows, state.log_weights[slot], state.step[slot]
+
+    def import_slot(
+        self,
+        state: FilterState,
+        slot,
+        src_particles: Any,
+        src_log_w: jax.Array,
+        key: jax.Array,
+        n_active,
+        step,
+    ) -> FilterState:
+        """Admit an exported slot into this (possibly different-width) bank.
+
+        The cross-class migration primitive behind the packed scheduler:
+        the source slot's posterior (particle rows + log-weight row at the
+        *source* lane width, from :meth:`export_slot`) is re-drawn at
+        ``n_active`` through the same count-aware masked resampler
+        :meth:`resize_slot` dispatches — the u-grid spans the new count,
+        the CDF spans the source posterior.  A narrower source is
+        zero-padded to this bank's width (padding carries exactly 0 mass
+        so the draw never selects it); a wider source is truncated, which
+        is only mass-preserving when its active lanes fit this width — the
+        caller resizes the slot down first (the scheduler does).  Weights
+        reset to uniform over ``n_active`` and the *source step counter*
+        is installed: the request stays mid-flight, only its bank moved.
+
+        ``slot``, ``n_active``, and ``step`` may all be traced; one
+        compile per (source width, destination width) pair.  Requires a
+        ragged destination (cross-width admission makes counts runtime
+        values by construction).
+        """
+        if state.n_active is None:
+            raise ValueError(
+                "import_slot needs a ragged destination bank; this state "
+                "is dense — init the bank with n_active so per-slot "
+                "counts are runtime values"
+            )
+        if self._resize_resampler is None:
+            raise ValueError(
+                f"resampler {self.config.resampler!r} has no masked "
+                "(count-aware) form, so a cross-bank migration cannot "
+                "draw the new count; register one via "
+                "Backend.resamplers_masked or resampling.MASKED_RESAMPLERS"
+            )
+        num_particles = state.log_weights.shape[-1]
+        src_width = src_log_w.shape[-1]
+        slot = jnp.asarray(slot, jnp.int32)
+        n = jnp.asarray(n_active, jnp.int32)
+        self._check_count_range(n, num_particles)
+        policy = self.policy
+
+        # Source posterior, resized to this bank's lane width: zero weight
+        # is exactly "never an ancestor" on every masked-resampler path.
+        w_src, _, _ = resampling.reference_normalize(src_log_w, policy)
+        if src_width < num_particles:
+            w_dst = (
+                jnp.zeros((num_particles,), w_src.dtype)
+                .at[:src_width]
+                .set(w_src)
+            )
+        elif src_width > num_particles:
+            w_dst = w_src[:num_particles]
+        else:
+            w_dst = w_src
+        ancestors = self._resize_resampler(
+            key[None], w_dst[None], policy, n[None]
+        )[0]
+        gather = self.spec.gather or resampling.gather_ancestors
+        new_row = gather(src_particles, ancestors)
+        new_row = jax.tree.map(
+            lambda x: x.astype(self.policy.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.inexact)
+            else x,
+            new_row,
+        )
+        particles = jax.tree.map(
+            lambda s, f: s.at[slot].set(f), state.particles, new_row
+        )
+        log_u = neg_log_count(n, state.log_weights.dtype)
+        lane = jnp.arange(num_particles)
+        row = jnp.where(
+            lane < n,
+            log_u,
+            jnp.asarray(-jnp.inf, state.log_weights.dtype),
+        )
+        state = FilterState(
+            particles,
+            state.log_weights.at[slot].set(row),
+            state.step.at[slot].set(jnp.asarray(step, jnp.int32)),
             n_active=state.n_active.at[slot].set(n),
             log_uniform=state.log_uniform.at[slot].set(log_u),
         )
@@ -2015,6 +2251,35 @@ class FilterBank:
         budget switch rewrites the slot's rows in place."""
         return jax.jit(self.resize_slot, donate_argnums=(0,))
 
+    @functools.cached_property
+    def jit_reseed_slot(self):
+        """``reseed_slot`` jit-compiled once; slot and count stay traced."""
+        return jax.jit(self.reseed_slot)
+
+    @functools.cached_property
+    def jit_reseed_slot_donated(self):
+        """:attr:`jit_reseed_slot` with the state argument donated — the
+        recovery re-seed rewrites the slot's rows in place."""
+        return jax.jit(self.reseed_slot, donate_argnums=(0,))
+
+    @functools.cached_property
+    def jit_export_slot(self):
+        """``export_slot`` jit-compiled once — *never* donated: the source
+        bank keeps serving from the exported state."""
+        return jax.jit(self.export_slot)
+
+    @functools.cached_property
+    def jit_import_slot(self):
+        """``import_slot`` jit-compiled once; slot/count/step stay traced
+        (one compile per source-width × destination-width pair)."""
+        return jax.jit(self.import_slot)
+
+    @functools.cached_property
+    def jit_import_slot_donated(self):
+        """:attr:`jit_import_slot` with the destination state donated — a
+        migration admit rewrites the receiving slot's rows in place."""
+        return jax.jit(self.import_slot, donate_argnums=(0,))
+
     # -- internals ----------------------------------------------------------
 
     def _normalize_banked(self, log_w: jax.Array):
@@ -2163,7 +2428,10 @@ class FilterBank:
             estimate=estimate,
             ess=ess,
             log_z_inc=lse - prev_lse,
-            resampled=jnp.ones((self.num_slots,), bool),
+            # Geometry from the state, not self.num_slots: the jitted step
+            # is shared across sibling banks (see :meth:`sibling`), which
+            # may carry different slot counts.
+            resampled=jnp.ones((state.log_weights.shape[0],), bool),
             max_loglik=max_lw,
         )
         return FilterState(

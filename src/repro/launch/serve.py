@@ -60,7 +60,8 @@ import numpy as np
 
 
 def make_smc_decode_spec(
-    params, cfg, policy, decode, *, temperature: float, steps: int
+    params, cfg, policy, decode, *, temperature: float, steps: int,
+    prompt_len: int = 0,
 ):
     """SMC decoding as a particle-filter model.
 
@@ -75,16 +76,25 @@ def make_smc_decode_spec(
     the per-step estimate to one scalar (mean reward) instead of averaging
     whole caches.  ``steps`` sizes the cache/history buffers — the *maximum*
     request length a serving slot can hold.
+
+    ``prompt_len`` reserves room for a prompt processed by a *batched
+    prefill pass* (:class:`PrefillRunner`) before admission: the cache is
+    sized for prompt + decode, and decode positions are offset by
+    ``prompt_len - 1`` so the first decode step lands right after the
+    prefill writes (positions ``0..prompt_len-2``) with the last prompt
+    token as the slot's starting ``tok``.  ``prompt_len=0`` (default) is
+    exactly the promptless spec.
     """
     from repro.core.filter import SMCSpec
     from repro.models import model as M
 
+    s_max = steps + prompt_len + 1
     # Per-leaf particle axis: the one dimension whose extent follows the
     # batch argument of the cache layout (shape-only — nothing allocated).
     cache_axes = jax.tree.map(
         lambda a, b: _changed_axis(a.shape, b.shape),
-        M.cache_specs(cfg, 2, steps + 1),
-        M.cache_specs(cfg, 3, steps + 1),
+        M.cache_specs(cfg, 2, s_max),
+        M.cache_specs(cfg, 3, s_max),
         is_leaf=_is_param_spec,
     )
 
@@ -92,7 +102,7 @@ def make_smc_decode_spec(
         del key
         return {
             "tok": jnp.zeros((n,), jnp.int32),
-            "cache": M.init_cache(cfg, n, steps + 1, policy.compute_dtype),
+            "cache": M.init_cache(cfg, n, s_max, policy.compute_dtype),
             "reward": jnp.zeros((n,), jnp.float32),
             # Lineage log-prob: cumulative reward along the surviving
             # ancestry (travels through resampling gathers), since the
@@ -102,9 +112,10 @@ def make_smc_decode_spec(
         }
 
     def transition(key, p, step):
-        logits, cache = decode(
-            params, p["tok"], step.astype(jnp.int32), p["cache"]
-        )
+        pos = step.astype(jnp.int32)
+        if prompt_len:
+            pos = pos + jnp.int32(prompt_len - 1)
+        logits, cache = decode(params, p["tok"], pos, p["cache"])
         logits = logits.astype(jnp.float32)
         if temperature > 0:
             tok = jax.random.categorical(key, logits / temperature, -1)
@@ -207,6 +218,289 @@ def _request_particles(
     return classes[idx]
 
 
+def make_packed_banks(spec, config, *, num_slots: int, p_min: int, p_max: int):
+    """One width-matched FilterBank per particle size class.
+
+    The multi-bank packing engine's bank family: ``num_slots`` total slots
+    spread over the power-of-two ladder :func:`particle_size_classes`
+    (remainder slots go to the *widest* classes — they double as the
+    spillover and migration targets).  Banks after the first are built via
+    :meth:`FilterBank.sibling`, so the family shares one set of jitted
+    entry points — N class banks never N× compile.
+
+    Returns ``{class_width: FilterBank}``, the packed-mode ``bank``
+    argument of :func:`run_continuous_batching`.
+    """
+    from repro.core import FilterBank
+
+    classes = particle_size_classes(p_min, p_max)
+    if num_slots < len(classes):
+        raise ValueError(
+            f"packed banks need at least one slot per size class: "
+            f"{num_slots} slots < {len(classes)} classes "
+            f"{classes} (raise --slots or narrow --particles)"
+        )
+    base, rem = divmod(num_slots, len(classes))
+    counts = {c: base for c in classes}
+    for c in classes[len(classes) - rem:]:
+        counts[c] += 1
+    banks, donor = {}, None
+    for c in classes:
+        if donor is None:
+            banks[c] = donor = FilterBank(spec, config, num_slots=counts[c])
+        else:
+            banks[c] = donor.sibling(num_slots=counts[c])
+    return banks
+
+
+class _Lane:
+    """One width-matched FilterBank plus its scheduler-side mirrors.
+
+    ``offset`` maps the lane's local slots into the packed scheduler's
+    *global* slot space (``global = offset + slot``) — the index space the
+    shared :class:`~repro.core.elastic.BudgetController`, the budget
+    mirror, and every reported event use.
+    """
+
+    def __init__(self, bank, width: int, index: int, offset: int,
+                 ragged: bool):
+        self.bank = bank
+        self.width = width
+        self.index = index
+        self.offset = offset
+        self.ragged = ragged
+        self.nb = bank.num_slots
+        self.free = list(range(self.nb))[::-1]
+        self.active: dict[int, dict] = {}
+        self.obs = jnp.zeros((self.nb,), jnp.int32)
+        self.state = None
+        self.tick_ms: list[float] = []
+        # (dispatch_time, FilterOutput) of the most recent step whose
+        # read-backs have not been consumed yet (async latency tracking).
+        self.prev = None
+
+    def init_state(self, k_state: jax.Array):
+        k = (
+            k_state
+            if self.index == 0
+            else jax.random.fold_in(k_state, self.index)
+        )
+        if self.ragged:
+            # Ragged states must be ragged from init (the pytree cannot
+            # grow a count field under jit); empty slots idle at full
+            # width.
+            self.state = self.bank.init(
+                k,
+                self.width,
+                n_active=jnp.full((self.nb,), self.width, jnp.int32),
+            )
+        else:
+            self.state = self.bank.init(k, self.width)
+
+    def step_keys(self, k_run: jax.Array, tick: int) -> jax.Array:
+        base = jax.random.fold_in(k_run, tick)
+        if self.index:
+            base = jax.random.fold_in(base, self.index)
+        return jax.random.split(base, self.nb)
+
+
+class SizeClassPacker:
+    """Width-ordered first-fit routing with work-conserving spillover.
+
+    A request routes to the narrowest lane whose width fits its particle
+    budget; when that home lane is full it may be *promoted* to the next
+    wider lane with a free slot (admitted at its true budget — the extra
+    lanes are charged as padding).  Scanning arrived requests in FIFO
+    order with first-fit placement gives the work-conserving invariant:
+    after an admission pass, no arrived request is still queued while any
+    lane wide enough for it has a free slot — no bank idles while another
+    queues.  A later small request may pass a blocked larger one (no
+    head-of-line blocking), but never displaces a placeable one, and the
+    scan order is deterministic: one seed, one schedule.
+    """
+
+    def __init__(self, lanes):
+        self.lanes = sorted(lanes, key=lambda ln: ln.width)
+
+    def place(self, budget: int):
+        """The lane this request is admitted into, or None (all full)."""
+        for lane in self.lanes:
+            if lane.width >= budget and lane.free:
+                return lane
+        return None
+
+
+class PrefillRunner:
+    """Batched prompt prefill for SMC decode requests.
+
+    The continuous-batching prefill/decode split: instead of each request
+    burning its first in-slot ticks decoding the prompt token by token,
+    every request admitted on a tick has its prompt processed as **one
+    batched prefill pass** (positions ``0..prompt_len-2`` through the same
+    jitted decode step the spec's transition uses, over a fixed-width
+    request batch), and the resulting cache row is broadcast over the
+    slot's particle lanes and uploaded via
+    ``FilterBank.init_slot(particles=...)``.  The decode loop then starts
+    at the last prompt token with a warm cache; the spec's position offset
+    (``prompt_len - 1`` — see :func:`make_smc_decode_spec`) keeps decode
+    writes contiguous with the prefill's.
+
+    Prompts are key-derived per request (:meth:`make_prompts`, called by
+    the scheduler from its workload key) — the serving analogue of the
+    key-derived budgets.  The pass compiles once for the fixed
+    ``(batch, prompt_len)`` block; short admission ticks pad the block by
+    repeating the last request (wasted lanes, never wasted compiles).
+    """
+
+    def __init__(self, params, cfg, policy, decode, *,
+                 prompt_len: int, steps: int, batch: int):
+        from repro.models import model as M
+
+        if prompt_len < 1:
+            raise ValueError(
+                f"prompt_len must be >= 1 (0 disables prefill), got "
+                f"{prompt_len}"
+            )
+        if batch < 1:
+            raise ValueError(f"prefill batch must be >= 1, got {batch}")
+        self._M = M
+        self.params = params
+        self.cfg = cfg
+        self.policy = policy
+        self.decode = decode
+        self.prompt_len = prompt_len
+        self.steps = steps
+        self.s_max = steps + prompt_len + 1
+        self.batch = batch
+        self.batches = 0
+        self.prompts = None
+        self.cache_axes = jax.tree.map(
+            lambda a, b: _changed_axis(a.shape, b.shape),
+            M.cache_specs(cfg, 2, self.s_max),
+            M.cache_specs(cfg, 3, self.s_max),
+            is_leaf=_is_param_spec,
+        )
+        self._pass = jax.jit(self._prefill_block)
+        self._builders: dict[int, object] = {}
+
+    def make_prompts(self, key: jax.Array, num_requests: int) -> None:
+        """Key-derived (num_requests, prompt_len) token prompts."""
+        self.prompts = jax.random.randint(
+            key,
+            (num_requests, self.prompt_len),
+            0,
+            self.cfg.vocab_size,
+            dtype=jnp.int32,
+        )
+
+    def _prefill_block(self, block):
+        """One batched prompt pass: (batch, L) tokens -> filled caches."""
+        cache = self._M.init_cache(
+            self.cfg, block.shape[0], self.s_max, self.policy.compute_dtype
+        )
+        if self.prompt_len == 1:
+            return cache  # nothing precedes the starting token
+
+        def body(cache, xs):
+            tok, pos = xs
+            _, cache = self.decode(self.params, tok, pos, cache)
+            return cache, None
+
+        cache, _ = jax.lax.scan(
+            body,
+            cache,
+            (
+                block[:, :-1].T,
+                jnp.arange(self.prompt_len - 1, dtype=jnp.int32),
+            ),
+        )
+        return cache
+
+    def _rows_builder(self, width: int):
+        """Jitted (cache_block, batch_index, tok) -> slot particle rows;
+        the batch index stays traced, so one compile per lane width."""
+        fn = self._builders.get(width)
+        if fn is None:
+            axes = self.cache_axes
+            steps = self.steps
+
+            def build(cache_block, r, tok):
+                row_cache = jax.tree.map(
+                    lambda x, ax: jnp.broadcast_to(
+                        jax.lax.dynamic_index_in_dim(
+                            x, r, axis=ax, keepdims=True
+                        ),
+                        x.shape[:ax] + (width,) + x.shape[ax + 1:],
+                    ),
+                    cache_block,
+                    axes,
+                )
+                return {
+                    "tok": jnp.full((width,), tok, jnp.int32),
+                    "cache": row_cache,
+                    "reward": jnp.zeros((width,), jnp.float32),
+                    "cum_reward": jnp.zeros((width,), jnp.float32),
+                    "seq": jnp.zeros((width, steps), jnp.int32),
+                }
+
+            fn = self._builders[width] = jax.jit(build)
+        return fn
+
+    def rows_for(self, ids: list[int], widths: list[int]) -> list:
+        """Slot upload rows for one tick's admissions, batch-prefilled."""
+        if self.prompts is None:
+            raise ValueError(
+                "PrefillRunner.make_prompts was never called (the "
+                "scheduler derives prompts from its workload key)"
+            )
+        out = []
+        for lo in range(0, len(ids), self.batch):
+            chunk = ids[lo:lo + self.batch]
+            pad = chunk + [chunk[-1]] * (self.batch - len(chunk))
+            block = jnp.take(
+                self.prompts, jnp.asarray(pad, jnp.int32), axis=0
+            )
+            cache_block = self._pass(block)
+            self.batches += 1
+            for j, rid in enumerate(chunk):
+                out.append(
+                    self._rows_builder(widths[lo + j])(
+                        cache_block, jnp.int32(j), self.prompts[rid, -1]
+                    )
+                )
+        return out
+
+
+def _latency_summary(lanes, tick_deadline_ms):
+    """p50/p95/max step wall-times per lane and pooled, plus the
+    over-deadline count the future SLO-aware arbiter will consume."""
+    per_bank, pooled = {}, []
+
+    def _summ(ms):
+        arr = np.asarray(ms, np.float64)
+        over = (
+            int((arr > tick_deadline_ms).sum())
+            if tick_deadline_ms is not None
+            else 0
+        )
+        return {
+            "ticks": int(arr.size),
+            "p50_ms": float(np.percentile(arr, 50)) if arr.size else 0.0,
+            "p95_ms": float(np.percentile(arr, 95)) if arr.size else 0.0,
+            "max_ms": float(arr.max()) if arr.size else 0.0,
+            "ticks_over_deadline": over,
+        }
+
+    for lane in lanes:
+        per_bank[lane.width] = _summ(lane.tick_ms)
+        pooled.extend(lane.tick_ms)
+    return {
+        **_summ(pooled),
+        "deadline_ms": tick_deadline_ms,
+        "per_bank": per_bank,
+    }
+
+
 def run_continuous_batching(
     bank,
     *,
@@ -218,6 +512,9 @@ def run_continuous_batching(
     min_steps: int | None = None,
     async_admit: bool = False,
     elastic=None,
+    prefill=None,
+    pipelined_uploads: bool = False,
+    tick_deadline_ms: float | None = None,
 ) -> dict:
     """Admit → step → retire loop over a FilterBank of decode slots.
 
@@ -269,8 +566,41 @@ def run_continuous_batching(
     stays truthful as budgets move mid-flight.  Decisions are returned in
     ``stats["elastic"]`` (per-event tick/slot/kind/ess/deficit plus
     grow/shrink/denied counters).
+
+    **Packed mode** — pass ``bank`` as a ``{class_width: FilterBank}``
+    family (:func:`make_packed_banks`) instead of one bank, and the
+    scheduler becomes a multi-bank packing engine: each request routes to
+    the narrowest bank whose lane width fits its particle budget
+    (:class:`SizeClassPacker`), so an easy 256-particle request never
+    pays a 4096-wide bank's lanes just because a hard request exists.
+    Spillover is work-conserving: a request whose home class is full is
+    promoted to the next wider bank with a free slot (admitted at its
+    true budget, the extra lanes charged as padding in
+    ``stats["packed"]["spillover_admissions"]``) rather than queueing
+    while capacity idles.  Elastic resizes that cross a class boundary
+    *migrate* the slot (``export_slot`` → masked-resample
+    ``import_slot`` draw into the width-matched bank); a grow with no
+    wide-enough free slot is reclassified as denied and backs off.
+    Migration/spillover counts and per-class particle-tick ledgers land
+    in ``stats["packed"]``.
+
+    ``prefill`` (a :class:`PrefillRunner`) splits serving into
+    prefill/decode: each tick's admissions run their prompts as one
+    batched prefill pass and enter their slots with warm caches, so the
+    decode loop never spends bank ticks re-reading prompts.
+    ``pipelined_uploads`` (async mode only) moves admission/migration
+    uploads to the tail of the tick, after the next step is already
+    dispatch-eligible: slot-state uploads are enqueued against the
+    in-flight step's output and overlap it, exactly like read-backs
+    already do — the schedule (and every result) is bitwise identical to
+    plain ``async_admit``; only the host timeline changes.
+
+    Every tick's step wall-time is recorded per bank (dispatch→ready in
+    sync mode, dispatch→consumption in async mode — the serving-relevant
+    "how stale was this tick's data" number) and summarized in
+    ``stats["latency"]`` as p50/p95/max per bank and pooled, plus
+    ``ticks_over_deadline`` against ``tick_deadline_ms`` when given.
     """
-    nb = bank.num_slots
     if min_steps is None:
         min_steps = max(1, max_steps // 2)
     if not 0 <= min_steps <= max_steps:
@@ -283,11 +613,43 @@ def run_continuous_batching(
     else:
         p_min = p_max = particles
     ragged = p_min < p_max
+    packed = isinstance(bank, dict)
+    if packed:
+        widths = sorted(bank)
+        expect = particle_size_classes(p_min, p_max)
+        if widths != expect:
+            raise ValueError(
+                f"packed bank widths {widths} do not match the size-class "
+                f"ladder {expect} for particles=({p_min}, {p_max}) — build "
+                f"them with make_packed_banks"
+            )
+    if pipelined_uploads and not async_admit:
+        raise ValueError(
+            "pipelined_uploads overlaps uploads with the in-flight step — "
+            "it requires async_admit=True"
+        )
+    # Every lane in a multi-class family is ragged: spillover and
+    # migration put narrower-budget requests into wider banks, so even
+    # the widest class needs runtime counts.  A single-class family is a
+    # plain dense bank wearing the packed API — kept dense so it stays
+    # bitwise identical to the single-bank path.
+    packed_multi = packed and len(bank) > 1
+    lanes: list[_Lane] = []
+    if packed:
+        offset = 0
+        for i, w in enumerate(sorted(bank)):
+            lane = _Lane(bank[w], w, i, offset, ragged=packed_multi or ragged)
+            lanes.append(lane)
+            offset += lane.nb
+    else:
+        lanes.append(_Lane(bank, p_max, 0, 0, ragged=ragged))
+    packer = SizeClassPacker(lanes)
+    total_slots = sum(lane.nb for lane in lanes)
     ctrl = None
     if elastic is not None:
         from repro.core.elastic import BudgetController
 
-        if not ragged:
+        if not (ragged or packed_multi):
             raise ValueError(
                 "elastic budgets need a ragged bank: pass "
                 "particles=(MIN, MAX) with MIN < MAX so per-slot counts "
@@ -298,7 +660,7 @@ def run_continuous_batching(
                 f"elastic.max_particles={elastic.max_particles} exceeds "
                 f"the bank's lane width {p_max}"
             )
-        ctrl = BudgetController(elastic, nb)
+        ctrl = BudgetController(elastic, total_slots)
     k_state, k_admit, k_run, k_sched, k_elastic = jax.random.split(key, 5)
     lengths = _request_budgets(k_sched, num_requests, min_steps, max_steps)
     if ragged:
@@ -307,6 +669,8 @@ def run_continuous_batching(
         )
     else:
         budgets = np.full((num_requests,), p_max)
+    if prefill is not None:
+        prefill.make_prompts(jax.random.fold_in(k_sched, 2), num_requests)
     pending = collections.deque(
         {
             "id": i,
@@ -316,182 +680,346 @@ def run_continuous_batching(
         }
         for i in range(num_requests)
     )
-    if ragged:
-        # Ragged states must be ragged from init (the pytree cannot grow a
-        # count field under jit); empty slots idle at full width.
-        state = bank.init(
-            k_state, p_max, n_active=jnp.full((nb,), p_max, jnp.int32)
+    for lane in lanes:
+        lane.init_state(k_state)
+        # Synchronous ticks donate the bank state: step and admission
+        # reuse the particle/weight/cache buffers in place instead of
+        # copying them every tick (the pre-step state is never read after
+        # the call).  The async path must NOT donate its step input —
+        # retire reads the *pre-step* state while the step runs on
+        # device, so aliasing those buffers would hand retire reclaimed
+        # memory.
+        lane.step_fn = (
+            lane.bank.jit_step if async_admit else lane.bank.jit_step_donated
         )
-    else:
-        state = bank.init(k_state, p_max)
-    obs = jnp.zeros((nb,), jnp.int32)  # the decode spec ignores observations
-    # Synchronous ticks donate the bank state: step and admission reuse the
-    # particle/weight/cache buffers in place instead of copying them every
-    # tick (the pre-step state is never read after the call).  The async
-    # path must NOT donate its step input — retire reads the *pre-step*
-    # state while the step runs on device, so aliasing those buffers would
-    # hand retire reclaimed memory.
-    if async_admit:
-        step = bank.jit_step
-        reset = bank.jit_init_slot_donated
-    else:
-        step = bank.jit_step_donated
-        reset = bank.jit_init_slot_donated
-    active: dict[int, dict] = {}
-    free = list(range(nb))[::-1]
+
+    # Global slot space: lane i's slot s is global slot lane.offset + s.
+    # The controller, the budget mirror, and every event speak global ids.
+    lane_of: list[_Lane] = []
+    for lane in lanes:
+        lane_of.extend([lane] * lane.nb)
+    lane_width_vec = np.asarray([lane.width for lane in lane_of], np.int64)
     results, tick, busy_slot_ticks = [], 0, 0
     active_particle_ticks, padded_particle_ticks = 0, 0
     # Host mirror of each slot's *current* particle budget.  Admission
     # seeds it; every granted elastic resize updates it; all particle-tick
     # accounting and retire reads go through it instead of the
     # admission-time ``req["particles"]`` (stale once budgets move).
-    slot_budget = np.zeros(nb, np.int64)
+    slot_budget = np.zeros(total_slots, np.int64)
     events: list[dict] = []
+    packed_stats = {
+        "spillover_admissions": 0,
+        "migrations": 0,
+        "migrations_blocked": 0,
+        "lane_particle_ticks": 0,
+    }
 
-    def admit(state, tick):
-        while free and pending and pending[0]["arrival"] <= tick:
-            req = pending.popleft()
-            slot = free.pop()
-            if ragged:
-                state = reset(
-                    state,
+    def admit_all(tick):
+        """One admission pass: route every arrived request via the packer.
+
+        FIFO over arrivals with first-fit placement — work-conserving: a
+        request only stays queued if *no* wide-enough lane has a free
+        slot, and a blocked large request never blocks a placeable small
+        one behind it (unplaceable requests are deferred back to the
+        queue head in order).  With prefill active, the tick's admissions
+        run their prompts as one batched pass before any slot upload.
+        """
+        arrived = []
+        while pending and pending[0]["arrival"] <= tick:
+            arrived.append(pending.popleft())
+        placed, deferred = [], []
+        for req in arrived:
+            lane = packer.place(req["particles"])
+            if lane is None:
+                deferred.append(req)
+                continue
+            placed.append((req, lane, lane.free.pop()))
+        for req in reversed(deferred):
+            pending.appendleft(req)
+        rows = None
+        if prefill is not None and placed:
+            rows = prefill.rows_for(
+                [req["id"] for req, _, _ in placed],
+                [lane.width for _, lane, _ in placed],
+            )
+        for j, (req, lane, slot) in enumerate(placed):
+            k = jax.random.fold_in(k_admit, req["id"])
+            if lane.ragged and rows is not None:
+                lane.state = lane.bank.jit_init_slot_donated(
+                    lane.state,
                     jnp.int32(slot),
-                    jax.random.fold_in(k_admit, req["id"]),
+                    k,
+                    jnp.int32(req["particles"]),
+                    rows[j],
+                )
+            elif lane.ragged:
+                lane.state = lane.bank.jit_init_slot_donated(
+                    lane.state,
+                    jnp.int32(slot),
+                    k,
                     jnp.int32(req["particles"]),
                 )
+            elif rows is not None:
+                lane.state = lane.bank.jit_init_slot_donated(
+                    lane.state, jnp.int32(slot), k, None, rows[j]
+                )
             else:
-                state = reset(
-                    state,
-                    jnp.int32(slot),
-                    jax.random.fold_in(k_admit, req["id"]),
+                lane.state = lane.bank.jit_init_slot_donated(
+                    lane.state, jnp.int32(slot), k
                 )
             req["admitted_tick"] = tick
-            active[slot] = req
-            slot_budget[slot] = req["particles"]
+            lane.active[slot] = req
+            g = lane.offset + slot
+            slot_budget[g] = req["particles"]
+            if packed_multi and lane.width > req["particles"]:
+                # Promoted past its home class: admitted at its true
+                # budget, the lane's extra width is charged as padding.
+                packed_stats["spillover_admissions"] += 1
             if ctrl is not None:
                 # Grace period: a fresh request's first ESS readings are
                 # noise; hold resizes for one full cooldown window.
-                ctrl.slot_admitted(slot)
-        return state
+                ctrl.slot_admitted(g)
 
-    def retire(ex_state, ex_tick):
+    def retire(lane, ex_state, ex_tick):
         """Retire against a state holding ``ex_tick`` completed steps."""
-        if not active:
+        if not lane.active:
             return
         steps_now = np.asarray(ex_state.step)
         done = [
             s
-            for s in active
-            if active[s]["admitted_tick"] < ex_tick
-            and steps_now[s] >= active[s]["steps"]
+            for s in lane.active
+            if lane.active[s]["admitted_tick"] < ex_tick
+            and steps_now[s] >= lane.active[s]["steps"]
         ]
         if not done:
             return
         cum = np.asarray(ex_state.particles["cum_reward"], np.float32)
         seqs = np.asarray(ex_state.particles["seq"])
         for slot in done:
-            req = active.pop(slot)
+            req = lane.active.pop(slot)
             # Best particle over the slot's *currently active* lanes only —
             # lanes beyond the current budget hold junk (a shrunk slot's
             # old lanes included) that must never win the argmax.
-            n_now = int(slot_budget[slot])
+            n_now = int(slot_budget[lane.offset + slot])
             best = int(np.argmax(cum[slot, :n_now]))
-            results.append(
-                {
-                    "id": req["id"],
-                    "steps": req["steps"],
-                    "particles": req["particles"],
-                    "final_particles": n_now,
-                    # A real copy, not a view: np.asarray above is
-                    # zero-copy into the jax buffer, and a live external
-                    # view would block the donated step/reset from
-                    # aliasing the bank state on every later tick (and
-                    # pin the whole (nb, P, steps) seq array per retired
-                    # request until the run ends).
-                    "tokens": np.array(seqs[slot, best, : req["steps"]]),
-                    "admitted_tick": req["admitted_tick"],
-                    "finished_tick": ex_tick,
-                }
-            )
-            free.append(slot)
+            res = {
+                "id": req["id"],
+                "steps": req["steps"],
+                "particles": req["particles"],
+                "final_particles": n_now,
+                # A real copy, not a view: np.asarray above is
+                # zero-copy into the jax buffer, and a live external
+                # view would block the donated step/reset from
+                # aliasing the bank state on every later tick (and
+                # pin the whole (nb, P, steps) seq array per retired
+                # request until the run ends).
+                "tokens": np.array(seqs[slot, best, : req["steps"]]),
+                "admitted_tick": req["admitted_tick"],
+                "finished_tick": ex_tick,
+            }
+            if packed:
+                res["lane_width"] = lane.width
+            results.append(res)
+            lane.free.append(slot)
 
-    def apply_elastic(state, ess, tick):
-        """Run one controller tick and apply granted resizes to ``state``.
+    def migrate(src, slot, dst, d, k, ev):
+        """Move one live slot across banks: export → width-matched import.
 
-        ``state`` here is always the freshest bank state (post-step) and
-        nothing else reads it afterward, so the donated resize is safe.
+        The export is a non-destructive read of the source's current
+        (post-step) state; its outputs are fresh buffers, so the donated
+        import and every later donated op on the source state stay safe.
         """
-        busy_mask = np.zeros(nb, bool)
-        for s in active:
-            busy_mask[s] = True
-        for d in ctrl.observe(ess, slot_budget, busy_mask):
-            events.append(
-                {
-                    "tick": tick,
-                    "slot": d.slot,
-                    "old": d.old,
-                    "new": d.new,
-                    "ess": d.ess,
-                    "kind": d.kind,
-                    "granted": d.granted,
-                    "deficit": d.deficit,
-                }
-            )
-            if d.granted:
-                state = bank.jit_resize_slot_donated(
-                    state,
-                    jnp.int32(d.slot),
-                    jax.random.fold_in(k_elastic, len(events)),
-                    jnp.int32(d.new),
+        rows, lw_row, step_row = src.bank.jit_export_slot(
+            src.state, jnp.int32(slot)
+        )
+        dslot = dst.free.pop()
+        dst.state = dst.bank.jit_import_slot_donated(
+            dst.state,
+            jnp.int32(dslot),
+            rows,
+            lw_row,
+            k,
+            jnp.int32(d.new),
+            step_row,
+        )
+        req = src.active.pop(slot)
+        dst.active[dslot] = req
+        src.free.append(slot)
+        g_src, g_dst = src.offset + slot, dst.offset + dslot
+        # Cooldown/collapse history travels with the request.
+        ctrl.slot_moved(g_src, g_dst)
+        slot_budget[g_dst] = d.new
+        slot_budget[g_src] = 0
+        packed_stats["migrations"] += 1
+        ev["migrated_to"] = g_dst
+        ev["from_width"] = src.width
+        ev["to_width"] = dst.width
+
+    def apply_elastic(ess, tick):
+        """Run one controller tick and apply granted decisions in place.
+
+        Each lane's ``state`` here is its freshest (post-step) state and
+        nothing else reads it afterward, so the donated resize / reseed /
+        import are safe.  Decisions whose new count crosses a class
+        boundary migrate (grow: ``migrate=True`` from the controller;
+        shrink: repacked downward whenever a narrower class has room);
+        everything else resizes in place.
+        """
+        busy_mask = np.zeros(total_slots, bool)
+        for lane in lanes:
+            for s in lane.active:
+                busy_mask[lane.offset + s] = True
+        decisions = ctrl.observe(
+            ess,
+            slot_budget,
+            busy_mask,
+            lane_width=lane_width_vec if packed_multi else None,
+        )
+        for d in decisions:
+            ev = {
+                "tick": tick,
+                "slot": d.slot,
+                "old": d.old,
+                "new": d.new,
+                "ess": d.ess,
+                "kind": d.kind,
+                "granted": d.granted,
+                "deficit": d.deficit,
+            }
+            events.append(ev)
+            if not d.granted:
+                continue
+            k = jax.random.fold_in(k_elastic, len(events))
+            lane = lane_of[d.slot]
+            slot = d.slot - lane.offset
+            if d.kind == "reseed":
+                # Collapse recovery: fresh diffuse cloud at the slot's
+                # max budget, progress kept — a restart, not a retire.
+                lane.state = lane.bank.jit_reseed_slot_donated(
+                    lane.state, jnp.int32(slot), k, jnp.int32(d.new)
                 )
                 slot_budget[d.slot] = d.new
-        return state
+                continue
+            if packed_multi and d.migrate:
+                dst = next(
+                    (
+                        ln
+                        for ln in packer.lanes
+                        if ln.width >= d.new and ln.free
+                    ),
+                    None,
+                )
+                if dst is None:
+                    # No wide-enough free slot anywhere: the controller
+                    # reclassifies the grow as denied and keeps the
+                    # cooldown charged (backoff before retrying).
+                    ctrl.migration_blocked(d.slot)
+                    packed_stats["migrations_blocked"] += 1
+                    ev["granted"] = False
+                    ev["blocked"] = True
+                    continue
+                migrate(lane, slot, dst, d, k, ev)
+                continue
+            if packed_multi and d.kind == "shrink":
+                dst = next(
+                    (
+                        ln
+                        for ln in packer.lanes
+                        if ln.width >= d.new and ln.free
+                    ),
+                    None,
+                )
+                if dst is not None and dst.width < lane.width:
+                    # Repack downward: the shrunk request no longer needs
+                    # this class's width and a narrower bank has room.
+                    migrate(lane, slot, dst, d, k, ev)
+                    continue
+            lane.state = lane.bank.jit_resize_slot_donated(
+                lane.state, jnp.int32(slot), k, jnp.int32(d.new)
+            )
+            slot_budget[d.slot] = d.new
 
-    prev_ess = None
-    while pending or active:
-        state = admit(state, tick)
-        keys = jax.random.split(jax.random.fold_in(k_run, tick), nb)
-        # Per-tick particle accounting from the *current* budgets (the
-        # host mirror), not admission-time ones: under elastic resizes the
-        # admission budget is only where a request started.
-        busy = [int(slot_budget[s]) for s in active]
+    def consume_prev(lane):
+        """Block on the lane's previous in-flight step (async modes):
+        returns its ESS row and records dispatch→consumption latency."""
+        if lane.prev is None:
+            return None
+        t0, out = lane.prev
+        lane.prev = None
+        ess = np.asarray(out.ess, np.float64)
+        lane.tick_ms.append((time.perf_counter() - t0) * 1e3)
+        return ess
+
+    if pipelined_uploads:
+        # Pipelined mode admits at the *tail* of each tick, so tick 0's
+        # arrivals need a pass before the first dispatch.
+        admit_all(tick)
+    while pending or any(lane.active for lane in lanes):
+        if not pipelined_uploads:
+            admit_all(tick)
+        dispatches = []
+        for lane in lanes:
+            keys = lane.step_keys(k_run, tick)
+            # Per-tick particle accounting from the *current* budgets
+            # (the host mirror), not admission-time ones: under elastic
+            # resizes the admission budget is only where a request
+            # started.
+            busy = [
+                int(slot_budget[lane.offset + s]) for s in lane.active
+            ]
+            t0 = time.perf_counter()
+            post, out = lane.step_fn(lane.state, lane.obs, keys)
+            dispatches.append((lane, busy, t0, post, out))
         if async_admit:
-            # Dispatch first, decide later: the retire pass below blocks
-            # only on the *pre-step* state (already materialized), while
-            # this tick's step runs on device.
-            new_state, out = step(state, obs, keys)
-            busy_slot_ticks += len(busy)
-            active_particle_ticks += sum(busy)
-            padded_particle_ticks += len(busy) * p_max
-            retire(state, tick)
-            if ctrl is not None and prev_ess is not None:
+            # Dispatch-first, decide later: the retire pass blocks only
+            # on the *pre-step* state (already materialized), and the
+            # latency/ESS consumption blocks only on the *previous*
+            # tick's step, while this tick's steps run on device.
+            prev_rows = []
+            for lane, busy, t0, post, out in dispatches:
+                busy_slot_ticks += len(busy)
+                active_particle_ticks += sum(busy)
+                padded_particle_ticks += len(busy) * p_max
+                packed_stats["lane_particle_ticks"] += len(busy) * lane.width
+                prev_rows.append(consume_prev(lane))
+                retire(lane, lane.state, tick)
+            for lane, busy, t0, post, out in dispatches:
+                lane.state = post
+                lane.prev = (t0, out)
+            if ctrl is not None and prev_rows and prev_rows[0] is not None:
                 # One tick of lag: resize from the previous step's ESS
                 # (already materialized) so the in-flight step is never
-                # waited on; the resize applies to its output.
-                new_state = apply_elastic(
-                    new_state, np.asarray(prev_ess, np.float64), tick
-                )
-            if ctrl is not None:
-                prev_ess = out.ess
-            state = new_state
+                # waited on; the resizes apply to its output.
+                apply_elastic(np.concatenate(prev_rows), tick)
             tick += 1
+            if pipelined_uploads:
+                # Tail admissions: uploads enqueue against the in-flight
+                # step's output and overlap it — the next dispatch finds
+                # its slots already written, never a host admission stall.
+                admit_all(tick)
         else:
-            state, out = step(state, obs, keys)
             tick += 1
-            busy_slot_ticks += len(busy)
-            active_particle_ticks += sum(busy)
-            padded_particle_ticks += len(busy) * p_max
-            retire(state, tick)
+            ess_rows = []
+            for lane, busy, t0, post, out in dispatches:
+                lane.state = post
+                ess = np.asarray(out.ess, np.float64)
+                lane.tick_ms.append((time.perf_counter() - t0) * 1e3)
+                busy_slot_ticks += len(busy)
+                active_particle_ticks += sum(busy)
+                padded_particle_ticks += len(busy) * p_max
+                packed_stats["lane_particle_ticks"] += len(busy) * lane.width
+                retire(lane, lane.state, tick)
+                ess_rows.append(ess)
             if ctrl is not None:
-                state = apply_elastic(
-                    state, np.asarray(out.ess, np.float64), tick
-                )
+                apply_elastic(np.concatenate(ess_rows), tick)
+    for lane in lanes:
+        consume_prev(lane)  # final in-flight step's latency sample
     results.sort(key=lambda r: r["id"])
-    return {
+    stats = {
         "results": results,
         "ticks": tick,
         "busy_slot_ticks": busy_slot_ticks,
-        "occupancy": busy_slot_ticks / max(1, tick * nb),
+        "occupancy": busy_slot_ticks / max(1, tick * total_slots),
         "active_particle_ticks": active_particle_ticks,
         "padded_particle_ticks": padded_particle_ticks,
         "padding_waste": (
@@ -502,7 +1030,22 @@ def run_continuous_batching(
         "elastic": (
             {"events": events, **ctrl.stats} if ctrl is not None else None
         ),
+        "latency": _latency_summary(lanes, tick_deadline_ms),
+        "packed": (
+            {
+                "classes": {lane.width: lane.nb for lane in lanes},
+                **packed_stats,
+            }
+            if packed
+            else None
+        ),
+        "prefill": (
+            {"prompt_len": prefill.prompt_len, "batches": prefill.batches}
+            if prefill is not None
+            else None
+        ),
     }
+    return stats
 
 
 def main() -> None:
@@ -556,6 +1099,34 @@ def main() -> None:
     ap.add_argument("--async-admit", action="store_true",
                     help="--smc: double-buffered admit/retire overlapping "
                          "the bank step")
+    ap.add_argument("--packed", action="store_true",
+                    help="--smc: one width-matched bank per particle size "
+                         "class (size-class packing) instead of one "
+                         "pad-to-MAX bank; requests route to the narrowest "
+                         "fitting bank with work-conserving spillover, and "
+                         "elastic resizes crossing a class boundary migrate "
+                         "the slot across banks")
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="--smc: prompt tokens per request, processed as "
+                         "one batched prefill pass per admission tick "
+                         "before the slot enters the decode loop "
+                         "(0 disables the prefill/decode split)")
+    ap.add_argument("--prefill-batch", type=int, default=0,
+                    help="--smc --prompt-len: requests per batched prefill "
+                         "pass (default: --slots)")
+    ap.add_argument("--pipelined-uploads", action="store_true",
+                    help="--smc --async-admit: enqueue admission/migration "
+                         "slot uploads behind the in-flight bank step "
+                         "instead of ahead of the next dispatch (bitwise "
+                         "identical schedule, host never stalls on uploads)")
+    ap.add_argument("--tick-deadline-ms", type=float, default=None,
+                    help="--smc: per-tick step latency deadline; the "
+                         "summary reports p50/p95 and ticks over it")
+    ap.add_argument("--elastic-reseed-after", type=int, default=None,
+                    help="--smc --elastic: consecutive collapsed ticks "
+                         "(ESS under the grow floor at max_particles) "
+                         "before the slot is re-seeded from the prior "
+                         "(default: --elastic-cooldown; 0 disables)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -583,6 +1154,7 @@ def main() -> None:
         spec = make_smc_decode_spec(
             params, cfg, policy, decode,
             temperature=args.temperature, steps=args.steps,
+            prompt_len=args.prompt_len,
         )
         # Engine resampling criterion: ESS < frac * particles, exact
         # comparison (frac >= 1 -> resample every step).  With --mesh the
@@ -598,17 +1170,25 @@ def main() -> None:
                 ("data", "model"),
                 axis_types=(jax.sharding.AxisType.Auto,) * 2,
             )
-        bank = FilterBank(
-            spec,
-            FilterConfig(
-                policy=policy,
-                ess_threshold=args.ess_frac,
-                mesh=mesh,
-                scheme=args.scheme,
-            ),
-            num_slots=args.slots,
-        )
         particles = _parse_particles(args)
+        p_min, p_max = (
+            particles
+            if isinstance(particles, tuple)
+            else (particles, particles)
+        )
+        fconfig = FilterConfig(
+            policy=policy,
+            ess_threshold=args.ess_frac,
+            mesh=mesh,
+            scheme=args.scheme,
+        )
+        if args.packed:
+            bank = make_packed_banks(
+                spec, fconfig,
+                num_slots=args.slots, p_min=p_min, p_max=p_max,
+            )
+        else:
+            bank = FilterBank(spec, fconfig, num_slots=args.slots)
         elastic = None
         if args.elastic:
             from repro.core.elastic import ElasticConfig
@@ -623,6 +1203,9 @@ def main() -> None:
                 if args.elastic_grow is not None
                 else particles[0] / 2
             )
+            reseed = args.elastic_reseed_after
+            if reseed is None:
+                reseed = args.elastic_cooldown
             elastic = ElasticConfig(
                 grow_below=grow,
                 shrink_above=args.elastic_shrink,
@@ -630,6 +1213,15 @@ def main() -> None:
                 min_particles=particles[0],
                 max_particles=particles[1],
                 global_budget=args.elastic_budget,
+                reseed_after=reseed or None,
+            )
+        prefill = None
+        if args.prompt_len:
+            prefill = PrefillRunner(
+                params, cfg, policy, decode,
+                prompt_len=args.prompt_len,
+                steps=args.steps,
+                batch=args.prefill_batch or args.slots,
             )
         stats = run_continuous_batching(
             bank,
@@ -640,6 +1232,9 @@ def main() -> None:
             arrival_every=args.arrival_every,
             async_admit=args.async_admit,
             elastic=elastic,
+            prefill=prefill,
+            pipelined_uploads=args.pipelined_uploads,
+            tick_deadline_ms=args.tick_deadline_ms,
         )
         dt = time.perf_counter() - t0
         n_steps = sum(r["steps"] for r in stats["results"])
@@ -654,18 +1249,50 @@ def main() -> None:
             f"requests={args.requests} particles/slot={pdesc}"
             + (f" mesh={args.mesh} scheme={args.scheme}" if mesh else "")
             + (" async" if args.async_admit else "")
+            + (" pipelined" if args.pipelined_uploads else "")
+            + (" packed" if args.packed else "")
             + (" elastic" if elastic is not None else "")
+            + (f" prefill={args.prompt_len}" if prefill is not None else "")
             + f" ticks={stats['ticks']} "
             f"occupancy={stats['occupancy']:.0%} "
             f"padding_waste={stats['padding_waste']:.0%} "
             f"({dt / ticks * 1e3:.1f} ms/tick incl. compile, "
             f"{n_steps / dt:.1f} request-steps/s)"
         )
+        lat = stats["latency"]
+        print(
+            f"  latency: p50={lat['p50_ms']:.2f}ms p95={lat['p95_ms']:.2f}ms "
+            f"max={lat['max_ms']:.2f}ms over {lat['ticks']} step samples"
+            + (
+                f"; over_deadline={lat['ticks_over_deadline']} "
+                f"(deadline={lat['deadline_ms']:.1f}ms)"
+                if lat["deadline_ms"] is not None
+                else ""
+            )
+        )
+        pk = stats["packed"]
+        if pk is not None:
+            classes = " ".join(
+                f"{w}p x{n}" for w, n in sorted(pk["classes"].items())
+            )
+            print(
+                f"  packed: classes=[{classes}] "
+                f"spillover={pk['spillover_admissions']} "
+                f"migrations={pk['migrations']} "
+                f"blocked={pk['migrations_blocked']}"
+            )
+        pf = stats["prefill"]
+        if pf is not None:
+            print(
+                f"  prefill: prompt_len={pf['prompt_len']} "
+                f"batched_passes={pf['batches']}"
+            )
         el = stats["elastic"]
         if el is not None:
             print(
                 f"  elastic: grows={el['grows']} shrinks={el['shrinks']} "
                 f"denied_grows={el['denied_grows']} "
+                f"reseeds={el['reseeds']} "
                 f"global_budget={args.elastic_budget or 'uncapped'}"
             )
             for e in el["events"][:8]:

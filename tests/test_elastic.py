@@ -409,7 +409,12 @@ def test_never_triggered_elastic_bitwise_static(pname, variant):
         np.testing.assert_array_equal(
             np.asarray(ss.n_active), np.asarray(se.n_active)
         )
-    assert ctrl.stats == {"grows": 0, "shrinks": 0, "denied_grows": 0}
+    assert ctrl.stats == {
+        "grows": 0,
+        "shrinks": 0,
+        "denied_grows": 0,
+        "reseeds": 0,
+    }
 
 
 MESHED_NEVER_TRIGGER = """
@@ -580,3 +585,171 @@ def test_serve_elastic_rejects_dense_particles():
                 grow_below=1.0, min_particles=4, max_particles=8
             ),
         )
+
+
+def test_controller_reseed_escalation():
+    """A slot pinned collapsed (ESS under the grow floor) at max_particles
+    for reseed_after consecutive ticks emits kind="reseed" (no count
+    change), charges its cooldown, and restarts the persistence counter;
+    a slot that recovers in between never escalates."""
+    cfg = ElasticConfig(
+        grow_below=8.0,
+        shrink_above=32.0,
+        cooldown=1,
+        min_particles=4,
+        max_particles=16,
+        reseed_after=2,
+    )
+    ctrl = BudgetController(cfg, 2)
+    busy = np.ones(2, bool)
+    n = np.array([16, 8])
+    ess = np.array([1.0, 16.0])  # slot 0 collapsed at max; slot 1 healthy
+    assert ctrl.observe(ess, n, busy) == []  # persistence 1: not yet
+    ds = ctrl.observe(ess, n, busy)  # persistence 2: escalate
+    assert [(d.slot, d.kind, d.old, d.new, d.granted) for d in ds] == [
+        (0, "reseed", 16, 16, True)
+    ]
+    assert ctrl.stats["reseeds"] == 1
+    # Cooldown charged and counter reset: the next reseed needs the
+    # cooldown to expire AND the collapse to persist reseed_after again.
+    assert ctrl.observe(ess, n, busy) == []
+    ds = ctrl.observe(ess, n, busy)
+    assert [d.kind for d in ds] == ["reseed"]
+    assert ctrl.stats["reseeds"] == 2
+
+    # Recovery resets persistence: collapse, recover, collapse again is
+    # only persistence 1 — no escalation.
+    ctrl2 = BudgetController(cfg, 1)
+    one = np.ones(1, bool)
+    ctrl2.observe(np.array([1.0]), np.array([16]), one)
+    ctrl2.observe(np.array([20.0]), np.array([16]), one)  # recovered
+    assert ctrl2.observe(np.array([1.0]), np.array([16]), one) == []
+    assert ctrl2.stats["reseeds"] == 0
+
+
+def test_controller_reseed_disabled_by_default():
+    """reseed_after=None (the default): a slot may stay collapsed at max
+    forever without a reseed decision — the pre-escalation contract."""
+    cfg = ElasticConfig(
+        grow_below=8.0, min_particles=4, max_particles=16, cooldown=1
+    )
+    assert cfg.reseed_after is None
+    ctrl = BudgetController(cfg, 1)
+    for _ in range(10):
+        assert (
+            ctrl.observe(np.array([1.0]), np.array([16]), np.ones(1, bool))
+            == []
+        )
+    assert ctrl.stats["reseeds"] == 0
+
+
+def test_controller_flags_cross_lane_grows_for_migration():
+    """With lane_width given (the packed scheduler), a granted grow whose
+    new budget exceeds its slot's lane width carries migrate=True; grows
+    that fit in-lane, and all grows without lane_width, do not."""
+    cfg = ElasticConfig(
+        grow_below=8.0, min_particles=4, max_particles=64, cooldown=1
+    )
+    ctrl = BudgetController(cfg, 2)
+    ds = ctrl.observe(
+        np.array([1.0, 1.0]),
+        np.array([16, 16]),
+        np.ones(2, bool),
+        lane_width=np.array([16, 64]),
+    )
+    by = {d.slot: d for d in ds}
+    assert by[0].kind == "grow" and by[0].new == 32 and by[0].migrate
+    assert by[1].kind == "grow" and by[1].new == 32 and not by[1].migrate
+
+    ctrl = BudgetController(cfg, 1)
+    (d,) = ctrl.observe(
+        np.array([1.0]), np.array([16]), np.ones(1, bool)
+    )
+    assert not d.migrate
+
+    with pytest.raises(ValueError, match="lane_width"):
+        BudgetController(cfg, 2).observe(
+            np.array([1.0, 1.0]),
+            np.array([16, 16]),
+            np.ones(2, bool),
+            lane_width=np.array([16]),
+        )
+
+
+def test_controller_migration_bookkeeping():
+    """slot_moved transfers cooldown/collapse history to the destination
+    and clears the source; migration_blocked reclassifies a granted grow
+    as denied while keeping the cooldown charged (placement backoff)."""
+    cfg = ElasticConfig(
+        grow_below=8.0, min_particles=4, max_particles=64, cooldown=3
+    )
+    ctrl = BudgetController(cfg, 2)
+    busy = np.array([True, True])
+    (d,) = ctrl.observe(
+        np.array([1.0, 20.0]), np.array([8, 8]), busy
+    )
+    assert d.slot == 0 and d.kind == "grow" and d.granted
+    assert ctrl.stats["grows"] == 1
+
+    # The scheduler could not place the migration: grow becomes a denial,
+    # and the charged cooldown holds (no immediate retry).
+    ctrl.migration_blocked(0)
+    assert ctrl.stats == {
+        "grows": 0,
+        "shrinks": 0,
+        "denied_grows": 1,
+        "reseeds": 0,
+    }
+    assert ctrl.observe(np.array([1.0, 20.0]), np.array([8, 8]), busy) == []
+
+    # A later granted grow that *does* migrate: history follows the slot.
+    for _ in range(2):  # drain the cooldown
+        ctrl.observe(np.array([20.0, 20.0]), np.array([8, 8]), busy)
+    (d,) = ctrl.observe(np.array([1.0, 20.0]), np.array([8, 8]), busy)
+    assert d.granted
+    ctrl.slot_moved(0, 1)
+    # Destination inherits the fresh cooldown: no resize for slot 1 until
+    # it expires; the vacated source is clean for the next admission.
+    assert ctrl.observe(np.array([20.0, 1.0]), np.array([8, 16]), busy) == []
+    assert ctrl._cooldown[0] == 0 and ctrl._collapse[0] == 0
+
+
+def test_serve_elastic_reseed_surfaced():
+    """Serve-level failure recovery: slots pinned at max_particles with
+    collapsed ESS re-seed (fresh cloud, step kept — requests still finish
+    on schedule) and the events/stats surface kind="reseed"."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 6
+    bank = FilterBank(
+        _serve_spec(steps),
+        FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+        num_slots=2,
+    )
+    stats = run_continuous_batching(
+        bank,
+        num_requests=4,
+        max_steps=steps,
+        min_steps=steps,
+        particles=(2, 4),
+        key=jax.random.key(3),
+        elastic=ElasticConfig(
+            # ESS == n for the uniform-weight spec, far below this floor:
+            # every busy slot is collapsed; at max they escalate.
+            grow_below=1e9,
+            min_particles=2,
+            max_particles=4,
+            cooldown=1,
+            reseed_after=1,
+        ),
+    )
+    el = stats["elastic"]
+    assert el["reseeds"] > 0
+    kinds = {e["kind"] for e in el["events"]}
+    assert "reseed" in kinds
+    for e in el["events"]:
+        if e["kind"] == "reseed":
+            assert e["old"] == e["new"] == 4 and e["granted"]
+    # Recovery never stalls completion: every request retires on budget.
+    assert [r["id"] for r in stats["results"]] == [0, 1, 2, 3]
+    assert all(len(r["tokens"]) == steps for r in stats["results"])

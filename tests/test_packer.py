@@ -1,0 +1,520 @@
+"""Multi-bank packing engine: size-class routing, spillover, sibling
+entry-point sharing, cross-bank migration primitives, batched prefill,
+and pipelined uploads.
+
+The spine: routing is deterministic under the run key and work-conserving
+(a request queues only while *no* wide-enough bank has a free slot); a
+single-class packed family is bitwise the single-bank scheduler; sibling
+banks share one compiled trace cache (N classes never N x compile);
+export -> import migrates a slot across widths preserving its progress
+and drawing only from its active posterior; the batched prefill pass is
+exactly the inline per-position decode; and pipelined uploads are a pure
+host-side reorder — the schedule and every result bitwise match plain
+async.
+"""
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FilterBank, FilterConfig, SMCSpec, get_policy
+from repro.launch.serve import (
+    SizeClassPacker,
+    make_packed_banks,
+    particle_size_classes,
+    run_continuous_batching,
+)
+
+STEPS = 5
+
+
+def _decode_spec(steps=STEPS):
+    """Decode-shaped toy spec (tok/reward/cum_reward/seq) — the particle
+    layout run_continuous_batching's retire path reads."""
+
+    def init(key, n):
+        del key
+        return dict(
+            tok=jnp.zeros((n,), jnp.int32),
+            reward=jnp.zeros((n,), jnp.float32),
+            cum_reward=jnp.zeros((n,), jnp.float32),
+            seq=jnp.zeros((n, steps), jnp.int32),
+        )
+
+    def transition(key, p, step):
+        tok = jax.random.randint(key, p["tok"].shape, 0, 100)
+        reward = jax.random.uniform(
+            jax.random.fold_in(key, 1), p["reward"].shape
+        )
+        pos = jnp.minimum(step, steps - 1)
+        return dict(
+            tok=tok,
+            reward=reward,
+            cum_reward=p["cum_reward"] + reward,
+            seq=p["seq"].at[:, pos].set(tok),
+        )
+
+    def loglik(p, obs, step):
+        del obs, step
+        return p["reward"]
+
+    return SMCSpec(init, transition, loglik)
+
+
+def _config(thr=0.5):
+    return FilterConfig(policy=get_policy("fp32"), ess_threshold=thr)
+
+
+def _run(
+    bank, *, particles, key=7, requests=6, arrival_every=1,
+    async_admit=False, **kw,
+):
+    return run_continuous_batching(
+        bank,
+        num_requests=requests,
+        max_steps=STEPS,
+        particles=particles,
+        key=jax.random.key(key),
+        arrival_every=arrival_every,
+        async_admit=async_admit,
+        **kw,
+    )
+
+
+def _assert_same_results(a, b, fields=None):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        for f in fields or (
+            "id",
+            "steps",
+            "particles",
+            "final_particles",
+            "admitted_tick",
+            "finished_tick",
+        ):
+            assert ra[f] == rb[f], f
+        np.testing.assert_array_equal(ra["tokens"], rb["tokens"])
+
+
+# -- packer routing ---------------------------------------------------------
+
+
+def test_make_packed_banks_ladder_and_slot_split():
+    """One bank per ladder class; remainder slots go to the widest
+    classes; fewer slots than classes fails fast."""
+    banks = make_packed_banks(
+        _decode_spec(), _config(), num_slots=7, p_min=4, p_max=16
+    )
+    assert sorted(banks) == particle_size_classes(4, 16) == [4, 8, 16]
+    assert {w: b.num_slots for w, b in banks.items()} == {4: 2, 8: 2, 16: 3}
+    with pytest.raises(ValueError, match="at least one slot per size class"):
+        make_packed_banks(
+            _decode_spec(), _config(), num_slots=2, p_min=4, p_max=16
+        )
+
+
+def test_packer_place_prefers_exact_then_promotes():
+    """First-fit over width-sorted lanes: the home class wins while it has
+    room, then the request spills to the next wider class, and None only
+    when nothing wide enough is free."""
+    lanes = [
+        SimpleNamespace(width=4, free=[0]),
+        SimpleNamespace(width=8, free=[1, 0]),
+        SimpleNamespace(width=16, free=[]),
+    ]
+    packer = SizeClassPacker(lanes)
+    assert packer.place(4).width == 4
+    lanes[0].free.clear()
+    assert packer.place(4).width == 8  # spillover: promoted one class
+    assert packer.place(16) is None  # wide class full: nothing fits
+    lanes[1].free.clear()
+    assert packer.place(4) is None
+
+
+def test_packer_first_fit_is_work_conserving():
+    """Property: over random lane configurations and request streams,
+    place() returns None only when no wide-enough lane has a free slot,
+    and otherwise always the narrowest such lane (deterministic first
+    fit — one seed, one schedule)."""
+    st = pytest.importorskip("hypothesis.strategies")
+    from hypothesis import given, settings
+
+    ladder = [2, 4, 8, 16]
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        frees=st.lists(
+            st.integers(min_value=0, max_value=3),
+            min_size=len(ladder),
+            max_size=len(ladder),
+        ),
+        budgets=st.lists(st.sampled_from(ladder), max_size=12),
+    )
+    def prop(frees, budgets):
+        lanes = [
+            SimpleNamespace(width=w, free=list(range(f)))
+            for w, f in zip(ladder, frees)
+        ]
+        packer = SizeClassPacker(lanes)
+        for b in budgets:
+            fitting = [
+                ln for ln in packer.lanes if ln.width >= b and ln.free
+            ]
+            lane = packer.place(b)
+            if lane is None:
+                assert not fitting  # never starves a placeable request
+            else:
+                assert lane is fitting[0]  # narrowest fitting lane
+                lane.free.pop()
+
+    prop()
+
+
+# -- scheduler equivalences -------------------------------------------------
+
+
+def test_single_class_packed_bitwise_matches_single_bank():
+    """A one-class packed family is the single dense bank wearing the
+    packed API: same admissions, same tokens, same ticks, bitwise."""
+    single = _run(
+        FilterBank(_decode_spec(), _config(), num_slots=4), particles=3
+    )
+    packed = _run(
+        make_packed_banks(
+            _decode_spec(), _config(), num_slots=4, p_min=3, p_max=3
+        ),
+        particles=3,
+    )
+    _assert_same_results(single["results"], packed["results"])
+    for k in (
+        "ticks",
+        "busy_slot_ticks",
+        "occupancy",
+        "active_particle_ticks",
+        "padded_particle_ticks",
+    ):
+        assert single[k] == packed[k], k
+    assert packed["packed"]["spillover_admissions"] == 0
+    assert single["packed"] is None
+
+
+def test_packed_routing_deterministic_under_seed():
+    """Two runs from the same key produce identical schedules and tokens;
+    a different key produces a different workload."""
+
+    def go(key):
+        return _run(
+            make_packed_banks(
+                _decode_spec(), _config(), num_slots=4, p_min=2, p_max=8
+            ),
+            particles=(2, 8),
+            key=key,
+            requests=8,
+        )
+
+    a, b, c = go(11), go(11), go(12)
+    _assert_same_results(a["results"], b["results"])
+    assert a["ticks"] == b["ticks"]
+    assert (
+        a["packed"]["spillover_admissions"]
+        == b["packed"]["spillover_admissions"]
+    )
+    tokens_differ = any(
+        not np.array_equal(ra["tokens"], rc["tokens"])
+        for ra, rc in zip(a["results"], c["results"])
+    )
+    assert tokens_differ or a["ticks"] != c["ticks"]
+
+
+def test_packed_completes_all_requests_with_spillover():
+    """A burst workload (all requests arrive at once) over a small family
+    forces spillover; every request still completes at its own budget and
+    the promotions are counted and charged as padding."""
+    stats = _run(
+        make_packed_banks(
+            _decode_spec(), _config(), num_slots=3, p_min=2, p_max=8
+        ),
+        particles=(2, 8),
+        requests=9,
+        key=13,  # budget draw with repeated narrow classes: forces spillover
+        arrival_every=0,  # burst: everything pending at tick 0
+    )
+    assert [r["id"] for r in stats["results"]] == list(range(9))
+    for r in stats["results"]:
+        assert len(r["tokens"]) == r["steps"]
+        assert r["lane_width"] >= r["particles"]  # never demoted
+    spill = stats["packed"]["spillover_admissions"]
+    assert spill == sum(
+        1 for r in stats["results"] if r["lane_width"] > r["particles"]
+    )
+    assert spill > 0
+    # Padding ledger: the packed family bills lane width, the useful
+    # ledger bills budgets — spillover makes them differ.
+    assert (
+        stats["packed"]["lane_particle_ticks"]
+        > stats["active_particle_ticks"]
+    )
+
+
+def test_pipelined_uploads_bitwise_matches_async():
+    """Pipelined uploads are a host-side reorder only: the admission
+    schedule, token streams, and every counter match plain async; sync
+    mode rejects the flag."""
+    banks = lambda: make_packed_banks(  # noqa: E731
+        _decode_spec(), _config(), num_slots=4, p_min=2, p_max=8
+    )
+    plain = _run(banks(), particles=(2, 8), requests=8, async_admit=True)
+    piped = _run(
+        banks(),
+        particles=(2, 8),
+        requests=8,
+        async_admit=True,
+        pipelined_uploads=True,
+    )
+    _assert_same_results(plain["results"], piped["results"])
+    for k in ("ticks", "busy_slot_ticks", "active_particle_ticks"):
+        assert plain[k] == piped[k], k
+    with pytest.raises(ValueError, match="async_admit"):
+        _run(banks(), particles=(2, 8), pipelined_uploads=True)
+
+
+def test_packed_elastic_migrates_across_banks():
+    """Grows past a lane's width migrate the slot to a wider bank (or are
+    reclassified as blocked when none has room); migrated requests finish
+    with their history intact at the grown budget."""
+    from repro.core.elastic import ElasticConfig
+
+    stats = _run(
+        make_packed_banks(
+            _decode_spec(), _config(thr=1.0), num_slots=4, p_min=2, p_max=8
+        ),
+        particles=(2, 8),
+        requests=6,
+        elastic=ElasticConfig(
+            grow_below=1e9,  # every busy slot always wants to grow
+            min_particles=2,
+            max_particles=8,
+            cooldown=1,
+        ),
+    )
+    pk, el = stats["packed"], stats["elastic"]
+    assert el["grows"] > 0
+    assert pk["migrations"] + pk["migrations_blocked"] > 0
+    migrated = [e for e in el["events"] if "migrated_to" in e]
+    assert len(migrated) == pk["migrations"]
+    for e in migrated:
+        assert e["to_width"] >= e["new"] > e["from_width"]
+    assert [r["id"] for r in stats["results"]] == list(range(6))
+    for r in stats["results"]:
+        assert len(r["tokens"]) == r["steps"]
+        assert r["final_particles"] >= r["particles"]
+
+
+def test_latency_summary_per_bank_and_deadline():
+    """Every tick of every bank contributes one step wall-time sample;
+    the summary carries per-bank and pooled percentiles plus the
+    over-deadline count."""
+    stats = _run(
+        make_packed_banks(
+            _decode_spec(), _config(), num_slots=4, p_min=2, p_max=8
+        ),
+        particles=(2, 8),
+        tick_deadline_ms=0.0,  # everything is over a zero deadline
+    )
+    lat = stats["latency"]
+    nb_lanes = len(stats["packed"]["classes"])
+    assert lat["ticks"] == stats["ticks"] * nb_lanes
+    assert lat["ticks_over_deadline"] == lat["ticks"]
+    assert set(lat["per_bank"]) == set(stats["packed"]["classes"])
+    for row in lat["per_bank"].values():
+        assert row["ticks"] == stats["ticks"]
+        assert 0.0 < row["p50_ms"] <= row["p95_ms"] <= row["max_ms"]
+
+
+# -- engine primitives ------------------------------------------------------
+
+
+def test_sibling_banks_share_compiled_entry_points():
+    """sibling() hands the twin the donor's jitted callables (identity),
+    so a family of class banks shares one trace cache: stepping the twin
+    adds exactly one geometry trace, and re-stepping adds none."""
+    bank = FilterBank(_decode_spec(), _config(), num_slots=3)
+    state = bank.init(
+        jax.random.key(0), 8, n_active=jnp.full((3,), 8, jnp.int32)
+    )
+    obs = jnp.zeros((3,), jnp.int32)
+    bank.jit_step(state, obs, jax.random.split(jax.random.key(1), 3))
+    base = bank.jit_step._cache_size()
+
+    twin = bank.sibling(num_slots=2)
+    assert twin.jit_step is bank.jit_step
+    assert twin.num_slots == 2
+    tstate = twin.init(
+        jax.random.key(2), 4, n_active=jnp.full((2,), 4, jnp.int32)
+    )
+    tobs = jnp.zeros((2,), jnp.int32)
+    tkeys = jax.random.split(jax.random.key(3), 2)
+    twin.jit_step(tstate, tobs, tkeys)
+    assert bank.jit_step._cache_size() == base + 1  # new geometry: once
+    twin.jit_step(tstate, tobs, tkeys)
+    assert bank.jit_step._cache_size() == base + 1  # then cached
+
+
+def test_reseed_slot_keeps_progress_resets_cloud():
+    """reseed_slot redraws one slot's particles from the prior with
+    uniform weights while keeping its step counter and budget — recovery
+    restarts the posterior, not the request."""
+    bank = FilterBank(_decode_spec(), _config(thr=1.0), num_slots=2)
+    state = bank.init(
+        jax.random.key(0), 8, n_active=jnp.asarray([4, 8], jnp.int32)
+    )
+    obs = jnp.zeros((2,), jnp.int32)
+    for t in range(3):
+        state, _ = bank.jit_step(
+            state, obs, jax.random.split(jax.random.key(t), 2)
+        )
+    before = np.asarray(state.particles["cum_reward"])
+    reseeded = bank.jit_reseed_slot(state, jnp.int32(0), jax.random.key(9))
+    assert np.asarray(reseeded.step).tolist() == [3, 3]  # progress kept
+    assert int(np.asarray(reseeded.n_active)[0]) == 4  # budget kept
+    after = np.asarray(reseeded.particles["cum_reward"])
+    assert not np.array_equal(after[0], before[0])  # fresh cloud
+    np.testing.assert_array_equal(after[1], before[1])  # other slot intact
+    w = np.asarray(
+        jnp.exp(reseeded.log_weights[0] - reseeded.log_uniform[0])
+    )
+    np.testing.assert_allclose(w[:4], 1.0, rtol=1e-6)  # uniform over n
+
+
+def test_export_import_migrates_across_widths():
+    """export_slot -> import_slot moves a slot between banks of different
+    lane widths: the destination draw selects only the source's active
+    lanes, weights reset uniform over the new count, and the step counter
+    travels with it."""
+    src = FilterBank(_decode_spec(), _config(thr=1.0), num_slots=2)
+    dst = src.sibling(num_slots=2)
+    s_state = src.init(
+        jax.random.key(0), 4, n_active=jnp.asarray([3, 4], jnp.int32)
+    )
+    for t in range(2):
+        s_state, _ = src.jit_step(
+            s_state,
+            jnp.zeros((2,), jnp.int32),
+            jax.random.split(jax.random.key(t), 2),
+        )
+    d_state = dst.init(
+        jax.random.key(1), 8, n_active=jnp.full((2,), 8, jnp.int32)
+    )
+    rows, log_w, step = src.jit_export_slot(s_state, jnp.int32(0))
+    d_state = dst.jit_import_slot(
+        d_state, jnp.int32(1), rows, log_w, jax.random.key(2),
+        jnp.int32(6), step,
+    )
+    assert int(np.asarray(d_state.step)[1]) == 2  # progress travelled
+    assert int(np.asarray(d_state.n_active)[1]) == 6
+    # Imported lanes are ancestors drawn from the source's *active*
+    # posterior only (lanes 0..2 of slot 0) — never its masked tail.
+    src_active = set(np.asarray(s_state.particles["cum_reward"])[0, :3])
+    imported = np.asarray(d_state.particles["cum_reward"])[1, :6]
+    assert set(imported) <= src_active
+    w = np.asarray(
+        jnp.exp(d_state.log_weights[1] - d_state.log_uniform[1])
+    )
+    np.testing.assert_allclose(w[:6], 1.0, rtol=1e-6)
+
+
+# -- batched prefill --------------------------------------------------------
+
+
+def test_prefill_pass_matches_inline_decode():
+    """The batched prefill pass fills exactly the cache the inline
+    per-position decode loop would; rows_for broadcasts one request's row
+    over its slot's lanes with the last prompt token staged."""
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import PrefillRunner
+    from repro.models import model as M
+
+    cfg = reduced_config(get_config("minitron-8b"))
+    pol = get_policy("fp32")
+    params = M.init_params(jax.random.key(1), cfg, pol.param_dtype)
+    decode = jax.jit(
+        lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol)
+    )
+    L, steps, width = 4, 3, 2
+    pr = PrefillRunner(
+        params, cfg, pol, decode, prompt_len=L, steps=steps, batch=2
+    )
+    pr.make_prompts(jax.random.key(5), 3)
+    prompts = np.asarray(pr.prompts)
+    assert prompts.shape == (3, L)
+    assert (prompts >= 0).all() and (prompts < cfg.vocab_size).all()
+
+    rows = pr.rows_for([0, 1, 2], [width] * 3)  # 2 passes: [0,1] + [2]+pad
+    assert len(rows) == 3 and pr.batches == 2
+    axes = jax.tree.leaves(
+        pr.cache_axes, is_leaf=lambda x: isinstance(x, int)
+    )
+    for i in range(3):
+        # Inline reference: scan the same decode step over the prompt's
+        # first L-1 positions at batch 1.
+        cache = M.init_cache(cfg, 1, pr.s_max, pol.compute_dtype)
+        for t in range(L - 1):
+            _, cache = decode(
+                params, pr.prompts[i : i + 1, t], jnp.int32(t), cache
+            )
+        ref = jax.tree.leaves(cache)
+        got = jax.tree.leaves(rows[i]["cache"])
+        for r, g, ax in zip(ref, got, axes):
+            g = np.asarray(g)
+            for lane in range(width):  # every lane is the same row
+                np.testing.assert_allclose(
+                    np.take(g, lane, axis=ax),
+                    np.take(np.asarray(r), 0, axis=ax),
+                    rtol=2e-5,
+                    atol=2e-5,
+                )
+        np.testing.assert_array_equal(
+            np.asarray(rows[i]["tok"]), np.full((width,), prompts[i, -1])
+        )
+        assert not np.asarray(rows[i]["cum_reward"]).any()
+        assert rows[i]["seq"].shape == (width, steps)
+
+    with pytest.raises(ValueError, match="prompt_len"):
+        PrefillRunner(
+            params, cfg, pol, decode, prompt_len=0, steps=steps, batch=2
+        )
+
+
+def test_prefill_spec_offsets_decode_positions():
+    """make_smc_decode_spec(prompt_len=L) sizes the cache for prompt +
+    decode and starts decode at position L-1; prompt_len=0 keeps the
+    original layout (the bitwise-compatibility guard)."""
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import make_smc_decode_spec
+    from repro.models import model as M
+
+    cfg = reduced_config(get_config("minitron-8b"))
+    pol = get_policy("fp32")
+    params = M.init_params(jax.random.key(1), cfg, pol.param_dtype)
+    decode = jax.jit(
+        lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, pol)
+    )
+    steps, L, n = 3, 4, 2
+    plain = make_smc_decode_spec(
+        params, cfg, pol, decode, temperature=1.0, steps=steps
+    )
+    offset = make_smc_decode_spec(
+        params, cfg, pol, decode, temperature=1.0, steps=steps,
+        prompt_len=L,
+    )
+    shape_of = lambda spec: [  # noqa: E731
+        x.shape for x in jax.tree.leaves(spec.init(jax.random.key(0), n))
+    ]
+    # The prefill spec's cache leaves carry L extra positions.
+    assert shape_of(plain) != shape_of(offset)
+    p0 = offset.init(jax.random.key(0), n)
+    p1 = offset.transition(jax.random.key(2), p0, jnp.int32(0))
+    assert p1["tok"].shape == (n,)  # runs end to end at the offset
