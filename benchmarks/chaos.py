@@ -1,0 +1,410 @@
+"""Chaos benchmark: fault-class recovery rate + recovery latency.
+
+Runs ``repro.launch.serve.run_continuous_batching`` under the
+deterministic fault injector (``repro.core.faults``) with the health
+monitor + escalation ladder enabled, then *joins* the injector's ground
+truth (which fault, which tick, which slot — ``stats["chaos"]["log"]``)
+against the monitor's recovery records (``stats["health"]["recovered"]``)
+to score each fault class:
+
+- **containment rate** — injected faults whose incident was closed
+  (recovered *or* retired-with-error; either way no junk tokens escaped
+  and the serve loop survived).  Step-level faults (``fail_step`` /
+  ``delay_step``) are absorbed at dispatch, so they score against the
+  retry / watchdog counters instead of incident records.
+- **recovery latency** — ticks from the fault's applied tick to the
+  incident's close, per class (state faults only; step faults are
+  absorbed on their own tick).
+
+Two scenarios per sweep — the synchronous single ragged bank and the
+packed + async + fp32-fallback configuration — because the detection lag
+and the escalation pacing differ between them (async observes one tick
+late).  ``chaos_smoke`` is the CI gate: every applied fault class must be
+fully contained, at least one recovery must have happened, and the
+**no-fault identity check** must pass — serving with monitoring enabled
+but zero faults injected must produce bitwise the same tokens as serving
+with no health layer at all (detection is free *and* inert until
+something actually breaks).
+
+The workload is a toy SMC spec whose log-likelihood reads *carried*
+particle state (an AR(1) chain), so NaN-poisoned particle rows propagate
+into the weight pipeline exactly as a real decode cache blow-up would —
+a spec that re-derives its reward from the step key each tick would
+silently shrug the poison off and score a fake recovery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, write_bench_json
+
+_STATE_CLASSES = ("nan_lanes", "inf_weights", "drop_upload")
+
+
+def _chaos_spec(steps: int):
+    """Toy decode-shaped SMC spec with *carried* state in the likelihood.
+
+    ``x`` follows an AR(1) chain and the reward is ``-x^2``, so a
+    NaN/Inf poisoned slot stays poisoned through transitions until a
+    ladder rung (rollback / reseed / migration) actually replaces the
+    state — the property the chaos score depends on.  ``cum_reward`` /
+    ``seq`` match the decode contract ``run_continuous_batching``
+    retires against.
+    """
+    from repro.core.filter import SMCSpec
+
+    def init(key, n):
+        return {
+            "x": jax.random.normal(key, (n,), jnp.float32),
+            "reward": jnp.zeros((n,), jnp.float32),
+            "cum_reward": jnp.zeros((n,), jnp.float32),
+            "seq": jnp.zeros((n, steps), jnp.int32),
+        }
+
+    def transition(key, p, step):
+        noise = jax.random.normal(key, p["x"].shape, jnp.float32)
+        x = 0.9 * p["x"] + 0.1 * noise
+        reward = -jnp.square(x)
+        tok = (jnp.abs(x) * 97.0).astype(jnp.int32) % 1000
+        pos = jnp.minimum(step.astype(jnp.int32), steps - 1)
+        return {
+            "x": x,
+            "reward": reward,
+            "cum_reward": p["cum_reward"] + reward,
+            "seq": p["seq"].at[:, pos].set(tok),
+        }
+
+    def loglik(p, obs, step):
+        del obs, step
+        return p["reward"]
+
+    return SMCSpec(init, transition, loglik)
+
+
+def _build_bank(num_slots, p_max, max_steps, *, packed=False, p_min=None):
+    from repro.core import FilterBank, FilterConfig, get_policy
+    from repro.launch.serve import make_packed_banks
+
+    spec = _chaos_spec(max_steps)
+    cfg = FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0)
+    if packed:
+        return make_packed_banks(
+            spec, cfg, num_slots=num_slots, p_min=p_min, p_max=p_max
+        )
+    return FilterBank(spec, cfg, num_slots=num_slots)
+
+
+def _run_scenario(
+    name: str,
+    *,
+    num_slots: int,
+    num_requests: int,
+    max_steps: int,
+    p_min: int,
+    p_max: int,
+    seed: int,
+    chaos,
+    health,
+    packed: bool = False,
+    async_admit: bool = False,
+    fallback_slots: int = 0,
+) -> dict:
+    from repro.core import FilterBank, FilterConfig, get_policy
+    from repro.launch.serve import run_continuous_batching
+
+    bank = _build_bank(
+        num_slots, p_max, max_steps, packed=packed, p_min=p_min
+    )
+    fallback = None
+    if fallback_slots:
+        fallback = FilterBank(
+            _chaos_spec(max_steps),
+            FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+            num_slots=fallback_slots,
+        )
+    stats = run_continuous_batching(
+        bank,
+        num_requests=num_requests,
+        max_steps=max_steps,
+        particles=(p_min, p_max),
+        key=jax.random.key(seed),
+        async_admit=async_admit,
+        health=health,
+        chaos=chaos,
+        fallback_bank=fallback,
+    )
+    stats["scenario"] = name
+    return stats
+
+
+def _score(stats: dict, detect_window: int = 4) -> list[dict]:
+    """Join injected faults against recovery records, per fault class.
+
+    A state fault is contained when a recovery record *covers* it: the
+    incident tripped within ``detect_window`` ticks of the fault landing
+    (detection lag is 1 tick sync, 2 async) and closed at/after it.
+    Coverage is not one-to-one — a second fault poisoning a slot whose
+    incident is still open merges into that incident (the monitor counts
+    incidents, not unhealthy ticks), so one record may contain several
+    faults.  Slot-matched records are preferred; a slot-free fallback
+    catches incidents that migrated to the fp32 fallback bank before
+    closing.  Step faults (``fail_step``/``delay_step``) score against
+    the retry / watchdog counters: containment there means the
+    dispatch-level backoff absorbed them.
+    """
+    chaos = stats["chaos"]
+    health = stats["health"]
+    recovered = health["recovered"]
+
+    def match(fault):
+        for require_slot in (True, False):
+            best = None
+            for rec in recovered:
+                if require_slot and rec["slot"] != fault["slot"]:
+                    continue
+                if rec["recovered_tick"] < fault["tick"]:
+                    continue
+                if rec["trip_tick"] > fault["tick"] + detect_window:
+                    continue
+                if (
+                    best is None
+                    or rec["recovered_tick"] < best["recovered_tick"]
+                ):
+                    best = rec
+            if best is not None:
+                return best
+        return None
+
+    by_class: dict[str, dict] = {}
+    for fault in chaos["log"]:
+        cls = by_class.setdefault(
+            fault["kind"],
+            {"applied": 0, "contained": 0, "latencies": [], "actions": []},
+        )
+        cls["applied"] += 1
+        if fault["kind"] in _STATE_CLASSES:
+            rec = match(fault)
+            if rec is not None:
+                cls["contained"] += 1
+                cls["latencies"].append(
+                    rec["recovered_tick"] - fault["tick"]
+                )
+                cls["actions"].append(rec["action"])
+    for kind, counter in (
+        ("fail_step", health["step_retries"]),
+        ("delay_step", health["watchdog_trips"]),
+    ):
+        cls = by_class.get(kind)
+        if cls is not None:
+            cls["contained"] = min(cls["applied"], int(counter))
+
+    records = []
+    for kind, cls in sorted(by_class.items()):
+        lat = cls["latencies"]
+        records.append(
+            {
+                "scenario": stats["scenario"],
+                "fault": kind,
+                "applied": cls["applied"],
+                "contained": cls["contained"],
+                "containment_rate": (
+                    cls["contained"] / cls["applied"] if cls["applied"] else 1.0
+                ),
+                "mean_recovery_latency_ticks": (
+                    sum(lat) / len(lat) if lat else 0.0
+                ),
+                "max_recovery_latency_ticks": max(lat) if lat else 0,
+                "actions": sorted(set(cls["actions"])),
+            }
+        )
+    return records
+
+
+def identity_check(
+    num_slots: int = 4,
+    num_requests: int = 6,
+    max_steps: int = 8,
+    p_min: int = 8,
+    p_max: int = 32,
+    seed: int = 0,
+) -> None:
+    """No-fault bitwise identity: health monitoring on (zero faults)
+    vs no health layer at all must produce identical tokens, tick for
+    tick.  Raises SystemExit on any divergence."""
+    import numpy as np
+
+    from repro.core import HealthConfig
+    from repro.launch.serve import run_continuous_batching
+
+    runs = []
+    for health in (None, HealthConfig()):
+        bank = _build_bank(num_slots, p_max, max_steps)
+        runs.append(
+            run_continuous_batching(
+                bank,
+                num_requests=num_requests,
+                max_steps=max_steps,
+                particles=(p_min, p_max),
+                key=jax.random.key(seed),
+                health=health,
+            )
+        )
+    plain, monitored = runs
+    if plain["ticks"] != monitored["ticks"]:
+        raise SystemExit(
+            f"identity check: tick counts diverged "
+            f"({plain['ticks']} vs {monitored['ticks']})"
+        )
+    for a, b in zip(plain["results"], monitored["results"]):
+        if a["id"] != b["id"] or a["steps"] != b["steps"]:
+            raise SystemExit(
+                f"identity check: request bookkeeping diverged on "
+                f"req[{a['id']}] vs req[{b['id']}]"
+            )
+        if not np.array_equal(a["tokens"], b["tokens"]):
+            raise SystemExit(
+                f"identity check: tokens diverged on req[{a['id']}]"
+            )
+    hm = monitored["health"]
+    if hm["trips"] or hm["open_incidents"]:
+        raise SystemExit(
+            f"identity check: spurious health trips on a fault-free run: "
+            f"{hm['trips']} open={hm['open_incidents']}"
+        )
+
+
+def chaos_sweep(
+    num_slots: int = 4,
+    num_requests: int = 10,
+    max_steps: int = 10,
+    p_min: int = 8,
+    p_max: int = 32,
+    seed: int = 0,
+    rounds: int = 2,
+    gate: bool = False,
+) -> list[str]:
+    """Both scenarios x all fault classes -> BENCH_chaos.json.
+
+    ``gate=True`` (the CI smoke) raises SystemExit when any applied
+    fault class is not fully contained, when no recovery happened at
+    all, or when the no-fault identity check fails.
+    """
+    from repro.core import ChaosConfig, HealthConfig
+    from repro.core.faults import FAULT_CLASSES
+
+    chaos = ChaosConfig(
+        classes=FAULT_CLASSES,
+        rounds=rounds,
+        start_tick=2,
+        every=2,
+        fail_attempts=1,
+        delay_ms=30.0,
+    )
+    health = HealthConfig(step_timeout_ms=20.0, snapshot_every=3)
+    scenarios = [
+        dict(name="sync_ragged"),
+        dict(
+            name="packed_async_fallback",
+            packed=True,
+            async_admit=True,
+            fallback_slots=1,
+        ),
+    ]
+    rows, records, summaries = [], [], []
+    for sc in scenarios:
+        stats = _run_scenario(
+            sc.pop("name"),
+            num_slots=num_slots,
+            num_requests=num_requests,
+            max_steps=max_steps,
+            p_min=p_min,
+            p_max=p_max,
+            seed=seed,
+            chaos=chaos,
+            health=health,
+            **sc,
+        )
+        scored = _score(stats)
+        records.extend(scored)
+        health_s = stats["health"]
+        summaries.append(
+            {
+                "scenario": stats["scenario"],
+                "ticks": stats["ticks"],
+                "injected": stats["chaos"]["applied"],
+                "scheduled": stats["chaos"]["scheduled"],
+                "trips": health_s["trips"],
+                "recoveries": health_s["recoveries"],
+                "retired_error": health_s["retired_error"],
+                "open_incidents": len(health_s["open_incidents"]),
+                "errored_requests": sorted(
+                    r["id"] for r in stats["results"] if "error" in r
+                ),
+            }
+        )
+        for rec in scored:
+            rows.append(
+                csv_row(
+                    f"chaos/{rec['scenario']}_{rec['fault']}",
+                    0.0,
+                    f"applied={rec['applied']};"
+                    f"contained={rec['contained']};"
+                    f"rate={rec['containment_rate']:.2f};"
+                    f"mean_latency_ticks="
+                    f"{rec['mean_recovery_latency_ticks']:.1f}",
+                )
+            )
+    identity_check(
+        num_slots=num_slots,
+        max_steps=max_steps,
+        p_min=p_min,
+        p_max=p_max,
+        seed=seed,
+    )
+    rows.append(csv_row("chaos/no_fault_identity", 0.0, "bitwise=ok"))
+    write_bench_json(
+        "chaos",
+        records,
+        scenarios=summaries,
+        fault_rounds=rounds,
+        no_fault_identity="ok",
+    )
+    if gate:
+        uncontained = [
+            f"{r['scenario']}/{r['fault']}={r['containment_rate']:.2f}"
+            for r in records
+            if r["applied"] and r["containment_rate"] < 1.0
+        ]
+        if uncontained:
+            raise SystemExit(
+                f"chaos gate: uncontained fault classes: "
+                f"{', '.join(uncontained)} (see BENCH_chaos.json)"
+            )
+        if not any(s["recoveries"] for s in summaries):
+            raise SystemExit(
+                "chaos gate: no recoveries recorded — the harness "
+                "injected faults but the ladder never acted"
+            )
+    return rows
+
+
+def chaos_smoke() -> list[str]:
+    """CI entry: reduced chaos sweep that *gates* on full containment of
+    every applied fault class + the no-fault bitwise identity check."""
+    return chaos_sweep(rounds=1, gate=True)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "chaos_sweep"
+    fns = {
+        "chaos_sweep": chaos_sweep,
+        "chaos_smoke": chaos_smoke,
+        "identity_check": lambda: (identity_check(), [])[1],
+    }
+    print("name,us_per_call,derived")
+    for row in fns[which]():
+        print(row)

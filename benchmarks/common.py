@@ -62,6 +62,20 @@ def _analysis_finding_count():
         return None
 
 
+def _health_counters():
+    """Process-wide health trips/recoveries accumulated by the run that
+    produced this bench (``repro.core.health``), stamped into every
+    BENCH_*.json — a throughput number measured while slots were tripping
+    sentinels and replaying recovery surgery should say so.  None when
+    the health layer isn't importable (e.g. a vendored benchmarks/)."""
+    try:
+        from repro.core.health import health_counters
+
+        return health_counters()
+    except Exception:
+        return None
+
+
 def write_bench_json(name: str, records: list[dict], **meta) -> str:
     """Write a machine-readable ``BENCH_<name>.json`` next to the cwd.
 
@@ -76,6 +90,7 @@ def write_bench_json(name: str, records: list[dict], **meta) -> str:
         "device_count": jax.device_count(),
         "backend": jax.default_backend(),
         "analysis_findings": _analysis_finding_count(),
+        "health": _health_counters(),
         **meta,
         "records": records,
     }

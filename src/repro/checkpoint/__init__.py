@@ -1,3 +1,6 @@
 """Checkpoint/restore substrate."""
 
-from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    SlotSnapshotRing,
+)

@@ -23,6 +23,7 @@ tests/test_elastic.py):
 
 from __future__ import annotations
 
+import collections
 import json
 import os
 import shutil
@@ -32,7 +33,7 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "SlotSnapshotRing"]
 
 _SENTINEL = "manifest.json"
 
@@ -45,6 +46,107 @@ def _flatten(tree: Any) -> dict[str, Any]:
         )
         flat[key] = leaf
     return flat
+
+
+class SlotSnapshotRing:
+    """Host-side ring of per-slot serve-state snapshots for rollback.
+
+    The serving scheduler's fault-tolerance ladder needs a clean recent
+    copy of each slot's state to roll back to when a health sentinel
+    trips (non-finite weights, poisoned caches).  Snapshots are the
+    output of ``FilterBank.export_slot`` — particle rows, the
+    log-weight row, and the step counter — pulled to host memory with
+    the same device_get snapshot idiom :class:`Checkpointer.save` uses,
+    so they are real copies: later donated in-place bank steps can
+    never corrupt them retroactively.
+
+    ``depth`` snapshots are kept per slot (newest first); a rollback
+    consumes the newest (``pop``) so a snapshot that itself turns out
+    poisoned is not restored twice — the ladder falls through to the
+    next rung instead.  Snapshots index by the scheduler's *global* slot
+    id, so one ring serves a whole multi-bank family.
+
+    ``persist`` spills the newest snapshot of every slot through a
+    :class:`Checkpointer` (atomic rename, manifest, bit-exact exotic
+    dtypes) — the hook a multi-host fleet would use to survive process
+    death, exercised in tests to keep the two layers compatible.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._rings: dict[int, collections.deque] = {}
+        self.pushes = 0
+        self.rollbacks = 0
+
+    def push(self, slot: int, particles_row: Any, log_w_row: Any,
+             step: Any, n_active: Any = None, tick: int = 0) -> None:
+        """Snapshot one slot (host copies; drops the oldest past depth)."""
+        host = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), particles_row
+        )
+        ring = self._rings.setdefault(
+            int(slot), collections.deque(maxlen=self.depth)
+        )
+        ring.append(
+            {
+                "particles": host,
+                "log_w": np.asarray(jax.device_get(log_w_row)),
+                "step": int(np.asarray(jax.device_get(step))),
+                "n_active": (
+                    None if n_active is None
+                    else int(np.asarray(jax.device_get(n_active)))
+                ),
+                "tick": int(tick),
+            }
+        )
+        self.pushes += 1
+
+    def latest(self, slot: int) -> dict | None:
+        ring = self._rings.get(int(slot))
+        return ring[-1] if ring else None
+
+    def pop(self, slot: int) -> dict | None:
+        """Consume the newest snapshot (rollback): restoring the same
+        snapshot twice after it failed to clear an incident would loop
+        the ladder forever."""
+        ring = self._rings.get(int(slot))
+        if not ring:
+            return None
+        self.rollbacks += 1
+        return ring.pop()
+
+    def clear(self, slot: int) -> None:
+        """Retire/re-admission: the ring holds a dead request's state."""
+        self._rings.pop(int(slot), None)
+
+    def move(self, src: int, dst: int) -> None:
+        """A migration moved the request: its snapshots follow it (they
+        re-import into any lane width via the masked cross-width draw)."""
+        ring = self._rings.pop(int(src), None)
+        self.clear(int(dst))
+        if ring:
+            self._rings[int(dst)] = ring
+
+    def persist(self, checkpointer: "Checkpointer", step: int) -> None:
+        """Write every slot's newest snapshot through ``checkpointer``
+        (one atomic checkpoint holding the whole ring head)."""
+        tree = {
+            str(slot): ring[-1]["particles"]
+            for slot, ring in self._rings.items()
+            if ring
+        }
+        extra = {
+            str(slot): {
+                "step": ring[-1]["step"],
+                "n_active": ring[-1]["n_active"],
+                "tick": ring[-1]["tick"],
+            }
+            for slot, ring in self._rings.items()
+            if ring
+        }
+        checkpointer.save(step, tree, extra=extra)
 
 
 class Checkpointer:

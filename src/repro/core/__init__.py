@@ -11,6 +11,10 @@ Layers:
   ``init`` / ``step`` / ``run`` / ``stream`` API
 - ``elastic``     — ESS-driven particle-budget autoscaling for FilterBanks
   (BudgetController + the engine's ``resize_slot`` budget switch)
+- ``health``      — per-slot health sentinels (non-finite state, weight
+  collapse, evidence divergence, stuck steps) + the step watchdog
+- ``faults``      — deterministic run-key-derived fault injection (the
+  chaos harness behind the serve escalation ladder)
 - ``tracking``    — the paper's object-tracking application
 - ``distributed`` — shard_map multi-device step (exact / local-RNA schemes),
   reached via ``FilterConfig(mesh=...)``
@@ -30,10 +34,18 @@ from repro.core.engine import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from repro.core.faults import (  # noqa: F401
+    ChaosConfig,
+    FaultInjector,
+)
 from repro.core.filter import (  # noqa: F401
     FilterOutput,
     FilterState,
     SMCSpec,
+)
+from repro.core.health import (  # noqa: F401
+    HealthConfig,
+    HealthMonitor,
 )
 from repro.core.precision import (  # noqa: F401
     POLICIES,

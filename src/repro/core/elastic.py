@@ -170,6 +170,11 @@ class BudgetDecision:
     ``kind="reseed"`` is the failure-recovery escalation (``old == new``:
     no budget change — the slot's cloud is re-drawn from the prior at its
     current budget via ``FilterBank.reseed_slot``).
+
+    ``reason`` distinguishes *why* a grow was denied: ``"budget"`` (the
+    global particle cap) vs ``"latency"`` (the slot's bank is already
+    over its per-tick deadline — more lanes would push it further over).
+    Empty for granted decisions.
     """
 
     slot: int
@@ -180,6 +185,7 @@ class BudgetDecision:
     granted: bool = True
     deficit: float = 0.0
     migrate: bool = False
+    reason: str = ""
 
 
 class BudgetController:
@@ -207,6 +213,7 @@ class BudgetController:
         self.grows = 0
         self.shrinks = 0
         self.denied = 0
+        self.denied_latency = 0
         self.reseeds = 0
 
     def slot_admitted(self, slot: int) -> None:
@@ -237,11 +244,18 @@ class BudgetController:
         n_active: np.ndarray,
         busy: np.ndarray,
         lane_width: np.ndarray | None = None,
+        lane_p95_ms: np.ndarray | None = None,
+        deadline_ms: float | None = None,
     ) -> list[BudgetDecision]:
         """One tick: propose and arbitrate budget changes.
 
-        ess:      (B,) per-slot effective sample sizes (NaN — a fully
-                  collapsed slot — counts as 0, i.e. a grow trigger).
+        ess:      (B,) per-slot effective sample sizes.  Any non-finite
+                  or negative reading — NaN, ±Inf, garbage from a
+                  corrupted weight row — counts as 0, i.e. full
+                  collapse: it triggers a grow (and accrues toward
+                  ``reseed_after``), and can never satisfy
+                  ``shrink_above`` (a +Inf "ESS" is a poisoned
+                  accumulator, not an easy slot to shrink).
         n_active: (B,) current per-slot budgets.
         busy:     (B,) bool — slots holding a live request; idle slots are
                   never resized (their lanes are junk anyway).
@@ -252,6 +266,15 @@ class BudgetController:
                   ``migrate=True``: the caller must move the slot to a
                   wider bank (or call :meth:`migration_blocked`).  None
                   (single-bank scheduler): all resizes are in-bank.
+        lane_p95_ms / deadline_ms: the latency-aware arbiter.  When both
+                  are given, a grow on a slot whose bank's p95 step
+                  wall-time already exceeds the deadline is denied
+                  (``reason="latency"``) *before* the budget arbiter
+                  runs — more lanes on an already-late bank trades the
+                  whole bank's SLO for one slot's ESS.  Latency denials
+                  charge no cooldown (the slot retries when the bank
+                  catches up) and are counted separately
+                  (``denied_grows_latency``) from budget denials.
 
         Returns every decision made this tick, granted or denied, in
         application order.  Only entries with ``granted=True`` change a
@@ -259,9 +282,12 @@ class BudgetController:
         export/import migration pair) and updates its own budget array.
         """
         cfg = self.config
-        ess = np.nan_to_num(
-            np.asarray(ess, np.float64), nan=0.0, neginf=0.0
-        )
+        ess = np.asarray(ess, np.float64).copy()
+        # Harden against poisoned stats: ±Inf and NaN are collapse (a
+        # non-finite accumulator means the weight row is corrupt), and a
+        # negative reading is garbage that must never look "healthy
+        # enough to shrink".  All map to 0 = the strongest grow trigger.
+        ess[~np.isfinite(ess) | (ess < 0)] = 0.0
         n = np.asarray(n_active, np.int64)
         busy = np.asarray(busy, bool)
         if ess.shape != (self.num_slots,) or n.shape != (self.num_slots,):
@@ -276,6 +302,15 @@ class BudgetController:
                     f"lane_width must be shaped ({self.num_slots},), got "
                     f"{lane_width.shape}"
                 )
+        late = np.zeros(self.num_slots, bool)
+        if lane_p95_ms is not None and deadline_ms is not None:
+            lane_p95_ms = np.asarray(lane_p95_ms, np.float64)
+            if lane_p95_ms.shape != (self.num_slots,):
+                raise ValueError(
+                    f"lane_p95_ms must be shaped ({self.num_slots},), got "
+                    f"{lane_p95_ms.shape}"
+                )
+            late = lane_p95_ms > float(deadline_ms)
 
         # Cooldowns tick down first; slots at zero are eligible.
         np.maximum(self._cooldown - 1, 0, out=self._cooldown)
@@ -320,6 +355,25 @@ class BudgetController:
             new = min(int(n[slot]) * 2, cfg.max_particles)
             extra = new - int(n[slot])
             deficit = float(cfg.grow_below - ess[slot])
+            if late[slot]:
+                # Latency-aware denial: the slot's bank is already over
+                # its per-tick deadline — a grow would add step work to
+                # every tick of an already-late bank.  No cooldown
+                # charge: the slot retries once the bank's p95 recovers.
+                decisions.append(
+                    BudgetDecision(
+                        slot=int(slot),
+                        old=int(n[slot]),
+                        new=int(n[slot]),
+                        ess=float(ess[slot]),
+                        kind="grow",
+                        granted=False,
+                        deficit=deficit,
+                        reason="latency",
+                    )
+                )
+                self.denied_latency += 1
+                continue
             if (
                 cfg.global_budget is not None
                 and total + extra > cfg.global_budget
@@ -335,6 +389,7 @@ class BudgetController:
                         kind="grow",
                         granted=False,
                         deficit=deficit,
+                        reason="budget",
                     )
                 )
                 self.denied += 1
@@ -386,5 +441,6 @@ class BudgetController:
             "grows": self.grows,
             "shrinks": self.shrinks,
             "denied_grows": self.denied,
+            "denied_grows_latency": self.denied_latency,
             "reseeds": self.reseeds,
         }

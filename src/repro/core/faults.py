@@ -1,0 +1,324 @@
+"""Deterministic fault injection for the serving stack.
+
+Every fp16 failure mode the paper's algorithmic changes defend against —
+and every serving failure the fault-tolerance layer must contain — is a
+*production surprise* unless it can be produced on demand: this module
+turns each one into a seeded, reproducible event.  The injector's whole
+schedule derives from the run key, so one seed is one exact chaos
+scenario (which fault, which tick, which slot), re-runnable bit for bit;
+and with the injector absent the serve path executes **zero** extra
+device or host work (the scheduler's hooks are all ``if injector is not
+None`` — disabled chaos is bitwise the plain serve path, CI-checked).
+
+Fault classes (``ChaosConfig.classes``):
+
+- ``nan_lanes``    — NaN-poison every inexact leaf of one busy slot's
+  particle rows (token caches included): the next bank step's
+  likelihood turns non-finite and the fused epilogue's stats surface it
+  as a non-finite ESS — the paper's "one bad half-precision value
+  silently corrupts the posterior" scenario.
+- ``inf_weights``  — overwrite one busy slot's log-weight row with +Inf:
+  normalize produces Inf-Inf = NaN weights, the weight-side twin.
+- ``drop_upload``  — swallow one admission's slot upload: the scheduler
+  believes the request was admitted, the device still holds the
+  previous occupant's state (the health monitor's step-progress
+  integrity rule is what catches this).
+- ``fail_step``    — one lane's bank-step dispatch "fails" for the first
+  ``fail_attempts`` attempts on its tick (the scheduler's bounded-
+  backoff retry path on the non-donated entry point must absorb it).
+- ``delay_step``   — one lane's step is delayed ``delay_ms`` on the host
+  timeline, tripping the wall-clock step watchdog.
+
+The injector is intentionally host-side and numpy-deterministic: faults
+are injected *between* jitted calls (state surgery via ``.at[slot]``),
+never inside a kernel, so the chaos harness cannot perturb compiled
+programs or trace caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ChaosConfig",
+    "Fault",
+    "FaultInjector",
+    "poison_particle_rows",
+    "poison_weight_row",
+]
+
+FAULT_CLASSES = (
+    "nan_lanes",
+    "inf_weights",
+    "drop_upload",
+    "fail_step",
+    "delay_step",
+)
+
+# State-surgery faults target a busy slot; step faults target a lane.
+_STATE_FAULTS = ("nan_lanes", "inf_weights")
+_STEP_FAULTS = ("fail_step", "delay_step")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Shape of a deterministic fault schedule.
+
+    classes:       fault classes to cycle through, in order.
+    rounds:        how many times the class cycle repeats.
+    start_tick:    first injection tick (leave a few healthy ticks so
+                   rollback snapshots exist before the first fault).
+    every:         ticks between consecutive injections — spacing them
+                   out lets each recovery complete (and be measured)
+                   before the next fault lands.
+    fail_attempts: consecutive failing dispatch attempts per
+                   ``fail_step`` fault; keep <= the scheduler's
+                   ``max_step_retries`` for a recoverable scenario.
+    delay_ms:      host-side delay per ``delay_step`` fault; pair with a
+                   smaller ``step_timeout_ms`` so the watchdog fires.
+    """
+
+    classes: tuple[str, ...] = FAULT_CLASSES
+    rounds: int = 1
+    start_tick: int = 2
+    every: int = 3
+    fail_attempts: int = 1
+    delay_ms: float = 25.0
+
+    def __post_init__(self) -> None:
+        bad = [c for c in self.classes if c not in FAULT_CLASSES]
+        if bad or not self.classes:
+            raise ValueError(
+                f"unknown fault classes {bad}; choose from {FAULT_CLASSES}"
+            )
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.start_tick < 0:
+            raise ValueError(
+                f"start_tick must be >= 0, got {self.start_tick}"
+            )
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        if self.fail_attempts < 1:
+            raise ValueError(
+                f"fail_attempts must be >= 1, got {self.fail_attempts}"
+            )
+        if self.delay_ms < 0:
+            raise ValueError(f"delay_ms must be >= 0, got {self.delay_ms}")
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault.  ``tick`` is the *earliest* injection tick;
+    state faults needing a busy slot defer tick by tick until one exists.
+    ``applied_tick``/``slot`` record where it actually landed."""
+
+    index: int
+    kind: str
+    tick: int
+    preferred: int  # rng-chosen slot (state faults) or lane (step faults)
+    applied_tick: int | None = None
+    slot: int | None = None
+
+
+def _seed_from_key(key) -> int:
+    """A host integer seed derived from a jax PRNG key (or passed through
+    when already an int) — the whole schedule hangs off the run key."""
+    if isinstance(key, (int, np.integer)):
+        return int(key)
+    return int(
+        jax.random.randint(
+            jax.random.fold_in(key, 0x5EED),
+            (),
+            0,
+            np.iinfo(np.int32).max,
+        )
+    )
+
+
+class FaultInjector:
+    """Seeded fault schedule + the scheduler's injection hooks.
+
+    Construction fixes the entire schedule: ``rounds`` passes over
+    ``config.classes`` at ticks ``start_tick + i * every``, each fault's
+    preferred slot/lane drawn from one ``numpy`` generator seeded by the
+    run key.  The serve loop then calls:
+
+    - :meth:`state_faults` once per tick → due state-surgery faults; it
+      targets each at a busy slot (:meth:`target_slot`) and applies the
+      poison helpers below.
+    - :meth:`take_drop_upload` at each admission → swallow this upload?
+    - :meth:`step_fails` / :meth:`step_delay_ms` around each lane step
+      dispatch.
+
+    ``log`` accumulates every applied fault (kind, scheduled tick,
+    applied tick, slot/lane) — the ground truth ``benchmarks/chaos.py``
+    joins against health recoveries for per-class recovery latency.
+    """
+
+    def __init__(self, config: ChaosConfig, key, *, num_slots: int,
+                 num_lanes: int = 1):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if num_lanes < 1:
+            raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
+        self.config = config
+        self.num_slots = num_slots
+        self.num_lanes = num_lanes
+        self.seed = _seed_from_key(key)
+        rng = np.random.default_rng(self.seed)
+        self.schedule: list[Fault] = []
+        i = 0
+        for _ in range(config.rounds):
+            for kind in config.classes:
+                space = num_lanes if kind in _STEP_FAULTS else num_slots
+                self.schedule.append(
+                    Fault(
+                        index=i,
+                        kind=kind,
+                        tick=config.start_tick + i * config.every,
+                        preferred=int(rng.integers(space)),
+                    )
+                )
+                i += 1
+        self.log: list[dict] = []
+        # fail_step bookkeeping: (tick, lane) -> attempts already failed.
+        self._failing: dict[tuple[int, int], int] = {}
+
+    # -- schedule queries -----------------------------------------------
+
+    def _due(self, tick: int, kinds: tuple[str, ...]) -> list[Fault]:
+        return [
+            f
+            for f in self.schedule
+            if f.applied_tick is None and f.tick <= tick and f.kind in kinds
+        ]
+
+    def state_faults(self, tick: int) -> list[Fault]:
+        """Due-and-unapplied nan_lanes / inf_weights faults."""
+        return self._due(tick, _STATE_FAULTS)
+
+    def target_slot(self, fault: Fault, busy: np.ndarray) -> int | None:
+        """Deterministic busy-slot target: the first busy slot at or
+        after the fault's preferred index (wrapping).  None defers the
+        fault to the next tick (no busy slot yet)."""
+        busy = np.asarray(busy, bool)
+        if not busy.any():
+            return None
+        order = (np.arange(self.num_slots) + fault.preferred) % (
+            self.num_slots
+        )
+        for s in order:
+            if busy[s]:
+                return int(s)
+        return None
+
+    def applied(self, fault: Fault, tick: int, slot: int | None) -> None:
+        fault.applied_tick = tick
+        fault.slot = slot
+        self.log.append(
+            {
+                "index": fault.index,
+                "kind": fault.kind,
+                "scheduled_tick": fault.tick,
+                "tick": tick,
+                "slot": slot,
+            }
+        )
+
+    # -- admission hook -------------------------------------------------
+
+    def take_drop_upload(self, tick: int) -> Fault | None:
+        """Consume one due drop_upload fault (the admission this returns
+        for must skip its device upload)."""
+        due = self._due(tick, ("drop_upload",))
+        return due[0] if due else None
+
+    # -- step hooks -----------------------------------------------------
+
+    def step_fails(self, tick: int, lane: int, attempt: int) -> bool:
+        """Does this dispatch attempt of this lane's step fail?
+
+        A due fail_step fault targeting ``lane`` fails attempts
+        ``0..fail_attempts-1`` on its tick; the retry after that
+        succeeds.  The fault is marked applied on its first failure.
+        """
+        key = (tick, lane)
+        if key in self._failing:
+            left = self._failing[key]
+            if left > 0:
+                self._failing[key] = left - 1
+                return True
+            return False
+        for f in self._due(tick, ("fail_step",)):
+            if f.preferred % self.num_lanes == lane:
+                self.applied(f, tick, lane)
+                self._failing[key] = self.config.fail_attempts - 1
+                return True
+        return False
+
+    def step_delay_ms(self, tick: int, lane: int) -> float:
+        """Host delay to add to this lane's step on this tick (0 = none)."""
+        for f in self._due(tick, ("delay_step",)):
+            if f.preferred % self.num_lanes == lane:
+                self.applied(f, tick, lane)
+                return self.config.delay_ms
+        return 0.0
+
+    # -- reporting ------------------------------------------------------
+
+    @property
+    def exhausted(self) -> bool:
+        return all(f.applied_tick is not None for f in self.schedule)
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "seed": self.seed,
+            "scheduled": len(self.schedule),
+            "applied": len(self.log),
+            "log": list(self.log),
+        }
+
+
+# -- state surgery ------------------------------------------------------
+
+
+def poison_particle_rows(state, slot, value: float = float("nan")):
+    """Overwrite every inexact leaf of one slot's particle rows (caches
+    included) with ``value`` — the NaN-lane fault.  Integer leaves
+    (tokens, sequence buffers) are left alone: the corruption models a
+    numeric blow-up, not memory scribbling."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def hit(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        row = jnp.full(x.shape[1:], value, x.dtype)
+        return x.at[slot].set(row)
+
+    return state._replace(particles=jax.tree.map(hit, state.particles))
+
+
+def poison_weight_row(state, slot, value: float = float("inf")):
+    """Overwrite one slot's log-weight row with ``value`` (+Inf by
+    default) — the Inf-weight fault.  The active-lane prefix is enough
+    to corrupt the row; padding lanes keep their -inf mask so the fault
+    tests the *weight pipeline's* containment, not the mask's."""
+    slot = jnp.asarray(slot, jnp.int32)
+    lw = state.log_weights
+    row = lw[slot]
+    if state.n_active is not None:
+        lane = jnp.arange(lw.shape[-1])
+        row = jnp.where(
+            lane < state.n_active[slot],
+            jnp.asarray(value, lw.dtype),
+            row,
+        )
+    else:
+        row = jnp.full(lw.shape[1:], value, lw.dtype)
+    return state._replace(log_weights=lw.at[slot].set(row))

@@ -1,0 +1,393 @@
+"""Per-slot health sentinels for long-lived serving banks.
+
+The paper's thesis is that half-precision particle filters pay off *only*
+when their numerical failure modes are actively mitigated — its
+algorithmic changes are recovery mechanisms for fp16 collapse.  At
+serving scale the same failures show up operationally: one non-finite
+weight row, a collapsed posterior, or a hung bank step in a donated
+in-place serve loop either propagates silently or kills the whole run.
+This module is the *detection* half of the fault-tolerance layer
+(``repro.core.faults`` is the reproducibility half; the escalation
+ladder lives in ``repro.launch.serve``).
+
+Every health rule is derived from numbers the scheduler already holds —
+**zero extra device passes**:
+
+- ``nonfinite``   — the slot's per-step ESS or log-evidence increment is
+  NaN/±Inf (the fused epilogue's ``sum_w``/``sum_w2``/``max_log_w``/
+  ``log_z`` stats surface any non-finite weight lane as a non-finite
+  ESS or ``log_z_inc``, so poisoned particle state is visible the first
+  step after it happens), or its max log-likelihood is NaN.
+- ``divergence``  — the per-step evidence increment stays below a
+  catastrophic floor for ``divergence_after`` consecutive ticks: the
+  observation likelihood says the whole cloud is nowhere near the
+  target (distinct from a *collapsed* cloud, whose ESS pins at ~1 while
+  its evidence may look fine).
+- ``collapse``    — ESS pinned under ``collapse_below`` for
+  ``collapse_after`` consecutive ticks.  This overlaps the elastic
+  controller's grow/reseed escalation by design; the serving scheduler
+  enables this rule only when no :class:`~repro.core.elastic.
+  BudgetController` is driving the slot (otherwise two loops would
+  fight over the same signal).
+- ``stuck``       — progress integrity: a busy slot's device step
+  counter (already read back every tick for the retire scan) does not
+  match the steps the scheduler has dispatched since admission.  This
+  is how a *dropped slot upload* (admission bookkeeping without the
+  device write) or a silently skipped step surfaces without any
+  dedicated probe.
+- the **step watchdog** — wall-clock: a bank step whose
+  dispatch→consumption latency exceeds ``step_timeout_ms`` trips the
+  lane (async scheduling makes a hung device step otherwise invisible:
+  the host happily keeps dispatching).
+
+Recovery bookkeeping: the scheduler reports each applied escalation
+action (:meth:`slot_action`), and the monitor closes the incident the
+first tick the slot reads healthy again — ``stats["recoveries"]``
+carries per-incident trip/recovery ticks and the action that cleared
+it, which ``benchmarks/chaos.py`` turns into recovery rate + latency
+per injected fault class.
+
+Process-wide counters (:func:`health_counters`) mirror every trip and
+recovery so ``benchmarks.common.write_bench_json`` can stamp the health
+state of the run into every ``BENCH_*.json``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "HealthConfig",
+    "HealthEvent",
+    "HealthMonitor",
+    "health_counters",
+    "reset_health_counters",
+]
+
+# Process-wide mirror of every monitor's trip/recovery counters, stamped
+# into BENCH_*.json by benchmarks.common.write_bench_json: a bench number
+# measured in a run that tripped health sentinels should say so.
+_COUNTERS: collections.Counter = collections.Counter()
+
+
+def health_counters() -> dict:
+    """Snapshot of the process-wide health counters (trips + recoveries
+    accumulated across every HealthMonitor in this process)."""
+    return dict(_COUNTERS)
+
+
+def reset_health_counters() -> None:
+    _COUNTERS.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Thresholds of the per-slot health rules.
+
+    Defaults are deliberately loose: on a healthy serve they must never
+    fire (the no-fault serve path is required to be bitwise identical to
+    a run without monitoring — a spurious trip would trigger recovery
+    surgery and break that).
+
+    collapse_below:   ESS under this is a collapsed posterior.  <= 0
+                      disables the rule (the serving scheduler disables
+                      it whenever an elastic BudgetController already
+                      owns the collapse signal).
+    collapse_after:   consecutive collapsed ticks before the trip.
+    divergence_below: per-step log-evidence increments under this floor
+                      are catastrophic (default -1e6: a genuinely
+                      impossible observation, not a bad frame).
+    divergence_after: consecutive such ticks before the trip.
+    step_timeout_ms:  wall-clock watchdog on each bank step's
+                      dispatch→consumption latency; None disables.
+    snapshot_every:   cadence (ticks) of the scheduler's host-side
+                      rollback snapshots (consumed by the serve loop,
+                      carried here so one config travels).
+    snapshot_depth:   ring depth per slot.
+    max_step_retries: bounded backoff for failed/timed-out steps before
+                      the failure escalates to the slot ladder.
+    """
+
+    collapse_below: float = 0.0
+    collapse_after: int = 3
+    divergence_below: float = -1e6
+    divergence_after: int = 2
+    step_timeout_ms: float | None = None
+    snapshot_every: int = 4
+    snapshot_depth: int = 2
+    max_step_retries: int = 2
+
+    def __post_init__(self) -> None:
+        if self.collapse_after < 1:
+            raise ValueError(
+                f"collapse_after must be >= 1, got {self.collapse_after}"
+            )
+        if self.divergence_after < 1:
+            raise ValueError(
+                f"divergence_after must be >= 1, got {self.divergence_after}"
+            )
+        if self.step_timeout_ms is not None and self.step_timeout_ms <= 0:
+            raise ValueError(
+                f"step_timeout_ms must be > 0 (or None to disable), got "
+                f"{self.step_timeout_ms}"
+            )
+        if self.snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {self.snapshot_every}"
+            )
+        if self.snapshot_depth < 1:
+            raise ValueError(
+                f"snapshot_depth must be >= 1, got {self.snapshot_depth}"
+            )
+        if self.max_step_retries < 0:
+            raise ValueError(
+                f"max_step_retries must be >= 0, got {self.max_step_retries}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One health trip for one slot on one tick.
+
+    ``kind`` is the rule that fired ("nonfinite" | "divergence" |
+    "collapse" | "stuck").  The scheduler answers with an escalation
+    action and reports it back via :meth:`HealthMonitor.slot_action`.
+    """
+
+    slot: int
+    tick: int
+    kind: str
+    ess: float
+    log_z_inc: float
+
+
+class HealthMonitor:
+    """Host-side per-slot health state machine.
+
+    Call :meth:`observe` once per scheduler tick with that tick's
+    already-materialized per-slot stats; it returns an alert for every
+    unhealthy busy slot.  A slot with an open incident does not *re-trip*
+    (trip counters count incidents, not unhealthy ticks) but it keeps
+    alerting until healthy — the scheduler uses the incident's applied
+    ``actions`` to pick the next escalation rung.  Report applied
+    recovery actions via :meth:`slot_action`; the incident closes on the
+    first healthy read afterward and lands in ``stats["recoveries"]``.
+    ``slot_reset`` clears a slot's history on admission/retire.
+    """
+
+    def __init__(self, config: HealthConfig, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.config = config
+        self.num_slots = num_slots
+        self._collapse = np.zeros(num_slots, np.int64)
+        self._diverge = np.zeros(num_slots, np.int64)
+        # Open incident per slot: {"tick", "kind", "actions": [...]}.
+        self._pending: dict[int, dict] = {}
+        self.trips: collections.Counter = collections.Counter()
+        self.recoveries: collections.Counter = collections.Counter()
+        self.events: list[dict] = []
+        self.recovered: list[dict] = []
+        self.watchdog_trips = 0
+        self.step_retries = 0
+
+    # -- per-tick observation -------------------------------------------
+
+    def observe(
+        self,
+        tick: int,
+        ess: np.ndarray,
+        log_z_inc: np.ndarray,
+        max_loglik: np.ndarray,
+        busy: np.ndarray,
+        expected_step: np.ndarray | None = None,
+        observed_step: np.ndarray | None = None,
+    ) -> list[HealthEvent]:
+        """Evaluate every rule for every busy slot; return alerts (one
+        per unhealthy busy slot — new trips and ongoing incidents both).
+
+        ess / log_z_inc / max_loglik: (B,) per-slot stats from the step
+        the scheduler just consumed (``FilterOutput`` — all derived from
+        the fused epilogue's ``sum_w``/``sum_w2``/``max_log_w``/``log_z``
+        row stats, so no extra device reads happen here).
+        busy: (B,) bool — only busy slots are judged.
+        expected_step / observed_step: optional (B,) int — steps the
+        scheduler believes it has dispatched since admission vs. the
+        device step counter it read back for the retire scan; any
+        busy-slot mismatch is a ``stuck`` trip (dropped upload, skipped
+        step).
+        """
+        cfg = self.config
+        ess = np.asarray(ess, np.float64)
+        log_z = np.asarray(log_z_inc, np.float64)
+        mll = np.asarray(max_loglik, np.float64)
+        busy = np.asarray(busy, bool)
+        for name, arr in (("ess", ess), ("log_z_inc", log_z)):
+            if arr.shape != (self.num_slots,):
+                raise ValueError(
+                    f"{name} must be shaped ({self.num_slots},), got "
+                    f"{arr.shape}"
+                )
+
+        nonfinite = busy & (
+            ~np.isfinite(ess) | ~np.isfinite(log_z) | np.isnan(mll)
+        )
+
+        if cfg.collapse_below > 0:
+            collapsed = busy & (ess < cfg.collapse_below)
+            self._collapse[collapsed] += 1
+            self._collapse[~collapsed] = 0
+            collapse_trip = self._collapse >= cfg.collapse_after
+        else:
+            collapse_trip = np.zeros(self.num_slots, bool)
+
+        diverged = busy & np.isfinite(log_z) & (log_z < cfg.divergence_below)
+        self._diverge[diverged] += 1
+        self._diverge[~diverged] = 0
+        diverge_trip = self._diverge >= cfg.divergence_after
+
+        stuck = np.zeros(self.num_slots, bool)
+        if expected_step is not None and observed_step is not None:
+            stuck = busy & (
+                np.asarray(expected_step, np.int64)
+                != np.asarray(observed_step, np.int64)
+            )
+
+        alerts: list[HealthEvent] = []
+        for slot in range(self.num_slots):
+            if not busy[slot]:
+                continue
+            kind = None
+            # Severity order: a non-finite slot is corrupted whatever
+            # else its counters say; stuck (no valid state at all) next.
+            if nonfinite[slot]:
+                kind = "nonfinite"
+            elif stuck[slot]:
+                kind = "stuck"
+            elif diverge_trip[slot]:
+                kind = "divergence"
+            elif collapse_trip[slot]:
+                kind = "collapse"
+            if kind is None:
+                # Healthy read: close any open incident whose recovery
+                # action has been applied.
+                inc = self._pending.get(slot)
+                if inc is not None and inc["actions"]:
+                    self._close(slot, tick, inc)
+                continue
+            ev = HealthEvent(
+                slot=slot,
+                tick=tick,
+                kind=kind,
+                ess=float(ess[slot]),
+                log_z_inc=float(log_z[slot]),
+            )
+            if slot not in self._pending:
+                # New incident: count the trip.  An ongoing incident
+                # keeps alerting (the ladder escalates) but counts once.
+                self._pending[slot] = {
+                    "tick": tick, "kind": kind, "actions": [],
+                }
+                self.trips[kind] += 1
+                _COUNTERS[f"trips_{kind}"] += 1
+                self.events.append(dataclasses.asdict(ev))
+            alerts.append(ev)
+        return alerts
+
+    def _close(self, slot: int, tick: int, inc: dict) -> None:
+        action = inc["actions"][-1]
+        self.recoveries[action] += 1
+        _COUNTERS[f"recoveries_{action}"] += 1
+        self.recovered.append(
+            {
+                "slot": slot,
+                "kind": inc["kind"],
+                "trip_tick": inc["tick"],
+                "recovered_tick": tick,
+                "latency_ticks": tick - inc["tick"],
+                "action": action,
+                "actions": list(inc["actions"]),
+            }
+        )
+        del self._pending[slot]
+
+    # -- scheduler feedback ---------------------------------------------
+
+    def pending(self, slot: int) -> dict | None:
+        """The slot's open incident (None when healthy)."""
+        return self._pending.get(slot)
+
+    def slot_action(self, slot: int, action: str, tick: int = 0) -> None:
+        """The scheduler applied an escalation rung to a tripped slot.
+        ``tick`` lets the scheduler pace escalation: it skips a slot
+        whose last action is newer than the observation lag, so a rung
+        gets one validated read before the next rung fires."""
+        inc = self._pending.get(slot)
+        if inc is None:
+            # An action outside an incident (e.g. a step retry that never
+            # tripped a slot rule) still counts process-wide.
+            self.recoveries[action] += 1
+            _COUNTERS[f"recoveries_{action}"] += 1
+            return
+        inc["actions"].append(action)
+        inc["last_action_tick"] = int(tick)
+
+    def slot_failed(self, slot: int, tick: int, action: str) -> None:
+        """Terminal rung: the slot was retired with an error — the
+        incident closes as recovered-by-containment."""
+        inc = self._pending.get(slot)
+        if inc is None:
+            self._pending[slot] = inc = {
+                "tick": tick, "kind": "unknown", "actions": [],
+            }
+        inc["actions"].append(action)
+        self._close(slot, tick, inc)
+
+    def slot_reset(self, slot: int) -> None:
+        """Admission/retire: the slot's history belongs to a dead request."""
+        self._collapse[slot] = 0
+        self._diverge[slot] = 0
+        self._pending.pop(slot, None)
+
+    def slot_moved(self, src: int, dst: int) -> None:
+        """A migration moved the request (and any open incident) with it."""
+        self._collapse[dst] = self._collapse[src]
+        self._diverge[dst] = self._diverge[src]
+        if src in self._pending:
+            self._pending[dst] = self._pending.pop(src)
+        self._collapse[src] = 0
+        self._diverge[src] = 0
+
+    # -- wall-clock watchdog --------------------------------------------
+
+    def step_watchdog(self, elapsed_ms: float) -> bool:
+        """True when a step's wall latency exceeds the timeout (counted)."""
+        cfg = self.config
+        if cfg.step_timeout_ms is None or elapsed_ms <= cfg.step_timeout_ms:
+            return False
+        self.watchdog_trips += 1
+        _COUNTERS["watchdog_trips"] += 1
+        return True
+
+    def step_retried(self) -> None:
+        self.step_retries += 1
+        _COUNTERS["step_retries"] += 1
+
+    # -- reporting ------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "trips": dict(self.trips),
+            "recoveries": dict(self.recoveries),
+            "events": list(self.events),
+            "recovered": list(self.recovered),
+            "open_incidents": {
+                s: dict(inc) for s, inc in self._pending.items()
+            },
+            "watchdog_trips": self.watchdog_trips,
+            "step_retries": self.step_retries,
+        }

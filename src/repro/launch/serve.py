@@ -46,6 +46,13 @@ scheduler to the double-buffered path: the next bank step is dispatched
 bookkeeping (and the host↔device slot swaps it triggers) overlap device
 compute instead of serializing with it — identical schedules, one step of
 read-back lag.
+
+``--health`` arms the fault-tolerance layer: per-slot health sentinels
+(``repro.core.health``) derived from the stats the scheduler already
+reads back, host-side rollback snapshots, and an escalation ladder
+(rollback → reseed → ``--fp32-fallback`` precision migration →
+retire-with-error).  ``--chaos`` injects a deterministic, seed-derived
+fault schedule (``repro.core.faults``) to exercise every rung on demand.
 """
 
 from __future__ import annotations
@@ -515,6 +522,9 @@ def run_continuous_batching(
     prefill=None,
     pipelined_uploads: bool = False,
     tick_deadline_ms: float | None = None,
+    health=None,
+    chaos=None,
+    fallback_bank=None,
 ) -> dict:
     """Admit → step → retire loop over a FilterBank of decode slots.
 
@@ -600,6 +610,39 @@ def run_continuous_batching(
     "how stale was this tick's data" number) and summarized in
     ``stats["latency"]`` as p50/p95/max per bank and pooled, plus
     ``ticks_over_deadline`` against ``tick_deadline_ms`` when given.
+    With ``elastic`` active, ``tick_deadline_ms`` is also an SLO input:
+    a grow whose lane's recent p95 step time already exceeds the
+    deadline is denied (``reason="latency"``, counted separately from
+    budget denials) — more lanes on an already-late bank only makes the
+    tail worse.
+
+    **Fault tolerance** — pass ``health`` (a
+    :class:`repro.core.health.HealthConfig`) and the scheduler watches
+    every busy slot with zero extra device passes (the per-slot health
+    rules are all derived from the ESS / evidence / step-counter numbers
+    it already reads back each tick) plus a wall-clock step watchdog.  A
+    tripped slot never retires as a success; instead the scheduler walks
+    an escalation ladder, one rung per validated read: **rollback** to
+    the newest host-side ring-buffer snapshot (``export_slot`` copies
+    taken every ``health.snapshot_every`` ticks), then **reseed** from
+    the prior, then **precision fallback** — migrate the slot into
+    ``fallback_bank`` (an fp32-policy bank joined to the family as an
+    extra lane that packer and elastic never route to), then
+    **retire-with-error** (the result carries ``"error"`` instead of
+    tokens — containment, not silence).  ``stuck`` trips (a dropped slot
+    upload: scheduler bookkeeping without the device write) re-upload
+    from the request's own admission key.  Failed step dispatches retry
+    with bounded backoff on the non-donated entry point.  Counters,
+    per-incident recovery latencies, and snapshot/ladder totals land in
+    ``stats["health"]``.
+
+    ``chaos`` (a :class:`repro.core.faults.ChaosConfig`, needs
+    ``health``) arms the deterministic fault injector: the whole fault
+    schedule derives from the run key, so one seed is one exact chaos
+    scenario.  The applied-fault log lands in ``stats["chaos"]``.  With
+    ``health=None`` and ``chaos=None`` every hook in this function is
+    dead (``if monitor/injector is not None``): the no-fault serve path
+    is bitwise identical to a build without the fault-tolerance layer.
     """
     if min_steps is None:
         min_steps = max(1, max_steps // 2)
@@ -644,6 +687,25 @@ def run_continuous_batching(
     else:
         lanes.append(_Lane(bank, p_max, 0, 0, ragged=ragged))
     packer = SizeClassPacker(lanes)
+    fb_lane = None
+    if fallback_bank is not None:
+        if health is None:
+            raise ValueError(
+                "fallback_bank is the precision-fallback rung of the "
+                "health escalation ladder: pass health=HealthConfig(...)"
+            )
+        # The fallback lane joins the family *after* the packer is built:
+        # it steps, retires, and reports latency like any lane, but no
+        # admission, spillover, or elastic migration ever routes to it —
+        # only the ladder's precision-fallback rung moves slots in.
+        fb_lane = _Lane(
+            fallback_bank,
+            p_max,
+            len(lanes),
+            sum(lane.nb for lane in lanes),
+            ragged=True,
+        )
+        lanes.append(fb_lane)
     total_slots = sum(lane.nb for lane in lanes)
     ctrl = None
     if elastic is not None:
@@ -661,6 +723,38 @@ def run_continuous_batching(
                 f"the bank's lane width {p_max}"
             )
         ctrl = BudgetController(elastic, total_slots)
+    monitor = ring = injector = k_health = None
+    if health is not None:
+        import dataclasses
+
+        from repro.checkpoint import SlotSnapshotRing
+        from repro.core.health import HealthMonitor
+
+        if ctrl is not None and health.collapse_below > 0:
+            # The elastic controller already owns the collapse signal
+            # (grow → reseed escalation); two loops acting on the same
+            # ESS would fight over the slot.
+            health = dataclasses.replace(health, collapse_below=0.0)
+        monitor = HealthMonitor(health, total_slots)
+        ring = SlotSnapshotRing(depth=health.snapshot_depth)
+        # The ladder's own key stream: fold_in, NOT a wider split — the
+        # split(5) below must stay byte-identical so health-on runs
+        # reproduce health-off schedules bit for bit.
+        k_health = jax.random.fold_in(key, 0x8EA17)
+    if chaos is not None:
+        from repro.core.faults import FaultInjector
+
+        if monitor is None:
+            raise ValueError(
+                "chaos injection without health monitoring would just "
+                "corrupt results: pass health=HealthConfig(...)"
+            )
+        injector = FaultInjector(
+            chaos,
+            jax.random.fold_in(key, 0xC4A05),
+            num_slots=total_slots,
+            num_lanes=len(lanes),
+        )
     k_state, k_admit, k_run, k_sched, k_elastic = jax.random.split(key, 5)
     lengths = _request_budgets(k_sched, num_requests, min_steps, max_steps)
     if ragged:
@@ -688,9 +782,12 @@ def run_continuous_batching(
         # the call).  The async path must NOT donate its step input —
         # retire reads the *pre-step* state while the step runs on
         # device, so aliasing those buffers would hand retire reclaimed
-        # memory.
+        # memory.  Chaos mode must not either: a failed dispatch retries
+        # from the pre-step state, which donation would have reclaimed.
         lane.step_fn = (
-            lane.bank.jit_step if async_admit else lane.bank.jit_step_donated
+            lane.bank.jit_step
+            if (async_admit or injector is not None)
+            else lane.bank.jit_step_donated
         )
 
     # Global slot space: lane i's slot s is global slot lane.offset + s.
@@ -706,6 +803,26 @@ def run_continuous_batching(
     # accounting and retire reads go through it instead of the
     # admission-time ``req["particles"]`` (stale once budgets move).
     slot_budget = np.zeros(total_slots, np.int64)
+    # Progress-integrity base per slot: the device step counter must read
+    # ``base_step + (examine_tick - base_tick)`` for every busy slot.
+    # Admission sets (0, admitted_tick); rollback/re-upload reset it to
+    # the restored step.  Any mismatch is a "stuck" health trip — how a
+    # dropped upload surfaces without a dedicated probe.
+    step_base = np.zeros(total_slots, np.int64)
+    step_base_tick = np.zeros(total_slots, np.int64)
+    # Actions applied after a surgery land one examined read later in
+    # sync mode, two in async (the extra tick of read-back lag) — the
+    # ladder escalates only after a rung has had one validated read.
+    obs_lag = 2 if async_admit else 1
+    hstats = {
+        "ladder_keys": 0,
+        "rollbacks": 0,
+        "reseeds": 0,
+        "reuploads": 0,
+        "fallback_migrations": 0,
+        "retired_error": 0,
+        "lane_failures": 0,
+    }
     events: list[dict] = []
     packed_stats = {
         "spillover_admissions": 0,
@@ -744,7 +861,17 @@ def run_continuous_batching(
             )
         for j, (req, lane, slot) in enumerate(placed):
             k = jax.random.fold_in(k_admit, req["id"])
-            if lane.ragged and rows is not None:
+            dropped = None
+            if injector is not None:
+                dropped = injector.take_drop_upload(tick)
+                if dropped is not None:
+                    injector.applied(dropped, tick, lane.offset + slot)
+            if dropped is not None:
+                # Swallowed upload: the scheduler's bookkeeping proceeds
+                # while the device keeps the previous occupant's state —
+                # the stuck-step integrity rule must catch this.
+                pass
+            elif lane.ragged and rows is not None:
                 lane.state = lane.bank.jit_init_slot_donated(
                     lane.state,
                     jnp.int32(slot),
@@ -771,6 +898,12 @@ def run_continuous_batching(
             lane.active[slot] = req
             g = lane.offset + slot
             slot_budget[g] = req["particles"]
+            if monitor is not None:
+                # This slot's history belongs to a dead request.
+                monitor.slot_reset(g)
+                ring.clear(g)
+                step_base[g] = 0
+                step_base_tick[g] = tick
             if packed_multi and lane.width > req["particles"]:
                 # Promoted past its home class: admitted at its true
                 # budget, the lane's extra width is charged as padding.
@@ -790,18 +923,28 @@ def run_continuous_batching(
             for s in lane.active
             if lane.active[s]["admitted_tick"] < ex_tick
             and steps_now[s] >= lane.active[s]["steps"]
+            # A slot mid-incident never retires as a success: the ladder
+            # either recovers it (it retires on a later healthy read) or
+            # retires it with an error itself.
+            and (monitor is None or monitor.pending(lane.offset + s) is None)
         ]
         if not done:
             return
         cum = np.asarray(ex_state.particles["cum_reward"], np.float32)
         seqs = np.asarray(ex_state.particles["seq"])
         for slot in done:
-            req = lane.active.pop(slot)
             # Best particle over the slot's *currently active* lanes only —
             # lanes beyond the current budget hold junk (a shrunk slot's
             # old lanes included) that must never win the argmax.
             n_now = int(slot_budget[lane.offset + slot])
             best = int(np.argmax(cum[slot, :n_now]))
+            if monitor is not None and not np.isfinite(cum[slot, best]):
+                # Last line of defense: corrupted state that slipped past
+                # every per-tick rule must still never reach a success
+                # summary (NaN wins np.argmax, so poison lands here).
+                retire_error(lane, slot, "nonfinite_at_retire", ex_tick)
+                continue
+            req = lane.active.pop(slot)
             res = {
                 "id": req["id"],
                 "steps": req["steps"],
@@ -821,6 +964,35 @@ def run_continuous_batching(
                 res["lane_width"] = lane.width
             results.append(res)
             lane.free.append(slot)
+            if monitor is not None:
+                monitor.slot_reset(lane.offset + slot)
+                ring.clear(lane.offset + slot)
+
+    def retire_error(lane, slot, reason, tick):
+        """Terminal containment: the request leaves with an ``error``
+        result instead of tokens — never a junk sequence, never a hung
+        slot.  The slot is freed for the next request (its state is
+        overwritten by the admission upload)."""
+        g = lane.offset + slot
+        req = lane.active.pop(slot)
+        res = {
+            "id": req["id"],
+            "steps": req["steps"],
+            "particles": req["particles"],
+            "final_particles": int(slot_budget[g]),
+            "tokens": np.zeros(0, np.int32),
+            "admitted_tick": req["admitted_tick"],
+            "finished_tick": tick,
+            "error": reason,
+        }
+        if packed:
+            res["lane_width"] = lane.width
+        results.append(res)
+        lane.free.append(slot)
+        slot_budget[g] = 0
+        ring.clear(g)
+        monitor.slot_failed(g, tick, "retire_error")
+        hstats["retired_error"] += 1
 
     def migrate(src, slot, dst, d, k, ev):
         """Move one live slot across banks: export → width-matched import.
@@ -850,6 +1022,13 @@ def run_continuous_batching(
         ctrl.slot_moved(g_src, g_dst)
         slot_budget[g_dst] = d.new
         slot_budget[g_src] = 0
+        if monitor is not None:
+            # Health history, snapshots, and the step-integrity base
+            # follow the request across banks.
+            monitor.slot_moved(g_src, g_dst)
+            ring.move(g_src, g_dst)
+            step_base[g_dst] = step_base[g_src]
+            step_base_tick[g_dst] = step_base_tick[g_src]
         packed_stats["migrations"] += 1
         ev["migrated_to"] = g_dst
         ev["from_width"] = src.width
@@ -867,13 +1046,33 @@ def run_continuous_batching(
         """
         busy_mask = np.zeros(total_slots, bool)
         for lane in lanes:
+            if lane is fb_lane:
+                continue  # fallback slots traded autoscaling for stability
             for s in lane.active:
-                busy_mask[lane.offset + s] = True
+                g = lane.offset + s
+                if monitor is not None and monitor.pending(g) is not None:
+                    continue  # mid-incident: the health ladder owns it
+                busy_mask[g] = True
+        lane_p95 = None
+        if tick_deadline_ms is not None:
+            # Per-slot p95 of its lane's recent step wall-times: the
+            # SLO-aware grow-denial signal (a grow on an already-late
+            # bank only worsens the tail).
+            lane_p95 = np.zeros(total_slots, np.float64)
+            for lane in lanes:
+                if lane.tick_ms:
+                    lane_p95[lane.offset:lane.offset + lane.nb] = (
+                        np.percentile(
+                            np.asarray(lane.tick_ms[-16:], np.float64), 95
+                        )
+                    )
         decisions = ctrl.observe(
             ess,
             slot_budget,
             busy_mask,
             lane_width=lane_width_vec if packed_multi else None,
+            lane_p95_ms=lane_p95,
+            deadline_ms=tick_deadline_ms,
         )
         for d in decisions:
             ev = {
@@ -886,6 +1085,8 @@ def run_continuous_batching(
                 "granted": d.granted,
                 "deficit": d.deficit,
             }
+            if d.reason:
+                ev["reason"] = d.reason
             events.append(ev)
             if not d.granted:
                 continue
@@ -941,14 +1142,265 @@ def run_continuous_batching(
 
     def consume_prev(lane):
         """Block on the lane's previous in-flight step (async modes):
-        returns its ESS row and records dispatch→consumption latency."""
+        returns its (ESS row, FilterOutput) and records
+        dispatch→consumption latency (watchdog-checked)."""
         if lane.prev is None:
             return None
         t0, out = lane.prev
         lane.prev = None
         ess = np.asarray(out.ess, np.float64)
-        lane.tick_ms.append((time.perf_counter() - t0) * 1e3)
-        return ess
+        ms = (time.perf_counter() - t0) * 1e3
+        lane.tick_ms.append(ms)
+        if monitor is not None:
+            monitor.step_watchdog(ms)
+        return ess, out
+
+    def global_busy():
+        busy = np.zeros(total_slots, bool)
+        for lane in lanes:
+            for s in lane.active:
+                busy[lane.offset + s] = True
+        return busy
+
+    def inject_state_faults(tick):
+        """Apply due state-surgery faults to busy slots, pre-dispatch.
+
+        Poison is eager ``.at[slot]`` surgery between jitted calls —
+        never inside a kernel — so chaos cannot perturb compiled
+        programs or trace caches, only the data."""
+        from repro.core import faults
+
+        for f in injector.state_faults(tick):
+            g = injector.target_slot(f, global_busy())
+            if g is None:
+                continue  # no busy slot yet: the fault defers a tick
+            lane = lane_of[g]
+            slot = g - lane.offset
+            if f.kind == "nan_lanes":
+                lane.state = faults.poison_particle_rows(lane.state, slot)
+            else:
+                lane.state = faults.poison_weight_row(lane.state, slot)
+            injector.applied(f, tick, g)
+
+    def observe_health(tick, examined):
+        """One monitor tick from already-materialized per-lane stats.
+
+        ``examined`` pairs each lane with the stats of the state the
+        retire scan examines this tick (sync: this tick's output; async:
+        the previous tick's — the same one-tick lag elastic accepts).  A
+        slot is judged only once its own first step's stats have landed
+        (the retire-eligibility condition): a just-admitted slot's row
+        still describes the lane's previous occupant.
+        """
+        ess_g = np.zeros(total_slots, np.float64)
+        logz_g = np.zeros(total_slots, np.float64)
+        mll_g = np.zeros(total_slots, np.float64)
+        busy_g = np.zeros(total_slots, bool)
+        exp_g = np.zeros(total_slots, np.int64)
+        obs_g = np.zeros(total_slots, np.int64)
+        for lane, ess_row, out, steps_np in examined:
+            o = lane.offset
+            ess_g[o:o + lane.nb] = ess_row
+            logz_g[o:o + lane.nb] = np.asarray(out.log_z_inc, np.float64)
+            mll_g[o:o + lane.nb] = np.asarray(out.max_loglik, np.float64)
+            obs_g[o:o + lane.nb] = steps_np
+            for s, req in lane.active.items():
+                g = o + s
+                if req["admitted_tick"] < tick:
+                    busy_g[g] = True
+                    exp_g[g] = step_base[g] + (tick - step_base_tick[g])
+        return monitor.observe(
+            tick, ess_g, logz_g, mll_g, busy_g,
+            expected_step=exp_g, observed_step=obs_g,
+        )
+
+    def next_key():
+        hstats["ladder_keys"] += 1
+        return jax.random.fold_in(k_health, hstats["ladder_keys"])
+
+    def ladder_rollback(lane, slot, g, tick):
+        """Rung 1: restore the newest clean snapshot via the masked
+        cross-width import (ragged lanes only — the draw needs a runtime
+        count).  ``pop`` consumes the snapshot: one that fails to clear
+        the incident is never restored twice."""
+        if not lane.ragged:
+            return False
+        snap = ring.pop(g)
+        if snap is None:
+            return False
+        n = int(snap["n_active"] or slot_budget[g])
+        lane.state = lane.bank.jit_import_slot_donated(
+            lane.state,
+            jnp.int32(slot),
+            jax.tree.map(jnp.asarray, snap["particles"]),
+            jnp.asarray(snap["log_w"]),
+            next_key(),
+            jnp.int32(n),
+            jnp.int32(snap["step"]),
+        )
+        slot_budget[g] = n
+        step_base[g] = snap["step"]
+        step_base_tick[g] = tick + (1 if async_admit else 0)
+        return True
+
+    def ladder_reseed(lane, slot, g, tick):
+        """Rung 2: fresh diffuse cloud at the slot's current budget —
+        progress (the step counter) kept, so retire math is unchanged."""
+        if lane.ragged:
+            lane.state = lane.bank.jit_reseed_slot_donated(
+                lane.state, jnp.int32(slot), next_key(),
+                jnp.int32(slot_budget[g]),
+            )
+        else:
+            lane.state = lane.bank.jit_reseed_slot_donated(
+                lane.state, jnp.int32(slot), next_key()
+            )
+        return True
+
+    def ladder_fallback(lane, slot, g, req, tick):
+        """Rung 3: precision fallback — migrate the slot into the
+        fp32-policy lane (export → masked import; ``import_slot`` casts
+        the rows to the destination policy's compute dtype).  A slot
+        whose numerics keep tripping at half precision gets the paper's
+        baseline precision instead of dying."""
+        if fb_lane is None or lane is fb_lane or not fb_lane.free:
+            return False
+        rows, lw_row, step_row = lane.bank.jit_export_slot(
+            lane.state, jnp.int32(slot)
+        )
+        dslot = fb_lane.free.pop()
+        n = int(min(slot_budget[g], fb_lane.width))
+        fb_lane.state = fb_lane.bank.jit_import_slot_donated(
+            fb_lane.state,
+            jnp.int32(dslot),
+            rows,
+            lw_row,
+            next_key(),
+            jnp.int32(n),
+            step_row,
+        )
+        lane.active.pop(slot)
+        fb_lane.active[dslot] = req
+        lane.free.append(slot)
+        g_dst = fb_lane.offset + dslot
+        slot_budget[g_dst] = n
+        slot_budget[g] = 0
+        step_base[g_dst] = step_base[g]
+        step_base_tick[g_dst] = step_base_tick[g]
+        ring.move(g, g_dst)
+        monitor.slot_moved(g, g_dst)
+        if ctrl is not None:
+            ctrl.slot_moved(g, g_dst)
+        monitor.slot_action(g_dst, "fallback", tick)
+        hstats["fallback_migrations"] += 1
+        return True
+
+    def ladder_reupload(lane, slot, g, req, tick):
+        """Stuck rung: the device never got (or lost) this request's
+        state — redo the admission upload from the request's own key.
+        The request restarts at step 0 (there was no trustworthy
+        progress to keep)."""
+        k = jax.random.fold_in(k_admit, req["id"])
+        row = None
+        if prefill is not None:
+            row = prefill.rows_for([req["id"]], [lane.width])[0]
+        if lane.ragged and row is not None:
+            lane.state = lane.bank.jit_init_slot_donated(
+                lane.state, jnp.int32(slot), k,
+                jnp.int32(req["particles"]), row,
+            )
+        elif lane.ragged:
+            lane.state = lane.bank.jit_init_slot_donated(
+                lane.state, jnp.int32(slot), k, jnp.int32(req["particles"])
+            )
+        elif row is not None:
+            lane.state = lane.bank.jit_init_slot_donated(
+                lane.state, jnp.int32(slot), k, None, row
+            )
+        else:
+            lane.state = lane.bank.jit_init_slot_donated(
+                lane.state, jnp.int32(slot), k
+            )
+        slot_budget[g] = req["particles"]
+        step_base[g] = 0
+        step_base_tick[g] = tick + (1 if async_admit else 0)
+        ring.clear(g)
+        return True
+
+    def apply_ladder(alerts, tick):
+        """Escalate each alerting slot one rung: rollback → reseed →
+        precision fallback → retire-with-error (stuck slots re-upload →
+        retire-with-error).  Each rung is tried once per incident, paced
+        by the read-back lag so it gets one validated read before the
+        next rung fires."""
+        for ev in alerts:
+            g = ev.slot
+            lane = lane_of[g]
+            slot = g - lane.offset
+            req = lane.active.get(slot)
+            inc = monitor.pending(g)
+            if req is None or inc is None:
+                continue
+            acts = inc["actions"]
+            if acts and tick - inc.get("last_action_tick", tick) < obs_lag:
+                continue  # last rung not validated yet (read-back lag)
+            if inc["kind"] == "stuck":
+                if "reupload" not in acts and ladder_reupload(
+                    lane, slot, g, req, tick
+                ):
+                    monitor.slot_action(g, "reupload", tick)
+                    hstats["reuploads"] += 1
+                    continue
+                retire_error(lane, slot, f"unrecoverable:{inc['kind']}", tick)
+                continue
+            if (
+                "rollback" not in acts
+                and "reseed" not in acts
+                and ladder_rollback(lane, slot, g, tick)
+            ):
+                monitor.slot_action(g, "rollback", tick)
+                hstats["rollbacks"] += 1
+                continue
+            if "reseed" not in acts and ladder_reseed(lane, slot, g, tick):
+                monitor.slot_action(g, "reseed", tick)
+                hstats["reseeds"] += 1
+                continue
+            if "fallback" not in acts and ladder_fallback(
+                lane, slot, g, req, tick
+            ):
+                # action recorded against the destination slot inside
+                # (the incident moved with the request)
+                continue
+            retire_error(lane, slot, f"unrecoverable:{inc['kind']}", tick)
+
+    def push_snapshots(lane, state, tick):
+        """Host-side rollback points for healthy busy slots.  The rows
+        are validated finite on the host *before* entering the ring — a
+        poisoned snapshot would turn rollback into re-poisoning."""
+        for s, req in list(lane.active.items()):
+            g = lane.offset + s
+            if monitor.pending(g) is not None or req["admitted_tick"] >= tick:
+                continue
+            rows, lw_row, step_row = lane.bank.jit_export_slot(
+                state, jnp.int32(s)
+            )
+            lw = np.asarray(lw_row)
+            n = int(slot_budget[g]) if lane.ragged else lane.width
+            if not np.all(np.isfinite(lw[:n])):
+                continue
+            host_rows = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), rows
+            )
+            if not all(
+                np.all(np.isfinite(np.asarray(x, np.float64)))
+                for x in jax.tree.leaves(host_rows)
+                if x.dtype.kind in "fV"
+            ):
+                continue
+            ring.push(
+                g, host_rows, lw, int(np.asarray(step_row)),
+                n_active=n if lane.ragged else None, tick=tick,
+            )
 
     if pipelined_uploads:
         # Pipelined mode admits at the *tail* of each tick, so tick 0's
@@ -957,6 +1409,8 @@ def run_continuous_batching(
     while pending or any(lane.active for lane in lanes):
         if not pipelined_uploads:
             admit_all(tick)
+        if injector is not None:
+            inject_state_faults(tick)
         dispatches = []
         for lane in lanes:
             keys = lane.step_keys(k_run, tick)
@@ -969,23 +1423,70 @@ def run_continuous_batching(
             ]
             t0 = time.perf_counter()
             post, out = lane.step_fn(lane.state, lane.obs, keys)
+            if injector is not None:
+                attempt = 0
+                while injector.step_fails(tick, lane.index, attempt):
+                    # Failed dispatch: drop its results and retry from
+                    # the (non-donated) pre-step state, bounded backoff.
+                    attempt += 1
+                    monitor.step_retried()
+                    if attempt > health.max_step_retries:
+                        post = out = None
+                        break
+                    post, out = lane.step_fn(lane.state, lane.obs, keys)
+                delay = injector.step_delay_ms(tick, lane.index)
+                if delay:
+                    # Hung-step scenario: the watchdog sees it in this
+                    # step's dispatch→consumption wall latency.
+                    time.sleep(delay / 1e3)
+                if post is None:
+                    # Retries exhausted: contain by erroring out the
+                    # lane's requests, then re-dispatch (the pre-step
+                    # state itself is intact — only dispatch failed).
+                    hstats["lane_failures"] += 1
+                    for s in sorted(lane.active):
+                        retire_error(lane, s, "step_failed", tick)
+                    post, out = lane.step_fn(lane.state, lane.obs, keys)
             dispatches.append((lane, busy, t0, post, out))
         if async_admit:
             # Dispatch-first, decide later: the retire pass blocks only
             # on the *pre-step* state (already materialized), and the
             # latency/ESS consumption blocks only on the *previous*
             # tick's step, while this tick's steps run on device.
-            prev_rows = []
+            prev_rows, examined = [], []
             for lane, busy, t0, post, out in dispatches:
                 busy_slot_ticks += len(busy)
                 active_particle_ticks += sum(busy)
                 padded_particle_ticks += len(busy) * p_max
                 packed_stats["lane_particle_ticks"] += len(busy) * lane.width
-                prev_rows.append(consume_prev(lane))
+                pr = consume_prev(lane)
+                prev_rows.append(None if pr is None else pr[0])
+                if monitor is not None and pr is not None:
+                    examined.append(
+                        (lane, pr[0], pr[1], np.array(lane.state.step))
+                    )
+            alerts = []
+            if monitor is not None and len(examined) == len(lanes):
+                alerts = observe_health(tick, examined)
+            for lane, busy, t0, post, out in dispatches:
                 retire(lane, lane.state, tick)
+            if (
+                ring is not None
+                and tick
+                and tick % health.snapshot_every == 0
+            ):
+                # Snapshots come off the *pre-step* state — the exact
+                # state health just validated, already materialized, so
+                # the in-flight step is never waited on.
+                for lane, busy, t0, post, out in dispatches:
+                    push_snapshots(lane, lane.state, tick)
             for lane, busy, t0, post, out in dispatches:
                 lane.state = post
                 lane.prev = (t0, out)
+            if alerts:
+                # Recovery surgery lands on the in-flight step's output
+                # (enqueued behind it), like elastic resizes below.
+                apply_ladder(alerts, tick)
             if ctrl is not None and prev_rows and prev_rows[0] is not None:
                 # One tick of lag: resize from the previous step's ESS
                 # (already materialized) so the in-flight step is never
@@ -999,19 +1500,40 @@ def run_continuous_batching(
                 admit_all(tick)
         else:
             tick += 1
-            ess_rows = []
+            examined = []
             for lane, busy, t0, post, out in dispatches:
                 lane.state = post
                 ess = np.asarray(out.ess, np.float64)
-                lane.tick_ms.append((time.perf_counter() - t0) * 1e3)
+                ms = (time.perf_counter() - t0) * 1e3
+                lane.tick_ms.append(ms)
+                if monitor is not None:
+                    monitor.step_watchdog(ms)
                 busy_slot_ticks += len(busy)
                 active_particle_ticks += sum(busy)
                 padded_particle_ticks += len(busy) * p_max
                 packed_stats["lane_particle_ticks"] += len(busy) * lane.width
+                examined.append(
+                    (lane, ess, out, np.array(lane.state.step))
+                )
+            alerts = []
+            if monitor is not None:
+                # Judge the tick's stats *before* the retire scan: a
+                # tripped slot must never slip out as a success.
+                alerts = observe_health(tick, examined)
+            for lane, ess_row, out, steps_np in examined:
                 retire(lane, lane.state, tick)
-                ess_rows.append(ess)
+            if alerts:
+                apply_ladder(alerts, tick)
             if ctrl is not None:
-                apply_elastic(np.concatenate(ess_rows), tick)
+                apply_elastic(
+                    np.concatenate([e[1] for e in examined]), tick
+                )
+            if (
+                ring is not None
+                and tick % health.snapshot_every == 0
+            ):
+                for lane in lanes:
+                    push_snapshots(lane, lane.state, tick)
     for lane in lanes:
         consume_prev(lane)  # final in-flight step's latency sample
     results.sort(key=lambda r: r["id"])
@@ -1044,6 +1566,22 @@ def run_continuous_batching(
             if prefill is not None
             else None
         ),
+        "health": (
+            {
+                **monitor.stats,
+                "snapshots": {
+                    "pushes": ring.pushes,
+                    "rollbacks": ring.rollbacks,
+                },
+                "fallback_slots": fb_lane.nb if fb_lane is not None else 0,
+                **{
+                    k: v for k, v in hstats.items() if k != "ladder_keys"
+                },
+            }
+            if monitor is not None
+            else None
+        ),
+        "chaos": injector.stats if injector is not None else None,
     }
     return stats
 
@@ -1122,6 +1660,43 @@ def main() -> None:
     ap.add_argument("--tick-deadline-ms", type=float, default=None,
                     help="--smc: per-tick step latency deadline; the "
                          "summary reports p50/p95 and ticks over it")
+    ap.add_argument("--health", action="store_true",
+                    help="--smc: per-slot health sentinels + the "
+                         "escalation ladder (rollback -> reseed -> "
+                         "precision fallback -> retire-with-error); "
+                         "derived entirely from stats the scheduler "
+                         "already reads back — zero extra device passes")
+    ap.add_argument("--step-timeout-ms", type=float, default=None,
+                    help="--smc --health: wall-clock watchdog on each "
+                         "bank step's dispatch->consumption latency")
+    ap.add_argument("--health-snapshot-every", type=int, default=4,
+                    help="--smc --health: ticks between host-side "
+                         "rollback snapshots of every healthy busy slot")
+    ap.add_argument("--fp32-fallback", type=int, default=0, metavar="SLOTS",
+                    help="--smc --health: reserve SLOTS fp32-policy "
+                         "fallback slots; a slot whose numerics keep "
+                         "tripping migrates there (precision fallback) "
+                         "instead of retiring with an error")
+    ap.add_argument("--chaos", action="store_true",
+                    help="--smc: deterministic fault injection (implies "
+                         "--health): NaN/Inf state poison, dropped "
+                         "uploads, failed and delayed steps, the whole "
+                         "schedule derived from --seed")
+    ap.add_argument("--chaos-classes", default="",
+                    help="--chaos: comma-separated fault classes "
+                         "(default: all of nan_lanes,inf_weights,"
+                         "drop_upload,fail_step,delay_step)")
+    ap.add_argument("--chaos-rounds", type=int, default=1,
+                    help="--chaos: passes over the fault-class cycle")
+    ap.add_argument("--chaos-start", type=int, default=2,
+                    help="--chaos: first injection tick")
+    ap.add_argument("--chaos-every", type=int, default=3,
+                    help="--chaos: ticks between injections")
+    ap.add_argument("--chaos-fail-attempts", type=int, default=1,
+                    help="--chaos: failing dispatch attempts per "
+                         "fail_step fault")
+    ap.add_argument("--chaos-delay-ms", type=float, default=25.0,
+                    help="--chaos: host delay per delay_step fault")
     ap.add_argument("--elastic-reseed-after", type=int, default=None,
                     help="--smc --elastic: consecutive collapsed ticks "
                          "(ESS under the grow floor at max_particles) "
@@ -1223,6 +1798,54 @@ def main() -> None:
                 steps=args.steps,
                 batch=args.prefill_batch or args.slots,
             )
+        health = None
+        if args.health or args.chaos:
+            from repro.core import HealthConfig
+
+            health = HealthConfig(
+                step_timeout_ms=args.step_timeout_ms,
+                snapshot_every=args.health_snapshot_every,
+            )
+        chaos = None
+        if args.chaos:
+            from repro.core import ChaosConfig
+
+            kw = {}
+            if args.chaos_classes:
+                kw["classes"] = tuple(args.chaos_classes.split(","))
+            chaos = ChaosConfig(
+                rounds=args.chaos_rounds,
+                start_tick=args.chaos_start,
+                every=args.chaos_every,
+                fail_attempts=args.chaos_fail_attempts,
+                delay_ms=args.chaos_delay_ms,
+                **kw,
+            )
+        fallback_bank = None
+        if args.fp32_fallback:
+            if health is None:
+                raise SystemExit("--fp32-fallback needs --health")
+            # The fp32 sibling family: same model, same mesh, the
+            # paper's baseline precision — where tripping slots migrate.
+            fb_policy = get_policy("fp32")
+            decode32 = jax.jit(
+                lambda p, t, i, c: M.decode_step(p, t, i, c, cfg, fb_policy)
+            )
+            spec32 = make_smc_decode_spec(
+                params, cfg, fb_policy, decode32,
+                temperature=args.temperature, steps=args.steps,
+                prompt_len=args.prompt_len,
+            )
+            fallback_bank = FilterBank(
+                spec32,
+                FilterConfig(
+                    policy=fb_policy,
+                    ess_threshold=args.ess_frac,
+                    mesh=mesh,
+                    scheme=args.scheme,
+                ),
+                num_slots=args.fp32_fallback,
+            )
         stats = run_continuous_batching(
             bank,
             num_requests=args.requests,
@@ -1235,6 +1858,9 @@ def main() -> None:
             prefill=prefill,
             pipelined_uploads=args.pipelined_uploads,
             tick_deadline_ms=args.tick_deadline_ms,
+            health=health,
+            chaos=chaos,
+            fallback_bank=fallback_bank,
         )
         dt = time.perf_counter() - t0
         n_steps = sum(r["steps"] for r in stats["results"])
@@ -1252,6 +1878,13 @@ def main() -> None:
             + (" pipelined" if args.pipelined_uploads else "")
             + (" packed" if args.packed else "")
             + (" elastic" if elastic is not None else "")
+            + (" health" if health is not None else "")
+            + (" chaos" if chaos is not None else "")
+            + (
+                f" fp32-fallback={args.fp32_fallback}"
+                if fallback_bank is not None
+                else ""
+            )
             + (f" prefill={args.prompt_len}" if prefill is not None else "")
             + f" ticks={stats['ticks']} "
             f"occupancy={stats['occupancy']:.0%} "
@@ -1292,6 +1925,7 @@ def main() -> None:
             print(
                 f"  elastic: grows={el['grows']} shrinks={el['shrinks']} "
                 f"denied_grows={el['denied_grows']} "
+                f"denied_latency={el['denied_grows_latency']} "
                 f"reseeds={el['reseeds']} "
                 f"global_budget={args.elastic_budget or 'uncapped'}"
             )
@@ -1309,6 +1943,42 @@ def main() -> None:
                 )
             if len(el["events"]) > 8:
                 print(f"    ... {len(el['events']) - 8} more events")
+        hl = stats["health"]
+        if hl is not None:
+            trips = " ".join(
+                f"{k}={v}" for k, v in sorted(hl["trips"].items())
+            ) or "none"
+            recs = " ".join(
+                f"{k}={v}" for k, v in sorted(hl["recoveries"].items())
+            ) or "none"
+            print(
+                f"  health: trips[{trips}] recoveries[{recs}] "
+                f"watchdog={hl['watchdog_trips']} "
+                f"retries={hl['step_retries']} "
+                f"snapshots={hl['snapshots']['pushes']} "
+                f"rollbacks={hl['snapshots']['rollbacks']} "
+                f"fallback_migrations={hl['fallback_migrations']} "
+                f"retired_error={hl['retired_error']}"
+            )
+            for r in hl["recovered"][:6]:
+                print(
+                    f"    slot {r['slot']}: {r['kind']} "
+                    f"@tick {r['trip_tick']} -> {r['action']} "
+                    f"in {r['latency_ticks']} ticks"
+                )
+        ch = stats["chaos"]
+        if ch is not None:
+            by = collections.Counter(f["kind"] for f in ch["log"])
+            print(
+                f"  chaos: applied={ch['applied']}/{ch['scheduled']} "
+                + " ".join(f"{k}={v}" for k, v in sorted(by.items()))
+            )
+        errors = [r for r in stats["results"] if "error" in r]
+        if errors:
+            print(
+                "  errored: "
+                + " ".join(f"req[{r['id']}]={r['error']}" for r in errors)
+            )
         for r in stats["results"][:4]:
             pdesc2 = str(r["particles"])
             if r["final_particles"] != r["particles"]:

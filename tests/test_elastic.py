@@ -413,6 +413,7 @@ def test_never_triggered_elastic_bitwise_static(pname, variant):
         "grows": 0,
         "shrinks": 0,
         "denied_grows": 0,
+        "denied_grows_latency": 0,
         "reseeds": 0,
     }
 
@@ -643,6 +644,124 @@ def test_controller_reseed_disabled_by_default():
     assert ctrl.stats["reseeds"] == 0
 
 
+def test_nonfinite_and_negative_ess_hardened():
+    """Garbage ESS readings (±Inf from an overflowed weight sum, negative
+    from a corrupted stat) read as *collapse* (deficit = the full grow
+    floor), never as health: an Inf ESS must not satisfy shrink_above,
+    and a negative ESS must not dodge the grow floor."""
+    cfg = ElasticConfig(
+        grow_below=8.0, shrink_above=32.0, min_particles=4, max_particles=64
+    )
+    for bad in (np.inf, -np.inf, -5.0, np.nan):
+        ctrl = BudgetController(cfg, 2)
+        (d,) = ctrl.observe(
+            np.array([bad, 16.0]),
+            np.array([16, 16], np.int64),
+            np.ones(2, bool),
+        )
+        assert (d.slot, d.kind) == (0, "grow"), f"ess={bad}"
+        assert d.deficit == cfg.grow_below
+    # and a pinned-at-max slot with Inf ESS escalates to reseed like any
+    # collapsed slot (the pre-hardening code shrank it instead)
+    cfg = ElasticConfig(
+        grow_below=8.0,
+        shrink_above=32.0,
+        min_particles=4,
+        max_particles=16,
+        cooldown=1,
+        reseed_after=2,
+    )
+    ctrl = BudgetController(cfg, 1)
+    one = np.ones(1, bool)
+    assert ctrl.observe(np.array([np.inf]), np.array([16]), one) == []
+    (d,) = ctrl.observe(np.array([np.inf]), np.array([16]), one)
+    assert d.kind == "reseed"
+
+
+def test_latency_denial_reason_and_counter():
+    """A grow on a slot whose lane p95 already exceeds the tick deadline
+    is denied with reason="latency" (counted separately from budget
+    denials, no cooldown charge); the same grow grants the moment the
+    lane is back under deadline — and with deadline_ms=None the arbiter
+    is inert."""
+    cfg = ElasticConfig(
+        grow_below=8.0, min_particles=4, max_particles=64, cooldown=2
+    )
+    ctrl = BudgetController(cfg, 2)
+    busy = np.ones(2, bool)
+    ess = np.array([1.0, 1.0])
+    n = np.array([16, 16], np.int64)
+    ds = ctrl.observe(
+        ess, n, busy,
+        lane_p95_ms=np.array([50.0, 5.0]),
+        deadline_ms=10.0,
+    )
+    by = {d.slot: d for d in ds}
+    assert not by[0].granted and by[0].reason == "latency"
+    assert by[1].granted and by[1].reason == ""
+    assert ctrl.stats["denied_grows_latency"] == 1
+    assert ctrl.stats["denied_grows"] == 0  # counted apart from budget
+    assert ctrl.stats["grows"] == 1
+    # no cooldown charged on the denial: the retry grants immediately
+    # once the lane recovers (slot 1's granted grow did charge one)
+    ds = ctrl.observe(
+        ess, np.array([16, 32], np.int64), busy,
+        lane_p95_ms=np.array([5.0, 5.0]),
+        deadline_ms=10.0,
+    )
+    assert [(d.slot, d.granted) for d in ds] == [(0, True)]
+    # deadline off: the same late lane is invisible to the arbiter
+    ctrl2 = BudgetController(cfg, 1)
+    (d,) = ctrl2.observe(
+        np.array([1.0]), np.array([16], np.int64), np.ones(1, bool),
+        lane_p95_ms=np.array([50.0]),
+    )
+    assert d.granted
+    assert ctrl2.stats["denied_grows_latency"] == 0
+    with pytest.raises(ValueError, match="lane_p95_ms"):
+        BudgetController(cfg, 2).observe(
+            ess, n, busy,
+            lane_p95_ms=np.array([5.0]),
+            deadline_ms=10.0,
+        )
+
+
+def test_serve_latency_denial_surfaced():
+    """--tick-deadline-ms + --elastic end to end: an impossible deadline
+    denies every grow with reason="latency" and the denial counter lands
+    in stats["elastic"]."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 6
+    bank = FilterBank(
+        _serve_spec(steps),
+        FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+        num_slots=2,
+    )
+    stats = run_continuous_batching(
+        bank,
+        num_requests=3,
+        max_steps=steps,
+        min_steps=steps,
+        particles=(4, 16),
+        key=jax.random.key(11),
+        tick_deadline_ms=1e-6,
+        elastic=ElasticConfig(
+            grow_below=1e9,  # every slot always wants to grow
+            min_particles=4,
+            max_particles=16,
+            cooldown=1,
+        ),
+    )
+    el = stats["elastic"]
+    assert el["grows"] == 0
+    assert el["denied_grows_latency"] > 0
+    denied = [e for e in el["events"] if not e["granted"]]
+    assert denied and all(e.get("reason") == "latency" for e in denied)
+    # containment, not starvation: every request still retires on budget
+    assert [r["id"] for r in stats["results"]] == [0, 1, 2]
+
+
 def test_controller_flags_cross_lane_grows_for_migration():
     """With lane_width given (the packed scheduler), a granted grow whose
     new budget exceeds its slot's lane width carries migrate=True; grows
@@ -698,6 +817,7 @@ def test_controller_migration_bookkeeping():
         "grows": 0,
         "shrinks": 0,
         "denied_grows": 1,
+        "denied_grows_latency": 0,
         "reseeds": 0,
     }
     assert ctrl.observe(np.array([1.0, 20.0]), np.array([8, 8]), busy) == []

@@ -1,0 +1,649 @@
+"""Fault tolerance: health sentinels, fault injection, snapshot rollback,
+and the serve escalation ladder.
+
+The spine: every health rule derives from stats the scheduler already
+holds (zero extra device passes) and trips exactly when its invariant
+breaks; the fault injector's schedule is a pure function of the run key
+(same key, same chaos, bit for bit); the snapshot ring holds real host
+copies that later donated steps cannot corrupt; and the serve loop under
+injected faults *contains* every fault class — requests either finish
+with valid tokens or retire with an explicit error, never junk — while
+with zero faults the whole monitoring layer is bitwise invisible.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChaosConfig,
+    FaultInjector,
+    FilterBank,
+    FilterConfig,
+    HealthConfig,
+    HealthMonitor,
+    SMCSpec,
+    get_policy,
+)
+from repro.core.faults import (
+    FAULT_CLASSES,
+    poison_particle_rows,
+    poison_weight_row,
+)
+from repro.core.health import health_counters, reset_health_counters
+from repro.checkpoint import Checkpointer, SlotSnapshotRing
+
+B = 4
+
+
+def _healthy(n=B):
+    return dict(
+        ess=np.full(n, 50.0),
+        log_z_inc=np.full(n, -1.0),
+        max_loglik=np.full(n, -0.5),
+        busy=np.ones(n, bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor: rules, incident lifecycle, counters
+
+
+def test_config_validation():
+    for kw in (
+        dict(collapse_after=0),
+        dict(divergence_after=0),
+        dict(step_timeout_ms=0.0),
+        dict(snapshot_every=0),
+        dict(snapshot_depth=0),
+        dict(max_step_retries=-1),
+    ):
+        with pytest.raises(ValueError):
+            HealthConfig(**kw)
+
+
+def test_nonfinite_rule_trips_and_only_on_busy_slots():
+    mon = HealthMonitor(HealthConfig(), B)
+    s = _healthy()
+    s["ess"][1] = np.nan
+    s["log_z_inc"][2] = np.inf
+    s["max_loglik"][3] = np.nan
+    s["busy"][3] = False  # idle: never judged
+    alerts = mon.observe(5, **s)
+    assert [(a.slot, a.kind) for a in alerts] == [
+        (1, "nonfinite"),
+        (2, "nonfinite"),
+    ]
+    assert mon.trips["nonfinite"] == 2
+    assert mon.pending(0) is None and mon.pending(3) is None
+
+
+def test_incident_alerts_ongoing_but_counts_once():
+    """An open incident keeps alerting every unhealthy tick (the ladder
+    escalates on those) but the trip counter counts incidents."""
+    mon = HealthMonitor(HealthConfig(), B)
+    s = _healthy()
+    s["ess"][0] = np.nan
+    for tick in (1, 2, 3):
+        alerts = mon.observe(tick, **s)
+        assert [a.slot for a in alerts] == [0]
+    assert mon.trips["nonfinite"] == 1
+    assert len(mon.events) == 1
+
+
+def test_incident_closes_only_after_an_action_and_records_latency():
+    mon = HealthMonitor(HealthConfig(), B)
+    bad = _healthy()
+    bad["ess"][2] = np.nan
+    mon.observe(4, **bad)
+    # healthy read with no action applied: the incident stays open (the
+    # scheduler hasn't fixed anything — a transient would self-close and
+    # hide an unactioned corruption)
+    mon.observe(5, **_healthy())
+    assert mon.pending(2) is not None
+    mon.slot_action(2, "rollback", tick=5)
+    assert mon.pending(2)["last_action_tick"] == 5
+    mon.observe(6, **_healthy())
+    assert mon.pending(2) is None
+    (rec,) = mon.recovered
+    assert rec == {
+        "slot": 2,
+        "kind": "nonfinite",
+        "trip_tick": 4,
+        "recovered_tick": 6,
+        "latency_ticks": 2,
+        "action": "rollback",
+        "actions": ["rollback"],
+    }
+    assert mon.recoveries["rollback"] == 1
+
+
+def test_stuck_rule_is_progress_integrity():
+    mon = HealthMonitor(HealthConfig(), B)
+    s = _healthy()
+    alerts = mon.observe(
+        3,
+        **s,
+        expected_step=np.array([3, 3, 3, 3]),
+        observed_step=np.array([3, 1, 3, 3]),
+    )
+    assert [(a.slot, a.kind) for a in alerts] == [(1, "stuck")]
+
+
+def test_divergence_needs_consecutive_ticks_and_resets():
+    mon = HealthMonitor(HealthConfig(divergence_after=2), B)
+    s = _healthy()
+    s["log_z_inc"][0] = -1e9
+    assert mon.observe(1, **s) == []  # persistence 1
+    good = _healthy()
+    mon.observe(2, **good)  # recovers: counter resets
+    assert mon.observe(3, **s) == []  # persistence 1 again
+    alerts = mon.observe(4, **s)
+    assert [(a.slot, a.kind) for a in alerts] == [(0, "divergence")]
+
+
+def test_collapse_rule_disabled_at_zero_threshold():
+    mon = HealthMonitor(HealthConfig(collapse_below=0.0), B)
+    s = _healthy()
+    s["ess"][1] = 1e-9
+    for t in range(6):
+        assert mon.observe(t, **s) == []
+    mon = HealthMonitor(
+        HealthConfig(collapse_below=2.0, collapse_after=3), B
+    )
+    for t in range(2):
+        assert mon.observe(t, **s) == []
+    alerts = mon.observe(2, **s)
+    assert [(a.slot, a.kind) for a in alerts] == [(1, "collapse")]
+
+
+def test_severity_order_nonfinite_wins():
+    mon = HealthMonitor(HealthConfig(divergence_after=1), B)
+    s = _healthy()
+    s["ess"][0] = np.nan
+    s["log_z_inc"][0] = -np.inf  # also diverged-looking
+    (a,) = mon.observe(
+        1,
+        **s,
+        expected_step=np.array([1, 1, 1, 1]),
+        observed_step=np.array([0, 1, 1, 1]),  # also stuck
+    )
+    assert a.kind == "nonfinite"
+
+
+def test_slot_reset_and_moved_carry_incident_state():
+    mon = HealthMonitor(HealthConfig(), B)
+    bad = _healthy()
+    bad["ess"][0] = np.nan
+    mon.observe(1, **bad)
+    mon.slot_action(0, "reseed", tick=1)
+    mon.slot_moved(0, 3)
+    assert mon.pending(0) is None
+    assert mon.pending(3)["actions"] == ["reseed"]
+    mon.observe(2, **_healthy())
+    assert mon.recovered[0]["slot"] == 3
+    # reset wipes a dead request's history
+    mon.observe(3, **bad)
+    mon.slot_reset(0)
+    assert mon.pending(0) is None
+
+
+def test_slot_failed_closes_as_containment():
+    mon = HealthMonitor(HealthConfig(), B)
+    bad = _healthy()
+    bad["ess"][1] = np.nan
+    mon.observe(7, **bad)
+    mon.slot_failed(1, 9, "retire_error")
+    assert mon.pending(1) is None
+    assert mon.recoveries["retire_error"] == 1
+    assert mon.recovered[0]["latency_ticks"] == 2
+    # without an open incident it synthesizes one (kind unknown)
+    mon.slot_failed(2, 10, "retire_error")
+    assert mon.recovered[1]["kind"] == "unknown"
+
+
+def test_watchdog_and_retry_counters_and_process_mirror():
+    reset_health_counters()
+    mon = HealthMonitor(HealthConfig(step_timeout_ms=10.0), B)
+    assert not mon.step_watchdog(5.0)
+    assert mon.step_watchdog(50.0)
+    mon.step_retried()
+    assert mon.watchdog_trips == 1 and mon.step_retries == 1
+    bad = _healthy()
+    bad["ess"][0] = np.nan
+    mon.observe(1, **bad)
+    c = health_counters()
+    assert c["watchdog_trips"] == 1
+    assert c["step_retries"] == 1
+    assert c["trips_nonfinite"] == 1
+    reset_health_counters()
+    assert health_counters() == {}
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: deterministic schedule + hooks
+
+
+def test_chaos_config_validation():
+    with pytest.raises(ValueError, match="fault classes"):
+        ChaosConfig(classes=("nan_lanes", "bogus"))
+    with pytest.raises(ValueError, match="rounds"):
+        ChaosConfig(rounds=0)
+    with pytest.raises(ValueError, match="every"):
+        ChaosConfig(every=0)
+    with pytest.raises(ValueError, match="fail_attempts"):
+        ChaosConfig(fail_attempts=0)
+
+
+def test_schedule_is_a_pure_function_of_the_run_key():
+    cfg = ChaosConfig(rounds=2, start_tick=3, every=2)
+    a = FaultInjector(cfg, jax.random.key(42), num_slots=8, num_lanes=2)
+    b = FaultInjector(cfg, jax.random.key(42), num_slots=8, num_lanes=2)
+    c = FaultInjector(cfg, jax.random.key(43), num_slots=8, num_lanes=2)
+    assert a.seed == b.seed and a.schedule == b.schedule
+    assert a.seed != c.seed
+    # shape: rounds x classes, ticks on the start + i*every grid
+    assert len(a.schedule) == 2 * len(FAULT_CLASSES)
+    assert [f.tick for f in a.schedule] == [
+        3 + 2 * i for i in range(len(a.schedule))
+    ]
+    assert [f.kind for f in a.schedule] == list(FAULT_CLASSES) * 2
+    # int seed passes straight through (host-side reproduction)
+    d = FaultInjector(cfg, 1234, num_slots=8)
+    assert d.seed == 1234
+
+
+def test_target_slot_wraps_to_first_busy_and_defers():
+    inj = FaultInjector(ChaosConfig(), jax.random.key(0), num_slots=4)
+    fault = dataclasses.replace(inj.schedule[0], preferred=2)
+    busy = np.array([True, False, False, False])
+    assert inj.target_slot(fault, busy) == 0  # wrapped past 2,3
+    busy[3] = True
+    assert inj.target_slot(fault, busy) == 3
+    assert inj.target_slot(fault, np.zeros(4, bool)) is None
+
+
+def test_step_fails_bounded_then_succeeds():
+    cfg = ChaosConfig(classes=("fail_step",), fail_attempts=2, start_tick=1)
+    inj = FaultInjector(cfg, jax.random.key(1), num_slots=2, num_lanes=1)
+    assert not inj.step_fails(0, 0, 0)  # before start_tick
+    assert inj.step_fails(1, 0, 0)
+    assert inj.step_fails(1, 0, 1)
+    assert not inj.step_fails(1, 0, 2)  # the retry after backoff lands
+    assert inj.exhausted
+    (entry,) = inj.log
+    assert entry["kind"] == "fail_step" and entry["tick"] == 1
+
+
+def test_delay_and_drop_applied_once():
+    cfg = ChaosConfig(
+        classes=("delay_step", "drop_upload"), start_tick=0, every=1,
+        delay_ms=7.5,
+    )
+    inj = FaultInjector(cfg, jax.random.key(2), num_slots=2, num_lanes=1)
+    assert inj.step_delay_ms(0, 0) == 7.5
+    assert inj.step_delay_ms(0, 0) == 0.0  # consumed
+    drop = inj.take_drop_upload(5)
+    assert drop is not None and drop.kind == "drop_upload"
+    inj.applied(drop, 5, 1)
+    assert inj.take_drop_upload(6) is None
+    assert inj.exhausted and inj.stats["applied"] == 2
+
+
+def _tiny_bank(slots=3, width=8, policy="fp32", ragged=True):
+    def init(key, n):
+        return {
+            "x": jax.random.normal(key, (n,), jnp.float32),
+            "tok": jnp.zeros((n,), jnp.int32),
+        }
+
+    def transition(key, p, step):
+        del step
+        x = 0.9 * p["x"] + 0.1 * jax.random.normal(
+            key, p["x"].shape, jnp.float32
+        )
+        return {"x": x, "tok": p["tok"] + 1}
+
+    def loglik(p, obs, step):
+        del obs, step
+        return -jnp.square(p["x"])
+
+    bank = FilterBank(
+        SMCSpec(init, transition, loglik),
+        FilterConfig(policy=get_policy(policy), ess_threshold=1.0),
+        num_slots=slots,
+    )
+    kw = (
+        dict(n_active=jnp.full((slots,), width, jnp.int32)) if ragged else {}
+    )
+    return bank, bank.init(jax.random.key(3), width, **kw)
+
+
+def test_poison_particle_rows_inexact_leaves_one_slot():
+    bank, state = _tiny_bank()
+    poisoned = poison_particle_rows(state, 1)
+    x = np.asarray(poisoned.particles["x"])
+    assert np.isnan(x[1]).all()
+    np.testing.assert_array_equal(x[0], np.asarray(state.particles["x"][0]))
+    np.testing.assert_array_equal(x[2], np.asarray(state.particles["x"][2]))
+    # integer leaves are never scribbled
+    np.testing.assert_array_equal(
+        np.asarray(poisoned.particles["tok"]),
+        np.asarray(state.particles["tok"]),
+    )
+    # the next step surfaces it as a non-finite slot stat
+    ks = jax.random.split(jax.random.key(4), 3)
+    _, out = bank.jit_step(poisoned, None, ks)
+    assert not np.isfinite(np.asarray(out.ess)[1])
+    assert np.isfinite(np.asarray(out.ess)[[0, 2]]).all()
+
+
+def test_poison_weight_row_active_prefix_only():
+    bank, _ = _tiny_bank(width=8)
+    state = bank.init(
+        jax.random.key(3), 8, n_active=jnp.asarray([8, 4, 8], jnp.int32)
+    )
+    poisoned = poison_weight_row(state, 1)
+    lw = np.asarray(poisoned.log_weights)
+    assert np.isposinf(lw[1, :4]).all()
+    assert np.isneginf(lw[1, 4:]).all()  # padding mask untouched
+    np.testing.assert_array_equal(lw[0], np.asarray(state.log_weights[0]))
+
+
+# ---------------------------------------------------------------------------
+# SlotSnapshotRing: host copies, depth, rollback semantics
+
+
+def test_ring_push_pop_depth_and_isolation():
+    ring = SlotSnapshotRing(depth=2)
+    bank, state = _tiny_bank()
+    for step in range(3):
+        ring.push(
+            5,
+            jax.tree.map(lambda x: x[0], state.particles),
+            state.log_weights[0],
+            jnp.int32(step),
+            n_active=jnp.int32(8),
+            tick=step * 4,
+        )
+    assert ring.pushes == 3
+    assert ring.latest(5)["step"] == 2  # depth 2: step 0 dropped
+    # host copies: donating/overwriting the live state cannot reach them
+    snap = ring.latest(5)
+    live = np.asarray(state.particles["x"][0]).copy()
+    state = poison_particle_rows(state, 0)
+    np.testing.assert_array_equal(snap["particles"]["x"], live)
+    assert np.isfinite(snap["log_w"]).any()
+    # pop consumes newest-first (a poisoned snapshot is never retried)
+    assert ring.pop(5)["step"] == 2
+    assert ring.pop(5)["step"] == 1
+    assert ring.pop(5) is None
+    assert ring.rollbacks == 2
+    assert ring.latest(4) is None
+
+
+def test_ring_clear_move_and_persist(tmp_path):
+    ring = SlotSnapshotRing(depth=1)
+    row = {"x": np.arange(4, dtype=np.float32)}
+    ring.push(0, row, np.zeros(4, np.float32), 7, n_active=4, tick=12)
+    ring.move(0, 9)
+    assert ring.latest(0) is None
+    assert ring.latest(9)["step"] == 7
+    ckpt = Checkpointer(str(tmp_path))
+    ring.persist(ckpt, step=7)
+    loaded, extra = ckpt.restore(7, {"9": {"x": np.zeros(4, np.float32)}})
+    np.testing.assert_array_equal(np.asarray(loaded["9"]["x"]), row["x"])
+    assert extra["9"] == {"step": 7, "n_active": 4, "tick": 12}
+    ring.clear(9)
+    assert ring.latest(9) is None
+    with pytest.raises(ValueError, match="depth"):
+        SlotSnapshotRing(depth=0)
+
+
+# ---------------------------------------------------------------------------
+# serve: containment under chaos, bitwise-invisible when idle
+
+
+def _serve_spec(steps):
+    """Decode-shaped spec whose likelihood reads *carried* state (AR(1)
+    chain): poisoned particle rows stay poisoned through transitions
+    until a ladder rung replaces the state — what containment must
+    actually handle (a spec that re-derives reward from the step key
+    would shrug the poison off by itself)."""
+
+    def init(key, n):
+        return {
+            "x": jax.random.normal(key, (n,), jnp.float32),
+            "reward": jnp.zeros((n,), jnp.float32),
+            "cum_reward": jnp.zeros((n,), jnp.float32),
+            "seq": jnp.zeros((n, steps), jnp.int32),
+        }
+
+    def transition(key, p, step):
+        x = 0.9 * p["x"] + 0.1 * jax.random.normal(
+            key, p["x"].shape, jnp.float32
+        )
+        reward = -jnp.square(x)
+        tok = (jnp.abs(x) * 97.0).astype(jnp.int32) % 1000
+        pos = jnp.minimum(step.astype(jnp.int32), steps - 1)
+        return {
+            "x": x,
+            "reward": reward,
+            "cum_reward": p["cum_reward"] + reward,
+            "seq": p["seq"].at[:, pos].set(tok),
+        }
+
+    return SMCSpec(init, transition, lambda p, o, s: p["reward"])
+
+
+def _serve_bank(steps, slots=3, policy="fp32"):
+    return FilterBank(
+        _serve_spec(steps),
+        FilterConfig(policy=get_policy(policy), ess_threshold=1.0),
+        num_slots=slots,
+    )
+
+
+@pytest.mark.parametrize("async_admit", [False, True])
+def test_serve_contains_every_fault_class(async_admit):
+    """All five fault classes injected into a live serve run: every
+    incident closes (recovered or retired-with-error), every request
+    either finishes with its full token budget or carries an explicit
+    error — junk never leaks, the loop never hangs."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 8
+    stats = run_continuous_batching(
+        _serve_bank(steps),
+        num_requests=6,
+        max_steps=steps,
+        min_steps=steps,
+        particles=(4, 8),
+        key=jax.random.key(9),
+        async_admit=async_admit,
+        health=HealthConfig(step_timeout_ms=250.0, snapshot_every=3),
+        chaos=ChaosConfig(start_tick=2, every=2, delay_ms=5.0),
+    )
+    h, c = stats["health"], stats["chaos"]
+    assert c["applied"] > 0
+    assert sum(h["trips"].values()) > 0
+    assert sum(h["recoveries"].values()) > 0
+    assert h["open_incidents"] == {}
+    assert [r["id"] for r in stats["results"]] == list(range(6))
+    for r in stats["results"]:
+        if "error" in r:
+            assert r["tokens"].size == 0
+        else:
+            assert r["tokens"].shape == (r["steps"],)
+    # injected state faults were detected, not silently absorbed
+    state_faults = [
+        e for e in c["log"] if e["kind"] in ("nan_lanes", "inf_weights")
+    ]
+    if state_faults:
+        assert h["trips"].get("nonfinite", 0) > 0
+    if any(e["kind"] == "drop_upload" for e in c["log"]):
+        assert h["trips"].get("stuck", 0) > 0
+
+
+@pytest.mark.parametrize("async_admit", [False, True])
+def test_serve_health_layer_bitwise_invisible_without_faults(async_admit):
+    """Monitoring + snapshotting enabled but zero faults injected: the
+    run is bitwise identical to one with no health layer at all, and no
+    sentinel trips spuriously."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 6
+    runs = []
+    for health in (None, HealthConfig(snapshot_every=2)):
+        stats = run_continuous_batching(
+            _serve_bank(steps),
+            num_requests=5,
+            max_steps=steps,
+            particles=(4, 8),
+            key=jax.random.key(21),
+            async_admit=async_admit,
+            health=health,
+        )
+        runs.append(stats)
+    plain, monitored = runs
+    assert plain["ticks"] == monitored["ticks"]
+    for a, b in zip(plain["results"], monitored["results"]):
+        assert (a["id"], a["steps"]) == (b["id"], b["steps"])
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert monitored["health"]["trips"] == {}
+    assert monitored["health"]["open_incidents"] == {}
+    assert monitored["health"]["snapshots"]["pushes"] > 0
+
+
+def test_serve_rollback_restores_from_snapshot():
+    """A fault landing after snapshots exist rolls back (the ring is
+    consulted before reseed) and the request still finishes."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 10
+    stats = run_continuous_batching(
+        _serve_bank(steps, slots=2),
+        num_requests=2,
+        max_steps=steps,
+        min_steps=steps,
+        particles=(4, 8),
+        key=jax.random.key(5),
+        health=HealthConfig(snapshot_every=2),
+        chaos=ChaosConfig(
+            classes=("nan_lanes",), start_tick=5, every=1,
+        ),
+    )
+    h = stats["health"]
+    assert h["snapshots"]["rollbacks"] >= 1
+    assert h["recoveries"].get("rollback", 0) >= 1
+    assert h["open_incidents"] == {}
+    assert all("error" not in r for r in stats["results"])
+
+
+def test_serve_precision_fallback_recovers_fp16_overflow():
+    """The paper-motivated rung: a model whose likelihood overflows in
+    fp16 (every slot non-finite from the first step) but is finite in
+    fp32.  Reseed cannot fix it — the ladder migrates the slot into the
+    fp32 fallback bank, where the incident closes and the request
+    completes with real tokens."""
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 8
+
+    def overflow_spec():
+        def init(key, n):
+            return {
+                "x": jax.random.normal(key, (n,), jnp.float32),
+                "reward": jnp.zeros((n,), jnp.float32),
+                "cum_reward": jnp.zeros((n,), jnp.float32),
+                "seq": jnp.zeros((n, steps), jnp.int32),
+            }
+
+        def transition(key, p, step):
+            x = 0.9 * p["x"] + 0.1 * jax.random.normal(
+                key, p["x"].shape, jnp.float32
+            )
+            # The log-likelihood sits around -70000: representable in
+            # fp32 (tiny spread, ESS ~ n) but beyond fp16's +-65504 —
+            # every lane is -inf, the max-shift is -inf - -inf = NaN,
+            # and the slot reads nonfinite on every step no matter how
+            # often it is reseeded.  Only the precision rung fixes it.
+            reward = -70000.0 - 0.01 * jnp.square(x)
+            tok = (jnp.abs(x) * 97.0).astype(jnp.int32) % 1000
+            pos = jnp.minimum(step.astype(jnp.int32), steps - 1)
+            return {
+                "x": x,
+                "reward": reward,
+                # lineage score keeps only the finite spread term (the
+                # -70000 offset is constant across lanes): the retire
+                # guard reads this, and -inf + -inf accumulation in the
+                # fp16 phase would turn containment into a retire_error
+                "cum_reward": p["cum_reward"] - 0.01 * jnp.square(x),
+                "seq": p["seq"].at[:, pos].set(tok),
+            }
+
+        return SMCSpec(init, transition, lambda p, o, s: p["reward"])
+
+    bank16 = FilterBank(
+        overflow_spec(),
+        FilterConfig(policy=get_policy("fp16"), ess_threshold=1.0),
+        num_slots=1,
+    )
+    bank32 = FilterBank(
+        overflow_spec(),
+        FilterConfig(policy=get_policy("fp32"), ess_threshold=1.0),
+        num_slots=1,
+    )
+    stats = run_continuous_batching(
+        bank16,
+        num_requests=1,
+        max_steps=steps,
+        min_steps=steps,
+        particles=(8, 8),
+        key=jax.random.key(2),
+        health=HealthConfig(snapshot_every=100),
+        fallback_bank=bank32,
+    )
+    h = stats["health"]
+    assert h["fallback_migrations"] == 1
+    assert h["recoveries"].get("fallback", 0) >= 1
+    assert h["open_incidents"] == {}
+    (res,) = stats["results"]
+    assert "error" not in res
+    assert res["tokens"].shape == (steps,)
+
+
+def test_serve_fallback_requires_health():
+    from repro.launch.serve import run_continuous_batching
+
+    steps = 2
+    with pytest.raises(ValueError, match="health"):
+        run_continuous_batching(
+            _serve_bank(steps),
+            num_requests=1,
+            max_steps=steps,
+            particles=(4, 8),
+            key=jax.random.key(0),
+            fallback_bank=_serve_bank(steps, slots=1),
+        )
+
+
+def test_bench_json_stamps_health_counters(tmp_path, monkeypatch):
+    """Every BENCH_*.json carries the process-wide health counters of
+    the run that produced it."""
+    common = pytest.importorskip("benchmarks.common")
+    reset_health_counters()
+    mon = HealthMonitor(HealthConfig(), 2)
+    bad = _healthy(2)
+    bad["ess"][0] = np.nan
+    mon.observe(1, **bad)
+    monkeypatch.chdir(tmp_path)
+    path = common.write_bench_json("healthprobe", [])
+    import json
+
+    payload = json.loads(open(path).read())
+    assert payload["health"]["trips_nonfinite"] == 1
+    reset_health_counters()
